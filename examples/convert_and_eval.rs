@@ -1,0 +1,69 @@
+//! Conversion-quality sweep: converts the base model at every exported
+//! latent rank with both TransMLA and the MHA2MLA baseline and reports
+//! held-out loss/perplexity — a compact, runnable slice of Table 1 and
+//! Figure 3b.
+//!
+//! Run: `cargo run --release --example convert_and_eval`
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use transmla::convert::{convert_model, ConvertOptions, PcaMode};
+use transmla::corpus::Corpus;
+use transmla::eval::{capture_calib, evaluate};
+use transmla::model::{init_gqa, Params};
+use transmla::runtime::Runtime;
+use transmla::util::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let cfg_name = "llama2tiny";
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+
+    let ckpt = Path::new("runs/llama2tiny_base.tnz");
+    let gqa = if ckpt.exists() {
+        Params::load(ckpt)?
+    } else {
+        eprintln!("[warn] no checkpoint - using random init");
+        init_gqa(&cfg, 42)
+    };
+
+    let corpus = Corpus::synthetic(7, 2_000_000);
+    let calib_exec = rt.load(&format!("{cfg_name}_calib"))?;
+    let mut rng = Rng::new(0);
+    let toks = corpus.sample_batch(8, cfg.max_seq, &mut rng);
+    let calib = capture_calib(&calib_exec, &gqa, &toks, 1024)?;
+    let batches: Vec<_> = corpus
+        .val_batches(8, cfg.max_seq)
+        .into_iter()
+        .take(2)
+        .collect();
+
+    let base_exec = rt.load(&format!("{cfg_name}_gqa_prefill"))?;
+    let base = evaluate(&base_exec, &gqa, &batches)?;
+    println!("original GQA       : loss {:.4}  ppl {:.3}", base.loss, base.ppl);
+
+    let ranks = rt.manifest.sweep_ranks.get(cfg_name).context("ranks")?;
+    println!("\n method    | rank | KV kept | loss    | d-loss vs base");
+    println!("-----------+------+---------+---------+---------------");
+    for &r in ranks {
+        for (label, opts) in [
+            ("transmla", ConvertOptions::transmla(r)),
+            ("mha2mla ", ConvertOptions::mha2mla(r)),
+            ("w-pca   ", ConvertOptions {
+                pca_mode: PcaMode::Weights,
+                ..ConvertOptions::transmla(r)
+            }),
+        ] {
+            let (_t, absorbed, _d) = convert_model(&gqa, &calib, &cfg, &opts)?;
+            let exec = rt.load(&format!("{cfg_name}_mla_prefill_r{r}"))?;
+            let ev = evaluate(&exec, &absorbed, &batches)?;
+            println!(
+                " {label} | {r:>4} | {:>6.2}% | {:.4} | +{:.4}",
+                100.0 * (1.0 - cfg.compression(r)),
+                ev.loss,
+                ev.loss - base.loss
+            );
+        }
+    }
+    Ok(())
+}

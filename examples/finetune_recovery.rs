@@ -1,0 +1,90 @@
+//! Fine-tuning recovery (the paper's Table 1 "+N tokens" rows): convert
+//! the base model at an aggressive compression, then fine-tune the
+//! trainable-MLA form through the AOT train-step executable and watch the
+//! held-out loss recover toward the original model. Logs the loss curve.
+//!
+//! Run: `cargo run --release --example finetune_recovery [-- steps]`
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use transmla::convert::{absorb_trainable, convert_model, ConvertOptions};
+use transmla::corpus::Corpus;
+use transmla::eval::{capture_calib, evaluate};
+use transmla::model::{init_gqa, Params};
+use transmla::runtime::Runtime;
+use transmla::train::Trainer;
+use transmla::util::Rng;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(60);
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let cfg_name = "llama2tiny";
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+
+    let ckpt = Path::new("runs/llama2tiny_base.tnz");
+    let gqa = if ckpt.exists() {
+        Params::load(ckpt)?
+    } else {
+        eprintln!("[warn] no checkpoint - using random init");
+        init_gqa(&cfg, 42)
+    };
+
+    let corpus = Corpus::synthetic(7, 2_000_000);
+    let calib_exec = rt.load(&format!("{cfg_name}_calib"))?;
+    let mut rng = Rng::new(0);
+    let toks = corpus.sample_batch(8, cfg.max_seq, &mut rng);
+    let calib = capture_calib(&calib_exec, &gqa, &toks, 1024)?;
+    let batches: Vec<_> = corpus
+        .val_batches(8, cfg.max_seq)
+        .into_iter()
+        .take(2)
+        .collect();
+
+    let base = evaluate(&rt.load(&format!("{cfg_name}_gqa_prefill"))?, &gqa, &batches)?;
+    println!("original GQA loss {:.4}", base.loss);
+
+    // The paper's hardest row: -92.97% KV cache.
+    let rank = *rt
+        .manifest
+        .table1_ranks
+        .get(cfg_name)
+        .and_then(|r| r.last())
+        .context("rank")?;
+    let (train_p, absorbed, _) =
+        convert_model(&gqa, &calib, &cfg, &ConvertOptions::transmla(rank))?;
+    let eval_mla = |p: &Params| -> Result<f64> {
+        let exec = rt.load(&format!("{cfg_name}_mla_prefill_r{rank}"))?;
+        Ok(evaluate(&exec, p, &batches)?.loss)
+    };
+    let loss0 = eval_mla(&absorbed)?;
+    println!(
+        "converted (-{:.2}% KV) loss {:.4}  (degradation +{:.4})",
+        cfg.compression(rank) * 100.0,
+        loss0,
+        loss0 - base.loss
+    );
+
+    // Fine-tune the trainable form; re-absorb and re-evaluate periodically.
+    let exec = rt.load(&format!("{cfg_name}_mla_train_r{rank}"))?;
+    let mut tr = Trainer::new(exec, train_p)?;
+    let chunk = 20;
+    let mut seen_tokens = 0usize;
+    for round in 0..steps.div_ceil(chunk) {
+        let n = chunk.min(steps - round * chunk);
+        let rep = tr.run(&corpus, n, 5e-4, round as u64 + 10, 0, "recovery")?;
+        seen_tokens += rep.tokens;
+        let absorbed_ft = absorb_trainable(&tr.params, &cfg)?;
+        let loss = eval_mla(&absorbed_ft)?;
+        println!(
+            "after {:>6} FT tokens: train {:.4}  heldout {:.4}  (gap to base {:+.4})",
+            seen_tokens,
+            rep.tail_loss(5),
+            loss,
+            loss - base.loss
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! loads the trained byte-LM, converts it to MLA at the paper's -92.97%
+//! compression, then serves identical batched workloads through the GQA
+//! and MLA engines at several context lengths, reporting per-arch decode
+//! throughput, latency percentiles, and the measured speedup — the CPU
+//! analogue of the paper's Figure 4 / Table 4. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example serve_bench [-- ctx_list]`
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use transmla::config::EngineConfig;
+use transmla::convert::{convert_model, ConvertOptions};
+use transmla::coordinator::engine::Arch;
+use transmla::coordinator::{Engine, ModelBundle, Request};
+use transmla::corpus::Corpus;
+use transmla::eval::capture_calib;
+use transmla::model::{init_gqa, Params};
+use transmla::runtime::Runtime;
+use transmla::util::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let cfg_name = "llama2tiny";
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+    let contexts: Vec<usize> = std::env::args()
+        .skip(1)
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    let contexts = if contexts.is_empty() {
+        vec![128, 256, 512]
+    } else {
+        contexts
+    };
+
+    let ckpt = Path::new("runs/llama2tiny_base.tnz");
+    let gqa = if ckpt.exists() {
+        Params::load(ckpt)?
+    } else {
+        eprintln!("[warn] runs/llama2tiny_base.tnz missing - random init");
+        init_gqa(&cfg, 42)
+    };
+
+    let corpus = Corpus::synthetic(7, 2_000_000);
+    let calib_exec = rt.load(&format!("{cfg_name}_calib"))?;
+    let mut rng = Rng::new(0);
+    let toks = corpus.sample_batch(8, cfg.max_seq, &mut rng);
+    let calib = capture_calib(&calib_exec, &gqa, &toks, 1024)?;
+
+    let rank = *rt
+        .manifest
+        .table1_ranks
+        .get(cfg_name)
+        .and_then(|r| r.last())
+        .context("rank")?;
+    let (_t, mla, _d) = convert_model(&gqa, &calib, &cfg, &ConvertOptions::transmla(rank))?;
+    println!(
+        "serving {} | GQA {} f32/tok/layer vs MLA {} (-{:.2}%)",
+        cfg_name,
+        cfg.kv_per_token(),
+        cfg.mla_kv_per_token(rank),
+        cfg.compression(rank) * 100.0
+    );
+    println!("\n ctx  | arch | tok/s  | p50 lat | p95 lat | decode p50");
+    println!("------+------+--------+---------+---------+-----------");
+
+    for &ctx_len in &contexts {
+        let mut speedup = (0.0f64, 0.0f64);
+        for (label, arch, params) in [
+            ("GQA", Arch::Gqa, gqa.clone()),
+            ("MLA", Arch::Mla { rank }, mla.clone()),
+        ] {
+            let suffix = if ctx_len == cfg.max_seq {
+                String::new()
+            } else {
+                format!("_t{ctx_len}")
+            };
+            let (pname, dname) = match arch {
+                Arch::Gqa => (
+                    format!("{cfg_name}_gqa_prefill"),
+                    format!("{cfg_name}_gqa_decode_b8{suffix}"),
+                ),
+                Arch::Mla { rank } => (
+                    format!("{cfg_name}_mla_prefill_r{rank}"),
+                    format!("{cfg_name}_mla_decode_r{rank}_b8{suffix}"),
+                ),
+            };
+            let bundle =
+                ModelBundle::load_named(&rt, cfg_name, arch, 8, params, &pname, &dname)?;
+            let mut engine = Engine::new(bundle, EngineConfig::default());
+            // Paper protocol: input length == output length == ctx/2.
+            let half = ctx_len / 2;
+            let mut wl_rng = Rng::new(11);
+            for i in 0..24 {
+                let start = wl_rng.below(corpus.train.len() - half - 1);
+                let prompt: Vec<i32> = corpus.train[start..start + half]
+                    .iter()
+                    .map(|&b| b as i32)
+                    .collect();
+                let mut req = Request::new(i, prompt, half);
+                req.temperature = 0.7;
+                engine.submit(req);
+            }
+            engine.run_to_completion()?;
+            engine.slots_check()?;
+            let tps = engine.decode_throughput();
+            let lat = engine
+                .completions
+                .iter()
+                .map(|c| c.latency_s)
+                .collect::<Vec<_>>();
+            let lat = transmla::util::BenchStats::new(lat);
+            let dec = engine.metrics.stats("decode_s").context("decode stats")?;
+            println!(
+                " {ctx_len:>4} | {label}  | {tps:>6.1} | {:>6.2}s | {:>6.2}s | {:>7.2}ms",
+                lat.percentile(50.0),
+                lat.percentile(95.0),
+                dec.percentile(50.0) * 1e3,
+            );
+            if label == "GQA" {
+                speedup.0 = tps;
+            } else {
+                speedup.1 = tps;
+            }
+        }
+        println!(
+            "      -> MLA speedup at ctx {ctx_len}: {:.2}x",
+            speedup.1 / speedup.0.max(1e-9)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,263 @@
+"""AOT export: lower every L2 entry point to HLO *text* + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+
+Run once via ``make artifacts``; the Rust coordinator then needs no Python.
+
+Usage: (cd python && python -m compile.aot --out ../artifacts)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (
+    CONFIGS,
+    DECODE_BATCHES,
+    PREFILL_BATCH,
+    SWEEP_RANKS,
+    TABLE1_RANKS,
+    TRAIN_BATCH,
+    TRAIN_SEQ,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dict_specs(shapes):
+    return {k: spec(v) for k, v in shapes.items()}
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def export(self, name, fn, flat_specs, meta):
+        """Lower fn(*flat_args) and write `<name>.hlo.txt`."""
+        lowered = jax.jit(fn, keep_unused=True).lower(*flat_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        inputs = [
+            {"dtype": str(s.dtype), "shape": list(s.shape)} for s in flat_specs
+        ]
+        out_shapes = jax.eval_shape(fn, *flat_specs)
+        outputs = [
+            {"dtype": str(s.dtype), "shape": list(s.shape)}
+            for s in jax.tree_util.tree_leaves(out_shapes)
+        ]
+        entry = dict(meta)
+        entry.update(name=name, file=fname, inputs=inputs, outputs=outputs)
+        self.entries.append(entry)
+        print(f"  wrote {fname} ({len(text)/1e6:.2f} MB, "
+              f"{len(inputs)} in / {len(outputs)} out)")
+
+
+def flatten_call(fn, keys, shapes, extra_specs, cfg):
+    """Build (wrapper, flat_specs) where the wrapper takes the params in
+    `keys` order followed by the extra inputs."""
+    n = len(keys)
+
+    def wrapper(*args):
+        params = {k: a for k, a in zip(keys, args[:n])}
+        return fn(params, *args[n:])
+
+    flat = [spec(shapes[k]) for k in keys] + list(extra_specs)
+    return wrapper, flat
+
+
+def train_wrapper(forward, keys, shapes, cfg, b, t):
+    """Adam train step over flat args: params*, m*, v*, step, lr, tokens."""
+    n = len(keys)
+    step_fn = M.make_train_step(forward, cfg)
+
+    def wrapper(*args):
+        p = {k: a for k, a in zip(keys, args[:n])}
+        m = {k: a for k, a in zip(keys, args[n:2 * n])}
+        v = {k: a for k, a in zip(keys, args[2 * n:3 * n])}
+        step, lr, tokens = args[3 * n:]
+        new_p, new_m, new_v, loss = step_fn(p, m, v, step, lr, tokens)
+        flat = [new_p[k] for k in keys] + [new_m[k] for k in keys] + \
+               [new_v[k] for k in keys] + [loss]
+        return tuple(flat)
+
+    flat = (
+        [spec(shapes[k]) for k in keys] * 3
+        + [spec((), F32), spec((), F32), spec((b, t), I32)]
+    )
+    return wrapper, flat
+
+
+def export_config(ex, cfg, table1_ranks, sweep_ranks, full=True):
+    name = cfg.name
+    t = cfg.max_seq
+    bp = PREFILL_BATCH
+    print(f"[{name}] g={cfg.n_kv_groups} kv/token={cfg.kv_per_token}")
+
+    base_meta = {"config": cfg.to_dict(), "arch": None, "rank": None,
+                 "batch": None, "seq": t}
+
+    # --- GQA baseline ---
+    gsh = M.gqa_shapes(cfg)
+    fn, flat = flatten_call(
+        lambda p, tok: M.gqa_prefill(p, tok, cfg),
+        M.GQA_KEYS, gsh, [spec((bp, t), I32)], cfg)
+    ex.export(f"{name}_gqa_prefill", fn, flat,
+              {**base_meta, "arch": "gqa", "kind": "prefill", "batch": bp,
+               "params": M.GQA_KEYS})
+
+    for b in (DECODE_BATCHES if full else [max(DECODE_BATCHES)]):
+        l, g, d = cfg.n_layers, cfg.n_kv_groups, cfg.head_dim
+        extras = [
+            spec((b,), I32), spec((b,), I32),
+            spec((l, b, t, g, d)), spec((l, b, t, g, d)),
+        ]
+        fn, flat = flatten_call(
+            lambda p, tok, pos, kc, vc: M.gqa_decode(p, tok, pos, kc, vc, cfg),
+            M.GQA_KEYS, gsh, extras, cfg)
+        ex.export(f"{name}_gqa_decode_b{b}", fn, flat,
+                  {**base_meta, "arch": "gqa", "kind": "decode", "batch": b,
+                   "params": M.GQA_KEYS})
+
+    # Context-length variants of the decode step (Fig. 4 / Table 4 measured
+    # sweep): same weights, shorter cache capacity.
+    if full:
+        b = max(DECODE_BATCHES)
+        for tctx in (128, 256):
+            l, g, d = cfg.n_layers, cfg.n_kv_groups, cfg.head_dim
+            extras = [
+                spec((b,), I32), spec((b,), I32),
+                spec((l, b, tctx, g, d)), spec((l, b, tctx, g, d)),
+            ]
+            fn, flat = flatten_call(
+                lambda p, tok, pos, kc, vc: M.gqa_decode(p, tok, pos, kc, vc, cfg),
+                M.GQA_KEYS, gsh, extras, cfg)
+            ex.export(f"{name}_gqa_decode_b{b}_t{tctx}", fn, flat,
+                      {**base_meta, "arch": "gqa", "kind": "decode",
+                       "batch": b, "params": M.GQA_KEYS})
+            r_min = min(table1_ranks)
+            ash = M.mla_abs_shapes(cfg, r_min)
+            extras = [
+                spec((b,), I32), spec((b,), I32),
+                spec((l, b, tctx, r_min)), spec((l, b, tctx, d)),
+            ]
+            fn, flat = flatten_call(
+                lambda p, tok, pos, cc, kr: M.mla_decode(p, tok, pos, cc, kr, cfg),
+                M.MLA_ABS_KEYS, ash, extras, cfg)
+            ex.export(f"{name}_mla_decode_r{r_min}_b{b}_t{tctx}", fn, flat,
+                      {**base_meta, "arch": "mla", "kind": "decode",
+                       "rank": r_min, "batch": b, "params": M.MLA_ABS_KEYS})
+
+    fn, flat = train_wrapper(M.gqa_forward_logits, M.GQA_KEYS, gsh, cfg,
+                             TRAIN_BATCH, TRAIN_SEQ)
+    ex.export(f"{name}_gqa_train", fn, flat,
+              {**base_meta, "arch": "gqa", "kind": "train",
+               "batch": TRAIN_BATCH, "seq": TRAIN_SEQ, "params": M.GQA_KEYS})
+
+    # --- calibration forward ---
+    fn, flat = flatten_call(
+        lambda p, tok: M.gqa_calib(p, tok, cfg),
+        M.GQA_KEYS, gsh, [spec((bp, t), I32)], cfg)
+    ex.export(f"{name}_calib", fn, flat,
+              {**base_meta, "arch": "gqa", "kind": "calib", "batch": bp,
+               "params": M.GQA_KEYS})
+
+    # --- merged/rotated analysis form (Fig. 2b) ---
+    msh = M.merged_shapes(cfg)
+    fn, flat = flatten_call(
+        lambda p, tok: M.merged_prefill(p, tok, cfg),
+        M.MERGED_KEYS, msh, [spec((bp, t), I32)], cfg)
+    ex.export(f"{name}_merged_prefill", fn, flat,
+              {**base_meta, "arch": "merged", "kind": "prefill", "batch": bp,
+               "params": M.MERGED_KEYS})
+
+    # --- MLA (absorbed) per rank ---
+    for r in sorted(set(sweep_ranks) | set(table1_ranks), reverse=True):
+        ash = M.mla_abs_shapes(cfg, r)
+        fn, flat = flatten_call(
+            lambda p, tok: M.mla_prefill(p, tok, cfg),
+            M.MLA_ABS_KEYS, ash, [spec((bp, t), I32)], cfg)
+        ex.export(f"{name}_mla_prefill_r{r}", fn, flat,
+                  {**base_meta, "arch": "mla", "kind": "prefill", "rank": r,
+                   "batch": bp, "params": M.MLA_ABS_KEYS})
+
+        if r in table1_ranks:
+            for b in (DECODE_BATCHES if full else [max(DECODE_BATCHES)]):
+                l, d = cfg.n_layers, cfg.head_dim
+                extras = [
+                    spec((b,), I32), spec((b,), I32),
+                    spec((l, b, t, r)), spec((l, b, t, d)),
+                ]
+                fn, flat = flatten_call(
+                    lambda p, tok, pos, cc, kr: M.mla_decode(
+                        p, tok, pos, cc, kr, cfg),
+                    M.MLA_ABS_KEYS, ash, extras, cfg)
+                ex.export(f"{name}_mla_decode_r{r}_b{b}", fn, flat,
+                          {**base_meta, "arch": "mla", "kind": "decode",
+                           "rank": r, "batch": b, "params": M.MLA_ABS_KEYS})
+
+            tsh = M.mla_train_shapes(cfg, r)
+            fn, flat = train_wrapper(M.mla_train_forward, M.MLA_TRAIN_KEYS,
+                                     tsh, cfg, TRAIN_BATCH, TRAIN_SEQ)
+            ex.export(f"{name}_mla_train_r{r}", fn, flat,
+                      {**base_meta, "arch": "mla", "kind": "train", "rank": r,
+                       "batch": TRAIN_BATCH, "seq": TRAIN_SEQ,
+                       "params": M.MLA_TRAIN_KEYS})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="llama2tiny,smoltiny")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    ex = Exporter(args.out)
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        export_config(
+            ex, cfg, TABLE1_RANKS[cname], SWEEP_RANKS[cname],
+            full=(cname == "llama2tiny"),
+        )
+
+    manifest = {
+        "entries": ex.entries,
+        "configs": {k: v.to_dict() for k, v in CONFIGS.items()},
+        "table1_ranks": TABLE1_RANKS,
+        "sweep_ranks": SWEEP_RANKS,
+        "param_orders": {
+            "gqa": M.GQA_KEYS,
+            "mla_abs": M.MLA_ABS_KEYS,
+            "mla_train": M.MLA_TRAIN_KEYS,
+            "merged": M.MERGED_KEYS,
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(ex.entries)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

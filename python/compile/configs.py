@@ -1,0 +1,81 @@
+"""Model + export configurations — single source of truth for shapes.
+
+The Rust side never imports this: `aot.py` serializes everything the
+coordinator needs (arg order, shapes, hyper-parameters, rank tables) into
+``artifacts/manifest.json``.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the byte-level GQA/MHA transformer.
+
+    Mirrors the LLaMA-2 family structurally (RMSNorm, SwiGLU, RoPE,
+    optional grouped KV heads) at a CPU-trainable scale.
+    """
+
+    name: str
+    vocab: int = 256        # byte-level
+    d_model: int = 256      # D
+    n_heads: int = 8        # h
+    n_kv_groups: int = 8    # g  (g == h -> MHA, like LLaMA-2-7B)
+    head_dim: int = 32      # d  (D / h)
+    n_layers: int = 4       # L
+    d_ff: int = 768         # SwiGLU hidden
+    max_seq: int = 512      # Tmax: prefill length and KV-cache capacity
+    rope_theta: float = 10000.0
+
+    @property
+    def kv_dim(self) -> int:
+        """Merged key (or value) width: g*d."""
+        return self.n_kv_groups * self.head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_per_token(self) -> int:
+        """KV cache floats per token per layer in the GQA model: 2*g*d."""
+        return 2 * self.kv_dim
+
+    def mla_kv_per_token(self, r: int) -> int:
+        """KV cache floats per token per layer after TransMLA: r + d_rope."""
+        return r + self.head_dim
+
+    def compression(self, r: int) -> float:
+        """Fraction of the KV cache removed (paper's "-X%" notation)."""
+        return 1.0 - self.mla_kv_per_token(r) / self.kv_per_token
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# LLaMA-2-7B analogue: full MHA (g == h).
+LLAMA2TINY = ModelConfig(name="llama2tiny", n_kv_groups=8)
+
+# SmolLM analogue: true GQA (g < h), exercises the grouped merge path.
+SMOLTINY = ModelConfig(name="smoltiny", n_kv_groups=4)
+
+CONFIGS = {c.name: c for c in (LLAMA2TINY, SMOLTINY)}
+
+# Latent ranks exported per config. llama2tiny 2gd=512, rope head 32:
+#   r=128 -> keep 160 = -68.75%   (paper row)
+#   r= 32 -> keep  64 = -87.50%   (paper row)
+#   r=  4 -> keep  36 = -92.97%   (paper row)
+# plus extra ranks used by the Fig. 3b compression sweep.
+TABLE1_RANKS = {"llama2tiny": [128, 32, 4], "smoltiny": [48, 16]}
+SWEEP_RANKS = {"llama2tiny": [192, 128, 64, 32, 16, 4], "smoltiny": [48, 16]}
+
+# Decode batch sizes exported for the serving engine.
+DECODE_BATCHES = [1, 8]
+PREFILL_BATCH = 8
+TRAIN_BATCH = 8
+TRAIN_SEQ = 128
+
+ATTN_SCALE_NOTE = (
+    "converted models keep the original 1/sqrt(d) scale so the "
+    "transformation is exactly equivalence-preserving"
+)

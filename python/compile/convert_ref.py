@@ -1,0 +1,413 @@
+"""Reference implementation of the TransMLA conversion pipeline (numpy).
+
+This is the paper's Section 4 as executable math, used as the oracle for
+the production Rust converter (``rust/src/convert``) and by the python
+test-suite's invariance checks:
+
+  1. merge      — all KV heads become one big latent head; per-query-head
+                  mixers ``M_i`` start as block selectors (Sec. 4.1).
+  2. RoRoPE     — per-frequency cross-head PCA rotation that commutes with
+                  RoPE (Eq. 19 / Appendix B), concentrating key energy into
+                  head 0 (Sec. 4.2).
+  3. FreqFold   — fold M adjacent frequencies into one representative so
+                  PCA acts on M*g-dim segments (Appendix C). Approximate.
+  4. BKV        — balance NoPE-key vs value norms by alpha (Eq. 20).
+  5. joint PCA  — low-rank latent for [k_nope/alpha ; v] (Appendix D),
+                  activation-based ("wx") or weight-based ("w").
+  6. absorb     — fold W^UK into Q and W^UV into O (Eq. 10).
+
+Also implements the MHA2MLA baseline (Ji et al. 2025): per-head norm-based
+RoPE-dim selection + unbalanced weight-SVD compression.
+
+All math is float64 numpy for a clean oracle; the exported params are cast
+to float32 by the caller.
+"""
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Small helpers
+# ---------------------------------------------------------------------------
+
+def eigh_desc(c):
+    """Symmetric eigendecomposition, eigenvalues descending."""
+    w, v = np.linalg.eigh(c)
+    order = np.argsort(w)[::-1]
+    return w[order], v[:, order]
+
+
+def selector_mixers(cfg):
+    """Initial per-query-head mixers M_i [h, d, g*d]: q-head i sees only its
+    KV group's block (Sec. 4.1 W^UK initialization)."""
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    m = np.zeros((h, d, g * d))
+    rep = h // g
+    for i in range(h):
+        j = i // rep
+        m[i, :, j * d:(j + 1) * d] = np.eye(d)
+    return m
+
+
+def merged_freqs(cfg):
+    """Per-pair frequency schedule of the merged key head [g*d/2]."""
+    g, d = cfg.n_kv_groups, cfg.head_dim
+    l = np.arange(d // 2, dtype=np.float64)
+    base = cfg.rope_theta ** (-2.0 * l / d)
+    return np.tile(base, g)
+
+
+def pair_index(head, l, d):
+    """Merged pair index of frequency-pair l in head chunk `head`."""
+    return head * (d // 2) + l
+
+
+def real_dim(head, l, d):
+    return head * d + 2 * l
+
+
+# ---------------------------------------------------------------------------
+# Step 1+2+3: RoRoPE (+FreqFold) rotation
+# ---------------------------------------------------------------------------
+
+def rorope_rotation(k_samples, cfg, fold=1):
+    """Compute the big RoPE-commuting rotation Q [g*d, g*d] from pre-RoPE
+    merged-key samples [N, g*d], plus the folded frequency schedule
+    [g*d/2] and the permutation-aware layout described below.
+
+    For each frequency group m (``fold`` adjacent frequencies), PCA is run
+    over the 2*fold*g-dim (real+imag summed) cross-head segments; component
+    c of group m is laid out at (head c//fold, freq-slot m*fold + c%fold),
+    so head 0 collects the top `fold` components of every group.
+
+    Returns (Q, new_freqs). Rotated merged keys are ``k @ Q.T``.
+    """
+    g, d = cfg.n_kv_groups, cfg.head_dim
+    n_freq = d // 2
+    assert n_freq % fold == 0, "fold must divide d/2"
+    gd = g * d
+    q_big = np.zeros((gd, gd))
+    base = merged_freqs(cfg)[:n_freq]  # head-0 chunk schedule
+    new_freqs_chunk = np.empty(n_freq)
+
+    for m in range(n_freq // fold):
+        ls = list(range(m * fold, (m + 1) * fold))
+        # Sample matrix order: (l, head) pairs, real and imag stacked.
+        re_cols = [real_dim(j, l, d) for l in ls for j in range(g)]
+        im_cols = [c + 1 for c in re_cols]
+        zr = k_samples[:, re_cols]
+        zi = k_samples[:, im_cols]
+        cmat = zr.T @ zr + zi.T @ zi  # RoPE-invariant covariance
+        _, u = eigh_desc(cmat)        # [fold*g, fold*g], columns = comps
+        # Component c -> (new head jc = c // fold, slot p = c % fold).
+        for c in range(fold * g):
+            jc, p = c // fold, c % fold
+            l_new = m * fold + p
+            rd_new = real_dim(jc, l_new, d)
+            for idx, (l, j) in enumerate([(l, j) for l in ls for j in range(g)]):
+                rd_old = real_dim(j, l, d)
+                q_big[rd_new, rd_old] = u[idx, c]
+                q_big[rd_new + 1, rd_old + 1] = u[idx, c]
+        # Representative frequency for the whole group (first member).
+        for l in ls:
+            new_freqs_chunk[l] = base[m * fold]
+
+    return q_big, np.tile(new_freqs_chunk, g)
+
+
+def apply_rotation(wk, mixers, q_big):
+    """Rotate the merged key space: wk [D, g*d] -> wk @ Q^T, and every
+    mixer M_i [d, g*d] -> M_i @ Q^T (Eq. 19 both-sides rotation)."""
+    return wk @ q_big.T, mixers @ q_big.T
+
+
+# ---------------------------------------------------------------------------
+# RoPE-removal masks (Figure 2b strategies)
+# ---------------------------------------------------------------------------
+
+def rorope_mask(cfg, keep_components, fold=1):
+    """Keep RoPE on the top `keep_components` PCA components per frequency
+    group (RoRoPE ordering: head-major after relayout)."""
+    g, d = cfg.n_kv_groups, cfg.head_dim
+    mask = np.zeros(g * d)
+    n_freq = d // 2
+    for m in range(n_freq // fold):
+        for c in range(min(keep_components, fold * g)):
+            jc, p = c // fold, c % fold
+            l_new = m * fold + p
+            rd = real_dim(jc, l_new, d)
+            mask[rd] = 1.0
+            mask[rd + 1] = 1.0
+    return mask
+
+
+def mha2mla_mask(cfg, k_samples, q_samples, keep_pairs_per_head):
+    """MHA2MLA 'norm' strategy: per KV head, keep RoPE on the
+    `keep_pairs_per_head` frequency pairs with the largest
+    mean ||q_pair|| * ||k_pair|| (aggregated over the group's query heads).
+    """
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    rep = h // g
+    n_freq = d // 2
+    mask = np.zeros(g * d)
+    for j in range(g):
+        scores = np.zeros(n_freq)
+        for l in range(n_freq):
+            kc = k_samples[:, [real_dim(j, l, d), real_dim(j, l, d) + 1]]
+            knorm = np.mean(np.linalg.norm(kc, axis=1))
+            qnorm = 0.0
+            for i in range(j * rep, (j + 1) * rep):
+                qc = q_samples[:, [i * d + 2 * l, i * d + 2 * l + 1]]
+                qnorm += np.mean(np.linalg.norm(qc, axis=1))
+            scores[l] = knorm * qnorm
+        keep = np.argsort(scores)[::-1][:keep_pairs_per_head]
+        for l in keep:
+            mask[real_dim(j, l, d)] = 1.0
+            mask[real_dim(j, l, d) + 1] = 1.0
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Step 4+5: Balanced joint low-rank PCA
+# ---------------------------------------------------------------------------
+
+def kv_balance_alpha(k_nope_samples, v_samples):
+    """Eq. 20: alpha = E||k_nope|| / E||v||."""
+    kn = np.mean(np.linalg.norm(k_nope_samples, axis=1))
+    vn = np.mean(np.linalg.norm(v_samples, axis=1))
+    return kn / max(vn, 1e-12)
+
+
+def joint_lowrank_basis(k_nope_samples, v_samples, alpha, r, mode="wx",
+                        wk_nope=None, wv=None):
+    """PCA basis R [(n_k + n_v), r] for the balanced joint space.
+
+    mode="wx": activation-based PCA (paper's choice, Fig. 3b "WX-based").
+    mode="w" : weight-based PCA over the rows of [Wk_nope/alpha ; Wv]
+               (Fig. 3b "W-based" ablation; requires wk_nope [D, n_k] and
+               wv [D, n_v]).
+    """
+    if mode == "wx":
+        z = np.concatenate([k_nope_samples / alpha, v_samples], axis=1)
+        cmat = z.T @ z
+    elif mode == "w":
+        w = np.concatenate([wk_nope / alpha, wv], axis=1)  # [D, n_k+n_v]
+        cmat = w.T @ w
+    else:
+        raise ValueError(mode)
+    _, u = eigh_desc(cmat)
+    return u[:, :r]
+
+
+# ---------------------------------------------------------------------------
+# Full per-layer conversion -> trainable MLA params
+# ---------------------------------------------------------------------------
+
+def convert_layer(wq, wk, wv, k_pre, q_pre, v_act, cfg, r, fold=1,
+                  balance=True, pca_mode="wx", baseline=None,
+                  keep_pairs_per_head=None):
+    """Convert one GQA layer to trainable-MLA parameter blocks.
+
+    wq [D, h*d], wk [D, g*d], wv [D, g*d];
+    k_pre/q_pre/v_act: calibration activations [N, g*d] / [N, h*d] / [N, g*d].
+
+    baseline=None     -> TransMLA (RoRoPE + FreqFold + BKV + joint PCA)
+    baseline="mha2mla"-> norm-selected per-head partial RoPE + plain
+                         weight-SVD, no balancing.
+
+    Returns dict with keys wq, wqr [h,d,dr], w_dkv [D,r], w_krope [D,dr],
+    w_uk [h,r,d], w_uv [h,r,d], rope_freqs [dr/2], plus diagnostics.
+    """
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    gd = g * d
+    mixers = selector_mixers(cfg)
+
+    if baseline is None:
+        q_big, new_freqs = rorope_rotation(k_pre, cfg, fold=fold)
+        wk_rot, mixers = apply_rotation(wk, mixers, q_big)
+        k_rot = k_pre @ q_big.T
+        rope_dims = np.zeros(gd, bool)
+        rope_dims[:d] = True  # head 0 carries all positional info
+        freqs_out = new_freqs[: d // 2]
+    else:
+        kp = keep_pairs_per_head
+        if kp is None:
+            kp = d // (2 * g)  # same total rope budget as TransMLA
+        mask = mha2mla_mask(cfg, k_pre, q_pre, kp)
+        wk_rot = wk
+        k_rot = k_pre
+        rope_dims = mask > 0.5
+        # Per-pair schedule of the kept dims, in merged order.
+        mf = merged_freqs(cfg)
+        freqs_out = np.array(
+            [mf[i // 2] for i in range(gd) if rope_dims[i] and i % 2 == 0]
+        )
+
+    nope_dims = ~rope_dims
+    dr = int(rope_dims.sum())
+    n_nope = gd - dr
+
+    wk_rope = wk_rot[:, rope_dims]        # [D, dr]
+    wk_nope = wk_rot[:, nope_dims]        # [D, n_nope]
+    k_nope_act = k_rot[:, nope_dims]
+
+    if balance and baseline is None:
+        alpha = kv_balance_alpha(k_nope_act, v_act)
+    else:
+        alpha = 1.0
+
+    rr = min(r, n_nope + gd)
+    rbasis = joint_lowrank_basis(
+        k_nope_act, v_act, alpha, rr,
+        mode=("w" if baseline == "mha2mla" else pca_mode),
+        wk_nope=wk_nope, wv=wv,
+    )
+    r_k = rbasis[:n_nope, :]              # [n_nope, r]
+    r_v = rbasis[n_nope:, :]              # [g*d, r]
+
+    w_dkv = np.concatenate([wk_nope / alpha, wv], axis=1) @ rbasis  # [D, r]
+
+    # Per-head blocks.
+    wqr = np.empty((h, d, dr))
+    w_uk = np.empty((h, rr, d))
+    w_uv = np.empty((h, rr, d))
+    rep = h // g
+    for i in range(h):
+        m_i = mixers[i]                   # [d, g*d]
+        wqr[i] = m_i[:, rope_dims]        # q_rope_i = q_i @ wqr_i
+        b_i = m_i[:, nope_dims]           # [d, n_nope]
+        w_uk[i] = alpha * (b_i @ r_k).T   # [r, d]
+        j = i // rep
+        w_uv[i] = r_v[j * d:(j + 1) * d, :].T  # [r, d]
+
+    return {
+        "wq": wq,
+        "wqr": wqr,
+        "w_dkv": w_dkv,
+        "w_krope": wk_rope,
+        "w_uk": w_uk,
+        "w_uv": w_uv,
+        "rope_freqs": freqs_out,
+        "alpha": alpha,
+        "dr": dr,
+    }
+
+
+def absorb_layer(lp, wo):
+    """Fold W^UK into Q and W^UV into O (Eq. 10). wo [h*d, D].
+
+    Returns wq_rope [h,D,dr], wq_lat [h,D,r], wo_abs [h,r,D]."""
+    h, d, dr = lp["wqr"].shape
+    rr = lp["w_uk"].shape[1]
+    dm = lp["wq"].shape[0]
+    wq_rope = np.empty((h, dm, dr))
+    wq_lat = np.empty((h, dm, rr))
+    wo_abs = np.empty((h, rr, wo.shape[1]))
+    for i in range(h):
+        wq_i = lp["wq"][:, i * d:(i + 1) * d]     # [D, d]
+        wq_rope[i] = wq_i @ lp["wqr"][i]          # [D, dr]
+        wq_lat[i] = wq_i @ lp["w_uk"][i].T        # [D, r]
+        wo_abs[i] = lp["w_uv"][i] @ wo[i * d:(i + 1) * d, :]  # [r, D]
+    return wq_rope, wq_lat, wo_abs
+
+
+# ---------------------------------------------------------------------------
+# Whole-model conversion
+# ---------------------------------------------------------------------------
+
+def convert_model(gqa_params, calib, cfg, r, fold=1, balance=True,
+                  pca_mode="wx", baseline=None, keep_pairs_per_head=None):
+    """Convert a full GQA parameter dict (numpy arrays, layouts as in
+    model.GQA_KEYS) into trainable-MLA and absorbed-MLA dicts.
+
+    calib: (k_pre [L,N,g*d], v [L,N,g*d], q_pre [L,N,h*d]).
+    Returns (mla_train_params, mla_abs_params, diag).
+    """
+    lyr = cfg.n_layers
+    k_pre, v_act, q_pre = calib
+    layers = []
+    for l in range(lyr):
+        layers.append(
+            convert_layer(
+                gqa_params["wq"][l], gqa_params["wk"][l], gqa_params["wv"][l],
+                k_pre[l], q_pre[l], v_act[l], cfg, r, fold=fold,
+                balance=balance, pca_mode=pca_mode, baseline=baseline,
+                keep_pairs_per_head=keep_pairs_per_head,
+            )
+        )
+
+    def stack(key):
+        return np.stack([lp[key] for lp in layers])
+
+    train = {
+        "embed": gqa_params["embed"],
+        "wq": gqa_params["wq"],
+        "wqr": stack("wqr"),
+        "w_dkv": stack("w_dkv"),
+        "w_krope": stack("w_krope"),
+        "w_uk": stack("w_uk"),
+        "w_uv": stack("w_uv"),
+        "wo": gqa_params["wo"],
+        "ln1": gqa_params["ln1"],
+        "w_gate": gqa_params["w_gate"],
+        "w_up": gqa_params["w_up"],
+        "w_down": gqa_params["w_down"],
+        "ln2": gqa_params["ln2"],
+        "ln_f": gqa_params["ln_f"],
+        "lm_head": gqa_params["lm_head"],
+        "rope_freqs": layers[0]["rope_freqs"],
+    }
+
+    wq_rope, wq_lat, wo_abs = [], [], []
+    for l in range(lyr):
+        a, b, c = absorb_layer(layers[l], gqa_params["wo"][l])
+        wq_rope.append(a)
+        wq_lat.append(b)
+        wo_abs.append(c)
+
+    absorbed = {
+        "embed": gqa_params["embed"],
+        "wq_rope": np.stack(wq_rope),
+        "wq_lat": np.stack(wq_lat),
+        "w_dkv": train["w_dkv"],
+        "w_krope": train["w_krope"],
+        "wo_abs": np.stack(wo_abs),
+        "ln1": gqa_params["ln1"],
+        "w_gate": gqa_params["w_gate"],
+        "w_up": gqa_params["w_up"],
+        "w_down": gqa_params["w_down"],
+        "ln2": gqa_params["ln2"],
+        "ln_f": gqa_params["ln_f"],
+        "lm_head": gqa_params["lm_head"],
+        "rope_freqs": train["rope_freqs"],
+    }
+    diag = {"alphas": [lp["alpha"] for lp in layers]}
+    return train, absorbed, diag
+
+
+def merged_params_from(gqa_params, cfg, q_big=None, freqs=None, mask=None):
+    """Build merged-form params (model.MERGED_KEYS) from GQA params, with
+    optional rotation / frequency schedule / rope mask — the Fig. 2b model.
+    """
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    gd = g * d
+    mixers = selector_mixers(cfg)
+    wk = gqa_params["wk"].copy()
+    lyr = cfg.n_layers
+    wqm = np.empty((lyr, h, gqa_params["wq"].shape[1], gd))
+    for l in range(lyr):
+        mx = mixers
+        wk_l = gqa_params["wk"][l]
+        if q_big is not None:
+            wk_l, mx = apply_rotation(wk_l, mixers, q_big[l])
+        wk[l] = wk_l
+        for i in range(h):
+            wqm[l, i] = gqa_params["wq"][l][:, i * d:(i + 1) * d] @ mx[i]
+    out = {k: gqa_params[k] for k in
+           ("embed", "wv", "wo", "ln1", "w_gate", "w_up", "w_down",
+            "ln2", "ln_f", "lm_head")}
+    out["wqm"] = wqm
+    out["wk"] = wk
+    out["rope_freqs"] = merged_freqs(cfg) if freqs is None else freqs
+    out["rope_mask"] = np.ones(gd) if mask is None else mask
+    return out

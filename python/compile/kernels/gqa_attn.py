@@ -1,0 +1,69 @@
+"""Pallas kernel: GQA decode attention (the baseline hot path).
+
+Lowered with ``interpret=True`` so the resulting HLO runs on the CPU PJRT
+plugin (real-TPU lowering emits a Mosaic custom-call the CPU client cannot
+execute). The BlockSpec structure is nevertheless written the way a TPU
+kernel would be tiled: one program per (batch, group) pair, with the
+group's key/value stripe of the cache staged through VMEM and the
+``[rep, d] x [d, T]`` score matmul shaped for the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale):
+    # q_ref: [rep, d]  queries of the heads sharing this KV group
+    # k_ref: [T, d]    this group's key stripe
+    # v_ref: [T, d]    this group's value stripe
+    # pos_ref: [1]     newest valid cache index for this sequence
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    pos = pos_ref[0]
+
+    scores = jnp.dot(q, k.T) * scale  # [rep, T] — MXU-shaped matmul
+    t = scores.shape[-1]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1) <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(probs, v)  # [rep, d]
+
+
+def gqa_decode_attention(q, k_cache, v_cache, pos, *, scale, interpret=True):
+    """Decode-step attention for a GQA/MHA model over a padded KV cache.
+
+    q:       [B, h, d] (RoPE already applied)
+    k_cache: [B, T, g, d]
+    v_cache: [B, T, g, d]
+    pos:     [B] int32
+    returns: [B, h, d]
+    """
+    b, h, d = q.shape
+    t, g = k_cache.shape[1], k_cache.shape[2]
+    rep = h // g
+    qg = q.reshape(b, g, rep, d)
+
+    grid = (b, g)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, rep, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, t, None, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, t, None, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g, rep, d), q.dtype),
+        interpret=interpret,
+    )(qg, k_cache, v_cache, pos)
+    return out.reshape(b, h, d)

@@ -1,0 +1,80 @@
+"""Pallas kernel: absorbed-MLA decode attention — the paper's hot path.
+
+This is the Eq. 10 inference paradigm: after the Absorb operation the
+latent cache ``c`` acts as one shared big KV head, every query head scores
+against it directly, and the attention output stays in latent space (the
+per-head ``W^UV`` up-projection is folded into ``W^O`` outside the kernel).
+
+TPU shaping notes (the kernel itself is executed with ``interpret=True``
+on this CPU testbed — see DESIGN.md §Hardware-Adaptation):
+  * one program per sequence; the whole latent stripe ``[T, r + dr]``
+    fits VMEM for every exported rank (T=512, r<=192 -> <=448 KiB f32),
+    so no double-buffered HBM streaming is needed at this scale;
+  * both matmuls are ``[h, r] x [r, T]`` and ``[h, T] x [T, r]`` —
+    MXU-systolic-friendly, with h the (small) sublane dimension;
+  * scores for the latent and RoPE parts are fused into one pass so the
+    cache stripe is read exactly once.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(ql_ref, qr_ref, c_ref, kr_ref, pos_ref, o_ref, *, scale):
+    # ql_ref: [h, r]   latent-absorbed queries
+    # qr_ref: [h, dr]  decoupled-RoPE queries (RoPE applied)
+    # c_ref:  [T, r]   latent cache stripe
+    # kr_ref: [T, dr]  shared RoPE-key stripe
+    ql = ql_ref[...]
+    qr = qr_ref[...]
+    c = c_ref[...]
+    kr = kr_ref[...]
+    pos = pos_ref[0]
+
+    # Fused content + positional scores (paper Eq. 10 numerator).
+    scores = (jnp.dot(ql, c.T) + jnp.dot(qr, kr.T)) * scale  # [h, T]
+    t = scores.shape[-1]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1) <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(probs, c)  # [h, r] — output stays latent
+
+
+def mla_absorbed_decode_attention(
+    q_lat, q_rope, c_cache, kr_cache, pos, *, scale, interpret=True
+):
+    """Absorbed-MLA decode attention over the latent KV cache.
+
+    q_lat:    [B, h, r]
+    q_rope:   [B, h, dr]
+    c_cache:  [B, T, r]
+    kr_cache: [B, T, dr]
+    pos:      [B] int32
+    returns:  [B, h, r]
+    """
+    b, h, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    t = c_cache.shape[1]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, h, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, h, dr), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, dr), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, h, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, r), q_lat.dtype),
+        interpret=interpret,
+    )(q_lat, q_rope, c_cache, kr_cache, pos)

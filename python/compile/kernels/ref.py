@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas decode-attention kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match its oracle here to float tolerance (pytest + hypothesis
+sweep shapes and dtypes in ``python/tests/test_kernel.py``).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def masked_softmax(scores, pos):
+    """Softmax over the last axis with positions > pos masked out.
+
+    scores: [..., T]; pos broadcastable to scores (last valid cache index).
+    """
+    t = scores.shape[-1]
+    idx = jnp.arange(t)
+    mask = idx <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gqa_decode_attention_ref(q, k_cache, v_cache, pos, scale):
+    """Grouped-query decode attention over a padded cache.
+
+    q:        [B, h, d]     query for the new token (RoPE already applied)
+    k_cache:  [B, T, g, d]  keys   (positions > pos are padding)
+    v_cache:  [B, T, g, d]  values
+    pos:      [B] int32     index of the newest valid entry per sequence
+    returns:  [B, h, d]
+    """
+    b, h, d = q.shape
+    g = k_cache.shape[2]
+    rep = h // g
+    qg = q.reshape(b, g, rep, d)
+    scores = jnp.einsum("bgrd,btgd->bgrt", qg, k_cache) * scale
+    probs = masked_softmax(scores, pos[:, None, None, None])
+    out = jnp.einsum("bgrt,btgd->bgrd", probs, v_cache)
+    return out.reshape(b, h, d)
+
+
+def mla_absorbed_decode_attention_ref(q_lat, q_rope, c_cache, kr_cache, pos, scale):
+    """Absorbed-MLA decode attention (the paper's Eq. 10 inference paradigm).
+
+    Every query head attends over the SAME latent cache (MQA-like):
+      score_j = q_lat . c_j + q_rope . k_rope_j
+      out_i   = sum_j softmax(score)_j * c_j        (latent-space output)
+
+    q_lat:    [B, h, r]     latent-absorbed queries
+    q_rope:   [B, h, dr]    decoupled-RoPE queries (RoPE already applied)
+    c_cache:  [B, T, r]     latent KV cache
+    kr_cache: [B, T, dr]    shared RoPE-key cache (RoPE already applied)
+    pos:      [B] int32
+    returns:  [B, h, r]
+    """
+    scores = (
+        jnp.einsum("bhr,btr->bht", q_lat, c_cache)
+        + jnp.einsum("bhd,btd->bht", q_rope, kr_cache)
+    ) * scale
+    probs = masked_softmax(scores, pos[:, None, None])
+    return jnp.einsum("bht,btr->bhr", probs, c_cache)

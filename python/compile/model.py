@@ -1,0 +1,609 @@
+"""L2: JAX transformer models — GQA baseline, merged/rotated analysis form,
+and the TransMLA (absorbed + trainable) forms.
+
+Everything here is build-time only: ``aot.py`` lowers these entry points to
+HLO text once; the Rust coordinator executes them via PJRT with no Python
+on the request path.
+
+Conventions
+-----------
+* Row-vector convention throughout: activations are ``[..., features]``
+  and projections right-multiply (``x @ W`` with ``W [in, out]``).
+* RoPE is interleaved-pair (paper Eq. 1): dims ``(2l, 2l+1)`` form the
+  l-th complex plane with frequency ``theta ** (-2l/d)``.
+* KV caches are padded to ``max_seq`` and masked by position; decode
+  carries them as explicit inputs/outputs (xla 0.1.6 has no donation,
+  which makes the decode step cache-traffic-bound — exactly the effect
+  TransMLA exploits).
+* Parameter "trees" are dicts; the canonical flat ordering consumed by
+  the Rust side is given by the ``*_KEYS`` lists and recorded in
+  ``artifacts/manifest.json``.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gqa_attn import gqa_decode_attention
+from .kernels.mla_attn import mla_absorbed_decode_attention
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# Parameter orderings (the ABI between aot.py and the Rust coordinator).
+# ---------------------------------------------------------------------------
+
+GQA_KEYS = [
+    "embed",     # [V, D]
+    "wq",        # [L, D, h*d]
+    "wk",        # [L, D, g*d]
+    "wv",        # [L, D, g*d]
+    "wo",        # [L, h*d, D]
+    "ln1",       # [L, D]
+    "w_gate",    # [L, D, F]
+    "w_up",      # [L, D, F]
+    "w_down",    # [L, F, D]
+    "ln2",       # [L, D]
+    "ln_f",      # [D]
+    "lm_head",   # [D, V]
+]
+
+# Absorbed (serving) MLA — Eq. 10 paradigm, W^UK folded into Q,
+# W^UV folded into O. `rope_freqs` carries the (possibly FreqFolded)
+# frequency schedule of the decoupled-RoPE head.
+MLA_ABS_KEYS = [
+    "embed",      # [V, D]
+    "wq_rope",    # [L, h, D, dr]
+    "wq_lat",     # [L, h, D, r]
+    "w_dkv",      # [L, D, r]
+    "w_krope",    # [L, D, dr]
+    "wo_abs",     # [L, h, r, D]
+    "ln1",        # [L, D]
+    "w_gate",     # [L, D, F]
+    "w_up",       # [L, D, F]
+    "w_down",     # [L, F, D]
+    "ln2",        # [L, D]
+    "ln_f",       # [D]
+    "lm_head",    # [D, V]
+    "rope_freqs", # [dr/2]
+]
+
+# Trainable (fine-tuning) MLA — Eq. 9 paradigm: latent is up-projected to
+# per-head keys/values, queries keep full rank.
+MLA_TRAIN_KEYS = [
+    "embed",      # [V, D]
+    "wq",         # [L, D, h*d]
+    "wqr",        # [L, h, d, dr]   per-head RoPE-query mixer (P_i^T)
+    "w_dkv",      # [L, D, r]
+    "w_krope",    # [L, D, dr]
+    "w_uk",       # [L, h, r, d]    latent -> per-head NoPE key (U_i^T)
+    "w_uv",       # [L, h, r, d]    latent -> per-head value    (V_i^T)
+    "wo",         # [L, h*d, D]
+    "ln1",
+    "w_gate",
+    "w_up",
+    "w_down",
+    "ln2",
+    "ln_f",
+    "lm_head",
+    "rope_freqs", # [dr/2] (stop-gradient: structural, not trained)
+]
+
+# Merged/rotated analysis form (Sec. 4.1-4.2): one big key head, per-head
+# query mixers, maskable per-pair RoPE with an explicit frequency schedule.
+MERGED_KEYS = [
+    "embed",      # [V, D]
+    "wqm",        # [L, h, D, g*d]  fused W^Q_i @ A_i^T
+    "wk",         # [L, D, g*d]     (rotated)
+    "wv",         # [L, D, g*d]
+    "wo",         # [L, h*d, D]
+    "ln1",
+    "w_gate",
+    "w_up",
+    "w_down",
+    "ln2",
+    "ln_f",
+    "lm_head",
+    "rope_freqs", # [g*d/2] per-pair frequency schedule (FreqFold-aware)
+    "rope_mask",  # [g*d]   1.0 = keep RoPE on this dim, 0.0 = NoPE
+]
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def default_freqs(n, theta=10000.0):
+    """Frequency schedule for an n-dim RoPE head (n/2 pairs)."""
+    l = jnp.arange(n // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * l / n)
+
+
+def rope_apply(x, positions, freqs):
+    """Interleaved-pair RoPE (paper Eq. 1).
+
+    x: [..., n] (n even), positions: broadcastable to x[..., 0] shape,
+    freqs: [n/2].
+    """
+    xe = x[..., 0::2]
+    xo = x[..., 1::2]
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    oe = xe * c - xo * s
+    oo = xe * s + xo * c
+    return jnp.stack([oe, oo], axis=-1).reshape(x.shape)
+
+
+def rope_apply_masked(x, positions, freqs, mask):
+    """RoPE applied only where mask==1 (dims with mask==0 become NoPE)."""
+    return rope_apply(x, positions, freqs) * mask + x * (1.0 - mask)
+
+
+def causal_mask(t):
+    i = jnp.arange(t)
+    return i[:, None] >= i[None, :]  # [T(query), T(key)]
+
+
+def masked_softmax_2d(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def logits_from(x, params):
+    return rmsnorm(x, params["ln_f"]) @ params["lm_head"]
+
+
+def _layer_params(params, keys):
+    """Slice the per-layer stacked arrays into a scan-compatible pytree."""
+    return tuple(params[k] for k in keys)
+
+
+# ---------------------------------------------------------------------------
+# GQA model
+# ---------------------------------------------------------------------------
+
+GQA_LAYER = ("wq", "wk", "wv", "wo", "ln1", "w_gate", "w_up", "w_down", "ln2")
+
+
+def gqa_prefill(params, tokens, cfg):
+    """Full forward over [B, T=max_seq] tokens.
+
+    Returns (logits [B,T,V], k_cache [L,B,T,g,d] (post-RoPE),
+    v_cache [L,B,T,g,d]).
+    """
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    b, t = tokens.shape
+    freqs = default_freqs(d, cfg.rope_theta)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    cmask = causal_mask(t)
+    scale = 1.0 / math.sqrt(d)
+
+    x = params["embed"][tokens]
+
+    def body(x, layer):
+        wq, wk, wv, wo, ln1, wg, wu, wd, ln2 = layer
+        hn = rmsnorm(x, ln1)
+        q = (hn @ wq).reshape(b, t, h, d)
+        k = (hn @ wk).reshape(b, t, g, d)
+        v = (hn @ wv).reshape(b, t, g, d)
+        qr = rope_apply(q, pos[None, :, None], freqs)
+        kr = rope_apply(k, pos[None, :, None], freqs)
+        rep = h // g
+        qg = qr.reshape(b, t, g, rep, d)
+        scores = jnp.einsum("bsgrd,btgd->bgrst", qg, kr) * scale
+        probs = masked_softmax_2d(scores, cmask[None, None, None])
+        o = jnp.einsum("bgrst,btgd->bsgrd", probs, v).reshape(b, t, h * d)
+        x = x + o @ wo
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, (kr, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, _layer_params(params, GQA_LAYER))
+    return logits_from(x, params), ks, vs
+
+
+def gqa_decode(params, token, pos, k_cache, v_cache, cfg):
+    """One decode step. token [B] i32, pos [B] i32 (index to write),
+    caches [L,B,T,g,d]. Returns (logits [B,V], k_cache', v_cache')."""
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    b = token.shape[0]
+    freqs = default_freqs(d, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(d)
+
+    x = params["embed"][token]
+
+    def body(x, layer):
+        (wq, wk, wv, wo, ln1, wg, wu, wd, ln2), (kc, vc) = layer
+        hn = rmsnorm(x, ln1)
+        q = (hn @ wq).reshape(b, h, d)
+        k = (hn @ wk).reshape(b, g, d)
+        v = (hn @ wv).reshape(b, g, d)
+        qr = rope_apply(q, pos[:, None], freqs)
+        kr = rope_apply(k, pos[:, None], freqs)
+        kc = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n[None], (p, 0, 0))
+        )(kc, kr, pos)
+        vc = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n[None], (p, 0, 0))
+        )(vc, v, pos)
+        o = gqa_decode_attention(qr, kc, vc, pos, scale=scale)
+        x = x + o.reshape(b, h * d) @ wo
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, (kc, vc)
+
+    layers = (_layer_params(params, GQA_LAYER), (k_cache, v_cache))
+    x, (kc, vc) = jax.lax.scan(body, x, layers)
+    return logits_from(x, params), kc, vc
+
+
+def gqa_calib(params, tokens, cfg):
+    """Calibration forward: returns pre-RoPE keys / values / queries.
+
+    (k_pre [L,B,T,g*d], v [L,B,T,g*d], q_pre [L,B,T,h*d]).
+    Pre-RoPE is the right statistic for RoRoPE: per-frequency cross-head
+    covariance summed over (real, imag) is exactly RoPE-invariant.
+    """
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    b, t = tokens.shape
+    freqs = default_freqs(d, cfg.rope_theta)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    cmask = causal_mask(t)
+    scale = 1.0 / math.sqrt(d)
+    x = params["embed"][tokens]
+
+    def body(x, layer):
+        wq, wk, wv, wo, ln1, wg, wu, wd, ln2 = layer
+        hn = rmsnorm(x, ln1)
+        q = hn @ wq
+        k = hn @ wk
+        v = hn @ wv
+        q4 = rope_apply(q.reshape(b, t, h, d), pos[None, :, None], freqs)
+        k4 = rope_apply(k.reshape(b, t, g, d), pos[None, :, None], freqs)
+        rep = h // g
+        qg = q4.reshape(b, t, g, rep, d)
+        scores = jnp.einsum("bsgrd,btgd->bgrst", qg, k4) * scale
+        probs = masked_softmax_2d(scores, cmask[None, None, None])
+        o = jnp.einsum(
+            "bgrst,btgd->bsgrd", probs, v.reshape(b, t, g, d)
+        ).reshape(b, t, h * d)
+        x = x + o @ wo
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, (k, v, q)
+
+    _, (ks, vs, qs) = jax.lax.scan(body, x, _layer_params(params, GQA_LAYER))
+    return ks, vs, qs
+
+
+# ---------------------------------------------------------------------------
+# Merged / rotated analysis model (Sec. 4.1 + 4.2)
+# ---------------------------------------------------------------------------
+
+MERGED_LAYER = ("wqm", "wk", "wv", "wo", "ln1", "w_gate", "w_up", "w_down", "ln2")
+
+
+def merged_prefill(params, tokens, cfg):
+    """Forward of the merged-single-key-head form with maskable RoPE.
+
+    Scores: RoPE_masked(A_i q_i) . RoPE_masked(k_merged) / sqrt(d); the
+    rotation Q is pre-folded into wk / wqm by the converter. Supports
+    RoRoPE, FreqFold (via rope_freqs) and MHA2MLA partial-RoPE (via
+    rope_mask) evaluation — Figure 2b. Returns logits [B,T,V].
+    """
+    h, g, d = cfg.n_heads, cfg.n_kv_groups, cfg.head_dim
+    b, t = tokens.shape
+    freqs = params["rope_freqs"]
+    mask = params["rope_mask"]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    cmask = causal_mask(t)
+    scale = 1.0 / math.sqrt(d)
+    x = params["embed"][tokens]
+
+    def body(x, layer):
+        wqm, wk, wv, wo, ln1, wg, wu, wd, ln2 = layer
+        hn = rmsnorm(x, ln1)
+        qm = jnp.einsum("btD,hDg->bthg", hn, wqm)       # [B,T,h,g*d]
+        km = hn @ wk                                     # [B,T,g*d]
+        v = (hn @ wv).reshape(b, t, g, d)
+        qmr = rope_apply_masked(qm, pos[None, :, None], freqs, mask)
+        kmr = rope_apply_masked(km, pos[None, :], freqs, mask)
+        scores = jnp.einsum("bshg,btg->bhst", qmr, kmr) * scale
+        probs = masked_softmax_2d(scores, cmask[None, None])
+        rep = h // g
+        pg = probs.reshape(b, g, rep, t, t)
+        o = jnp.einsum("bgrst,btgd->bsgrd", pg, v).reshape(b, t, h * d)
+        x = x + o @ wo
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, ()
+
+    x, _ = jax.lax.scan(body, x, _layer_params(params, MERGED_LAYER))
+    return logits_from(x, params)
+
+
+# ---------------------------------------------------------------------------
+# MLA — absorbed (serving) form
+# ---------------------------------------------------------------------------
+
+MLA_ABS_LAYER = (
+    "wq_rope", "wq_lat", "w_dkv", "w_krope", "wo_abs",
+    "ln1", "w_gate", "w_up", "w_down", "ln2",
+)
+
+
+def mla_prefill(params, tokens, cfg):
+    """Absorbed-form full forward. Returns (logits [B,T,V],
+    c_cache [L,B,T,r], kr_cache [L,B,T,dr] (post-RoPE))."""
+    d = cfg.head_dim
+    b, t = tokens.shape
+    freqs = params["rope_freqs"]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    cmask = causal_mask(t)
+    scale = 1.0 / math.sqrt(d)
+    x = params["embed"][tokens]
+
+    def body(x, layer):
+        wqr, wql, wdkv, wkr, woabs, ln1, wg, wu, wd, ln2 = layer
+        hn = rmsnorm(x, ln1)
+        q_rope = jnp.einsum("btD,hDe->bthe", hn, wqr)    # [B,T,h,dr]
+        q_lat = jnp.einsum("btD,hDr->bthr", hn, wql)     # [B,T,h,r]
+        c = hn @ wdkv                                    # [B,T,r]
+        kr = rope_apply(hn @ wkr, pos[None, :], freqs)   # [B,T,dr]
+        q_rope = rope_apply(q_rope, pos[None, :, None], freqs)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat, c)
+            + jnp.einsum("bshe,bte->bhst", q_rope, kr)
+        ) * scale
+        probs = masked_softmax_2d(scores, cmask[None, None])
+        o = jnp.einsum("bhst,btr->bshr", probs, c)       # [B,T,h,r]
+        x = x + jnp.einsum("bshr,hrD->bsD", o, woabs)
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, (c, kr)
+
+    x, (cs, krs) = jax.lax.scan(body, x, _layer_params(params, MLA_ABS_LAYER))
+    return logits_from(x, params), cs, krs
+
+
+def mla_decode(params, token, pos, c_cache, kr_cache, cfg):
+    """One absorbed-MLA decode step over the latent cache (Pallas L1 path).
+
+    caches: c [L,B,T,r], kr [L,B,T,dr]. Returns (logits, c', kr')."""
+    d = cfg.head_dim
+    b = token.shape[0]
+    freqs = params["rope_freqs"]
+    scale = 1.0 / math.sqrt(d)
+    x = params["embed"][token]
+
+    def body(x, layer):
+        (wqr, wql, wdkv, wkr, woabs, ln1, wg, wu, wd, ln2), (cc, krc) = layer
+        hn = rmsnorm(x, ln1)
+        q_rope = jnp.einsum("bD,hDe->bhe", hn, wqr)
+        q_lat = jnp.einsum("bD,hDr->bhr", hn, wql)
+        q_rope = rope_apply(q_rope, pos[:, None], freqs)
+        c_new = hn @ wdkv                                 # [B,r]
+        kr_new = rope_apply(hn @ wkr, pos, freqs)  # [B,dr], per-seq position
+        cc = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n[None], (p, 0))
+        )(cc, c_new, pos)
+        krc = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n[None], (p, 0))
+        )(krc, kr_new, pos)
+        o = mla_absorbed_decode_attention(q_lat, q_rope, cc, krc, pos, scale=scale)
+        x = x + jnp.einsum("bhr,hrD->bD", o, woabs)
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, (cc, krc)
+
+    layers = (_layer_params(params, MLA_ABS_LAYER), (c_cache, kr_cache))
+    x, (cc, krc) = jax.lax.scan(body, x, layers)
+    return logits_from(x, params), cc, krc
+
+
+# ---------------------------------------------------------------------------
+# MLA — trainable (fine-tuning) form, Eq. 9 paradigm
+# ---------------------------------------------------------------------------
+
+MLA_TRAIN_LAYER = (
+    "wq", "wqr", "w_dkv", "w_krope", "w_uk", "w_uv", "wo",
+    "ln1", "w_gate", "w_up", "w_down", "ln2",
+)
+
+
+def mla_train_forward(params, tokens, cfg):
+    """Trainable-form forward returning logits [B,T,V]."""
+    h, d = cfg.n_heads, cfg.head_dim
+    b, t = tokens.shape
+    freqs = jax.lax.stop_gradient(params["rope_freqs"])
+    pos = jnp.arange(t, dtype=jnp.int32)
+    cmask = causal_mask(t)
+    scale = 1.0 / math.sqrt(d)
+    x = params["embed"][tokens]
+
+    def body(x, layer):
+        wq, wqr, wdkv, wkr, wuk, wuv, wo, ln1, wg, wu, wd, ln2 = layer
+        hn = rmsnorm(x, ln1)
+        q = (hn @ wq).reshape(b, t, h, d)
+        c = hn @ wdkv                                     # [B,T,r]
+        kr = rope_apply(hn @ wkr, pos[None, :], freqs)    # [B,T,dr]
+        q_rope = rope_apply(
+            jnp.einsum("bthd,hde->bthe", q, wqr), pos[None, :, None], freqs
+        )
+        k_c = jnp.einsum("btr,hrd->bthd", c, wuk)         # per-head NoPE keys
+        v = jnp.einsum("btr,hrd->bthd", c, wuv)           # per-head values
+        scores = (
+            jnp.einsum("bshd,bthd->bhst", q, k_c)
+            + jnp.einsum("bshe,bte->bhst", q_rope, kr)
+        ) * scale
+        probs = masked_softmax_2d(scores, cmask[None, None])
+        o = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, t, h * d)
+        x = x + o @ wo
+        x = x + swiglu(rmsnorm(x, ln2), wg, wu, wd)
+        return x, ()
+
+    x, _ = jax.lax.scan(body, x, _layer_params(params, MLA_TRAIN_LAYER))
+    return logits_from(x, params)
+
+
+# ---------------------------------------------------------------------------
+# Training (next-byte cross-entropy + Adam)
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, tokens):
+    """Causal LM loss: predict tokens[:,1:] from positions [:, :-1]."""
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_step(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * g * g
+        mh = m_k / (1 - b1 ** step)
+        vh = v_k / (1 - b2 ** step)
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v
+
+
+def make_train_step(forward, cfg):
+    """Generic Adam train step over a forward(params, tokens, cfg)->logits."""
+
+    def train_step(params, m, v, step, lr, tokens):
+        def loss_fn(p):
+            return lm_loss(forward(p, tokens, cfg), tokens)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_p, new_m, new_v = adam_step(params, grads, m, v, step, lr)
+        return new_p, new_m, new_v, loss
+
+    return train_step
+
+
+def gqa_forward_logits(params, tokens, cfg):
+    return gqa_prefill(params, tokens, cfg)[0]
+
+
+# ---------------------------------------------------------------------------
+# Initialization (python-side; the Rust pipeline has its own mirrored init)
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(key, cfg, dtype=jnp.float32):
+    h, g, d, dm, f, lyr, vcb = (
+        cfg.n_heads, cfg.n_kv_groups, cfg.head_dim,
+        cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab,
+    )
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+    ks = jax.random.split(key, 16)
+    s = 0.02
+    return {
+        "embed": nrm(ks[0], (vcb, dm), s),
+        "wq": nrm(ks[1], (lyr, dm, h * d), s),
+        "wk": nrm(ks[2], (lyr, dm, g * d), s),
+        "wv": nrm(ks[3], (lyr, dm, g * d), s),
+        "wo": nrm(ks[4], (lyr, h * d, dm), s),
+        "ln1": jnp.ones((lyr, dm), dtype),
+        "w_gate": nrm(ks[5], (lyr, dm, f), s),
+        "w_up": nrm(ks[6], (lyr, dm, f), s),
+        "w_down": nrm(ks[7], (lyr, f, dm), s),
+        "ln2": jnp.ones((lyr, dm), dtype),
+        "ln_f": jnp.ones((dm,), dtype),
+        "lm_head": nrm(ks[8], (dm, vcb), s),
+    }
+
+
+def mla_abs_shapes(cfg, r):
+    h, d, dm, f, lyr, vcb = (
+        cfg.n_heads, cfg.head_dim, cfg.d_model, cfg.d_ff,
+        cfg.n_layers, cfg.vocab,
+    )
+    return {
+        "embed": (vcb, dm),
+        "wq_rope": (lyr, h, dm, d),
+        "wq_lat": (lyr, h, dm, r),
+        "w_dkv": (lyr, dm, r),
+        "w_krope": (lyr, dm, d),
+        "wo_abs": (lyr, h, r, dm),
+        "ln1": (lyr, dm),
+        "w_gate": (lyr, dm, f),
+        "w_up": (lyr, dm, f),
+        "w_down": (lyr, f, dm),
+        "ln2": (lyr, dm),
+        "ln_f": (dm,),
+        "lm_head": (dm, vcb),
+        "rope_freqs": (d // 2,),
+    }
+
+
+def mla_train_shapes(cfg, r):
+    h, d, dm, f, lyr, vcb = (
+        cfg.n_heads, cfg.head_dim, cfg.d_model, cfg.d_ff,
+        cfg.n_layers, cfg.vocab,
+    )
+    return {
+        "embed": (vcb, dm),
+        "wq": (lyr, dm, h * d),
+        "wqr": (lyr, h, d, d),
+        "w_dkv": (lyr, dm, r),
+        "w_krope": (lyr, dm, d),
+        "w_uk": (lyr, h, r, d),
+        "w_uv": (lyr, h, r, d),
+        "wo": (lyr, h * d, dm),
+        "ln1": (lyr, dm),
+        "w_gate": (lyr, dm, f),
+        "w_up": (lyr, dm, f),
+        "w_down": (lyr, f, dm),
+        "ln2": (lyr, dm),
+        "ln_f": (dm,),
+        "lm_head": (dm, vcb),
+        "rope_freqs": (d // 2,),
+    }
+
+
+def gqa_shapes(cfg):
+    h, g, d, dm, f, lyr, vcb = (
+        cfg.n_heads, cfg.n_kv_groups, cfg.head_dim, cfg.d_model,
+        cfg.d_ff, cfg.n_layers, cfg.vocab,
+    )
+    return {
+        "embed": (vcb, dm),
+        "wq": (lyr, dm, h * d),
+        "wk": (lyr, dm, g * d),
+        "wv": (lyr, dm, g * d),
+        "wo": (lyr, h * d, dm),
+        "ln1": (lyr, dm),
+        "w_gate": (lyr, dm, f),
+        "w_up": (lyr, dm, f),
+        "w_down": (lyr, f, dm),
+        "ln2": (lyr, dm),
+        "ln_f": (dm,),
+        "lm_head": (dm, vcb),
+    }
+
+
+def merged_shapes(cfg):
+    sh = dict(gqa_shapes(cfg))
+    h, g, d, dm, lyr = (
+        cfg.n_heads, cfg.n_kv_groups, cfg.head_dim, cfg.d_model, cfg.n_layers,
+    )
+    del sh["wq"]
+    sh["wqm"] = (lyr, h, dm, g * d)
+    sh["rope_freqs"] = (g * d // 2,)
+    sh["rope_mask"] = (g * d,)
+    return sh

@@ -1,0 +1,92 @@
+"""Manifest / artifact consistency: the ABI the Rust coordinator relies on."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_all_artifact_files_exist(manifest):
+    for e in manifest["entries"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, e["file"]
+
+
+def test_entry_inventory(manifest):
+    names = {e["name"] for e in manifest["entries"]}
+    for need in [
+        "llama2tiny_gqa_prefill", "llama2tiny_gqa_decode_b1",
+        "llama2tiny_gqa_decode_b8", "llama2tiny_gqa_train",
+        "llama2tiny_calib", "llama2tiny_merged_prefill",
+        "llama2tiny_mla_prefill_r128", "llama2tiny_mla_decode_r4_b8",
+        "llama2tiny_mla_train_r32", "smoltiny_gqa_prefill",
+    ]:
+        assert need in names, need
+
+
+def test_param_counts_match_orders(manifest):
+    orders = manifest["param_orders"]
+    for e in manifest["entries"]:
+        n_params = len(e["params"])
+        if e["kind"] == "train":
+            # params*3 + step + lr + tokens
+            assert len(e["inputs"]) == 3 * n_params + 3, e["name"]
+            # params*3 + loss
+            assert len(e["outputs"]) == 3 * n_params + 1, e["name"]
+        elif e["kind"] in ("prefill", "calib"):
+            assert len(e["inputs"]) == n_params + 1, e["name"]
+        elif e["kind"] == "decode":
+            assert len(e["inputs"]) == n_params + 4, e["name"]
+            assert len(e["outputs"]) == 3, e["name"]
+        if e["arch"] == "gqa":
+            assert e["params"] == orders["gqa"]
+
+
+def test_decode_cache_shapes_follow_rank(manifest):
+    for e in manifest["entries"]:
+        if e["kind"] != "decode":
+            continue
+        cfg = e["config"]
+        b = e["batch"]
+        lyr, d = cfg["n_layers"], cfg["head_dim"]
+        cache_in = e["inputs"][-2:]
+        # Context-length variants shrink T; both caches must agree on it
+        # and it may never exceed max_seq.
+        t = cache_in[0]["shape"][2]
+        assert t <= cfg["max_seq"]
+        assert cache_in[1]["shape"][2] == t
+        if e["arch"] == "gqa":
+            g = cfg["n_kv_groups"]
+            assert cache_in[0]["shape"] == [lyr, b, t, g, d]
+        else:
+            r = e["rank"]
+            assert cache_in[0]["shape"] == [lyr, b, t, r]
+            assert cache_in[1]["shape"] == [lyr, b, t, d]
+
+
+def test_compression_ratios_match_paper_rows(manifest):
+    cfg = manifest["configs"]["llama2tiny"]
+    kv = 2 * cfg["n_kv_groups"] * cfg["head_dim"]
+    ratios = {
+        r: 1.0 - (r + cfg["head_dim"]) / kv
+        for r in manifest["table1_ranks"]["llama2tiny"]
+    }
+    assert abs(ratios[128] - 0.6875) < 1e-9
+    assert abs(ratios[32] - 0.8750) < 1e-9
+    assert abs(ratios[4] - 0.9297) < 1e-3

@@ -1,0 +1,248 @@
+"""Conversion invariances — the paper's Appendix A/B/C/D as executable math.
+
+These validate the reference converter against the L2 models:
+  * Eq. 19 / Appendix B: RoRoPE rotation leaves logits exactly unchanged.
+  * Sec. 4.1: merged single-key-head form == original GQA, exactly.
+  * Appendix D: full-rank balanced joint PCA == the merged-masked model.
+  * Eq. 10: absorbed form == trainable form, exactly, at any rank.
+  * Appendix C Proposition 2: FreqFold joint PCA captures >= variance.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import convert_ref as C
+from compile import model as M
+from compile.configs import ModelConfig
+
+CFG_MHA = ModelConfig(name="t_mha", vocab=64, d_model=64, n_heads=4,
+                      n_kv_groups=4, head_dim=16, n_layers=2, d_ff=96,
+                      max_seq=32)
+CFG_GQA = ModelConfig(name="t_gqa", vocab=64, d_model=64, n_heads=4,
+                      n_kv_groups=2, head_dim=16, n_layers=2, d_ff=96,
+                      max_seq=32)
+
+
+def setup(cfg, seed=0):
+    p = M.init_gqa_params(jax.random.PRNGKey(seed), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, cfg.max_seq),
+                              0, cfg.vocab)
+    logits, _, _ = M.gqa_prefill(p, toks, cfg)
+    kp, va, qp = M.gqa_calib(p, toks, cfg)
+    lyr = cfg.n_layers
+    calib = tuple(
+        np.asarray(a, np.float64).reshape(lyr, -1, a.shape[-1])
+        for a in (kp, va, qp)
+    )
+    pn = {k: np.asarray(v, np.float64) for k, v in p.items()}
+    return p, pn, toks, logits, calib
+
+
+def as_f32(d):
+    return {k: jnp.asarray(v, jnp.float32) for k, v in d.items()}
+
+
+@pytest.mark.parametrize("cfg", [CFG_MHA, CFG_GQA], ids=["mha", "gqa"])
+def test_merged_form_is_exact(cfg):
+    _, pn, toks, logits, _ = setup(cfg)
+    mp = C.merged_params_from(pn, cfg)
+    lm = M.merged_prefill(as_f32(mp), toks, cfg)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(logits),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [CFG_MHA, CFG_GQA], ids=["mha", "gqa"])
+def test_rorope_rotation_is_orthogonal_and_exact(cfg):
+    _, pn, toks, logits, calib = setup(cfg)
+    k_pre = calib[0]
+    qbigs = []
+    for l in range(cfg.n_layers):
+        qb, nf = C.rorope_rotation(k_pre[l], cfg, fold=1)
+        np.testing.assert_allclose(qb @ qb.T, np.eye(cfg.kv_dim), atol=1e-9)
+        # fold=1 keeps the original frequency schedule
+        np.testing.assert_allclose(nf, C.merged_freqs(cfg))
+        qbigs.append(qb)
+    mp = C.merged_params_from(pn, cfg, q_big=qbigs)
+    lm = M.merged_prefill(as_f32(mp), toks, cfg)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(logits),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rorope_concentrates_energy_into_head0():
+    cfg = CFG_MHA
+    _, _, _, _, calib = setup(cfg)
+    k = calib[0][0]
+    qb, _ = C.rorope_rotation(k, cfg, fold=1)
+    k_rot = k @ qb.T
+    d = cfg.head_dim
+    head_energy = [
+        float(np.sum(k_rot[:, j * d:(j + 1) * d] ** 2))
+        for j in range(cfg.n_kv_groups)
+    ]
+    assert head_energy[0] == max(head_energy)
+    # energy must be non-increasing by construction of the PCA ordering
+    # (component c of every frequency goes to head c).
+    assert all(head_energy[i] >= head_energy[i + 1] - 1e-9
+               for i in range(len(head_energy) - 1))
+
+
+@pytest.mark.parametrize("fold", [2, 4])
+def test_freqfold_proposition2(fold):
+    """Prop. 2: V2 (joint PCA over folded groups, top M*..) >= V1 (separate
+    per-frequency PCAs keeping the top component each)."""
+    cfg = CFG_MHA
+    _, _, _, _, calib = setup(cfg)
+    k = calib[0][0]
+    g, d = cfg.n_kv_groups, cfg.head_dim
+    n_freq = d // 2
+    for m in range(n_freq // fold):
+        ls = list(range(m * fold, (m + 1) * fold))
+        v1 = 0.0
+        zs = []
+        for l in ls:
+            re = [C.real_dim(j, l, d) for j in range(g)]
+            im = [c + 1 for c in re]
+            z = np.concatenate([k[:, re], k[:, im]], axis=0)
+            zs.append(z)
+            w, _ = C.eigh_desc(z.T @ z)
+            v1 += w[0]
+        zcat = np.concatenate(zs, axis=1)
+        w, _ = C.eigh_desc(zcat.T @ zcat)
+        v2 = np.sum(w[:fold])
+        assert v2 >= v1 - 1e-6
+
+
+@pytest.mark.parametrize("cfg", [CFG_MHA, CFG_GQA], ids=["mha", "gqa"])
+def test_full_rank_conversion_matches_merged_masked(cfg):
+    """TransMLA at full rank == merged model with RoPE kept on head 0 only
+    (the only approximation is RoPE removal, not the PCA)."""
+    _, pn, toks, _, calib = setup(cfg)
+    r_full = (2 * cfg.n_kv_groups - 1) * cfg.head_dim
+    train, absorbed, _ = C.convert_model(pn, calib, cfg, r_full, fold=1)
+    lt = M.mla_train_forward(as_f32(train), toks, cfg)
+
+    qbigs = [C.rorope_rotation(calib[0][l], cfg, fold=1)[0]
+             for l in range(cfg.n_layers)]
+    mask = C.rorope_mask(cfg, keep_components=1, fold=1)
+    mp = C.merged_params_from(pn, cfg, q_big=qbigs, mask=mask)
+    lm = M.merged_prefill(as_f32(mp), toks, cfg)
+    np.testing.assert_allclose(np.asarray(lt), np.asarray(lm),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("r", [8, 24, 48])
+def test_absorb_equivalence_any_rank(r):
+    """Eq. 10: absorbed == trainable logits at every rank."""
+    cfg = CFG_MHA
+    _, pn, toks, _, calib = setup(cfg)
+    train, absorbed, _ = C.convert_model(pn, calib, cfg, r, fold=1)
+    lt = M.mla_train_forward(as_f32(train), toks, cfg)
+    la, _, _ = M.mla_prefill(as_f32(absorbed), toks, cfg)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lt),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bkv_alpha_balances_norms():
+    cfg = CFG_MHA
+    _, pn, toks, _, calib = setup(cfg)
+    k_pre, v_act, _ = calib
+    qb, _ = C.rorope_rotation(k_pre[0], cfg, fold=1)
+    k_rot = k_pre[0] @ qb.T
+    k_nope = k_rot[:, cfg.head_dim:]
+    alpha = C.kv_balance_alpha(k_nope, v_act[0])
+    assert alpha > 0
+    kn = np.mean(np.linalg.norm(k_nope / alpha, axis=1))
+    vn = np.mean(np.linalg.norm(v_act[0], axis=1))
+    np.testing.assert_allclose(kn, vn, rtol=1e-6)
+
+
+def test_bkv_improves_value_reconstruction():
+    """The point of BKV: without balancing, PCA directions are dominated by
+    the (larger-norm) keys and the value reconstruction error is worse."""
+    cfg = CFG_MHA
+    _, pn, toks, _, calib = setup(cfg, seed=3)
+    k_pre, v_act, _ = calib
+    qb, _ = C.rorope_rotation(k_pre[0], cfg, fold=1)
+    k_rot = k_pre[0] @ qb.T
+    d = cfg.head_dim
+    # exaggerate the imbalance the paper observes
+    k_nope = k_rot[:, d:] * 10.0
+    v = v_act[0]
+    r = 24
+
+    def v_err(alpha):
+        rb = C.joint_lowrank_basis(k_nope, v, alpha, r)
+        z = np.concatenate([k_nope / alpha, v], axis=1)
+        zc = z @ rb @ rb.T
+        v_rec = zc[:, k_nope.shape[1]:]
+        return float(np.linalg.norm(v_rec - v))
+
+    err_bal = v_err(C.kv_balance_alpha(k_nope, v))
+    err_raw = v_err(1.0)
+    assert err_bal < err_raw
+
+
+def test_mha2mla_mask_budget_and_structure():
+    cfg = CFG_MHA
+    _, pn, toks, _, calib = setup(cfg)
+    k_pre, _, q_pre = calib
+    kp = 2
+    mask = C.mha2mla_mask(cfg, k_pre[0], q_pre[0], kp)
+    g, d = cfg.n_kv_groups, cfg.head_dim
+    assert mask.sum() == g * kp * 2
+    # kept dims must come in (real, imag) pairs
+    m2 = mask.reshape(-1, 2)
+    assert np.all(m2[:, 0] == m2[:, 1])
+
+
+def test_mha2mla_baseline_conversion_runs_and_absorbs():
+    cfg = CFG_MHA
+    _, pn, toks, _, calib = setup(cfg)
+    r = 24
+    train, absorbed, _ = C.convert_model(
+        pn, calib, cfg, r, baseline="mha2mla", keep_pairs_per_head=2)
+    lt = M.mla_train_forward(as_f32(train), toks, cfg)
+    la, _, _ = M.mla_prefill(as_f32(absorbed), toks, cfg)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lt),
+                               rtol=2e-4, atol=2e-4)
+    assert np.isfinite(np.asarray(lt)).all()
+
+
+def test_rorope_beats_mha2mla_at_equal_budget():
+    """Fig. 2b headline: at the same RoPE budget, RoRoPE's rotated-and-
+    concentrated removal distorts the logits less than per-head norm
+    selection."""
+    cfg = CFG_MHA
+    p, pn, toks, logits, calib = setup(cfg, seed=7)
+    k_pre, _, q_pre = calib
+    g, d = cfg.n_kv_groups, cfg.head_dim
+
+    qbigs = [C.rorope_rotation(k_pre[l], cfg, fold=1)[0]
+             for l in range(cfg.n_layers)]
+    mask_ro = C.rorope_mask(cfg, keep_components=1)
+    mp = C.merged_params_from(pn, cfg, q_big=qbigs, mask=mask_ro)
+    l_ro = M.merged_prefill(as_f32(mp), toks, cfg)
+
+    kp = d // (2 * g)  # same number of kept pairs in total
+    mask_mm = C.mha2mla_mask(cfg, k_pre[0], q_pre[0], kp)
+    mp2 = C.merged_params_from(pn, cfg, mask=mask_mm)
+    l_mm = M.merged_prefill(as_f32(mp2), toks, cfg)
+
+    err_ro = float(jnp.mean((l_ro - logits) ** 2))
+    err_mm = float(jnp.mean((l_mm - logits) ** 2))
+    assert err_ro < err_mm
+
+
+def test_compression_error_decreases_with_rank():
+    cfg = CFG_MHA
+    _, pn, toks, logits, calib = setup(cfg, seed=11)
+    errs = []
+    for r in (8, 32, 112):
+        train, _, _ = C.convert_model(pn, calib, cfg, r, fold=1)
+        lt = M.mla_train_forward(as_f32(train), toks, cfg)
+        errs.append(float(jnp.mean((lt - logits) ** 2)))
+    assert errs[0] > errs[1] > errs[2] - 1e-9

@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against the oracle is the
+core correctness signal for the kernels that end up inside the decode HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gqa_attn import gqa_decode_attention
+from compile.kernels.mla_attn import mla_absorbed_decode_attention
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 4),                    # B
+    st.sampled_from([1, 2, 4, 8]),        # g
+    st.integers(1, 4),                    # rep = h // g
+    st.sampled_from([4, 8, 16, 32]),      # d
+    st.sampled_from([8, 16, 64, 128]),    # T
+    st.integers(0, 10**6),                # seed
+)
+
+
+@given(shape_strategy)
+def test_gqa_kernel_matches_ref(args):
+    b, g, rep, d, t, seed = args
+    h = g * rep
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, h, d))
+    k = rand(rng, (b, t, g, d))
+    v = rand(rng, (b, t, g, d))
+    pos = jnp.asarray(rng.integers(0, t, size=b), jnp.int32)
+    scale = 1.0 / np.sqrt(d)
+    got = gqa_decode_attention(q, k, v, pos, scale=scale)
+    want = ref.gqa_decode_attention_ref(q, k, v, pos, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+mla_strategy = st.tuples(
+    st.integers(1, 4),                    # B
+    st.sampled_from([1, 4, 8]),           # h
+    st.sampled_from([4, 32, 128]),        # r
+    st.sampled_from([8, 16, 32]),         # dr
+    st.sampled_from([8, 64, 128]),        # T
+    st.integers(0, 10**6),                # seed
+)
+
+
+@given(mla_strategy)
+def test_mla_kernel_matches_ref(args):
+    b, h, r, dr, t, seed = args
+    rng = np.random.default_rng(seed)
+    ql = rand(rng, (b, h, r))
+    qr = rand(rng, (b, h, dr))
+    c = rand(rng, (b, t, r))
+    kr = rand(rng, (b, t, dr))
+    pos = jnp.asarray(rng.integers(0, t, size=b), jnp.int32)
+    scale = 1.0 / np.sqrt(dr)
+    got = mla_absorbed_decode_attention(ql, qr, c, kr, pos, scale=scale)
+    want = ref.mla_absorbed_decode_attention_ref(ql, qr, c, kr, pos, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_kernel_pos_zero_attends_only_first():
+    """pos=0 must ignore every cache slot except index 0."""
+    rng = np.random.default_rng(0)
+    q = rand(rng, (1, 2, 4))
+    k = rand(rng, (1, 16, 2, 4))
+    v = rand(rng, (1, 16, 2, 4))
+    out = gqa_decode_attention(q, k, v, jnp.array([0], jnp.int32), scale=0.5)
+    np.testing.assert_allclose(
+        np.asarray(out)[0], np.asarray(v)[0, 0], rtol=1e-6, atol=1e-6
+    )
+
+
+def test_mla_kernel_pos_zero_attends_only_first():
+    rng = np.random.default_rng(0)
+    ql = rand(rng, (1, 3, 8))
+    qr = rand(rng, (1, 3, 4))
+    c = rand(rng, (1, 16, 8))
+    kr = rand(rng, (1, 16, 4))
+    out = mla_absorbed_decode_attention(
+        ql, qr, c, kr, jnp.array([0], jnp.int32), scale=0.5)
+    for i in range(3):
+        np.testing.assert_allclose(
+            np.asarray(out)[0, i], np.asarray(c)[0, 0], rtol=1e-6, atol=1e-6)
+
+
+def test_mla_kernel_padding_is_ignored():
+    """Garbage beyond pos must not change the result."""
+    rng = np.random.default_rng(1)
+    ql, qr = rand(rng, (2, 4, 16)), rand(rng, (2, 4, 8))
+    c, kr = rand(rng, (2, 32, 16)), rand(rng, (2, 32, 8))
+    pos = jnp.array([5, 17], jnp.int32)
+    base = mla_absorbed_decode_attention(ql, qr, c, kr, pos, scale=0.3)
+    c2 = c.at[0, 6:].set(1e4).at[1, 18:].set(-1e4)
+    kr2 = kr.at[0, 6:].set(333.0)
+    got = mla_absorbed_decode_attention(ql, qr, c2, kr2, pos, scale=0.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gqa_kernel_padding_is_ignored():
+    rng = np.random.default_rng(2)
+    q = rand(rng, (2, 4, 8))
+    k, v = rand(rng, (2, 32, 2, 8)), rand(rng, (2, 32, 2, 8))
+    pos = jnp.array([3, 30], jnp.int32)
+    base = gqa_decode_attention(q, k, v, pos, scale=0.3)
+    k2 = k.at[0, 4:].set(1e4)
+    v2 = v.at[1, 31:].set(-77.0)
+    got = gqa_decode_attention(q, k2, v2, pos, scale=0.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mla_kernel_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    ql = jnp.asarray(rng.standard_normal((1, 4, 16)), dtype)
+    qr = jnp.asarray(rng.standard_normal((1, 4, 8)), dtype)
+    c = jnp.asarray(rng.standard_normal((1, 16, 16)), dtype)
+    kr = jnp.asarray(rng.standard_normal((1, 16, 8)), dtype)
+    pos = jnp.array([15], jnp.int32)
+    got = mla_absorbed_decode_attention(ql, qr, c, kr, pos, scale=0.25)
+    want = ref.mla_absorbed_decode_attention_ref(
+        ql.astype(jnp.float32), qr.astype(jnp.float32),
+        c.astype(jnp.float32), kr.astype(jnp.float32), pos, 0.25)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_softmax_rows_sum_to_one_property():
+    """Indirect invariant: with constant values, output == that constant."""
+    rng = np.random.default_rng(4)
+    ql, qr = rand(rng, (1, 2, 8)), rand(rng, (1, 2, 4))
+    c = jnp.ones((1, 16, 8)) * 3.25
+    kr = rand(rng, (1, 16, 4))
+    out = mla_absorbed_decode_attention(
+        ql, qr, c, kr, jnp.array([9], jnp.int32), scale=0.7)
+    np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-5)

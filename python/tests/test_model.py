@@ -1,0 +1,143 @@
+"""L2 model behaviour: shapes, decode/prefill consistency, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import convert_ref as C
+from compile import model as M
+from compile.configs import ModelConfig
+
+CFG = ModelConfig(name="t", vocab=64, d_model=64, n_heads=4, n_kv_groups=2,
+                  head_dim=16, n_layers=2, d_ff=96, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = M.init_gqa_params(jax.random.PRNGKey(0), CFG)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, CFG.max_seq),
+                              0, CFG.vocab)
+    return p, toks
+
+
+def test_gqa_prefill_shapes(setup):
+    p, toks = setup
+    logits, kc, vc = M.gqa_prefill(p, toks, CFG)
+    lyr, g, d, t = CFG.n_layers, CFG.n_kv_groups, CFG.head_dim, CFG.max_seq
+    assert logits.shape == (2, t, CFG.vocab)
+    assert kc.shape == (lyr, 2, t, g, d)
+    assert vc.shape == (lyr, 2, t, g, d)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_gqa_causality(setup):
+    """Changing a future token must not change earlier logits."""
+    p, toks = setup
+    l1, _, _ = M.gqa_prefill(p, toks, CFG)
+    toks2 = toks.at[:, 20].set((toks[:, 20] + 1) % CFG.vocab)
+    l2, _, _ = M.gqa_prefill(p, toks2, CFG)
+    np.testing.assert_allclose(np.asarray(l1[:, :20]), np.asarray(l2[:, :20]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(l1[:, 20:]), np.asarray(l2[:, 20:]))
+
+
+def test_gqa_decode_matches_prefill_stepwise(setup):
+    """Feed tokens one at a time through decode; logits must match the
+    prefill logits at every position (the serving-correctness contract)."""
+    p, toks = setup
+    logits, _, _ = M.gqa_prefill(p, toks, CFG)
+    lyr, g, d, t = CFG.n_layers, CFG.n_kv_groups, CFG.head_dim, CFG.max_seq
+    kc = jnp.zeros((lyr, 2, t, g, d))
+    vc = jnp.zeros((lyr, 2, t, g, d))
+    decode = jax.jit(lambda tok, pos, kc, vc: M.gqa_decode(
+        p, tok, pos, kc, vc, CFG))
+    for i in range(8):
+        pos = jnp.array([i, i], jnp.int32)
+        lg, kc, vc = decode(toks[:, i], pos, kc, vc)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_prefill_stepwise(setup):
+    p, toks = setup
+    pn = {k: np.asarray(v, np.float64) for k, v in p.items()}
+    kp, va, qp = M.gqa_calib(p, toks, CFG)
+    calib = tuple(np.asarray(a, np.float64).reshape(CFG.n_layers, -1,
+                                                    a.shape[-1])
+                  for a in (kp, va, qp))
+    _, absorbed, _ = C.convert_model(pn, calib, CFG, 24, fold=1)
+    aj = {k: jnp.asarray(v, jnp.float32) for k, v in absorbed.items()}
+    logits, _, _ = M.mla_prefill(aj, toks, CFG)
+    lyr, d, t = CFG.n_layers, CFG.head_dim, CFG.max_seq
+    cc = jnp.zeros((lyr, 2, t, 24))
+    kr = jnp.zeros((lyr, 2, t, d))
+    decode = jax.jit(lambda tok, pos, cc, kr: M.mla_decode(
+        aj, tok, pos, cc, kr, CFG))
+    for i in range(8):
+        pos = jnp.array([i, i], jnp.int32)
+        lg, cc, kr = decode(toks[:, i], pos, cc, kr)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative distance."""
+    freqs = M.default_freqs(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (16,))
+    y = jax.random.normal(jax.random.PRNGKey(1), (16,))
+
+    def ip(tq, tk):
+        xr = M.rope_apply(x, jnp.asarray(tq, jnp.float32), freqs)
+        yr = M.rope_apply(y, jnp.asarray(tk, jnp.float32), freqs)
+        return float(jnp.dot(xr, yr))
+
+    np.testing.assert_allclose(ip(5, 3), ip(12, 10), rtol=1e-5)
+    np.testing.assert_allclose(ip(7, 7), float(jnp.dot(x, y)), rtol=1e-5)
+
+
+def test_rope_masked_identity_when_mask_zero():
+    freqs = M.default_freqs(8)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    out = M.rope_apply_masked(x, jnp.asarray(9.0), freqs, jnp.zeros(8))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+
+def test_train_step_reduces_loss(setup):
+    p, _ = setup
+    toks = jax.random.randint(jax.random.PRNGKey(5), (4, 32), 0, 8)
+    ts = jax.jit(M.make_train_step(M.gqa_forward_logits, CFG))
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in p.items()}
+    losses = []
+    params = p
+    for i in range(12):
+        params, m, v, loss = ts(params, m, v, jnp.float32(i + 1),
+                                jnp.float32(3e-3), toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_mla_train_step_keeps_rope_freqs_fixed(setup):
+    p, toks = setup
+    pn = {k: np.asarray(v, np.float64) for k, v in p.items()}
+    kp, va, qp = M.gqa_calib(p, toks, CFG)
+    calib = tuple(np.asarray(a, np.float64).reshape(CFG.n_layers, -1,
+                                                    a.shape[-1])
+                  for a in (kp, va, qp))
+    train, _, _ = C.convert_model(pn, calib, CFG, 16, fold=1)
+    tp = {k: jnp.asarray(v, jnp.float32) for k, v in train.items()}
+    ts = jax.jit(M.make_train_step(M.mla_train_forward, CFG))
+    m = {k: jnp.zeros_like(v) for k, v in tp.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in tp.items()}
+    p2, _, _, loss = ts(tp, m, v, jnp.float32(1.0), jnp.float32(1e-3), toks)
+    np.testing.assert_allclose(np.asarray(p2["rope_freqs"]),
+                               np.asarray(tp["rope_freqs"]))
+    assert np.isfinite(float(loss))
+
+
+def test_lm_loss_uniform_is_log_vocab():
+    logits = jnp.zeros((2, 16, 64))
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, 64)
+    np.testing.assert_allclose(float(M.lm_loss(logits, toks)), np.log(64.0),
+                               rtol=1e-6)

@@ -1,0 +1,69 @@
+//! Bench: the TransMLA conversion pipeline (RoRoPE rotation, per-layer
+//! conversion, whole-model conversion incl. Absorb) — the offline cost a
+//! model vendor pays once per model.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::Bench;
+use transmla::config::ModelConfig;
+use transmla::convert::{convert_model, rorope_rotation, Calib, ConvertOptions};
+use transmla::model::init_gqa;
+use transmla::tensor::Tensor;
+use transmla::util::Rng;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "llama2tiny".into(),
+        vocab: 256,
+        d_model: 256,
+        n_heads: 8,
+        n_kv_groups: 8,
+        head_dim: 32,
+        n_layers: 4,
+        d_ff: 768,
+        max_seq: 512,
+        rope_theta: 10000.0,
+    }
+}
+
+fn fake_calib(cfg: &ModelConfig, n: usize) -> Calib {
+    let mut rng = Rng::new(1);
+    Calib {
+        k_pre: (0..cfg.n_layers)
+            .map(|_| Tensor::randn(&[n, cfg.kv_dim()], 1.0, &mut rng))
+            .collect(),
+        v_act: (0..cfg.n_layers)
+            .map(|_| Tensor::randn(&[n, cfg.kv_dim()], 0.4, &mut rng))
+            .collect(),
+        q_pre: (0..cfg.n_layers)
+            .map(|_| Tensor::randn(&[n, cfg.q_dim()], 1.0, &mut rng))
+            .collect(),
+    }
+}
+
+fn main() {
+    let b = Bench::new();
+    let cfg = cfg();
+    let gqa = init_gqa(&cfg, 0);
+    let calib = fake_calib(&cfg, 1024);
+
+    for fold in [1usize, 4] {
+        b.run(&format!("rorope_rotation_fold{fold}"), || {
+            let _ = rorope_rotation(&calib.k_pre[0], &cfg, fold).unwrap();
+        });
+    }
+
+    for r in [4usize, 32, 128] {
+        b.run(&format!("convert_model_r{r}"), || {
+            let _ =
+                convert_model(&gqa, &calib, &cfg, &ConvertOptions::transmla(r))
+                    .unwrap();
+        });
+    }
+
+    b.run("convert_model_mha2mla_r32", || {
+        let _ = convert_model(&gqa, &calib, &cfg, &ConvertOptions::mha2mla(32))
+            .unwrap();
+    });
+}

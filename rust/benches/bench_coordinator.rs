@@ -1,0 +1,56 @@
+//! Bench: pure-L3 coordinator paths that must never be the serving
+//! bottleneck — slot allocation, cache splicing, sampling, metrics.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::Bench;
+use transmla::coordinator::sampling;
+use transmla::kvcache::{CacheLayout, KvCache, SlotAllocator};
+use transmla::tensor::Tensor;
+use transmla::util::Rng;
+
+fn main() {
+    let b = Bench::new();
+
+    b.run("slot_alloc_release_1k_cycles", || {
+        let mut a = SlotAllocator::new(8);
+        for i in 0..1000u64 {
+            let s = a.alloc(i).unwrap();
+            a.release(s).unwrap();
+        }
+    });
+
+    // Cache splice: move one prefill row into the pool (GQA vs MLA-r4
+    // layouts — the byte ratio IS the paper's compression).
+    let mut gqa_pool = KvCache::new(CacheLayout::Gqa { g: 8, d: 32 }, 4, 8, 512);
+    let gqa_src = vec![
+        Tensor::zeros(&[4, 8, 512, 8, 32]),
+        Tensor::zeros(&[4, 8, 512, 8, 32]),
+    ];
+    b.run("splice_gqa_row (16 MiB pool)", || {
+        gqa_pool.splice_from(&gqa_src, 3, 5).unwrap();
+    });
+
+    let mut mla_pool = KvCache::new(CacheLayout::Mla { r: 4, dr: 32 }, 4, 8, 512);
+    let mla_src = vec![
+        Tensor::zeros(&[4, 8, 512, 4]),
+        Tensor::zeros(&[4, 8, 512, 32]),
+    ];
+    b.run("splice_mla_r4_row (1.1 MiB pool)", || {
+        mla_pool.splice_from(&mla_src, 3, 5).unwrap();
+    });
+
+    let mut rng = Rng::new(0);
+    let logits: Vec<f32> = (0..256).map(|_| rng.normal_f32(2.0)).collect();
+    b.run("sample_greedy_v256_x1k", || {
+        for _ in 0..1000 {
+            std::hint::black_box(sampling::greedy(&logits));
+        }
+    });
+    b.run("sample_temp0.7_v256_x1k", || {
+        for _ in 0..1000 {
+            std::hint::black_box(sampling::sample(&logits, 0.7, &mut rng));
+        }
+    });
+}

@@ -1,0 +1,43 @@
+//! Bench: the converter's numerical core (gram, Jacobi eigh, PCA) at the
+//! problem sizes the llama2tiny conversion actually hits (g*d = 256,
+//! joint space (2g-1)d = 480).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::Bench;
+use transmla::linalg::{eigh_desc, gram, pca_from_gram};
+use transmla::tensor::Tensor;
+use transmla::util::Rng;
+
+fn main() {
+    let b = Bench::new();
+    let mut rng = Rng::new(0);
+
+    for d in [16usize, 64, 256, 480] {
+        let z = Tensor::randn(&[1024, d], 1.0, &mut rng);
+        b.run(&format!("gram_{d}x{d}_n1024"), || {
+            let _ = gram(&z);
+        });
+    }
+
+    for d in [16usize, 64, 128, 480] {
+        let z = Tensor::randn(&[256, d], 1.0, &mut rng);
+        let c = gram(&z);
+        b.run(&format!("jacobi_eigh_{d}"), || {
+            let _ = eigh_desc(&c).unwrap();
+        });
+    }
+
+    let z = Tensor::randn(&[1024, 480], 1.0, &mut rng);
+    let c = gram(&z);
+    b.run("pca_basis_480_r128", || {
+        let _ = pca_from_gram(&c, 128).unwrap();
+    });
+
+    let a = Tensor::randn(&[256, 480], 1.0, &mut rng);
+    let bm = Tensor::randn(&[480, 256], 1.0, &mut rng);
+    b.run("matmul_256x480x256", || {
+        let _ = a.matmul(&bm).unwrap();
+    });
+}

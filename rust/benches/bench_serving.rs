@@ -1,0 +1,106 @@
+//! Bench: end-to-end serving throughput, GQA vs absorbed-MLA — the
+//! measured-CPU counterpart of the paper's Figure 4 / Table 4 (the
+//! analytical-GPU counterpart lives in `transmla exp table4`).
+//!
+//! Requires `make artifacts`. Uses a random-init model (throughput does
+//! not depend on weight values).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::Bench;
+use std::path::Path;
+use transmla::config::EngineConfig;
+use transmla::convert::{convert_model, Calib, ConvertOptions};
+use transmla::coordinator::engine::Arch;
+use transmla::coordinator::{Engine, ModelBundle, Request};
+use transmla::corpus::Corpus;
+use transmla::model::init_gqa;
+use transmla::runtime::Runtime;
+use transmla::tensor::Tensor;
+use transmla::util::Rng;
+
+fn main() {
+    let b = Bench::new();
+    let rt = match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench_serving: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg_name = "llama2tiny";
+    let cfg = rt.manifest.configs[cfg_name].clone();
+    let gqa = init_gqa(&cfg, 0);
+    let corpus = Corpus::synthetic(7, 500_000);
+
+    // Random calibration is fine for a throughput bench.
+    let mut rng = Rng::new(1);
+    let calib = Calib {
+        k_pre: (0..cfg.n_layers)
+            .map(|_| Tensor::randn(&[512, cfg.kv_dim()], 1.0, &mut rng))
+            .collect(),
+        v_act: (0..cfg.n_layers)
+            .map(|_| Tensor::randn(&[512, cfg.kv_dim()], 0.5, &mut rng))
+            .collect(),
+        q_pre: (0..cfg.n_layers)
+            .map(|_| Tensor::randn(&[512, cfg.q_dim()], 1.0, &mut rng))
+            .collect(),
+    };
+    let rank = 4;
+    let (_t, mla, _d) =
+        convert_model(&gqa, &calib, &cfg, &ConvertOptions::transmla(rank)).unwrap();
+
+    for ctx in [128usize, 256, 512] {
+        let suffix = if ctx == cfg.max_seq {
+            String::new()
+        } else {
+            format!("_t{ctx}")
+        };
+        let mut tps = (0.0f64, 0.0f64);
+        for (label, arch, params) in [
+            ("gqa", Arch::Gqa, gqa.clone()),
+            ("mla", Arch::Mla { rank }, mla.clone()),
+        ] {
+            let (pname, dname) = match arch {
+                Arch::Gqa => (
+                    format!("{cfg_name}_gqa_prefill"),
+                    format!("{cfg_name}_gqa_decode_b8{suffix}"),
+                ),
+                Arch::Mla { rank } => (
+                    format!("{cfg_name}_mla_prefill_r{rank}"),
+                    format!("{cfg_name}_mla_decode_r{rank}_b8{suffix}"),
+                ),
+            };
+            let bundle = ModelBundle::load_named(
+                &rt, cfg_name, arch, 8, params.clone(), &pname, &dname,
+            )
+            .unwrap();
+            let mut engine = Engine::new(bundle, EngineConfig::default());
+            let half = ctx / 2;
+            let mut wl = Rng::new(3);
+            let n_req = if b.quick { 8 } else { 16 };
+            for i in 0..n_req {
+                let start = wl.below(corpus.train.len() - half - 1);
+                let prompt: Vec<i32> = corpus.train[start..start + half]
+                    .iter()
+                    .map(|&x| x as i32)
+                    .collect();
+                engine.submit(Request::new(i, prompt, half));
+            }
+            engine.run_to_completion().unwrap();
+            let t = engine.decode_throughput();
+            b.report(&format!("table4_ctx{ctx}_{label}_decode"), t, "tok/s");
+            if label == "gqa" {
+                tps.0 = t;
+            } else {
+                tps.1 = t;
+            }
+        }
+        b.report(
+            &format!("table4_ctx{ctx}_speedup"),
+            tps.1 / tps.0.max(1e-9),
+            "x (fig4 shape: grows with ctx)",
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Bench: Table-1 pipeline costs — calibration capture, conversion at the
+//! paper's three compression rows, and held-out evaluation through the
+//! compiled prefill. (Quality numbers come from `transmla exp table1`;
+//! this measures the machinery.)
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::Bench;
+use std::path::Path;
+use transmla::convert::{convert_model, ConvertOptions};
+use transmla::corpus::Corpus;
+use transmla::eval::{capture_calib, evaluate};
+use transmla::model::init_gqa;
+use transmla::runtime::Runtime;
+use transmla::util::Rng;
+
+fn main() {
+    let b = Bench::new();
+    let rt = match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench_table1: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg = rt.manifest.configs["llama2tiny"].clone();
+    let gqa = init_gqa(&cfg, 0);
+    let corpus = Corpus::synthetic(7, 500_000);
+    let mut rng = Rng::new(0);
+    let toks = corpus.sample_batch(8, cfg.max_seq, &mut rng);
+
+    let calib_exec = rt.load("llama2tiny_calib").unwrap();
+    let mut calib = None;
+    b.run("calib_capture_4096tok", || {
+        calib = Some(capture_calib(&calib_exec, &gqa, &toks, 1024).unwrap());
+    });
+    let calib = calib.unwrap();
+
+    for r in [128usize, 32, 4] {
+        b.run(&format!("table1_convert_r{r}"), || {
+            let _ = convert_model(&gqa, &calib, &cfg, &ConvertOptions::transmla(r))
+                .unwrap();
+        });
+    }
+
+    let batches: Vec<_> = corpus
+        .val_batches(8, cfg.max_seq)
+        .into_iter()
+        .take(1)
+        .collect();
+    let exec = rt.load("llama2tiny_gqa_prefill").unwrap();
+    b.run("heldout_eval_1batch_4096tok", || {
+        let _ = evaluate(&exec, &gqa, &batches).unwrap();
+    });
+}

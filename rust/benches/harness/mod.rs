@@ -1,0 +1,55 @@
+//! Shared bench harness (offline stand-in for criterion): warmup +
+//! timed iterations + mean/p50/min reporting, with a `--quick` mode used
+//! by `cargo bench` in CI-ish runs.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub struct Bench {
+    pub quick: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[allow(dead_code)]
+impl Bench {
+    pub fn new() -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("BENCH_QUICK").is_ok();
+        Bench { quick }
+    }
+
+    /// Run `f` with warmup and report. Returns mean seconds.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> f64 {
+        let (warmup, iters) = if self.quick { (1, 3) } else { (2, 10) };
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        println!(
+            "bench {name:<44} mean {:>9.3}ms  p50 {:>9.3}ms  min {:>9.3}ms  (n={})",
+            mean * 1e3,
+            p50 * 1e3,
+            samples[0] * 1e3,
+            samples.len()
+        );
+        mean
+    }
+
+    /// Report a derived throughput metric.
+    pub fn report(&self, name: &str, value: f64, unit: &str) {
+        println!("bench {name:<44} {value:>12.2} {unit}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Configuration: model hyper-parameters (mirrors `python/compile/configs.py`
+//! and is re-hydrated from `artifacts/manifest.json`), engine settings, and
+//! the paper's three accelerator profiles (Fig. 4 / Table 4).
+
+use crate::json::Json;
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,      // h
+    pub n_kv_groups: usize,  // g
+    pub head_dim: usize,     // d
+    pub n_layers: usize,     // L
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let gu = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("config field `{k}`"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .context("config name")?
+                .to_string(),
+            vocab: gu("vocab")?,
+            d_model: gu("d_model")?,
+            n_heads: gu("n_heads")?,
+            n_kv_groups: gu("n_kv_groups")?,
+            head_dim: gu("head_dim")?,
+            n_layers: gu("n_layers")?,
+            d_ff: gu("d_ff")?,
+            max_seq: gu("max_seq")?,
+            rope_theta: j
+                .get("rope_theta")
+                .and_then(Json::as_f64)
+                .unwrap_or(10000.0),
+        })
+    }
+
+    /// Merged key/value width g*d.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_groups * self.head_dim
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// GQA KV-cache floats per token per layer.
+    pub fn kv_per_token(&self) -> usize {
+        2 * self.kv_dim()
+    }
+
+    /// MLA KV-cache floats per token per layer at latent rank r.
+    pub fn mla_kv_per_token(&self, r: usize) -> usize {
+        r + self.head_dim
+    }
+
+    /// Paper's "-X%" KV compression at rank r.
+    pub fn compression(&self, r: usize) -> f64 {
+        1.0 - self.mla_kv_per_token(r) as f64 / self.kv_per_token() as f64
+    }
+
+    /// Approximate parameter count of the GQA model.
+    pub fn n_params(&self) -> usize {
+        let (dm, f, l, v) = (self.d_model, self.d_ff, self.n_layers, self.vocab);
+        let attn = dm * self.q_dim() + 2 * dm * self.kv_dim() + self.q_dim() * dm;
+        let mlp = 3 * dm * f;
+        2 * v * dm + l * (attn + mlp + 2 * dm) + dm
+    }
+}
+
+/// Engine/serving settings.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Decode batch width (must match an exported decode artifact).
+    pub batch: usize,
+    /// Max new tokens per request by default.
+    pub max_new_tokens: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            batch: 8,
+            max_new_tokens: 64,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Analytical accelerator profile (paper Sec. 5.4: three consumer GPUs).
+#[derive(Clone, Debug)]
+pub struct HardwareProfile {
+    pub name: String,
+    pub tflops: f64,      // peak FP16 compute
+    pub mem_gb: f64,      // HBM capacity
+    pub bw_gbs: f64,      // HBM bandwidth GB/s
+}
+
+impl HardwareProfile {
+    /// The paper's three platforms. Bandwidths are the public figures for
+    /// the matching consumer parts (RTX 4090-class 24GB, A100-40G-class,
+    /// and a 64GB 320-TFLOPS accelerator).
+    pub fn paper_profiles() -> Vec<HardwareProfile> {
+        vec![
+            HardwareProfile {
+                name: "165.2TF|24GB".into(),
+                tflops: 165.2,
+                mem_gb: 24.0,
+                bw_gbs: 1008.0,
+            },
+            HardwareProfile {
+                name: "312TF|40GB".into(),
+                tflops: 312.0,
+                mem_gb: 40.0,
+                bw_gbs: 1555.0,
+            },
+            HardwareProfile {
+                name: "320TF|64GB".into(),
+                tflops: 320.0,
+                mem_gb: 64.0,
+                bw_gbs: 1200.0,
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_config_json() {
+        let j = Json::parse(
+            r#"{"name":"llama2tiny","vocab":256,"d_model":256,"n_heads":8,
+               "n_kv_groups":8,"head_dim":32,"n_layers":4,"d_ff":768,
+               "max_seq":512,"rope_theta":10000.0}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.kv_per_token(), 512);
+        assert_eq!(c.kv_dim(), 256);
+        assert!((c.compression(4) - 0.9297).abs() < 1e-3);
+        assert!((c.compression(128) - 0.6875).abs() < 1e-9);
+        assert!((c.compression(32) - 0.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let j = Json::parse(
+            r#"{"name":"x","vocab":256,"d_model":256,"n_heads":8,
+               "n_kv_groups":8,"head_dim":32,"n_layers":4,"d_ff":768,
+               "max_seq":512}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        let n = c.n_params();
+        assert!(n > 3_000_000 && n < 6_000_000, "{n}");
+    }
+
+    #[test]
+    fn hardware_profiles_present() {
+        let hw = HardwareProfile::paper_profiles();
+        assert_eq!(hw.len(), 3);
+        assert!(hw[0].mem_gb < hw[1].mem_gb);
+    }
+}

@@ -1,0 +1,852 @@
+//! The TransMLA conversion toolchain in Rust (paper Sec. 4), mirroring the
+//! python oracle `python/compile/convert_ref.py`:
+//!
+//!   merge -> RoRoPE (+FreqFold) -> BKV -> joint low-rank PCA -> Absorb
+//!
+//! plus the MHA2MLA baseline (norm-selected partial RoPE + unbalanced
+//! weight-SVD). Output parameter sets plug straight into the AOT-compiled
+//! MLA artifacts; the whole train → convert → serve pipeline is
+//! Python-free.
+
+use crate::config::ModelConfig;
+use crate::linalg::{eigh_desc, gram, pca_from_gram};
+use crate::model::{default_freqs, Params, MLA_ABS_KEYS, MLA_TRAIN_KEYS, MERGED_KEYS};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Calibration activations captured from the GQA model (one entry per
+/// layer): pre-RoPE merged keys [N, g*d], values [N, g*d], queries [N, h*d].
+#[derive(Clone, Debug)]
+pub struct Calib {
+    pub k_pre: Vec<Tensor>,
+    pub v_act: Vec<Tensor>,
+    pub q_pre: Vec<Tensor>,
+}
+
+impl Calib {
+    /// Build from the calib artifact's stacked outputs [L,B,T,*].
+    pub fn from_stacked(k: &Tensor, v: &Tensor, q: &Tensor) -> Result<Calib> {
+        let split = |t: &Tensor| -> Result<Vec<Tensor>> {
+            if t.rank() != 4 {
+                bail!("calib tensor rank {:?}", t.shape);
+            }
+            let (l, b, s, d) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+            Ok((0..l)
+                .map(|i| {
+                    t.index0(i)
+                        .reshape(&[b * s, d])
+                        .expect("reshape")
+                })
+                .collect())
+        };
+        Ok(Calib { k_pre: split(k)?, v_act: split(v)?, q_pre: split(q)? })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PcaMode {
+    /// Activation-based PCA (the paper's "WX-based").
+    Activations,
+    /// Weight-based PCA (Fig. 3b ablation, and MHA2MLA's choice).
+    Weights,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Baseline {
+    TransMla,
+    Mha2Mla,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConvertOptions {
+    pub rank: usize,
+    pub fold: usize,
+    pub balance: bool,
+    pub pca_mode: PcaMode,
+    pub baseline: Baseline,
+    /// MHA2MLA: RoPE pairs kept per KV head (None = match TransMLA budget).
+    pub keep_pairs_per_head: Option<usize>,
+}
+
+impl ConvertOptions {
+    pub fn transmla(rank: usize) -> Self {
+        ConvertOptions {
+            rank,
+            fold: 1,
+            balance: true,
+            pca_mode: PcaMode::Activations,
+            baseline: Baseline::TransMla,
+            keep_pairs_per_head: None,
+        }
+    }
+
+    pub fn mha2mla(rank: usize) -> Self {
+        ConvertOptions {
+            rank,
+            fold: 1,
+            balance: false,
+            pca_mode: PcaMode::Weights,
+            baseline: Baseline::Mha2Mla,
+            keep_pairs_per_head: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Geometry helpers
+// ---------------------------------------------------------------------------
+
+/// Initial per-query-head mixers M_i [d, g*d] (block selectors, Sec. 4.1).
+pub fn selector_mixers(cfg: &ModelConfig) -> Vec<Tensor> {
+    let (h, g, d) = (cfg.n_heads, cfg.n_kv_groups, cfg.head_dim);
+    let rep = h / g;
+    (0..h)
+        .map(|i| {
+            let j = i / rep;
+            let mut m = Tensor::zeros(&[d, g * d]);
+            for k in 0..d {
+                m.set2(k, j * d + k, 1.0);
+            }
+            m
+        })
+        .collect()
+}
+
+/// Per-pair frequency schedule of the merged key head [g*d/2].
+pub fn merged_freqs(cfg: &ModelConfig) -> Vec<f32> {
+    let base = default_freqs(cfg.head_dim, cfg.rope_theta);
+    let mut out = Vec::with_capacity(cfg.kv_dim() / 2);
+    for _ in 0..cfg.n_kv_groups {
+        out.extend_from_slice(&base);
+    }
+    out
+}
+
+fn real_dim(head: usize, l: usize, d: usize) -> usize {
+    head * d + 2 * l
+}
+
+// ---------------------------------------------------------------------------
+// RoRoPE (+FreqFold)
+// ---------------------------------------------------------------------------
+
+/// Compute the RoPE-commuting rotation Q [gd, gd] + folded freq schedule
+/// from pre-RoPE merged-key samples [N, gd]. See convert_ref.rorope_rotation
+/// for the component-relayout convention (head 0 collects the top `fold`
+/// components of each frequency group).
+pub fn rorope_rotation(
+    k_samples: &Tensor,
+    cfg: &ModelConfig,
+    fold: usize,
+) -> Result<(Tensor, Vec<f32>)> {
+    let (g, d) = (cfg.n_kv_groups, cfg.head_dim);
+    let n_freq = d / 2;
+    if n_freq % fold != 0 {
+        bail!("fold {fold} must divide d/2 = {n_freq}");
+    }
+    let gd = g * d;
+    let mut q_big = Tensor::zeros(&[gd, gd]);
+    let base = default_freqs(d, cfg.rope_theta);
+    let mut new_freqs_chunk = vec![0.0f32; n_freq];
+
+    for m in 0..(n_freq / fold) {
+        let ls: Vec<usize> = (m * fold..(m + 1) * fold).collect();
+        let re_cols: Vec<usize> = ls
+            .iter()
+            .flat_map(|&l| (0..g).map(move |j| real_dim(j, l, d)))
+            .collect();
+        let im_cols: Vec<usize> = re_cols.iter().map(|&c| c + 1).collect();
+        let zr = k_samples.select_cols(&re_cols);
+        let zi = k_samples.select_cols(&im_cols);
+        // RoPE-invariant covariance: C_rr + C_ii.
+        let cmat = gram(&zr).add(&gram(&zi))?;
+        let (_vals, u) = eigh_desc(&cmat)?; // columns = components desc
+        let fg = fold * g;
+        for c in 0..fg {
+            let (jc, p) = (c / fold, c % fold);
+            let l_new = m * fold + p;
+            let rd_new = real_dim(jc, l_new, d);
+            for (idx, (&l, j)) in ls
+                .iter()
+                .flat_map(|l| (0..g).map(move |j| (l, j)))
+                .enumerate()
+            {
+                let rd_old = real_dim(j, l, d);
+                let val = u.at2(idx, c);
+                q_big.set2(rd_new, rd_old, val);
+                q_big.set2(rd_new + 1, rd_old + 1, val);
+            }
+        }
+        for &l in &ls {
+            new_freqs_chunk[l] = base[m * fold];
+        }
+    }
+    let mut new_freqs = Vec::with_capacity(gd / 2);
+    for _ in 0..g {
+        new_freqs.extend_from_slice(&new_freqs_chunk);
+    }
+    Ok((q_big, new_freqs))
+}
+
+/// Rotate the merged key space: wk [D, gd] -> wk Q^T; every mixer
+/// M_i [d, gd] -> M_i Q^T (Eq. 19 both-sides rotation).
+pub fn apply_rotation(
+    wk: &Tensor,
+    mixers: &[Tensor],
+    q_big: &Tensor,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    let qt = q_big.t();
+    let wk_rot = wk.matmul(&qt)?;
+    let mixers_rot = mixers
+        .iter()
+        .map(|m| m.matmul(&qt))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((wk_rot, mixers_rot))
+}
+
+/// RoPE-keep mask after RoRoPE: keep the top `keep_components` components
+/// per frequency group (head-major relayout).
+pub fn rorope_mask(cfg: &ModelConfig, keep_components: usize, fold: usize) -> Vec<f32> {
+    let (g, d) = (cfg.n_kv_groups, cfg.head_dim);
+    let mut mask = vec![0.0f32; g * d];
+    let n_freq = d / 2;
+    for m in 0..(n_freq / fold) {
+        for c in 0..keep_components.min(fold * g) {
+            let (jc, p) = (c / fold, c % fold);
+            let l_new = m * fold + p;
+            let rd = real_dim(jc, l_new, d);
+            mask[rd] = 1.0;
+            mask[rd + 1] = 1.0;
+        }
+    }
+    mask
+}
+
+/// MHA2MLA "norm" strategy: per KV head keep the `keep_pairs` pairs with
+/// largest mean ||q_pair|| * ||k_pair||.
+pub fn mha2mla_mask(
+    cfg: &ModelConfig,
+    k_samples: &Tensor,
+    q_samples: &Tensor,
+    keep_pairs: usize,
+) -> Vec<f32> {
+    let (h, g, d) = (cfg.n_heads, cfg.n_kv_groups, cfg.head_dim);
+    let rep = h / g;
+    let n_freq = d / 2;
+    let n = k_samples.rows();
+    let mut mask = vec![0.0f32; g * d];
+    for j in 0..g {
+        let mut scores: Vec<(f64, usize)> = Vec::with_capacity(n_freq);
+        for l in 0..n_freq {
+            let (kr, ki) = (real_dim(j, l, d), real_dim(j, l, d) + 1);
+            let mut knorm = 0.0f64;
+            for s in 0..n {
+                let row = k_samples.row(s);
+                knorm += ((row[kr] as f64).powi(2) + (row[ki] as f64).powi(2)).sqrt();
+            }
+            knorm /= n as f64;
+            let mut qnorm = 0.0f64;
+            for i in j * rep..(j + 1) * rep {
+                let (qr, qi) = (i * d + 2 * l, i * d + 2 * l + 1);
+                let mut acc = 0.0f64;
+                for s in 0..n {
+                    let row = q_samples.row(s);
+                    acc += ((row[qr] as f64).powi(2) + (row[qi] as f64).powi(2)).sqrt();
+                }
+                qnorm += acc / n as f64;
+            }
+            scores.push((knorm * qnorm, l));
+        }
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, l) in scores.iter().take(keep_pairs) {
+            mask[real_dim(j, l, d)] = 1.0;
+            mask[real_dim(j, l, d) + 1] = 1.0;
+        }
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// BKV + joint low-rank PCA
+// ---------------------------------------------------------------------------
+
+/// Eq. 20: alpha = E||k_nope|| / E||v||.
+pub fn kv_balance_alpha(k_nope: &Tensor, v: &Tensor) -> f32 {
+    k_nope.mean_row_norm() / v.mean_row_norm().max(1e-12)
+}
+
+/// PCA basis [(n_k+n_v), r] of the balanced joint NoPE-key/value space.
+pub fn joint_lowrank_basis(
+    k_nope: &Tensor,
+    v: &Tensor,
+    alpha: f32,
+    r: usize,
+    mode: PcaMode,
+    wk_nope: &Tensor,
+    wv: &Tensor,
+) -> Result<Tensor> {
+    let cmat = match mode {
+        PcaMode::Activations => {
+            let z = Tensor::hcat(&[&k_nope.scale(1.0 / alpha), v])?;
+            gram(&z)
+        }
+        PcaMode::Weights => {
+            let w = Tensor::hcat(&[&wk_nope.scale(1.0 / alpha), wv])?;
+            gram(&w)
+        }
+    };
+    pca_from_gram(&cmat, r)
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer conversion
+// ---------------------------------------------------------------------------
+
+pub struct LayerOut {
+    pub wqr: Tensor,     // [h, d, dr]
+    pub w_dkv: Tensor,   // [D, r]
+    pub w_krope: Tensor, // [D, dr]
+    pub w_uk: Tensor,    // [h, r, d]
+    pub w_uv: Tensor,    // [h, r, d]
+    pub rope_freqs: Vec<f32>,
+    pub alpha: f32,
+    pub dr: usize,
+}
+
+pub fn convert_layer(
+    wk: &Tensor,
+    wv: &Tensor,
+    k_pre: &Tensor,
+    q_pre: &Tensor,
+    v_act: &Tensor,
+    cfg: &ModelConfig,
+    opts: &ConvertOptions,
+) -> Result<LayerOut> {
+    let (h, g, d) = (cfg.n_heads, cfg.n_kv_groups, cfg.head_dim);
+    let gd = g * d;
+    let mixers = selector_mixers(cfg);
+
+    let (wk_rot, mixers, k_rot, rope_dims, freqs_out): (
+        Tensor,
+        Vec<Tensor>,
+        Tensor,
+        Vec<bool>,
+        Vec<f32>,
+    ) = match opts.baseline {
+        Baseline::TransMla => {
+            let (q_big, new_freqs) = rorope_rotation(k_pre, cfg, opts.fold)?;
+            let (wk_rot, mixers) = apply_rotation(wk, &mixers, &q_big)?;
+            let k_rot = k_pre.matmul(&q_big.t())?;
+            let mut rope_dims = vec![false; gd];
+            for rd in rope_dims.iter_mut().take(d) {
+                *rd = true; // head 0 carries all positional information
+            }
+            let freqs_out = new_freqs[..d / 2].to_vec();
+            (wk_rot, mixers, k_rot, rope_dims, freqs_out)
+        }
+        Baseline::Mha2Mla => {
+            let kp = opts.keep_pairs_per_head.unwrap_or(d / (2 * g).max(1));
+            let mask = mha2mla_mask(cfg, k_pre, q_pre, kp);
+            let rope_dims: Vec<bool> = mask.iter().map(|&m| m > 0.5).collect();
+            let mf = merged_freqs(cfg);
+            let freqs_out: Vec<f32> = (0..gd)
+                .step_by(2)
+                .filter(|&i| rope_dims[i])
+                .map(|i| mf[i / 2])
+                .collect();
+            (wk.clone(), mixers, k_pre.clone(), rope_dims, freqs_out)
+        }
+    };
+
+    let rope_idx: Vec<usize> =
+        (0..gd).filter(|&i| rope_dims[i]).collect();
+    let nope_idx: Vec<usize> =
+        (0..gd).filter(|&i| !rope_dims[i]).collect();
+    let dr = rope_idx.len();
+    let n_nope = nope_idx.len();
+
+    let wk_rope = wk_rot.select_cols(&rope_idx); // [D, dr]
+    let wk_nope = wk_rot.select_cols(&nope_idx); // [D, n_nope]
+    let k_nope_act = k_rot.select_cols(&nope_idx);
+
+    let alpha = if opts.balance && opts.baseline == Baseline::TransMla {
+        kv_balance_alpha(&k_nope_act, v_act)
+    } else {
+        1.0
+    };
+
+    let r = opts.rank.min(n_nope + gd);
+    let rbasis = joint_lowrank_basis(
+        &k_nope_act, v_act, alpha, r, opts.pca_mode, &wk_nope, wv,
+    )?; // [(n_nope+gd), r]
+
+    let r_k = Tensor::new(
+        &[n_nope, r],
+        (0..n_nope)
+            .flat_map(|i| rbasis.row(i).to_vec())
+            .collect(),
+    )?;
+    let r_v = Tensor::new(
+        &[gd, r],
+        (n_nope..n_nope + gd)
+            .flat_map(|i| rbasis.row(i).to_vec())
+            .collect(),
+    )?;
+
+    let w_dkv = Tensor::hcat(&[&wk_nope.scale(1.0 / alpha), wv])?.matmul(&rbasis)?;
+
+    let rep = h / g;
+    let mut wqr_parts = Vec::with_capacity(h);
+    let mut wuk_parts = Vec::with_capacity(h);
+    let mut wuv_parts = Vec::with_capacity(h);
+    for i in 0..h {
+        let m_i = &mixers[i]; // [d, gd]
+        wqr_parts.push(m_i.select_cols(&rope_idx)); // [d, dr]
+        let b_i = m_i.select_cols(&nope_idx); // [d, n_nope]
+        wuk_parts.push(b_i.matmul(&r_k)?.scale(alpha).t()); // [r, d]
+        let j = i / rep;
+        // w_uv_i = R_V[j*d:(j+1)*d, :]^T
+        let block = Tensor::new(
+            &[d, r],
+            (j * d..(j + 1) * d)
+                .flat_map(|row| r_v.row(row).to_vec())
+                .collect(),
+        )?;
+        wuv_parts.push(block.t());
+    }
+
+    Ok(LayerOut {
+        wqr: Tensor::stack(&wqr_parts)?,
+        w_dkv,
+        w_krope: wk_rope,
+        w_uk: Tensor::stack(&wuk_parts)?,
+        w_uv: Tensor::stack(&wuv_parts)?,
+        rope_freqs: freqs_out,
+        alpha,
+        dr,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Whole-model conversion + Absorb
+// ---------------------------------------------------------------------------
+
+pub struct Diag {
+    pub alphas: Vec<f32>,
+    pub dr: usize,
+}
+
+/// Convert a GQA `Params` (canonical order) into trainable-MLA and
+/// absorbed-MLA `Params`.
+pub fn convert_model(
+    gqa: &Params,
+    calib: &Calib,
+    cfg: &ModelConfig,
+    opts: &ConvertOptions,
+) -> Result<(Params, Params, Diag)> {
+    let lyr = cfg.n_layers;
+    let (wq_all, wk_all, wv_all, wo_all) = (
+        gqa.get("wq")?, gqa.get("wk")?, gqa.get("wv")?, gqa.get("wo")?,
+    );
+
+    let mut layers = Vec::with_capacity(lyr);
+    for l in 0..lyr {
+        layers.push(convert_layer(
+            &wk_all.index0(l),
+            &wv_all.index0(l),
+            &calib.k_pre[l],
+            &calib.q_pre[l],
+            &calib.v_act[l],
+            cfg,
+            opts,
+        )?);
+    }
+    let dr = layers[0].dr;
+    for lp in &layers {
+        if lp.dr != dr {
+            bail!("per-layer RoPE dims differ ({} vs {dr}) — \
+                   unsupported by the exported MLA artifacts", lp.dr);
+        }
+    }
+
+    let stack = |f: &dyn Fn(&LayerOut) -> Tensor| -> Result<Tensor> {
+        Tensor::stack(&layers.iter().map(f).collect::<Vec<_>>())
+    };
+
+    let rope_freqs = Tensor::new(
+        &[layers[0].rope_freqs.len()],
+        layers[0].rope_freqs.clone(),
+    )?;
+
+    let keys_vec =
+        |ks: &[&str]| ks.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+
+    let train = Params::new(
+        keys_vec(MLA_TRAIN_KEYS),
+        vec![
+            gqa.get("embed")?.clone(),
+            gqa.get("wq")?.clone(),
+            stack(&|l| l.wqr.clone())?,
+            stack(&|l| l.w_dkv.clone())?,
+            stack(&|l| l.w_krope.clone())?,
+            stack(&|l| l.w_uk.clone())?,
+            stack(&|l| l.w_uv.clone())?,
+            gqa.get("wo")?.clone(),
+            gqa.get("ln1")?.clone(),
+            gqa.get("w_gate")?.clone(),
+            gqa.get("w_up")?.clone(),
+            gqa.get("w_down")?.clone(),
+            gqa.get("ln2")?.clone(),
+            gqa.get("ln_f")?.clone(),
+            gqa.get("lm_head")?.clone(),
+            rope_freqs.clone(),
+        ],
+    )?;
+
+    // Absorb (Eq. 10): fold W^UK into Q, W^UV into O.
+    let (h, d) = (cfg.n_heads, cfg.head_dim);
+    let dm = cfg.d_model;
+    let mut wq_rope_l = Vec::with_capacity(lyr);
+    let mut wq_lat_l = Vec::with_capacity(lyr);
+    let mut wo_abs_l = Vec::with_capacity(lyr);
+    for (l, lp) in layers.iter().enumerate() {
+        let wq = wq_all.index0(l); // [D, h*d]
+        let wo = wo_all.index0(l); // [h*d, D]
+        let mut qr_h = Vec::with_capacity(h);
+        let mut ql_h = Vec::with_capacity(h);
+        let mut oa_h = Vec::with_capacity(h);
+        for i in 0..h {
+            let wq_i = wq.select_cols(&(i * d..(i + 1) * d).collect::<Vec<_>>()); // [D, d]
+            let wqr_i = lp.wqr.index0(i); // [d, dr]
+            let wuk_i = lp.w_uk.index0(i); // [r, d]
+            let wuv_i = lp.w_uv.index0(i); // [r, d]
+            qr_h.push(wq_i.matmul(&wqr_i)?); // [D, dr]
+            ql_h.push(wq_i.matmul(&wuk_i.t())?); // [D, r]
+            // wo block rows i*d..(i+1)*d: [d, D]
+            let wo_block = Tensor::new(
+                &[d, dm],
+                (i * d..(i + 1) * d)
+                    .flat_map(|row| wo.row(row).to_vec())
+                    .collect(),
+            )?;
+            oa_h.push(wuv_i.matmul(&wo_block)?); // [r, D]
+        }
+        wq_rope_l.push(Tensor::stack(&qr_h)?);
+        wq_lat_l.push(Tensor::stack(&ql_h)?);
+        wo_abs_l.push(Tensor::stack(&oa_h)?);
+    }
+
+    let absorbed = Params::new(
+        keys_vec(MLA_ABS_KEYS),
+        vec![
+            gqa.get("embed")?.clone(),
+            Tensor::stack(&wq_rope_l)?,
+            Tensor::stack(&wq_lat_l)?,
+            train.get("w_dkv")?.clone(),
+            train.get("w_krope")?.clone(),
+            Tensor::stack(&wo_abs_l)?,
+            gqa.get("ln1")?.clone(),
+            gqa.get("w_gate")?.clone(),
+            gqa.get("w_up")?.clone(),
+            gqa.get("w_down")?.clone(),
+            gqa.get("ln2")?.clone(),
+            gqa.get("ln_f")?.clone(),
+            gqa.get("lm_head")?.clone(),
+            rope_freqs,
+        ],
+    )?;
+
+    let diag = Diag { alphas: layers.iter().map(|l| l.alpha).collect(), dr };
+    Ok((train, absorbed, diag))
+}
+
+/// Re-absorb a (possibly fine-tuned) trainable-MLA `Params` into the
+/// absorbed serving form.
+pub fn absorb_trainable(train: &Params, cfg: &ModelConfig) -> Result<Params> {
+    let (h, d, dm, lyr) = (cfg.n_heads, cfg.head_dim, cfg.d_model, cfg.n_layers);
+    let wq_all = train.get("wq")?;
+    let wo_all = train.get("wo")?;
+    let wqr_all = train.get("wqr")?;
+    let wuk_all = train.get("w_uk")?;
+    let wuv_all = train.get("w_uv")?;
+    let mut wq_rope_l = Vec::new();
+    let mut wq_lat_l = Vec::new();
+    let mut wo_abs_l = Vec::new();
+    for l in 0..lyr {
+        let wq = wq_all.index0(l);
+        let wo = wo_all.index0(l);
+        let wqr = wqr_all.index0(l);
+        let wuk = wuk_all.index0(l);
+        let wuv = wuv_all.index0(l);
+        let mut qr_h = Vec::new();
+        let mut ql_h = Vec::new();
+        let mut oa_h = Vec::new();
+        for i in 0..h {
+            let wq_i = wq.select_cols(&(i * d..(i + 1) * d).collect::<Vec<_>>());
+            qr_h.push(wq_i.matmul(&wqr.index0(i))?);
+            ql_h.push(wq_i.matmul(&wuk.index0(i).t())?);
+            let wo_block = Tensor::new(
+                &[d, dm],
+                (i * d..(i + 1) * d)
+                    .flat_map(|row| wo.row(row).to_vec())
+                    .collect(),
+            )?;
+            oa_h.push(wuv.index0(i).matmul(&wo_block)?);
+        }
+        wq_rope_l.push(Tensor::stack(&qr_h)?);
+        wq_lat_l.push(Tensor::stack(&ql_h)?);
+        wo_abs_l.push(Tensor::stack(&oa_h)?);
+    }
+    let keys_vec =
+        |ks: &[&str]| ks.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    Params::new(
+        keys_vec(MLA_ABS_KEYS),
+        vec![
+            train.get("embed")?.clone(),
+            Tensor::stack(&wq_rope_l)?,
+            Tensor::stack(&wq_lat_l)?,
+            train.get("w_dkv")?.clone(),
+            train.get("w_krope")?.clone(),
+            Tensor::stack(&wo_abs_l)?,
+            train.get("ln1")?.clone(),
+            train.get("w_gate")?.clone(),
+            train.get("w_up")?.clone(),
+            train.get("w_down")?.clone(),
+            train.get("ln2")?.clone(),
+            train.get("ln_f")?.clone(),
+            train.get("lm_head")?.clone(),
+            train.get("rope_freqs")?.clone(),
+        ],
+    )
+}
+
+/// Build merged-form params (MERGED_KEYS) for Fig. 2b evaluation:
+/// optional per-layer rotation, frequency schedule and RoPE mask.
+pub fn merged_params_from(
+    gqa: &Params,
+    cfg: &ModelConfig,
+    rotations: Option<&[Tensor]>,
+    freqs: Option<Vec<f32>>,
+    mask: Option<Vec<f32>>,
+) -> Result<Params> {
+    let (h, g, d, lyr) = (cfg.n_heads, cfg.n_kv_groups, cfg.head_dim, cfg.n_layers);
+    let gd = g * d;
+    let mixers = selector_mixers(cfg);
+    let wq_all = gqa.get("wq")?;
+    let wk_all = gqa.get("wk")?;
+    let mut wqm_l = Vec::with_capacity(lyr);
+    let mut wk_l_out = Vec::with_capacity(lyr);
+    for l in 0..lyr {
+        let wk_l = wk_all.index0(l);
+        let (wk_rot, mx) = match rotations {
+            Some(qs) => apply_rotation(&wk_l, &mixers, &qs[l])?,
+            None => (wk_l, mixers.clone()),
+        };
+        wk_l_out.push(wk_rot);
+        let wq = wq_all.index0(l);
+        let mut heads = Vec::with_capacity(h);
+        for i in 0..h {
+            let wq_i = wq.select_cols(&(i * d..(i + 1) * d).collect::<Vec<_>>());
+            heads.push(wq_i.matmul(&mx[i])?); // [D, gd]
+        }
+        wqm_l.push(Tensor::stack(&heads)?);
+    }
+    let freqs = freqs.unwrap_or_else(|| merged_freqs(cfg));
+    let mask = mask.unwrap_or_else(|| vec![1.0; gd]);
+    let keys_vec =
+        |ks: &[&str]| ks.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    Params::new(
+        keys_vec(MERGED_KEYS),
+        vec![
+            gqa.get("embed")?.clone(),
+            Tensor::stack(&wqm_l)?,
+            Tensor::stack(&wk_l_out)?,
+            gqa.get("wv")?.clone(),
+            gqa.get("wo")?.clone(),
+            gqa.get("ln1")?.clone(),
+            gqa.get("w_gate")?.clone(),
+            gqa.get("w_up")?.clone(),
+            gqa.get("w_down")?.clone(),
+            gqa.get("ln2")?.clone(),
+            gqa.get("ln_f")?.clone(),
+            gqa.get("lm_head")?.clone(),
+            Tensor::new(&[gd / 2], freqs)?,
+            Tensor::new(&[gd], mask)?,
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::model::init_gqa;
+    use crate::util::Rng;
+
+    fn tiny_cfg(g: usize) -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_kv_groups: g,
+            head_dim: 8,
+            n_layers: 2,
+            d_ff: 48,
+            max_seq: 16,
+            rope_theta: 10000.0,
+        }
+    }
+
+    fn fake_calib(cfg: &ModelConfig, n: usize, seed: u64) -> Calib {
+        let mut rng = Rng::new(seed);
+        let gd = cfg.kv_dim();
+        let hd = cfg.q_dim();
+        // Give keys a strong low-rank cross-head structure so PCA has
+        // something to concentrate (mimics real activations).
+        let mk = |rng: &mut Rng, dim: usize, boost: bool| {
+            let mut t = Tensor::randn(&[n, dim], 1.0, rng);
+            if boost {
+                let dir = Tensor::randn(&[dim], 1.0, rng);
+                for s in 0..n {
+                    let a = rng.normal_f32(3.0);
+                    for j in 0..dim {
+                        t.data[s * dim + j] += a * dir.data[j];
+                    }
+                }
+                // keys larger than values, like the paper observes
+                t = t.scale(2.5);
+            }
+            t
+        };
+        Calib {
+            k_pre: (0..cfg.n_layers).map(|l| mk(&mut rng.fork(l as u64), gd, true)).collect(),
+            v_act: (0..cfg.n_layers).map(|l| mk(&mut rng.fork(100 + l as u64), gd, false)).collect(),
+            q_pre: (0..cfg.n_layers).map(|l| mk(&mut rng.fork(200 + l as u64), hd, false)).collect(),
+        }
+    }
+
+    #[test]
+    fn rotation_is_orthogonal_any_fold() {
+        for g in [2, 4] {
+            let cfg = tiny_cfg(g);
+            let calib = fake_calib(&cfg, 64, 0);
+            for fold in [1, 2, 4] {
+                let (q, freqs) = rorope_rotation(&calib.k_pre[0], &cfg, fold).unwrap();
+                assert!(orthogonality_defect(&q) < 1e-4,
+                        "g={g} fold={fold}: {}", orthogonality_defect(&q));
+                assert_eq!(freqs.len(), cfg.kv_dim() / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn fold1_preserves_freqs() {
+        let cfg = tiny_cfg(2);
+        let calib = fake_calib(&cfg, 32, 1);
+        let (_, freqs) = rorope_rotation(&calib.k_pre[0], &cfg, 1).unwrap();
+        let want = merged_freqs(&cfg);
+        for (a, b) in freqs.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn rotation_concentrates_energy() {
+        let cfg = tiny_cfg(4);
+        let calib = fake_calib(&cfg, 128, 2);
+        let (q, _) = rorope_rotation(&calib.k_pre[0], &cfg, 1).unwrap();
+        let k_rot = calib.k_pre[0].matmul(&q.t()).unwrap();
+        let d = cfg.head_dim;
+        let energy = |t: &Tensor, j: usize| -> f64 {
+            let mut s = 0.0;
+            for r in 0..t.rows() {
+                for c in j * d..(j + 1) * d {
+                    s += (t.at2(r, c) as f64).powi(2);
+                }
+            }
+            s
+        };
+        let e: Vec<f64> = (0..cfg.n_kv_groups).map(|j| energy(&k_rot, j)).collect();
+        assert!(e[0] >= e[1] && e[1] >= e[2] && e[2] >= e[3], "{e:?}");
+        // total energy preserved (orthogonality)
+        let tot_rot: f64 = e.iter().sum();
+        let tot: f64 = calib.k_pre[0].data.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((tot_rot - tot).abs() / tot < 1e-4);
+    }
+
+    #[test]
+    fn alpha_balances() {
+        let cfg = tiny_cfg(2);
+        let calib = fake_calib(&cfg, 64, 3);
+        let a = kv_balance_alpha(&calib.k_pre[0], &calib.v_act[0]);
+        assert!(a > 1.0, "keys boosted so alpha>1, got {a}");
+        let balanced = calib.k_pre[0].scale(1.0 / a);
+        let r = balanced.mean_row_norm() / calib.v_act[0].mean_row_norm();
+        assert!((r - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn convert_model_shapes_and_absorb() {
+        for g in [2, 4] {
+            let cfg = tiny_cfg(g);
+            let gqa = init_gqa(&cfg, 4);
+            let calib = fake_calib(&cfg, 64, 5);
+            let opts = ConvertOptions::transmla(12);
+            let (train, absorbed, diag) =
+                convert_model(&gqa, &calib, &cfg, &opts).unwrap();
+            let (h, d, dm, lyr) = (cfg.n_heads, cfg.head_dim, cfg.d_model, cfg.n_layers);
+            assert_eq!(diag.dr, d);
+            assert_eq!(train.get("w_dkv").unwrap().shape, vec![lyr, dm, 12]);
+            assert_eq!(train.get("w_uk").unwrap().shape, vec![lyr, h, 12, d]);
+            assert_eq!(absorbed.get("wq_lat").unwrap().shape, vec![lyr, h, dm, 12]);
+            assert_eq!(absorbed.get("wo_abs").unwrap().shape, vec![lyr, h, 12, dm]);
+            // Re-absorbing the trainable params must equal the converter's
+            // own absorbed params.
+            let re = absorb_trainable(&train, &cfg).unwrap();
+            for (k, t) in re.keys.iter().zip(&re.tensors) {
+                let want = absorbed.get(k).unwrap();
+                assert!(t.max_abs_diff(want) < 1e-5, "{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_basis_is_orthogonal_and_lossless_on_samples() {
+        let cfg = tiny_cfg(2);
+        let calib = fake_calib(&cfg, 64, 6);
+        let d = cfg.head_dim;
+        let k_nope = calib.k_pre[0].slice_cols(d, cfg.kv_dim());
+        let v = &calib.v_act[0];
+        let full = k_nope.cols() + v.cols();
+        let rb = joint_lowrank_basis(
+            &k_nope, v, 1.0, full, PcaMode::Activations,
+            &Tensor::zeros(&[2, k_nope.cols()]), &Tensor::zeros(&[2, v.cols()]),
+        ).unwrap();
+        assert!(orthogonality_defect(&rb) < 1e-4);
+        let z = Tensor::hcat(&[&k_nope, v]).unwrap();
+        let rec = z.matmul(&rb).unwrap().matmul(&rb.t()).unwrap();
+        assert!(rec.max_abs_diff(&z) < 1e-3, "{}", rec.max_abs_diff(&z));
+    }
+
+    #[test]
+    fn mha2mla_mask_budget() {
+        let cfg = tiny_cfg(2);
+        let calib = fake_calib(&cfg, 32, 7);
+        let m = mha2mla_mask(&cfg, &calib.k_pre[0], &calib.q_pre[0], 2);
+        let kept: f32 = m.iter().sum();
+        assert_eq!(kept as usize, cfg.n_kv_groups * 2 * 2);
+    }
+
+    #[test]
+    fn merged_params_shapes() {
+        let cfg = tiny_cfg(2);
+        let gqa = init_gqa(&cfg, 8);
+        let p = merged_params_from(&gqa, &cfg, None, None, None).unwrap();
+        assert_eq!(
+            p.get("wqm").unwrap().shape,
+            vec![cfg.n_layers, cfg.n_heads, cfg.d_model, cfg.kv_dim()]
+        );
+        assert_eq!(p.get("rope_mask").unwrap().shape, vec![cfg.kv_dim()]);
+    }
+}

@@ -1,0 +1,392 @@
+//! The serving engine: continuous batching over fixed decode slots.
+//!
+//! One `Engine` drives one architecture (GQA baseline or converted MLA)
+//! through its AOT prefill/decode executables:
+//!
+//!   * **admission** — up to `batch` queued requests are prefilled in one
+//!     fixed-shape prefill call; their caches are spliced into free slots;
+//!   * **decode** — all active slots advance one token per step through
+//!     the decode executable (position-masked, so idle slots are inert);
+//!   * **completion** — finished slots are released immediately and can be
+//!     refilled on the next admission, vLLM-style.
+//!
+//! Weights live on-device for the whole engine lifetime; only the caches
+//! and per-step scalars cross the host boundary (see runtime/mod.rs).
+
+use crate::config::EngineConfig;
+use crate::coordinator::request::{Completion, Request};
+use crate::coordinator::sampling;
+use crate::kvcache::{CacheLayout, KvCache, SlotAllocator};
+use crate::metrics::Metrics;
+use crate::model::Params;
+use crate::runtime::{Exec, Runtime, Value};
+use crate::util::{Rng, Timer};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which architecture an engine serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Gqa,
+    Mla { rank: usize },
+}
+
+/// The compiled artifact pair + device-resident weights for one model.
+pub struct ModelBundle {
+    pub arch: Arch,
+    pub cfg_name: String,
+    pub prefill: Arc<Exec>,
+    pub decode: Arc<Exec>,
+    pub params: Params,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// Host literals backing `param_bufs` — kept alive for the bundle's
+    /// lifetime because PJRT host->device transfers are asynchronous.
+    _param_lits: Vec<xla::Literal>,
+    pub layout: CacheLayout,
+    pub batch: usize,
+    pub prefill_batch: usize,
+    pub capacity: usize,
+}
+
+impl ModelBundle {
+    pub fn load(
+        rt: &Runtime,
+        cfg_name: &str,
+        arch: Arch,
+        batch: usize,
+        params: Params,
+    ) -> Result<ModelBundle> {
+        let (prefill_name, decode_name) = match arch {
+            Arch::Gqa => (
+                format!("{cfg_name}_gqa_prefill"),
+                format!("{cfg_name}_gqa_decode_b{batch}"),
+            ),
+            Arch::Mla { rank } => (
+                format!("{cfg_name}_mla_prefill_r{rank}"),
+                format!("{cfg_name}_mla_decode_r{rank}_b{batch}"),
+            ),
+        };
+        Self::load_named(rt, cfg_name, arch, batch, params, &prefill_name, &decode_name)
+    }
+
+    /// Load with explicit artifact names (context-length variants carry a
+    /// `_t{T}` suffix on the decode artifact).
+    pub fn load_named(
+        rt: &Runtime,
+        cfg_name: &str,
+        arch: Arch,
+        batch: usize,
+        params: Params,
+        prefill_name: &str,
+        decode_name: &str,
+    ) -> Result<ModelBundle> {
+        let prefill = rt.load(prefill_name)?;
+        let decode = rt.load(decode_name)?;
+        params.check_against(&decode.spec)?;
+        let cfg = &decode.spec.config;
+        let layout = match arch {
+            Arch::Gqa => CacheLayout::Gqa { g: cfg.n_kv_groups, d: cfg.head_dim },
+            Arch::Mla { rank } => CacheLayout::Mla { r: rank, dr: cfg.head_dim },
+        };
+        let mut param_bufs = Vec::new();
+        let mut _param_lits = Vec::new();
+        for v in params.values() {
+            let (buf, lit) = prefill.upload_owned(&v)?;
+            param_bufs.push(buf);
+            _param_lits.push(lit);
+        }
+        let prefill_batch = prefill.spec.batch.context("prefill batch")?;
+        // Cache capacity comes from the decode artifact's cache input
+        // shape [L, B, T, ...] (context-length variants differ from the
+        // config's max_seq).
+        let n = decode.spec.params.len();
+        let capacity = decode.spec.inputs[n + 2].shape[2];
+        Ok(ModelBundle {
+            arch,
+            cfg_name: cfg_name.to_string(),
+            prefill,
+            decode,
+            params,
+            param_bufs,
+            _param_lits,
+            layout,
+            batch,
+            prefill_batch,
+            capacity,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.decode.spec.config.n_layers
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.decode.spec.config.vocab
+    }
+}
+
+struct SeqState {
+    req: Request,
+    slot: usize,
+    /// Position the next decode step writes to (prompt_len initially).
+    next_pos: usize,
+    last_token: i32,
+    generated: Vec<i32>,
+    admitted: Instant,
+    enqueued: Instant,
+}
+
+/// Continuous-batching serving engine for one model bundle.
+pub struct Engine {
+    pub bundle: ModelBundle,
+    pub cache: KvCache,
+    slots: SlotAllocator,
+    seqs: Vec<Option<SeqState>>,
+    queue: VecDeque<(Request, Instant)>,
+    pub completions: Vec<Completion>,
+    pub metrics: Metrics,
+    rng: Rng,
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
+        let cache = KvCache::new(
+            bundle.layout,
+            bundle.n_layers(),
+            bundle.batch,
+            bundle.capacity,
+        );
+        let batch = bundle.batch;
+        Engine {
+            bundle,
+            cache,
+            slots: SlotAllocator::new(batch),
+            seqs: (0..batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            completions: Vec::new(),
+            metrics: Metrics::new(),
+            rng: Rng::new(cfg.seed),
+            cfg,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.inc("requests", 1);
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.n_active()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.n_active() == 0
+    }
+
+    /// One scheduler iteration: admit new requests (prefill) if there is
+    /// room, otherwise advance all active sequences one decode step.
+    pub fn step(&mut self) -> Result<()> {
+        if !self.queue.is_empty() && self.slots.n_free() > 0 {
+            self.admit()?;
+        } else if self.slots.n_active() > 0 {
+            self.decode_step()?;
+        }
+        Ok(())
+    }
+
+    /// Run until all submitted work is complete.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Convenience: submit prompts, run, return completions in order.
+    pub fn generate(&mut self, reqs: Vec<Request>) -> Result<Vec<Completion>> {
+        let first = self.completions.len();
+        for r in reqs {
+            self.submit(r);
+        }
+        self.run_to_completion()?;
+        let mut out: Vec<Completion> = self.completions[first..].to_vec();
+        out.sort_by_key(|c| c.id);
+        Ok(out)
+    }
+
+    // -- admission / prefill -------------------------------------------------
+
+    fn admit(&mut self) -> Result<()> {
+        let n = self
+            .queue
+            .len()
+            .min(self.slots.n_free())
+            .min(self.bundle.prefill_batch);
+        let mut admitted = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (req, enq) = self.queue.pop_front().unwrap();
+            admitted.push((req, enq));
+        }
+
+        // The prefill artifact has its own (fixed) sequence length; the
+        // decode cache capacity may be shorter for context-length variants
+        // (splice truncates).
+        let t = self.bundle.prefill.spec.inputs.last().unwrap().shape[1];
+        let max_prompt = self.bundle.capacity.min(t) - 1;
+        let bp = self.bundle.prefill_batch;
+        let mut tokens = vec![0i32; bp * t];
+        for (row, (req, _)) in admitted.iter().enumerate() {
+            let len = req.prompt.len().min(max_prompt);
+            tokens[row * t..row * t + len].copy_from_slice(&req.prompt[..len]);
+        }
+
+        let timer = Timer::start();
+        let outs = self.bundle.prefill.run_b(
+            &self.bundle.param_bufs,
+            &[Value::i32_mat(tokens, &[bp, t])],
+        )?;
+        self.metrics.observe("prefill_s", timer.elapsed_s());
+        let (logits, caches) = outs.split_first().context("prefill outputs")?;
+
+        let now = Instant::now();
+        let vocab = self.bundle.vocab();
+        for (row, (req, enq)) in admitted.into_iter().enumerate() {
+            let slot = self.slots.alloc(req.id).context("slot alloc")?;
+            self.cache.splice_from(caches, row, slot)?;
+            let plen = req.prompt.len().min(max_prompt);
+            self.metrics.inc("prefill_tokens", plen as u64);
+            // logits [Bp, T, V]: next token follows position plen-1.
+            let off = (row * t + (plen - 1)) * vocab;
+            let temp = self.effective_temp(&req);
+            let first_tok = sampling::sample(
+                &logits.data[off..off + vocab],
+                temp,
+                &mut self.rng,
+            );
+            self.seqs[slot] = Some(SeqState {
+                next_pos: plen,
+                last_token: first_tok,
+                generated: vec![first_tok],
+                admitted: now,
+                enqueued: enq,
+                slot,
+                req,
+            });
+            // A prompt that already fills the cache finishes immediately.
+            self.maybe_complete(slot)?;
+        }
+        Ok(())
+    }
+
+    fn effective_temp(&self, req: &Request) -> f32 {
+        if req.temperature > 0.0 {
+            req.temperature
+        } else {
+            self.cfg.temperature
+        }
+    }
+
+    // -- decode ---------------------------------------------------------------
+
+    fn decode_step(&mut self) -> Result<()> {
+        let b = self.bundle.batch;
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for slot in 0..b {
+            if let Some(seq) = &self.seqs[slot] {
+                token[slot] = seq.last_token;
+                pos[slot] = seq.next_pos as i32;
+            }
+        }
+        let timer = Timer::start();
+        let outs = self.bundle.decode.run_b_mixed(
+            &self.bundle.param_bufs,
+            &[Value::i32_vec(token), Value::i32_vec(pos)],
+            &[&self.cache.bufs[0], &self.cache.bufs[1]],
+        )?;
+        self.metrics.observe("decode_s", timer.elapsed_s());
+        let mut it = outs.into_iter();
+        let logits = it.next().context("decode logits")?;
+        let c0 = it.next().context("cache0")?;
+        let c1 = it.next().context("cache1")?;
+        self.cache.store(vec![c0, c1])?;
+
+        let vocab = self.bundle.vocab();
+        let active = self.slots.active_slots();
+        self.metrics.inc("decode_tokens", active.len() as u64);
+        self.metrics.inc("decode_steps", 1);
+        for slot in active {
+            let temp = {
+                let seq = self.seqs[slot].as_ref().unwrap();
+                self.effective_temp(&seq.req)
+            };
+            let row = &logits.data[slot * vocab..(slot + 1) * vocab];
+            let tok = sampling::sample(row, temp, &mut self.rng);
+            let seq = self.seqs[slot].as_mut().unwrap();
+            seq.next_pos += 1;
+            seq.last_token = tok;
+            seq.generated.push(tok);
+            self.maybe_complete(slot)?;
+        }
+        Ok(())
+    }
+
+    fn maybe_complete(&mut self, slot: usize) -> Result<()> {
+        let done = {
+            let seq = self.seqs[slot].as_ref().unwrap();
+            let max_new = seq.req.max_new_tokens.min(
+                self.bundle.capacity.saturating_sub(seq.req.prompt.len()),
+            );
+            seq.generated.len() >= max_new.max(1)
+                || seq.next_pos + 1 >= self.bundle.capacity
+        };
+        if !done {
+            return Ok(());
+        }
+        let seq = self.seqs[slot].take().unwrap();
+        self.slots.release(seq.slot)?;
+        self.metrics.inc("completed", 1);
+        self.completions.push(Completion {
+            id: seq.req.id,
+            prompt_len: seq.req.prompt.len(),
+            tokens: seq.generated,
+            latency_s: seq.enqueued.elapsed().as_secs_f64(),
+            queue_s: (seq.admitted - seq.enqueued).as_secs_f64(),
+        });
+        Ok(())
+    }
+
+    /// Decode throughput measured so far (generated tokens / decode time).
+    pub fn decode_throughput(&self) -> f64 {
+        let toks = self.metrics.counter("decode_tokens") as f64;
+        let time: f64 = self
+            .metrics
+            .stats("decode_s")
+            .map(|s| s.samples.iter().sum())
+            .unwrap_or(0.0);
+        if time > 0.0 {
+            toks / time
+        } else {
+            0.0
+        }
+    }
+
+    pub fn slots_check(&self) -> Result<()> {
+        self.slots.check_invariants()?;
+        for (i, s) in self.seqs.iter().enumerate() {
+            match (s, self.slots.owner_of(i)) {
+                (Some(seq), Some(owner)) if seq.req.id == owner => {}
+                (None, None) => {}
+                _ => bail!("slot {i} state and allocator disagree"),
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator — the serving system around the AOT-compiled models:
+//! request queue, continuous batcher, prefill/decode scheduler, sampling,
+//! and per-request accounting.
+//!
+//! This is the paper's deployment story: after TransMLA conversion the
+//! MLA model drops into the same engine as the GQA baseline (same slots,
+//! same scheduler), but with the latent cache layout — the serving-side
+//! speedup of Sec. 5.4 falls out of the smaller per-step cache traffic.
+
+pub mod engine;
+pub mod request;
+pub mod sampling;
+
+pub use engine::{Engine, ModelBundle};
+pub use request::{Completion, Request};

@@ -1,0 +1,62 @@
+//! Request / completion types shared by the engine, server, and benches.
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Byte-level prompt tokens.
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy.
+    pub temperature: f32,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Request { id, prompt, max_new_tokens, temperature: 0.0 }
+    }
+
+    pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Self {
+        Request::new(id, text.bytes().map(|b| b as i32).collect(), max_new_tokens)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Wall-clock seconds from admission to completion.
+    pub latency_s: f64,
+    /// Seconds spent queued before prefill.
+    pub queue_s: f64,
+}
+
+impl Completion {
+    pub fn text(&self) -> String {
+        let bytes: Vec<u8> = self
+            .tokens
+            .iter()
+            .map(|&t| t.clamp(0, 255) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_roundtrip() {
+        let r = Request::from_text(1, "hi there", 4);
+        assert_eq!(r.prompt, vec![104, 105, 32, 116, 104, 101, 114, 101]);
+        let c = Completion {
+            id: 1,
+            prompt_len: 8,
+            tokens: vec![111, 107],
+            latency_s: 0.0,
+            queue_s: 0.0,
+        };
+        assert_eq!(c.text(), "ok");
+    }
+}

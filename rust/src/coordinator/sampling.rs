@@ -1,0 +1,67 @@
+//! Token sampling from a logits row: greedy or temperature-softmax.
+
+use crate::util::Rng;
+
+/// Greedy argmax.
+pub fn greedy(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Temperature sampling (temperature <= 0 degrades to greedy).
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return greedy(logits);
+    }
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = logits
+        .iter()
+        .map(|&l| ((l - m) / temperature).exp())
+        .collect();
+    rng.categorical(&weights) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 2.0, -1.0]), 1);
+        assert_eq!(greedy(&[5.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.0, 3.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut rng = Rng::new(1);
+        let logits = [1.0f32, 1.1, 0.9];
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[sample(&logits, 5.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "{counts:?}");
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 4.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, 0.1, &mut rng) == 1)
+            .count();
+        assert!(hits > 195, "{hits}");
+    }
+}

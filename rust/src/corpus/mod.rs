@@ -1,0 +1,207 @@
+//! Synthetic byte-level corpus: the stand-in for the paper's pretraining /
+//! calibration text (SmolLM corpus, WikiText-2 — see DESIGN.md's
+//! substitution table).
+//!
+//! A deterministic stochastic grammar produces English-like sentences with
+//! long-range structure (topic words recur within a paragraph), giving the
+//! byte LM something real to learn: local orthography, word boundaries,
+//! punctuation, and paragraph-level reuse. Perplexity deltas on held-out
+//! text from the same distribution play the role of the paper's benchmark
+//! deltas.
+
+use crate::util::Rng;
+
+const SUBJECTS: &[&str] = &[
+    "the model", "a transformer", "the latent cache", "the scheduler",
+    "our system", "the decoder", "a rotation", "the compiler",
+    "the attention head", "the router", "a query", "the key head",
+];
+
+const VERBS: &[&str] = &[
+    "compresses", "rotates", "absorbs", "predicts", "stores", "serves",
+    "reduces", "balances", "concentrates", "projects", "recovers", "merges",
+];
+
+const OBJECTS: &[&str] = &[
+    "the kv cache", "positional information", "a latent vector",
+    "the principal components", "every batch", "the throughput",
+    "low rank structure", "the context window", "a shared key",
+    "the rope frequencies", "token embeddings", "the memory budget",
+];
+
+const MODIFIERS: &[&str] = &[
+    "quickly", "without loss", "at long context", "during decode",
+    "after fine tuning", "in latent space", "per attention head",
+    "with high fidelity", "under load", "at scale",
+];
+
+const CONNECTIVES: &[&str] = &[
+    "meanwhile", "therefore", "in practice", "as a result", "moreover",
+    "by contrast", "empirically",
+];
+
+/// Deterministic corpus generator. Same seed -> same byte stream.
+pub struct CorpusGen {
+    rng: Rng,
+    topic: Vec<&'static str>,
+    sentences_left: usize,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7355_608);
+        let topic = pick_topic(&mut rng);
+        CorpusGen { rng, topic, sentences_left: 6 }
+    }
+
+    fn sentence(&mut self) -> String {
+        let r = &mut self.rng;
+        // Topic words recur: pull from the paragraph topic 60% of the time.
+        let mut pick = |pool: &[&'static str], topic_slot: usize| -> &'static str {
+            if r.uniform() < 0.6 {
+                self.topic[topic_slot]
+            } else {
+                pool[r.below(pool.len())]
+            }
+        };
+        let s = pick(SUBJECTS, 0);
+        let v = pick(VERBS, 1);
+        let o = pick(OBJECTS, 2);
+        let mut out = String::new();
+        if self.rng.uniform() < 0.25 {
+            out.push_str(CONNECTIVES[self.rng.below(CONNECTIVES.len())]);
+            out.push_str(", ");
+        }
+        out.push_str(s);
+        out.push(' ');
+        out.push_str(v);
+        out.push(' ');
+        out.push_str(o);
+        if self.rng.uniform() < 0.5 {
+            out.push(' ');
+            out.push_str(MODIFIERS[self.rng.below(MODIFIERS.len())]);
+        }
+        if self.rng.uniform() < 0.15 {
+            out.push_str(&format!(" {} times", 2 + self.rng.below(31)));
+        }
+        out.push_str(". ");
+        out
+    }
+
+    /// Produce `n` bytes of text.
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n + 128);
+        while out.len() < n {
+            if self.sentences_left == 0 {
+                out.extend_from_slice(b"\n\n");
+                self.topic = pick_topic(&mut self.rng);
+                self.sentences_left = 3 + self.rng.below(6);
+            }
+            let s = self.sentence();
+            out.extend_from_slice(s.as_bytes());
+            self.sentences_left -= 1;
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+fn pick_topic(rng: &mut Rng) -> Vec<&'static str> {
+    vec![
+        SUBJECTS[rng.below(SUBJECTS.len())],
+        VERBS[rng.below(VERBS.len())],
+        OBJECTS[rng.below(OBJECTS.len())],
+    ]
+}
+
+/// Token dataset with deterministic train/val split and batch sampling.
+pub struct Corpus {
+    pub train: Vec<u8>,
+    pub val: Vec<u8>,
+}
+
+impl Corpus {
+    /// Generate `total` bytes, 90/10 split.
+    pub fn synthetic(seed: u64, total: usize) -> Self {
+        let mut g = CorpusGen::new(seed);
+        let all = g.bytes(total);
+        let split = total * 9 / 10;
+        Corpus { train: all[..split].to_vec(), val: all[split..].to_vec() }
+    }
+
+    /// Sample a [b, t] batch of token ids (bytes) from the training split.
+    pub fn sample_batch(&self, b: usize, t: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            let start = rng.below(self.train.len().saturating_sub(t + 1));
+            out.extend(self.train[start..start + t].iter().map(|&x| x as i32));
+        }
+        out
+    }
+
+    /// Deterministic sequential val batches [b, t] (for perplexity).
+    pub fn val_batches(&self, b: usize, t: usize) -> Vec<Vec<i32>> {
+        let per = self.val.len() / (b * t);
+        (0..per)
+            .map(|i| {
+                self.val[i * b * t..(i + 1) * b * t]
+                    .iter()
+                    .map(|&x| x as i32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// A human-ish prompt sampled from val (for the case study, Table 5).
+    pub fn prompt(&self, len: usize, idx: usize) -> Vec<i32> {
+        let start = (idx * 97) % self.val.len().saturating_sub(len + 1).max(1);
+        self.val[start..start + len].iter().map(|&x| x as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::synthetic(1, 10_000);
+        let b = Corpus::synthetic(1, 10_000);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.val, b.val);
+    }
+
+    #[test]
+    fn text_is_ascii_english_like() {
+        let c = Corpus::synthetic(2, 5_000);
+        assert!(c.train.iter().all(|&b| b.is_ascii()));
+        let s = String::from_utf8(c.train.clone()).unwrap();
+        assert!(s.contains(". "));
+        assert!(s.split_whitespace().count() > 100);
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_range() {
+        let c = Corpus::synthetic(3, 50_000);
+        let mut rng = Rng::new(0);
+        let b = c.sample_batch(4, 128, &mut rng);
+        assert_eq!(b.len(), 4 * 128);
+        assert!(b.iter().all(|&x| (0..256).contains(&x)));
+        let vb = c.val_batches(2, 64);
+        assert!(!vb.is_empty());
+        assert!(vb.iter().all(|v| v.len() == 128));
+    }
+
+    #[test]
+    fn topics_recur_within_paragraphs() {
+        // Long-range structure: some word appears many times.
+        let c = Corpus::synthetic(4, 20_000);
+        let s = String::from_utf8(c.train).unwrap();
+        let max_count = SUBJECTS
+            .iter()
+            .map(|w| s.matches(w).count())
+            .max()
+            .unwrap();
+        assert!(max_count > 10, "{max_count}");
+    }
+}

@@ -1,0 +1,538 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation.
+//!
+//! Every driver prints a human-readable table and returns a `Json` blob
+//! that the CLI writes under `runs/`. Paper-vs-measured commentary lives
+//! in EXPERIMENTS.md.
+
+use crate::config::{EngineConfig, HardwareProfile, ModelConfig};
+use crate::convert::{
+    self, Baseline, Calib, ConvertOptions, PcaMode,
+};
+use crate::coordinator::{Engine, ModelBundle, Request};
+use crate::coordinator::engine::Arch;
+use crate::corpus::Corpus;
+use crate::eval::{capture_calib, evaluate, per_dim_norms, EvalResult};
+use crate::json::Json;
+use crate::model::{init_gqa, Params};
+use crate::perfmodel;
+use crate::runtime::Runtime;
+use crate::train::Trainer;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shared experiment state: runtime, trained base model, corpus, calib.
+pub struct ExpContext<'a> {
+    pub rt: &'a Runtime,
+    pub cfg_name: String,
+    pub cfg: ModelConfig,
+    pub gqa: Params,
+    pub corpus: Corpus,
+    pub calib: Calib,
+    pub out_dir: PathBuf,
+    pub eval_batches: Vec<Vec<i32>>,
+    pub ft_steps: usize,
+}
+
+impl<'a> ExpContext<'a> {
+    /// Load (or briefly pretrain) the base GQA model and capture
+    /// calibration activations.
+    pub fn prepare(
+        rt: &'a Runtime,
+        cfg_name: &str,
+        ckpt: Option<&Path>,
+        pretrain_steps: usize,
+        ft_steps: usize,
+        out_dir: &Path,
+        n_eval_batches: usize,
+    ) -> Result<ExpContext<'a>> {
+        std::fs::create_dir_all(out_dir)?;
+        let cfg = rt
+            .manifest
+            .configs
+            .get(cfg_name)
+            .context("unknown config")?
+            .clone();
+        let corpus = Corpus::synthetic(7, 2_000_000);
+
+        let gqa = match ckpt {
+            Some(p) if p.exists() => {
+                eprintln!("[exp] loading base checkpoint {}", p.display());
+                Params::load(p)?
+            }
+            _ => {
+                let mut params = init_gqa(&cfg, 42);
+                if pretrain_steps > 0 {
+                    eprintln!("[exp] pretraining GQA base for {pretrain_steps} steps");
+                    let exec = rt.load(&format!("{cfg_name}_gqa_train"))?;
+                    let mut tr = Trainer::new(exec, params)?;
+                    tr.run(&corpus, pretrain_steps, 1e-3, 1, 20, "gqa-base")?;
+                    params = tr.params.clone();
+                    if let Some(p) = ckpt {
+                        params.save(p, Json::obj())?;
+                    }
+                }
+                params
+            }
+        };
+
+        let calib_exec = rt.load(&format!("{cfg_name}_calib"))?;
+        let spec_b = calib_exec.spec.batch.context("calib batch")?;
+        let t = cfg.max_seq;
+        let mut rng = crate::util::Rng::new(1234);
+        let calib_tokens = corpus.sample_batch(spec_b, t, &mut rng);
+        let calib = capture_calib(&calib_exec, &gqa, &calib_tokens, 1024)?;
+
+        let eval_batches: Vec<Vec<i32>> = corpus
+            .val_batches(spec_b, t)
+            .into_iter()
+            .take(n_eval_batches)
+            .collect();
+
+        Ok(ExpContext {
+            rt,
+            cfg_name: cfg_name.to_string(),
+            cfg,
+            gqa,
+            corpus,
+            calib,
+            out_dir: out_dir.to_path_buf(),
+            eval_batches,
+            ft_steps,
+        })
+    }
+
+    pub fn save_json(&self, name: &str, j: &Json) -> Result<()> {
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, j.to_pretty())?;
+        eprintln!("[exp] wrote {}", path.display());
+        Ok(())
+    }
+
+    fn eval_gqa(&self) -> Result<EvalResult> {
+        let exec = self.rt.load(&format!("{}_gqa_prefill", self.cfg_name))?;
+        evaluate(&exec, &self.gqa, &self.eval_batches)
+    }
+
+    fn eval_merged(&self, params: &Params) -> Result<EvalResult> {
+        let exec = self.rt.load(&format!("{}_merged_prefill", self.cfg_name))?;
+        evaluate(&exec, params, &self.eval_batches)
+    }
+
+    fn eval_mla(&self, params: &Params, rank: usize) -> Result<EvalResult> {
+        let exec = self
+            .rt
+            .load(&format!("{}_mla_prefill_r{rank}", self.cfg_name))?;
+        evaluate(&exec, params, &self.eval_batches)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2a — key norms per dimension: original vs RoRoPE vs +FreqFold
+// ---------------------------------------------------------------------------
+
+pub fn fig2a(ctx: &ExpContext) -> Result<Json> {
+    let k = &ctx.calib.k_pre[0]; // first layer, as in the paper
+    let orig = per_dim_norms(k);
+
+    let (q1, _) = convert::rorope_rotation(k, &ctx.cfg, 1)?;
+    let rot1 = per_dim_norms(&k.matmul(&q1.t())?);
+
+    let (q4, _) = convert::rorope_rotation(k, &ctx.cfg, 4)?;
+    let rot4 = per_dim_norms(&k.matmul(&q4.t())?);
+
+    let d = ctx.cfg.head_dim;
+    let head_energy = |norms: &[f64]| -> Vec<f64> {
+        (0..ctx.cfg.n_kv_groups)
+            .map(|j| norms[j * d..(j + 1) * d].iter().map(|x| x * x).sum::<f64>().sqrt())
+            .collect()
+    };
+
+    println!("\n=== Figure 2a: per-dimension key L2 norms (layer 0) ===");
+    println!("head-level norm concentration (L2 over each head's dims):");
+    println!("  original : {:?}", fmt_vec(&head_energy(&orig)));
+    println!("  RoRoPE   : {:?}", fmt_vec(&head_energy(&rot1)));
+    println!("  +4D fold : {:?}", fmt_vec(&head_energy(&rot4)));
+
+    let mut j = Json::obj();
+    j.set("orig", Json::from_f64s(&orig));
+    j.set("rorope", Json::from_f64s(&rot1));
+    j.set("rorope_fold4", Json::from_f64s(&rot4));
+    Ok(j)
+}
+
+fn fmt_vec(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|x| (x * 100.0).round() / 100.0).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2b — log-ppl vs RoPE removal ratio, per strategy
+// ---------------------------------------------------------------------------
+
+pub fn fig2b(ctx: &ExpContext) -> Result<Json> {
+    let cfg = &ctx.cfg;
+    let g = cfg.n_kv_groups;
+    let n_freq = cfg.head_dim / 2;
+    let mut out = Json::obj();
+    println!("\n=== Figure 2b: log-perplexity vs RoPE removal ratio ===");
+
+    // MHA2MLA-norm baseline: keep k pairs per head.
+    {
+        let mut pts = vec![];
+        for keep in [n_freq, n_freq / 2, n_freq / 4, n_freq / 8, 1] {
+            let mask = convert::mha2mla_mask(
+                cfg, &ctx.calib.k_pre[0], &ctx.calib.q_pre[0], keep,
+            );
+            let removal = 1.0 - keep as f64 / n_freq as f64;
+            let p = convert::merged_params_from(&ctx.gqa, cfg, None, None, Some(mask))?;
+            let ev = ctx.eval_merged(&p)?;
+            println!("  mha2mla keep={keep:>2}/head removal={removal:.3} logppl={:.4}", ev.loss);
+            pts.push((removal, ev.loss));
+        }
+        out.set("mha2mla", pts_json(&pts));
+    }
+
+    // RoRoPE (+folds): keep top-c components per frequency group.
+    for fold in [1usize, 2, 4] {
+        let rotations: Vec<_> = ctx
+            .calib
+            .k_pre
+            .iter()
+            .map(|k| convert::rorope_rotation(k, cfg, fold).map(|x| x.0))
+            .collect::<Result<Vec<_>>>()?;
+        let freqs = convert::rorope_rotation(&ctx.calib.k_pre[0], cfg, fold)?.1;
+        let mut pts = vec![];
+        let keeps: Vec<usize> = [g * fold, g * fold / 2, g * fold / 4, fold.max(2), fold, 1]
+            .into_iter()
+            .filter(|&k| k >= 1 && k <= g * fold)
+            .collect();
+        for keep in dedup(keeps) {
+            let mask = convert::rorope_mask(cfg, keep, fold);
+            let removal = 1.0 - keep as f64 / (g * fold) as f64;
+            let p = convert::merged_params_from(
+                &ctx.gqa, cfg, Some(&rotations), Some(freqs.clone()), Some(mask),
+            )?;
+            let ev = ctx.eval_merged(&p)?;
+            println!("  rorope(fold={fold}) keep={keep:>2} removal={removal:.3} logppl={:.4}", ev.loss);
+            pts.push((removal, ev.loss));
+        }
+        out.set(&format!("rorope_fold{fold}"), pts_json(&pts));
+    }
+    Ok(out)
+}
+
+fn dedup(mut v: Vec<usize>) -> Vec<usize> {
+    v.sort_unstable();
+    v.dedup();
+    v.reverse();
+    v
+}
+
+fn pts_json(pts: &[(f64, f64)]) -> Json {
+    Json::Arr(
+        pts.iter()
+            .map(|&(x, y)| Json::Arr(vec![Json::Num(x), Json::Num(y)]))
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3a — K vs V norms before/after balancing
+// ---------------------------------------------------------------------------
+
+pub fn fig3a(ctx: &ExpContext) -> Result<Json> {
+    let cfg = &ctx.cfg;
+    let k = &ctx.calib.k_pre[0];
+    let v = &ctx.calib.v_act[0];
+    let (q1, _) = convert::rorope_rotation(k, cfg, 1)?;
+    let k_rot = k.matmul(&q1.t())?;
+    let d = cfg.head_dim;
+    let k_nope = k_rot.slice_cols(d, cfg.kv_dim());
+    let alpha = convert::kv_balance_alpha(&k_nope, v);
+
+    let kn = k_nope.mean_row_norm();
+    let vn = v.mean_row_norm();
+    println!("\n=== Figure 3a: key/value norm disparity (layer 0) ===");
+    println!("  mean ||k_nope|| = {kn:.4}  mean ||v|| = {vn:.4}  alpha = {alpha:.4}");
+    println!("  after balancing: ||k_nope/alpha|| = {:.4}", kn / alpha);
+
+    let mut j = Json::obj();
+    j.set("k_nope_norm", Json::Num(kn as f64));
+    j.set("v_norm", Json::Num(vn as f64));
+    j.set("alpha", Json::Num(alpha as f64));
+    j.set("k_dims", Json::from_f64s(&per_dim_norms(&k_nope)));
+    j.set("v_dims", Json::from_f64s(&per_dim_norms(v)));
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3b — ppl vs compression: W-based vs WX-based PCA, +/- BKV
+// ---------------------------------------------------------------------------
+
+pub fn fig3b(ctx: &ExpContext) -> Result<Json> {
+    let ranks = ctx
+        .rt
+        .manifest
+        .sweep_ranks
+        .get(&ctx.cfg_name)
+        .cloned()
+        .context("sweep ranks")?;
+    println!("\n=== Figure 3b: ppl after joint KV low-rank compression ===");
+    let mut out = Json::obj();
+    for (label, mode, balance) in [
+        ("wx_bkv", PcaMode::Activations, true),
+        ("wx", PcaMode::Activations, false),
+        ("w_bkv", PcaMode::Weights, true),
+        ("w", PcaMode::Weights, false),
+    ] {
+        let mut pts = vec![];
+        for &r in &ranks {
+            let opts = ConvertOptions {
+                rank: r,
+                fold: 1,
+                balance,
+                pca_mode: mode,
+                baseline: Baseline::TransMla,
+                keep_pairs_per_head: None,
+            };
+            let (_, absorbed, _) = convert::convert_model(&ctx.gqa, &ctx.calib, &ctx.cfg, &opts)?;
+            let ev = ctx.eval_mla(&absorbed, r)?;
+            let keep = ctx.cfg.mla_kv_per_token(r) as f64 / ctx.cfg.kv_per_token() as f64;
+            println!("  {label:<7} r={r:>3} kv_keep={keep:.3} logppl={:.4}", ev.loss);
+            pts.push((keep, ev.loss));
+        }
+        out.set(label, pts_json(&pts));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — benchmark-style quality: orig vs MHA2MLA vs TransMLA, +/- FT
+// ---------------------------------------------------------------------------
+
+pub fn table1(ctx: &ExpContext) -> Result<Json> {
+    let ranks = ctx
+        .rt
+        .manifest
+        .table1_ranks
+        .get(&ctx.cfg_name)
+        .cloned()
+        .context("table1 ranks")?;
+    let mut out = Json::obj();
+    println!("\n=== Table 1 analogue ({}): loss / ppl / top-1 acc ===", ctx.cfg_name);
+
+    let base = ctx.eval_gqa()?;
+    println!(
+        "  {:<26} loss {:.4}  ppl {:>8.3}  acc {:.4}",
+        "original GQA", base.loss, base.ppl, base.top1
+    );
+    out.set("original", eval_json(&base, None));
+
+    let mut rows = vec![];
+    for &r in &ranks {
+        let comp = ctx.cfg.compression(r);
+        // MHA2MLA baseline (no fine-tuning; the paper's "0 tokens" rows).
+        let opts = ConvertOptions::mha2mla(r);
+        let (_, absorbed, _) = convert::convert_model(&ctx.gqa, &ctx.calib, &ctx.cfg, &opts)?;
+        let ev = ctx.eval_mla(&absorbed, r)?;
+        println!(
+            "  {:<26} loss {:.4}  ppl {:>8.3}  acc {:.4}",
+            format!("MHA2MLA  -{:.2}% (0 tok)", comp * 100.0),
+            ev.loss, ev.ppl, ev.top1
+        );
+        rows.push((format!("mha2mla_r{r}"), eval_json(&ev, Some(comp))));
+
+        // TransMLA, untrained.
+        let opts = ConvertOptions::transmla(r);
+        let (train_p, absorbed, _) =
+            convert::convert_model(&ctx.gqa, &ctx.calib, &ctx.cfg, &opts)?;
+        let ev0 = ctx.eval_mla(&absorbed, r)?;
+        println!(
+            "  {:<26} loss {:.4}  ppl {:>8.3}  acc {:.4}",
+            format!("TransMLA -{:.2}% (0 tok)", comp * 100.0),
+            ev0.loss, ev0.ppl, ev0.top1
+        );
+        rows.push((format!("transmla_r{r}"), eval_json(&ev0, Some(comp))));
+
+        // TransMLA + fine-tuning (the recovery rows).
+        if ctx.ft_steps > 0 {
+            let exec = ctx
+                .rt
+                .load(&format!("{}_mla_train_r{r}", ctx.cfg_name))?;
+            let mut tr = Trainer::new(exec, train_p)?;
+            let rep = tr.run(&ctx.corpus, ctx.ft_steps, 5e-4, 2, 20,
+                             &format!("ft-r{r}"))?;
+            let absorbed_ft = convert::absorb_trainable(&tr.params, &ctx.cfg)?;
+            let ev_ft = ctx.eval_mla(&absorbed_ft, r)?;
+            println!(
+                "  {:<26} loss {:.4}  ppl {:>8.3}  acc {:.4}   ({} tokens FT)",
+                format!("TransMLA -{:.2}% (+FT)", comp * 100.0),
+                ev_ft.loss, ev_ft.ppl, ev_ft.top1, rep.tokens
+            );
+            let mut jj = eval_json(&ev_ft, Some(comp));
+            jj.set("ft_tokens", Json::Num(rep.tokens as f64));
+            jj.set("ft_final_loss", Json::Num(rep.tail_loss(10) as f64));
+            rows.push((format!("transmla_r{r}_ft"), jj));
+        }
+    }
+    for (k, v) in rows {
+        out.set(&k, v);
+    }
+    Ok(out)
+}
+
+fn eval_json(ev: &EvalResult, comp: Option<f64>) -> Json {
+    let mut j = Json::obj();
+    j.set("loss", Json::Num(ev.loss));
+    j.set("ppl", Json::Num(ev.ppl));
+    j.set("top1", Json::Num(ev.top1));
+    if let Some(c) = comp {
+        j.set("kv_compression", Json::Num(c));
+    }
+    j
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 / Table 4 — serving throughput: measured (CPU) + modeled (GPU)
+// ---------------------------------------------------------------------------
+
+pub fn table4(ctx: &ExpContext, measured_ctx: &[usize]) -> Result<Json> {
+    let mut out = Json::obj();
+    let rank = *ctx
+        .rt
+        .manifest
+        .table1_ranks
+        .get(&ctx.cfg_name)
+        .and_then(|r| r.last())
+        .context("rank")?;
+
+    // Convert once at the highest compression (the paper's 92.97% row).
+    let opts = ConvertOptions::transmla(rank);
+    let (_, absorbed, _) = convert::convert_model(&ctx.gqa, &ctx.calib, &ctx.cfg, &opts)?;
+
+    println!("\n=== Table 4 / Figure 4 (measured on CPU PJRT) ===");
+    println!("  ctx | GQA tok/s | MLA tok/s (r={rank}) | speedup");
+    let mut measured = vec![];
+    for &ctx_len in measured_ctx {
+        let gqa_tps = measure_throughput(ctx, Arch::Gqa, ctx_len, None)?;
+        let mla_tps = measure_throughput(ctx, Arch::Mla { rank }, ctx_len, Some(&absorbed))?;
+        let speedup = mla_tps / gqa_tps.max(1e-9);
+        println!("  {ctx_len:>4} | {gqa_tps:>9.1} | {mla_tps:>9.1} | {speedup:.2}x");
+        let mut j = Json::obj();
+        j.set("context", Json::Num(ctx_len as f64));
+        j.set("gqa_tps", Json::Num(gqa_tps));
+        j.set("mla_tps", Json::Num(mla_tps));
+        j.set("speedup", Json::Num(speedup));
+        measured.push(j);
+    }
+    out.set("measured_cpu", Json::Arr(measured));
+
+    // Analytical model at LLaMA-2-7B scale on the paper's three GPUs.
+    let modeled = perfmodel::table4_model(&HardwareProfile::paper_profiles());
+    println!("\n  analytical model (LLaMA-2-7B scale, tokens/s; `OOM` as in paper):");
+    perfmodel::print_table4(&modeled);
+    out.set("modeled", modeled);
+    Ok(out)
+}
+
+fn measure_throughput(
+    ctx: &ExpContext,
+    arch: Arch,
+    ctx_len: usize,
+    mla_params: Option<&Params>,
+) -> Result<f64> {
+    let batch = 8;
+    // Decode artifacts exist at several cache capacities (t-suffixed).
+    let t_default = ctx.cfg.max_seq;
+    let suffix = if ctx_len == t_default {
+        String::new()
+    } else {
+        format!("_t{ctx_len}")
+    };
+    let (prefill_name, decode_name) = match arch {
+        Arch::Gqa => (
+            format!("{}_gqa_prefill", ctx.cfg_name),
+            format!("{}_gqa_decode_b{batch}{suffix}", ctx.cfg_name),
+        ),
+        Arch::Mla { rank } => (
+            format!("{}_mla_prefill_r{rank}", ctx.cfg_name),
+            format!("{}_mla_decode_r{rank}_b{batch}{suffix}", ctx.cfg_name),
+        ),
+    };
+    let params = match arch {
+        Arch::Gqa => ctx.gqa.clone(),
+        Arch::Mla { .. } => mla_params.unwrap().clone(),
+    };
+    let bundle = ModelBundle::load_named(
+        ctx.rt, &ctx.cfg_name, arch, batch, params, &prefill_name, &decode_name,
+    )?;
+    let mut engine = Engine::new(bundle, EngineConfig::default());
+
+    // Paper's protocol: input length = output length = ctx/2.
+    let half = (ctx_len / 2).min(ctx_len - 8);
+    let n_requests = 16;
+    let mut rng = crate::util::Rng::new(5);
+    for i in 0..n_requests {
+        let start = rng.below(ctx.corpus.train.len() - half - 1);
+        let prompt: Vec<i32> = ctx.corpus.train[start..start + half]
+            .iter()
+            .map(|&b| b as i32)
+            .collect();
+        let mut req = Request::new(i, prompt, half);
+        req.temperature = 0.7;
+        engine.submit(req);
+    }
+    engine.run_to_completion()?;
+    Ok(engine.decode_throughput())
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — case study generations
+// ---------------------------------------------------------------------------
+
+pub fn table5(ctx: &ExpContext) -> Result<Json> {
+    let rank = *ctx
+        .rt
+        .manifest
+        .table1_ranks
+        .get(&ctx.cfg_name)
+        .and_then(|r| r.last())
+        .context("rank")?;
+    let opts = ConvertOptions::transmla(rank);
+    let (train_p, absorbed, _) =
+        convert::convert_model(&ctx.gqa, &ctx.calib, &ctx.cfg, &opts)?;
+
+    let prompts = ["the model ", "our system serves ", "meanwhile, the scheduler "];
+    let mut out = Json::obj();
+    println!("\n=== Table 5 analogue: generations at -{:.2}% KV ===",
+             ctx.cfg.compression(rank) * 100.0);
+
+    let gen_with = |params: &Params, label: &str| -> Result<Json> {
+        let bundle = ModelBundle::load(ctx.rt, &ctx.cfg_name,
+                                       Arch::Mla { rank }, 8, params.clone())?;
+        let mut engine = Engine::new(bundle, EngineConfig::default());
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request::from_text(i as u64, p, 48))
+            .collect();
+        let comps = engine.generate(reqs)?;
+        let mut arr = vec![];
+        for (p, c) in prompts.iter().zip(&comps) {
+            let text = c.text();
+            println!("  [{label}] {p:?} -> {text:?}");
+            arr.push(Json::Str(format!("{p}{text}")));
+        }
+        Ok(Json::Arr(arr))
+    };
+
+    out.set("without_training", gen_with(&absorbed, "w/o train")?);
+
+    if ctx.ft_steps > 0 {
+        let exec = ctx.rt.load(&format!("{}_mla_train_r{rank}", ctx.cfg_name))?;
+        let mut tr = Trainer::new(exec, train_p)?;
+        tr.run(&ctx.corpus, ctx.ft_steps, 5e-4, 3, 0, "table5-ft")?;
+        let absorbed_ft = convert::absorb_trainable(&tr.params, &ctx.cfg)?;
+        out.set("after_finetune", gen_with(&absorbed_ft, "fine-tuned")?);
+    }
+    Ok(out)
+}

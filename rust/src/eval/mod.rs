@@ -1,0 +1,191 @@
+//! Evaluation: perplexity / accuracy over the held-out corpus, calibration
+//! capture, and the drivers that regenerate every table and figure of the
+//! paper (see `experiments`).
+
+pub mod experiments;
+
+use crate::convert::Calib;
+use crate::model::Params;
+use crate::runtime::{Exec, Value};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Cross-entropy + top-1 accuracy of next-byte prediction from prefill
+/// logits [B, T, V] against the token matrix [B, T].
+pub fn lm_metrics(logits: &Tensor, tokens: &[i32], b: usize, t: usize) -> (f64, f64) {
+    let v = logits.shape[2];
+    let mut nll = 0.0f64;
+    let mut correct = 0usize;
+    let mut count = 0usize;
+    for row in 0..b {
+        for pos in 0..t - 1 {
+            let target = tokens[row * t + pos + 1] as usize;
+            let off = (row * t + pos) * v;
+            let lrow = &logits.data[off..off + v];
+            let m = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut lse = 0.0f64;
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (i, &x) in lrow.iter().enumerate() {
+                lse += ((x - m) as f64).exp();
+                if x > best_v {
+                    best_v = x;
+                    best = i;
+                }
+            }
+            let logp = (lrow[target] - m) as f64 - lse.ln();
+            nll -= logp;
+            if best == target {
+                correct += 1;
+            }
+            count += 1;
+        }
+    }
+    (nll / count as f64, correct as f64 / count as f64)
+}
+
+/// Evaluation result over a set of batches.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub ppl: f64,
+    pub top1: f64,
+    pub n_batches: usize,
+}
+
+/// Perplexity of a prefill-style artifact (first output = logits [B,T,V]).
+pub fn evaluate(
+    exec: &Arc<Exec>,
+    params: &Params,
+    batches: &[Vec<i32>],
+) -> Result<EvalResult> {
+    let spec = &exec.spec;
+    let b = spec.batch.context("prefill batch")?;
+    let t = spec.config.max_seq;
+    if spec.kind != "prefill" {
+        bail!("evaluate wants a prefill artifact, got `{}`", spec.name);
+    }
+    let mut args = params.values();
+    args.push(Value::i32_vec(vec![])); // placeholder, replaced per batch
+    let mut loss_sum = 0.0;
+    let mut acc_sum = 0.0;
+    let mut n = 0usize;
+    for batch in batches {
+        if batch.len() != b * t {
+            bail!("batch len {} != {}x{}", batch.len(), b, t);
+        }
+        *args.last_mut().unwrap() = Value::i32_mat(batch.clone(), &[b, t]);
+        let outs = exec.run(&args)?;
+        let logits = &outs[0];
+        let (loss, top1) = lm_metrics(logits, batch, b, t);
+        loss_sum += loss;
+        acc_sum += top1;
+        n += 1;
+    }
+    if n == 0 {
+        bail!("no eval batches");
+    }
+    let loss = loss_sum / n as f64;
+    Ok(EvalResult { loss, ppl: loss.exp(), top1: acc_sum / n as f64, n_batches: n })
+}
+
+/// Run the calibration artifact and build per-layer activation matrices,
+/// optionally subsampled to `max_rows` rows per layer (PCA cost control).
+pub fn capture_calib(
+    exec: &Arc<Exec>,
+    params: &Params,
+    tokens: &[i32],
+    max_rows: usize,
+) -> Result<Calib> {
+    let spec = &exec.spec;
+    let b = spec.batch.context("calib batch")?;
+    let t = spec.config.max_seq;
+    if tokens.len() != b * t {
+        bail!("calib tokens len");
+    }
+    let mut args = params.values();
+    args.push(Value::i32_mat(tokens.to_vec(), &[b, t]));
+    let outs = exec.run(&args)?;
+    let (k, v, q) = (&outs[0], &outs[1], &outs[2]);
+    let calib = Calib::from_stacked(k, v, q)?;
+    Ok(subsample_calib(calib, max_rows))
+}
+
+fn subsample_rows(t: &Tensor, max_rows: usize) -> Tensor {
+    let (n, d) = (t.rows(), t.cols());
+    if n <= max_rows {
+        return t.clone();
+    }
+    let stride = n / max_rows;
+    let mut data = Vec::with_capacity(max_rows * d);
+    for i in 0..max_rows {
+        data.extend_from_slice(t.row(i * stride));
+    }
+    Tensor::new(&[max_rows, d], data).unwrap()
+}
+
+fn subsample_calib(c: Calib, max_rows: usize) -> Calib {
+    Calib {
+        k_pre: c.k_pre.iter().map(|t| subsample_rows(t, max_rows)).collect(),
+        v_act: c.v_act.iter().map(|t| subsample_rows(t, max_rows)).collect(),
+        q_pre: c.q_pre.iter().map(|t| subsample_rows(t, max_rows)).collect(),
+    }
+}
+
+/// Mean L2 norm per dimension of a sample matrix [N, D] -> [D].
+pub fn per_dim_norms(samples: &Tensor) -> Vec<f64> {
+    let (n, d) = (samples.rows(), samples.cols());
+    let mut out = vec![0.0f64; d];
+    for i in 0..n {
+        for (j, &x) in samples.row(i).iter().enumerate() {
+            out[j] += (x as f64) * (x as f64);
+        }
+    }
+    out.iter_mut().for_each(|x| *x = (*x / n as f64).sqrt());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_metrics_uniform_logits() {
+        let (b, t, v) = (2, 4, 8);
+        let logits = Tensor::zeros(&[b, t, v]);
+        let tokens = vec![1i32; b * t];
+        let (loss, top1) = lm_metrics(&logits, &tokens, b, t);
+        assert!((loss - (v as f64).ln()).abs() < 1e-9);
+        // argmax of all-zero logits is index 0, target is 1 -> never right
+        assert_eq!(top1, 0.0);
+    }
+
+    #[test]
+    fn lm_metrics_perfect_prediction() {
+        let (b, t, v) = (1, 3, 4);
+        let tokens = vec![0i32, 2, 3];
+        let mut logits = Tensor::zeros(&[b, t, v]);
+        // position 0 predicts token 2; position 1 predicts 3
+        logits.data[0 * v + 2] = 50.0;
+        logits.data[1 * v + 3] = 50.0;
+        let (loss, top1) = lm_metrics(&logits, &tokens, b, t);
+        assert!(loss < 1e-6);
+        assert_eq!(top1, 1.0);
+    }
+
+    #[test]
+    fn per_dim_norms_constant() {
+        let t = Tensor::new(&[4, 2], vec![3.0; 8]).unwrap();
+        let n = per_dim_norms(&t);
+        assert!((n[0] - 3.0).abs() < 1e-9 && (n[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subsample_keeps_shape() {
+        let t = Tensor::new(&[10, 2], (0..20).map(|x| x as f32).collect()).unwrap();
+        let s = subsample_rows(&t, 5);
+        assert_eq!(s.shape, vec![5, 2]);
+        assert_eq!(s.row(0), &[0.0, 1.0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! `.tnz` — a minimal named-tensor archive for checkpoints and converted
+//! weights (offline stand-in for safetensors/npz).
+//!
+//! Layout (little-endian):
+//!   magic "TNZ1" | u32 n_entries | u32 meta_len | meta (JSON, UTF-8)
+//!   then per entry:
+//!     u32 name_len | name | u32 rank | u64 dims[rank] | f32 data[...]
+
+use crate::json::Json;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"TNZ1";
+
+#[derive(Debug, Clone)]
+pub struct TensorArchive {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: Json,
+}
+
+impl Default for TensorArchive {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TensorArchive {
+    pub fn new() -> Self {
+        TensorArchive { tensors: BTreeMap::new(), meta: Json::obj() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor `{name}` missing from archive"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        let meta = self.meta.to_string().into_bytes();
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(&meta)?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // Bulk-write the f32 payload.
+            let bytes: Vec<u8> =
+                t.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a TNZ1 archive", path.display());
+        }
+        let n = read_u32(&mut f)? as usize;
+        let meta_len = read_u32(&mut f)? as usize;
+        let mut meta_buf = vec![0u8; meta_len];
+        f.read_exact(&mut meta_buf)?;
+        let meta = Json::parse(std::str::from_utf8(&meta_buf)?)?;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            f.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut bytes = vec![0u8; count * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, Tensor::new(&shape, data)?);
+        }
+        Ok(TensorArchive { tensors, meta })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let mut ar = TensorArchive::new();
+        ar.insert("a", Tensor::randn(&[3, 4], 1.0, &mut rng));
+        ar.insert("b/c", Tensor::randn(&[2, 2, 2], 1.0, &mut rng));
+        ar.insert("scalar", Tensor::scalar(7.5));
+        ar.meta.set("step", Json::Num(42.0));
+        let dir = std::env::temp_dir().join("transmla_io_test");
+        let path = dir.join("x.tnz");
+        ar.save(&path).unwrap();
+        let back = TensorArchive::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.get("a").unwrap(), ar.get("a").unwrap());
+        assert_eq!(back.get("b/c").unwrap().shape, vec![2, 2, 2]);
+        assert_eq!(back.meta.get("step").unwrap().as_f64(), Some(42.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let ar = TensorArchive::new();
+        assert!(ar.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("transmla_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tnz");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorArchive::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

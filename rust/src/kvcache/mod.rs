@@ -1,0 +1,323 @@
+//! KV-cache management: slot-based cache pool shared by the continuous
+//! batcher, with layout-aware byte accounting for GQA vs MLA-latent
+//! caches.
+//!
+//! The decode artifacts operate on fixed-shape padded caches
+//! (`[L, B, T, ...]`); a **slot** is one batch row. The manager owns the
+//! host-side backing tensors, splices prefill output into slots, and
+//! enforces the allocation invariants that the property tests target
+//! (no double-allocation, no leaks, byte accounting exact).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Cache layout per architecture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheLayout {
+    /// Keys + values, per group: [L,B,T,g,d] x2.
+    Gqa { g: usize, d: usize },
+    /// Latent + shared RoPE key: [L,B,T,r] + [L,B,T,dr].
+    Mla { r: usize, dr: usize },
+}
+
+impl CacheLayout {
+    /// f32 elements cached per token per layer.
+    pub fn per_token_per_layer(&self) -> usize {
+        match *self {
+            CacheLayout::Gqa { g, d } => 2 * g * d,
+            CacheLayout::Mla { r, dr } => r + dr,
+        }
+    }
+}
+
+/// The slot-based cache pool.
+pub struct KvCache {
+    pub layout: CacheLayout,
+    pub n_layers: usize,
+    pub batch: usize,
+    pub capacity: usize, // T
+    /// Backing tensors: GQA -> [k, v]; MLA -> [c, kr]. Shapes [L,B,T,...].
+    pub bufs: Vec<Tensor>,
+}
+
+impl KvCache {
+    pub fn new(layout: CacheLayout, n_layers: usize, batch: usize, capacity: usize) -> Self {
+        let bufs = match layout {
+            CacheLayout::Gqa { g, d } => vec![
+                Tensor::zeros(&[n_layers, batch, capacity, g, d]),
+                Tensor::zeros(&[n_layers, batch, capacity, g, d]),
+            ],
+            CacheLayout::Mla { r, dr } => vec![
+                Tensor::zeros(&[n_layers, batch, capacity, r]),
+                Tensor::zeros(&[n_layers, batch, capacity, dr]),
+            ],
+        };
+        KvCache { layout, n_layers, batch, capacity, bufs }
+    }
+
+    pub fn bytes_total(&self) -> usize {
+        self.bufs.iter().map(|b| b.len() * 4).sum()
+    }
+
+    pub fn bytes_per_token(&self) -> usize {
+        self.layout.per_token_per_layer() * self.n_layers * 4
+    }
+
+    /// Splice prefill output (same layout, batch Bp) row `src` into slot
+    /// `dst`, all layers. Tensors are [L, B, T, inner...].
+    pub fn splice_from(&mut self, prefill_bufs: &[Tensor], src: usize, dst: usize) -> Result<()> {
+        if prefill_bufs.len() != self.bufs.len() {
+            bail!("layout mismatch");
+        }
+        for (mine, theirs) in self.bufs.iter_mut().zip(prefill_bufs) {
+            let (l_mine, b_mine) = (mine.shape[0], mine.shape[1]);
+            let b_theirs = theirs.shape[1];
+            let t_theirs = theirs.shape[2];
+            let row_mine: usize = mine.shape[3..].iter().product::<usize>();
+            let row_theirs: usize = theirs.shape[3..].iter().product::<usize>();
+            if row_mine != row_theirs {
+                bail!(
+                    "cache inner shape mismatch {:?} vs {:?}",
+                    mine.shape, theirs.shape
+                );
+            }
+            if dst >= b_mine || src >= b_theirs {
+                bail!("slot out of range");
+            }
+            let t_copy = self.capacity.min(t_theirs);
+            for l in 0..l_mine {
+                let off_m = ((l * b_mine) + dst) * self.capacity * row_mine;
+                let off_t = ((l * b_theirs) + src) * t_theirs * row_theirs;
+                let n = t_copy * row_mine;
+                mine.data[off_m..off_m + n]
+                    .copy_from_slice(&theirs.data[off_t..off_t + n]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace the backing tensors with the decode step's outputs.
+    pub fn store(&mut self, new_bufs: Vec<Tensor>) -> Result<()> {
+        if new_bufs.len() != self.bufs.len() {
+            bail!("store arity mismatch");
+        }
+        for (mine, new) in self.bufs.iter_mut().zip(new_bufs) {
+            if mine.shape != new.shape {
+                bail!("store shape {:?} vs {:?}", mine.shape, new.shape);
+            }
+            *mine = new;
+        }
+        Ok(())
+    }
+
+    /// Zero one slot (hygiene; correctness comes from position masking).
+    pub fn clear_slot(&mut self, slot: usize) {
+        for buf in &mut self.bufs {
+            let b = buf.shape[1];
+            let row: usize = buf.shape[2..].iter().product();
+            let l_count = buf.shape[0];
+            for l in 0..l_count {
+                let off = (l * b + slot) * row;
+                buf.data[off..off + row].iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+    }
+}
+
+/// Slot allocator with leak/double-free checking.
+#[derive(Debug)]
+pub struct SlotAllocator {
+    owner: Vec<Option<u64>>, // request id per slot
+    free: Vec<usize>,
+}
+
+impl SlotAllocator {
+    pub fn new(n: usize) -> Self {
+        SlotAllocator { owner: vec![None; n], free: (0..n).rev().collect() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.capacity() - self.n_free()
+    }
+
+    pub fn alloc(&mut self, req_id: u64) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(self.owner[slot].is_none());
+        self.owner[slot] = Some(req_id);
+        Some(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) -> Result<u64> {
+        match self.owner.get_mut(slot) {
+            Some(o @ Some(_)) => {
+                let id = o.take().unwrap();
+                self.free.push(slot);
+                Ok(id)
+            }
+            Some(None) => bail!("double free of slot {slot}"),
+            None => bail!("slot {slot} out of range"),
+        }
+    }
+
+    pub fn owner_of(&self, slot: usize) -> Option<u64> {
+        self.owner.get(slot).copied().flatten()
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.capacity())
+            .filter(|&s| self.owner[s].is_some())
+            .collect()
+    }
+
+    /// Internal consistency: free list and owner map agree, no duplicates.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![false; self.capacity()];
+        for &s in &self.free {
+            if s >= self.capacity() {
+                bail!("free slot {s} out of range");
+            }
+            if seen[s] {
+                bail!("slot {s} twice in free list");
+            }
+            seen[s] = true;
+            if self.owner[s].is_some() {
+                bail!("slot {s} both free and owned");
+            }
+        }
+        for s in 0..self.capacity() {
+            if self.owner[s].is_none() && !seen[s] {
+                bail!("slot {s} leaked (neither free nor owned)");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn layout_accounting() {
+        let gqa = CacheLayout::Gqa { g: 8, d: 32 };
+        let mla = CacheLayout::Mla { r: 4, dr: 32 };
+        assert_eq!(gqa.per_token_per_layer(), 512);
+        assert_eq!(mla.per_token_per_layer(), 36);
+        // the paper's -92.97% row
+        let ratio: f64 = 1.0 - 36.0 / 512.0;
+        assert!((ratio - 0.9297).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cache_bytes() {
+        let c = KvCache::new(CacheLayout::Mla { r: 32, dr: 32 }, 4, 8, 512);
+        assert_eq!(c.bytes_per_token(), (32 + 32) * 4 * 4);
+        assert_eq!(c.bytes_total(), 2 * 4 * 8 * 512 * 32 * 4);
+    }
+
+    #[test]
+    fn splice_moves_the_right_row() {
+        let mut c = KvCache::new(CacheLayout::Mla { r: 2, dr: 2 }, 1, 2, 4);
+        let mut src_c = Tensor::zeros(&[1, 3, 4, 2]);
+        let src_kr = Tensor::zeros(&[1, 3, 4, 2]);
+        // mark row 1 of the prefill output
+        for t in 0..4 {
+            for x in 0..2 {
+                src_c.data[(4 + t) * 2 + x] = (t * 10 + x) as f32;
+            }
+        }
+        c.splice_from(&[src_c, src_kr], 1, 0).unwrap();
+        // slot 0 of the pool now holds that row
+        assert_eq!(c.bufs[0].data[0..2], [0.0, 1.0]);
+        assert_eq!(c.bufs[0].data[6..8], [30.0, 31.0]);
+        // slot 1 untouched
+        assert!(c.bufs[0].data[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clear_slot_zeroes_only_that_slot() {
+        let mut c = KvCache::new(CacheLayout::Gqa { g: 1, d: 2 }, 2, 2, 3);
+        for b in &mut c.bufs {
+            b.data.iter_mut().for_each(|x| *x = 1.0);
+        }
+        c.clear_slot(0);
+        let row = 3 * 1 * 2;
+        for buf in &c.bufs {
+            for l in 0..2 {
+                let s0 = (l * 2) * row;
+                let s1 = (l * 2 + 1) * row;
+                assert!(buf.data[s0..s0 + row].iter().all(|&x| x == 0.0));
+                assert!(buf.data[s1..s1 + row].iter().all(|&x| x == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut a = SlotAllocator::new(3);
+        let s1 = a.alloc(10).unwrap();
+        let s2 = a.alloc(11).unwrap();
+        assert_ne!(s1, s2);
+        assert_eq!(a.n_active(), 2);
+        assert_eq!(a.release(s1).unwrap(), 10);
+        assert!(a.release(s1).is_err(), "double free must fail");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = SlotAllocator::new(2);
+        assert!(a.alloc(1).is_some());
+        assert!(a.alloc(2).is_some());
+        assert!(a.alloc(3).is_none());
+    }
+
+    #[test]
+    fn props_allocator_invariants_under_random_workload() {
+        check(
+            "slot_allocator_invariants",
+            PropConfig { cases: 200, seed: 99 },
+            |r: &mut Rng| {
+                let n = 1 + r.below(8);
+                let ops: Vec<u8> = (0..64).map(|_| r.next_u64() as u8).collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut a = SlotAllocator::new(*n);
+                let mut live: Vec<usize> = vec![];
+                let mut next_id = 0u64;
+                for &op in ops {
+                    if op % 2 == 0 {
+                        if let Some(s) = a.alloc(next_id) {
+                            if live.contains(&s) {
+                                return Err(format!("slot {s} double-allocated"));
+                            }
+                            live.push(s);
+                            next_id += 1;
+                        } else if live.len() != *n {
+                            return Err("alloc failed below capacity".into());
+                        }
+                    } else if !live.is_empty() {
+                        let s = live.remove((op as usize / 2) % live.len());
+                        a.release(s).map_err(|e| e.to_string())?;
+                    }
+                    a.check_invariants().map_err(|e| e.to_string())?;
+                    if a.n_active() != live.len() {
+                        return Err("active count mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

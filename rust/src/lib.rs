@@ -1,0 +1,36 @@
+//! TransMLA: migrating GQA models to MLA with absorb-based serving speedup.
+//!
+//! Reproduction of Meng et al., *"TransMLA: Multi-Head Latent Attention Is
+//! All You Need"* (2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build-time Python)** — Pallas decode-attention kernels and the
+//!   JAX transformer models, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3 (this crate)** — the serving coordinator (continuous batching,
+//!   KV-cache management, PJRT runtime), the full TransMLA conversion
+//!   toolchain (RoRoPE, FreqFold, BKV, joint PCA, Absorb) over an in-repo
+//!   tensor/linalg substrate, a training loop, evaluation drivers for every
+//!   table/figure in the paper, and an analytical accelerator model for the
+//!   paper's three GPU profiles.
+//!
+//! Python never runs on the request path: once `make artifacts` has been
+//! executed, everything here is self-contained.
+
+pub mod config;
+pub mod convert;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod io;
+pub mod json;
+pub mod kvcache;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,228 @@
+//! Dense symmetric linear algebra: cyclic Jacobi eigendecomposition and
+//! PCA — the numerical core of the Rust-side TransMLA converter.
+//!
+//! Jacobi is chosen for its unconditional robustness on symmetric
+//! matrices; the converter's largest problem is (2g-1)d = 480 for the
+//! `llama2tiny` config, well within Jacobi's comfortable range.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Eigendecomposition of a symmetric matrix via cyclic Jacobi rotations.
+/// Returns (eigenvalues desc, eigenvectors as columns, same order).
+pub fn eigh_desc(a: &Tensor) -> Result<(Vec<f64>, Tensor)> {
+    if a.rank() != 2 || a.rows() != a.cols() {
+        bail!("eigh wants square matrix, got {:?}", a.shape);
+    }
+    let n = a.rows();
+    // Work in f64 for a clean oracle-grade result.
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let idx = |i: usize, j: usize| i * n + j;
+    let off = |m: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        s
+    };
+
+    let scale: f64 = m.iter().map(|x| x * x).sum::<f64>().max(1e-300);
+    let tol = 1e-24 * scale;
+    for _sweep in 0..64 {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let akp = m[idx(k, p)];
+                    let akq = m[idx(k, q)];
+                    m[idx(k, p)] = c * akp - s * akq;
+                    m[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[idx(p, k)];
+                    let aqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * apk - s * aqk;
+                    m[idx(q, k)] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let eigs: Vec<f64> = (0..n).map(|i| m[idx(i, i)]).collect();
+    order.sort_by(|&a, &b| eigs[b].partial_cmp(&eigs[a]).unwrap());
+
+    let mut vecs = Tensor::zeros(&[n, n]);
+    let mut vals = Vec::with_capacity(n);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        vals.push(eigs[old_col]);
+        for row in 0..n {
+            vecs.set2(row, new_col, v[idx(row, old_col)] as f32);
+        }
+    }
+    Ok((vals, vecs))
+}
+
+/// Covariance-style Gram matrix Z^T Z of samples [N, D] (f64 accumulate).
+pub fn gram(z: &Tensor) -> Tensor {
+    let (n, d) = (z.rows(), z.cols());
+    let mut out = vec![0.0f64; d * d];
+    for s in 0..n {
+        let row = z.row(s);
+        for i in 0..d {
+            let zi = row[i] as f64;
+            if zi == 0.0 {
+                continue;
+            }
+            let o = &mut out[i * d..(i + 1) * d];
+            for (j, &zj) in row.iter().enumerate() {
+                o[j] += zi * zj as f64;
+            }
+        }
+    }
+    Tensor {
+        shape: vec![d, d],
+        data: out.into_iter().map(|x| x as f32).collect(),
+    }
+}
+
+/// Sum of two Gram matrices (for the RoPE-invariant real+imag covariance).
+pub fn gram_sum(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    a.add(b)
+}
+
+/// Top-r PCA basis of samples [N, D]: returns [D, r] with orthonormal
+/// columns ordered by explained variance.
+pub fn pca_basis(samples: &Tensor, r: usize) -> Result<Tensor> {
+    let c = gram(samples);
+    pca_from_gram(&c, r)
+}
+
+/// Top-r eigenvector basis from a precomputed Gram/covariance matrix.
+pub fn pca_from_gram(c: &Tensor, r: usize) -> Result<Tensor> {
+    let (_vals, vecs) = eigh_desc(c)?;
+    let d = c.rows();
+    let r = r.min(d);
+    Ok(vecs.slice_cols(0, r))
+}
+
+/// Max |Q^T Q - I| — orthogonality defect used by tests/assertions.
+pub fn orthogonality_defect(q: &Tensor) -> f32 {
+    let qtq = q.t().matmul(q).unwrap();
+    let n = qtq.rows();
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((qtq.at2(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Tensor {
+        let a = Tensor::randn(&[n, n], 1.0, rng);
+        a.add(&a.t()).unwrap().scale(0.5)
+    }
+
+    #[test]
+    fn eigh_reconstructs_matrix() {
+        let mut rng = Rng::new(0);
+        let a = random_symmetric(12, &mut rng);
+        let (vals, vecs) = eigh_desc(&a).unwrap();
+        // A == V diag(w) V^T
+        let mut d = Tensor::zeros(&[12, 12]);
+        for i in 0..12 {
+            d.set2(i, i, vals[i] as f32);
+        }
+        let rec = vecs.matmul(&d).unwrap().matmul(&vecs.t()).unwrap();
+        assert!(rec.max_abs_diff(&a) < 1e-4, "{}", rec.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn eigh_values_descending_and_orthonormal() {
+        let mut rng = Rng::new(1);
+        let a = random_symmetric(20, &mut rng);
+        let (vals, vecs) = eigh_desc(&a).unwrap();
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+        assert!(orthogonality_defect(&vecs) < 1e-5);
+    }
+
+    #[test]
+    fn eigh_diagonal_matrix() {
+        let mut a = Tensor::zeros(&[3, 3]);
+        a.set2(0, 0, 1.0);
+        a.set2(1, 1, 5.0);
+        a.set2(2, 2, 3.0);
+        let (vals, _) = eigh_desc(&a).unwrap();
+        assert!((vals[0] - 5.0).abs() < 1e-10);
+        assert!((vals[1] - 3.0).abs() < 1e-10);
+        assert!((vals[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn pca_recovers_dominant_direction() {
+        // Samples along direction (3,4)/5 with tiny noise.
+        let mut rng = Rng::new(2);
+        let n = 500;
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let t = rng.normal_f32(1.0);
+            data.push(0.6 * t + rng.normal_f32(0.01));
+            data.push(0.8 * t + rng.normal_f32(0.01));
+        }
+        let z = Tensor::new(&[n, 2], data).unwrap();
+        let basis = pca_basis(&z, 1).unwrap();
+        let dir = (basis.at2(0, 0).abs(), basis.at2(1, 0).abs());
+        assert!((dir.0 - 0.6).abs() < 0.02, "{dir:?}");
+        assert!((dir.1 - 0.8).abs() < 0.02, "{dir:?}");
+    }
+
+    #[test]
+    fn pca_full_rank_is_orthogonal() {
+        let mut rng = Rng::new(3);
+        let z = Tensor::randn(&[64, 10], 1.0, &mut rng);
+        let basis = pca_basis(&z, 10).unwrap();
+        assert!(orthogonality_defect(&basis) < 1e-5);
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let z = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let g = gram(&z);
+        assert_eq!(g.data, vec![10.0, 14.0, 14.0, 20.0]);
+    }
+}

@@ -1,0 +1,314 @@
+//! `transmla` CLI — leader entrypoint for the whole pipeline:
+//! train → convert → evaluate → serve → reproduce the paper's experiments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use transmla::config::EngineConfig;
+use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
+use transmla::coordinator::engine::Arch;
+use transmla::coordinator::{Engine, ModelBundle, Request};
+use transmla::eval::experiments::{self, ExpContext};
+use transmla::eval::{capture_calib, evaluate};
+use transmla::json::Json;
+use transmla::model::{init_gqa, Params};
+use transmla::runtime::Runtime;
+use transmla::train::Trainer;
+use transmla::{corpus::Corpus, server};
+
+const USAGE: &str = "\
+transmla — GQA->MLA conversion + absorbed-MLA serving (TransMLA reproduction)
+
+USAGE: transmla <command> [flags]
+
+COMMANDS
+  selfcheck                       load runtime + run one prefill end-to-end
+  train      --steps N [--config C] [--out ckpt.tnz]
+  convert    --ckpt ckpt.tnz --rank R [--fold M] [--baseline mha2mla]
+             [--pca w|wx] [--no-balance] [--out mla.tnz]
+  ppl        --arch gqa|mla --ckpt p.tnz [--rank R]
+  generate   --arch gqa|mla --ckpt p.tnz [--rank R] --prompt TEXT [--max-new N]
+  serve      --arch gqa|mla --ckpt p.tnz [--rank R] [--addr host:port]
+  exp        fig2a|fig2b|fig3a|fig3b|table1|table4|table5|all
+             [--out runs] [--config C] [--pretrain N] [--ft N] [--eval-batches N]
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --config NAME     model config (default: llama2tiny)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    sub: Option<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".into());
+    let mut sub = None;
+    let mut flags = HashMap::new();
+    let mut pending_key: Option<String> = None;
+    for a in it {
+        if let Some(k) = pending_key.take() {
+            flags.insert(k, a);
+        } else if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                pending_key = Some(stripped.to_string());
+            }
+        } else if sub.is_none() {
+            sub = Some(a);
+        } else {
+            bail!("unexpected argument `{a}`");
+        }
+    }
+    if let Some(k) = pending_key {
+        flags.insert(k, "true".into()); // boolean flag
+    }
+    Ok(Args { cmd, sub, flags })
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(String::as_str)
+    }
+
+    fn usize_flag(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str_flag<'a>(&'a self, k: &str, default: &'a str) -> &'a str {
+        self.get(k).unwrap_or(default)
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    if args.cmd == "help" || args.cmd == "--help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let art_dir = PathBuf::from(args.str_flag("artifacts", "artifacts"));
+    let cfg_name = args.str_flag("config", "llama2tiny").to_string();
+    let rt = Runtime::new(&art_dir)?;
+
+    match args.cmd.as_str() {
+        "selfcheck" => selfcheck(&rt, &cfg_name),
+        "train" => cmd_train(&rt, &cfg_name, &args),
+        "convert" => cmd_convert(&rt, &cfg_name, &args),
+        "ppl" => cmd_ppl(&rt, &cfg_name, &args),
+        "generate" => cmd_generate(&rt, &cfg_name, &args),
+        "serve" => cmd_serve(&rt, &cfg_name, &args),
+        "exp" => cmd_exp(&rt, &cfg_name, &args),
+        other => bail!("unknown command `{other}` (try `transmla help`)"),
+    }
+}
+
+fn selfcheck(rt: &Runtime, cfg_name: &str) -> Result<()> {
+    println!("platform: {}", rt.platform());
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+    let params = init_gqa(&cfg, 0);
+    let exec = rt.load(&format!("{cfg_name}_gqa_prefill"))?;
+    let corpus = Corpus::synthetic(1, 100_000);
+    let batches = corpus.val_batches(8, cfg.max_seq);
+    let ev = evaluate(&exec, &params, &batches[..1])?;
+    println!(
+        "random-init GQA: loss {:.4} (ln V = {:.4}) ppl {:.1}",
+        ev.loss,
+        (cfg.vocab as f64).ln(),
+        ev.ppl
+    );
+    if (ev.loss - (cfg.vocab as f64).ln()).abs() > 1.0 {
+        bail!("random-init loss far from ln(V) — pipeline broken");
+    }
+    println!("selfcheck OK ({} artifacts)", rt.manifest.entries.len());
+    Ok(())
+}
+
+fn cmd_train(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
+    let steps = args.usize_flag("steps", 200);
+    let out = PathBuf::from(args.str_flag("out", "runs/base.tnz"));
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+    let corpus = Corpus::synthetic(7, 2_000_000);
+    let exec = rt.load(&format!("{cfg_name}_gqa_train"))?;
+    let mut tr = Trainer::new(exec, init_gqa(&cfg, 42))?;
+    let rep = tr.run(&corpus, steps, 1e-3, 1, 10, "base")?;
+    println!(
+        "trained {} steps ({} tokens) in {:.1}s; loss {:.4} -> {:.4}",
+        rep.steps,
+        rep.tokens,
+        rep.seconds,
+        rep.losses.first().unwrap_or(&f32::NAN),
+        rep.tail_loss(10)
+    );
+    let mut meta = Json::obj();
+    meta.set("steps", Json::Num(rep.steps as f64));
+    meta.set("final_loss", Json::Num(rep.tail_loss(10) as f64));
+    tr.params.save(&out, meta)?;
+    println!("saved {}", out.display());
+    Ok(())
+}
+
+fn load_ckpt_or_init(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<Params> {
+    match args.get("ckpt") {
+        Some(p) if Path::new(p).exists() => Params::load(Path::new(p)),
+        Some(p) => bail!("checkpoint {p} not found"),
+        None => {
+            eprintln!("[warn] no --ckpt; using random init");
+            let cfg = rt.manifest.configs.get(cfg_name).context("config")?;
+            Ok(init_gqa(cfg, 42))
+        }
+    }
+}
+
+fn make_calib(rt: &Runtime, cfg_name: &str, params: &Params) -> Result<convert::Calib> {
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?;
+    let corpus = Corpus::synthetic(7, 500_000);
+    let exec = rt.load(&format!("{cfg_name}_calib"))?;
+    let b = exec.spec.batch.context("batch")?;
+    let mut rng = transmla::util::Rng::new(1234);
+    let toks = corpus.sample_batch(b, cfg.max_seq, &mut rng);
+    capture_calib(&exec, params, &toks, 1024)
+}
+
+fn cmd_convert(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
+    let rank = args.usize_flag("rank", 32);
+    let fold = args.usize_flag("fold", 1);
+    let out = PathBuf::from(args.str_flag("out", "runs/mla.tnz"));
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+    let gqa = load_ckpt_or_init(rt, cfg_name, args)?;
+    let calib = make_calib(rt, cfg_name, &gqa)?;
+    let opts = ConvertOptions {
+        rank,
+        fold,
+        balance: !args.has("no-balance"),
+        pca_mode: if args.get("pca") == Some("w") {
+            PcaMode::Weights
+        } else {
+            PcaMode::Activations
+        },
+        baseline: if args.get("baseline") == Some("mha2mla") {
+            Baseline::Mha2Mla
+        } else {
+            Baseline::TransMla
+        },
+        keep_pairs_per_head: None,
+    };
+    let (train_p, absorbed, diag) = convert::convert_model(&gqa, &calib, &cfg, &opts)?;
+    println!(
+        "converted {} -> MLA r={rank} (-{:.2}% KV cache), alphas {:?}",
+        cfg_name,
+        cfg.compression(rank) * 100.0,
+        diag.alphas
+    );
+    let mut meta = Json::obj();
+    meta.set("rank", Json::Num(rank as f64));
+    absorbed.save(&out, meta.clone())?;
+    let train_out = out.with_extension("train.tnz");
+    train_p.save(&train_out, meta)?;
+    println!("saved {} and {}", out.display(), train_out.display());
+    Ok(())
+}
+
+fn parse_arch(args: &Args) -> Result<Arch> {
+    match args.str_flag("arch", "gqa") {
+        "gqa" => Ok(Arch::Gqa),
+        "mla" => Ok(Arch::Mla { rank: args.usize_flag("rank", 32) }),
+        other => bail!("unknown arch `{other}`"),
+    }
+}
+
+fn cmd_ppl(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
+    let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
+    let params = load_ckpt_or_init(rt, cfg_name, args)?;
+    let corpus = Corpus::synthetic(7, 2_000_000);
+    let batches: Vec<_> = corpus
+        .val_batches(8, cfg.max_seq)
+        .into_iter()
+        .take(4)
+        .collect();
+    let name = match parse_arch(args)? {
+        Arch::Gqa => format!("{cfg_name}_gqa_prefill"),
+        Arch::Mla { rank } => format!("{cfg_name}_mla_prefill_r{rank}"),
+    };
+    let exec = rt.load(&name)?;
+    let ev = evaluate(&exec, &params, &batches)?;
+    println!("loss {:.4}  ppl {:.3}  top1 {:.4}", ev.loss, ev.ppl, ev.top1);
+    Ok(())
+}
+
+fn cmd_generate(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
+    let params = load_ckpt_or_init(rt, cfg_name, args)?;
+    let arch = parse_arch(args)?;
+    let bundle = ModelBundle::load(rt, cfg_name, arch, 8, params)?;
+    let mut engine = Engine::new(bundle, EngineConfig::default());
+    let prompt = args.str_flag("prompt", "the model ");
+    let max_new = args.usize_flag("max-new", 64);
+    let mut req = Request::from_text(0, prompt, max_new);
+    req.temperature = args
+        .get("temperature")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
+    let comps = engine.generate(vec![req])?;
+    println!("{prompt}{}", comps[0].text());
+    eprintln!("[{:.1} tok/s decode]", engine.decode_throughput());
+    Ok(())
+}
+
+fn cmd_serve(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
+    let params = load_ckpt_or_init(rt, cfg_name, args)?;
+    let arch = parse_arch(args)?;
+    let bundle = ModelBundle::load(rt, cfg_name, arch, 8, params)?;
+    let mut engine = Engine::new(bundle, EngineConfig::default());
+    let addr = args.str_flag("addr", "127.0.0.1:7433");
+    server::serve(&mut engine, addr)
+}
+
+fn cmd_exp(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
+    let which = args.sub.clone().unwrap_or_else(|| "all".into());
+    let out_dir = PathBuf::from(args.str_flag("out", "runs"));
+    let pretrain = args.usize_flag("pretrain", 150);
+    let ft = args.usize_flag("ft", 40);
+    let n_eval = args.usize_flag("eval-batches", 2);
+    let ckpt = out_dir.join(format!("{cfg_name}_base.tnz"));
+    let ctx = ExpContext::prepare(
+        rt, cfg_name, Some(&ckpt), pretrain, ft, &out_dir, n_eval,
+    )?;
+
+    let run = |name: &str, ctx: &ExpContext| -> Result<()> {
+        let j = match name {
+            "fig2a" => experiments::fig2a(ctx)?,
+            "fig2b" => experiments::fig2b(ctx)?,
+            "fig3a" => experiments::fig3a(ctx)?,
+            "fig3b" => experiments::fig3b(ctx)?,
+            "table1" => experiments::table1(ctx)?,
+            "table4" | "fig4" => experiments::table4(ctx, &[128, 256, 512])?,
+            "table5" => experiments::table5(ctx)?,
+            other => bail!("unknown experiment `{other}`"),
+        };
+        ctx.save_json(name, &j)
+    };
+
+    if which == "all" {
+        for name in ["fig2a", "fig2b", "fig3a", "fig3b", "table1", "table4", "table5"] {
+            run(name, &ctx)?;
+        }
+    } else {
+        run(&which, &ctx)?;
+    }
+    Ok(())
+}

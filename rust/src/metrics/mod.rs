@@ -1,0 +1,105 @@
+//! Serving metrics: counters, latency histograms, throughput meters.
+
+use crate::util::timing::BenchStats;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Engine-wide metrics registry.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    counters: BTreeMap<String, u64>,
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            started: Instant::now(),
+            counters: BTreeMap::new(),
+            samples: BTreeMap::new(),
+        }
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Record a latency/duration sample in seconds.
+    pub fn observe(&mut self, name: &str, seconds: f64) {
+        self.samples
+            .entry(name.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    pub fn stats(&self, name: &str) -> Option<BenchStats> {
+        self.samples
+            .get(name)
+            .filter(|s| !s.is_empty())
+            .map(|s| BenchStats::new(s.clone()))
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Tokens/s for a counter over the metrics lifetime.
+    pub fn rate(&self, counter: &str) -> f64 {
+        self.counter(counter) as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, s) in &self.samples {
+            let st = BenchStats::new(s.clone());
+            out.push_str(&format!(
+                "{k}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms max={:.3}ms\n",
+                s.len(),
+                st.mean() * 1e3,
+                st.percentile(50.0) * 1e3,
+                st.percentile(95.0) * 1e3,
+                st.max() * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_samples() {
+        let mut m = Metrics::new();
+        m.inc("tokens", 5);
+        m.inc("tokens", 3);
+        assert_eq!(m.counter("tokens"), 8);
+        m.observe("step", 0.010);
+        m.observe("step", 0.020);
+        let st = m.stats("step").unwrap();
+        assert!((st.mean() - 0.015).abs() < 1e-12);
+        assert!(m.report().contains("tokens: 8"));
+    }
+
+    #[test]
+    fn missing_series_is_none() {
+        let m = Metrics::new();
+        assert!(m.stats("nope").is_none());
+        assert_eq!(m.counter("nope"), 0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Model parameter containers: named tensors in the manifest's canonical
+//! order, plus GQA initialization and checkpoint IO.
+//!
+//! The Rust side owns the weights end-to-end: it initializes them, trains
+//! them through the AOT train-step executable, converts them with the
+//! TransMLA toolchain, and serves them — Python never touches a weight at
+//! runtime.
+
+use crate::config::ModelConfig;
+use crate::io::TensorArchive;
+use crate::json::Json;
+use crate::runtime::{ArtifactSpec, Value};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Named parameter set with a canonical ordering (the artifact ABI).
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub keys: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Params {
+    pub fn new(keys: Vec<String>, tensors: Vec<Tensor>) -> Result<Self> {
+        if keys.len() != tensors.len() {
+            bail!("{} keys vs {} tensors", keys.len(), tensors.len());
+        }
+        Ok(Params { keys, tensors })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Tensor> {
+        let i = self
+            .keys
+            .iter()
+            .position(|k| k == key)
+            .with_context(|| format!("param `{key}` missing"))?;
+        Ok(&self.tensors[i])
+    }
+
+    pub fn set(&mut self, key: &str, t: Tensor) -> Result<()> {
+        let i = self
+            .keys
+            .iter()
+            .position(|k| k == key)
+            .with_context(|| format!("param `{key}` missing"))?;
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::len).sum()
+    }
+
+    /// Flatten to runtime Values in canonical order.
+    pub fn values(&self) -> Vec<Value> {
+        self.tensors.iter().cloned().map(Value::F32).collect()
+    }
+
+    /// Zeroed clone (Adam moment buffers).
+    pub fn zeros_like(&self) -> Params {
+        Params {
+            keys: self.keys.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| Tensor::zeros(&t.shape))
+                .collect(),
+        }
+    }
+
+    /// Validate against an artifact's expected parameter shapes.
+    pub fn check_against(&self, spec: &ArtifactSpec) -> Result<()> {
+        if self.keys != spec.params {
+            bail!(
+                "param order mismatch for `{}`:\n  have {:?}\n  want {:?}",
+                spec.name, self.keys, spec.params
+            );
+        }
+        for (i, t) in self.tensors.iter().enumerate() {
+            let want = &spec.inputs[i].shape;
+            if &t.shape != want {
+                bail!(
+                    "param `{}` shape {:?} != artifact `{}` expects {:?}",
+                    self.keys[i], t.shape, spec.name, want
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path, meta: Json) -> Result<()> {
+        let mut ar = TensorArchive::new();
+        for (k, t) in self.keys.iter().zip(&self.tensors) {
+            ar.insert(k, t.clone());
+        }
+        let mut m = meta;
+        m.set(
+            "keys",
+            Json::Arr(self.keys.iter().map(|k| Json::Str(k.clone())).collect()),
+        );
+        ar.meta = m;
+        ar.save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let ar = TensorArchive::load(path)?;
+        let keys: Vec<String> = ar
+            .meta
+            .get("keys")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing key order")?
+            .iter()
+            .map(|k| k.as_str().unwrap_or("").to_string())
+            .collect();
+        let tensors = keys
+            .iter()
+            .map(|k| ar.get(k).cloned())
+            .collect::<Result<Vec<_>>>()?;
+        Params::new(keys, tensors)
+    }
+}
+
+/// GQA parameter key order — must mirror `model.GQA_KEYS` on the python
+/// side (enforced at runtime by `Params::check_against`).
+pub const GQA_KEYS: &[&str] = &[
+    "embed", "wq", "wk", "wv", "wo", "ln1", "w_gate", "w_up", "w_down",
+    "ln2", "ln_f", "lm_head",
+];
+
+pub const MLA_ABS_KEYS: &[&str] = &[
+    "embed", "wq_rope", "wq_lat", "w_dkv", "w_krope", "wo_abs", "ln1",
+    "w_gate", "w_up", "w_down", "ln2", "ln_f", "lm_head", "rope_freqs",
+];
+
+pub const MLA_TRAIN_KEYS: &[&str] = &[
+    "embed", "wq", "wqr", "w_dkv", "w_krope", "w_uk", "w_uv", "wo", "ln1",
+    "w_gate", "w_up", "w_down", "ln2", "ln_f", "lm_head", "rope_freqs",
+];
+
+pub const MERGED_KEYS: &[&str] = &[
+    "embed", "wqm", "wk", "wv", "wo", "ln1", "w_gate", "w_up", "w_down",
+    "ln2", "ln_f", "lm_head", "rope_freqs", "rope_mask",
+];
+
+fn keys_vec(keys: &[&str]) -> Vec<String> {
+    keys.iter().map(|s| s.to_string()).collect()
+}
+
+/// Initialize a GQA model (same distribution family as the python-side
+/// `init_gqa_params`: N(0, 0.02) projections, unit norms).
+pub fn init_gqa(cfg: &ModelConfig, seed: u64) -> Params {
+    let mut rng = Rng::new(seed);
+    let (l, dm, f, v) = (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab);
+    let (hd, gd) = (cfg.q_dim(), cfg.kv_dim());
+    let s = 0.02;
+    let tensors = vec![
+        Tensor::randn(&[v, dm], s, &mut rng),      // embed
+        Tensor::randn(&[l, dm, hd], s, &mut rng),  // wq
+        Tensor::randn(&[l, dm, gd], s, &mut rng),  // wk
+        Tensor::randn(&[l, dm, gd], s, &mut rng),  // wv
+        Tensor::randn(&[l, hd, dm], s, &mut rng),  // wo
+        Tensor::ones(&[l, dm]),                    // ln1
+        Tensor::randn(&[l, dm, f], s, &mut rng),   // w_gate
+        Tensor::randn(&[l, dm, f], s, &mut rng),   // w_up
+        Tensor::randn(&[l, f, dm], s, &mut rng),   // w_down
+        Tensor::ones(&[l, dm]),                    // ln2
+        Tensor::ones(&[dm]),                       // ln_f
+        Tensor::randn(&[dm, v], s, &mut rng),      // lm_head
+    ];
+    Params::new(keys_vec(GQA_KEYS), tensors).unwrap()
+}
+
+/// Default per-pair RoPE frequency schedule of a d-dim head.
+pub fn default_freqs(d: usize, theta: f64) -> Vec<f32> {
+    (0..d / 2)
+        .map(|l| theta.powf(-2.0 * l as f64 / d as f64) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_kv_groups: 2,
+            head_dim: 8,
+            n_layers: 2,
+            d_ff: 48,
+            max_seq: 16,
+            rope_theta: 10000.0,
+        }
+    }
+
+    #[test]
+    fn init_shapes() {
+        let cfg = tiny_cfg();
+        let p = init_gqa(&cfg, 0);
+        assert_eq!(p.get("wk").unwrap().shape, vec![2, 32, 16]);
+        assert_eq!(p.get("ln_f").unwrap().shape, vec![32]);
+        assert!(p.n_params() > 10_000);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = tiny_cfg();
+        let p = init_gqa(&cfg, 1);
+        let path = std::env::temp_dir().join("transmla_model_test.tnz");
+        p.save(&path, Json::obj()).unwrap();
+        let q = Params::load(&path).unwrap();
+        assert_eq!(p.keys, q.keys);
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn get_set() {
+        let cfg = tiny_cfg();
+        let mut p = init_gqa(&cfg, 2);
+        let t = Tensor::ones(&[2, 32]);
+        p.set("ln1", t.clone()).unwrap();
+        assert_eq!(p.get("ln1").unwrap(), &t);
+        assert!(p.get("nope").is_err());
+    }
+
+    #[test]
+    fn freqs_schedule() {
+        let f = default_freqs(8, 10000.0);
+        assert_eq!(f.len(), 4);
+        assert!((f[0] - 1.0).abs() < 1e-6);
+        assert!(f[3] < f[2] && f[2] < f[1] && f[1] < f[0]);
+    }
+}

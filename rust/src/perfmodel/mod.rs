@@ -1,0 +1,302 @@
+//! Analytical accelerator model — regenerates the *shape* of the paper's
+//! Figure 4 / Table 4 on the three GPU profiles the authors used, at
+//! LLaMA-2-7B scale.
+//!
+//! Decode on modern accelerators is memory-bound: each generated token
+//! must stream the model weights once per batch *plus* the KV cache of
+//! every active sequence. A roofline over (FLOPs / peak-compute) vs
+//! (bytes / bandwidth) per step therefore reproduces who wins, by what
+//! factor, and where the OOM cliff falls — without the authors' testbed.
+
+use crate::json::Json;
+
+/// Transformer dimensioning for the performance model.
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_groups: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub bytes_per_el: f64, // fp16 = 2
+}
+
+impl ModelDims {
+    /// LLaMA-2-7B (MHA: g == h == 32).
+    pub fn llama2_7b() -> Self {
+        ModelDims {
+            name: "llama2-7b".into(),
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_groups: 32,
+            head_dim: 128,
+            n_layers: 32,
+            d_ff: 11008,
+            vocab: 32000,
+            bytes_per_el: 2.0,
+        }
+    }
+
+    pub fn n_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let hd = (self.n_heads * self.head_dim) as f64;
+        let gd = (self.n_kv_groups * self.head_dim) as f64;
+        let f = self.d_ff as f64;
+        let l = self.n_layers as f64;
+        let v = self.vocab as f64;
+        2.0 * v * d + l * (d * hd + 2.0 * d * gd + hd * d + 3.0 * d * f)
+    }
+
+    /// GQA KV-cache bytes per token (all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.n_kv_groups * self.head_dim * self.n_layers) as f64
+            * self.bytes_per_el
+    }
+
+    /// MLA KV-cache bytes per token at latent rank r (+ shared RoPE head).
+    pub fn mla_kv_bytes_per_token(&self, r: usize) -> f64 {
+        ((r + self.head_dim) * self.n_layers) as f64 * self.bytes_per_el
+    }
+}
+
+/// Architecture variant for the model.
+#[derive(Clone, Copy, Debug)]
+pub enum ArchModel {
+    Gqa,
+    /// Absorbed MLA with latent rank r; `low_rank_q` also compresses the
+    /// query projections (paper Fig. 4's two variants).
+    Mla { r: usize, low_rank_q: bool },
+}
+
+/// Per-decode-step cost (one token for each of `batch` sequences at
+/// context length `ctx`).
+pub fn decode_step_cost(
+    dims: &ModelDims,
+    arch: ArchModel,
+    batch: f64,
+    ctx: f64,
+) -> (f64, f64) {
+    let d = dims.d_model as f64;
+    let h = dims.n_heads as f64;
+    let hd = (dims.n_heads * dims.head_dim) as f64;
+    let gd = (dims.n_kv_groups * dims.head_dim) as f64;
+    let f = dims.d_ff as f64;
+    let l = dims.n_layers as f64;
+    let be = dims.bytes_per_el;
+
+    // Weights stream once per step (batched GEMV regime).
+    let weight_bytes = dims.n_params() * be;
+
+    let (attn_flops, cache_bytes, proj_flops) = match arch {
+        ArchModel::Gqa => {
+            let per_layer = 2.0 * hd * ctx * 2.0; // scores + values, all heads
+            let cache = dims.kv_bytes_per_token() * ctx * batch;
+            let proj = 2.0 * d * (hd + 2.0 * gd + hd); // q,k,v,o
+            (per_layer * l * batch, cache, proj * l * batch)
+        }
+        ArchModel::Mla { r, low_rank_q } => {
+            let rr = r as f64;
+            let dr = dims.head_dim as f64;
+            // Absorbed attention: every head scores against the shared
+            // latent (r) + rope key (dr), then latent-weighted sum (r).
+            let per_layer = 2.0 * h * ctx * (rr + dr) + 2.0 * h * ctx * rr;
+            let cache = dims.mla_kv_bytes_per_token(r) * ctx * batch;
+            // Projections: q (full or low-rank), latent down, rope key,
+            // absorbed output.
+            let q_proj = if low_rank_q {
+                2.0 * d * (rr + dr) * h * 0.25 // factored q, rank ~ d/4
+            } else {
+                2.0 * d * (rr + dr) * h
+            };
+            let proj = q_proj + 2.0 * d * (rr + dr) + 2.0 * h * rr * d;
+            (per_layer * l * batch, cache, proj * l * batch)
+        }
+    };
+    let mlp_flops = 2.0 * 3.0 * d * f * l * batch;
+    let lm_head = 2.0 * d * dims.vocab as f64 * batch;
+    let flops = attn_flops + proj_flops + mlp_flops + lm_head;
+    let bytes = weight_bytes + cache_bytes;
+    (flops, bytes)
+}
+
+/// Tokens/s for decode at a given hardware profile, or None if the
+/// weights + caches exceed device memory (the paper's OOM entries).
+pub fn decode_throughput(
+    dims: &ModelDims,
+    arch: ArchModel,
+    hw: &crate::config::HardwareProfile,
+    batch: f64,
+    ctx: f64,
+) -> Option<f64> {
+    let weight_gb = dims.n_params() * dims.bytes_per_el / 1e9;
+    let cache_gb = match arch {
+        ArchModel::Gqa => dims.kv_bytes_per_token() * ctx * batch / 1e9,
+        ArchModel::Mla { r, .. } => dims.mla_kv_bytes_per_token(r) * ctx * batch / 1e9,
+    };
+    // Activations + framework overhead headroom (~10%).
+    if weight_gb + cache_gb > hw.mem_gb * 0.9 {
+        return None;
+    }
+    let (flops, bytes) = decode_step_cost(dims, arch, batch, ctx);
+    // MFU/bandwidth efficiency: serving stacks reach ~60% of peak BW and
+    // ~40% of peak compute in the batched-decode regime.
+    let t_compute = flops / (hw.tflops * 1e12 * 0.4);
+    let t_memory = bytes / (hw.bw_gbs * 1e9 * 0.6);
+    let step = t_compute.max(t_memory);
+    Some(batch / step)
+}
+
+/// The paper's protocol: input len = output len = ctx/2; batch sized to
+/// fill memory like vLLM does (we model a fixed 64-sequence batch cap).
+pub fn table4_model(profiles: &[crate::config::HardwareProfile]) -> Json {
+    let dims = ModelDims::llama2_7b();
+    // r chosen to mirror the paper's 92.97% compression:
+    // kept = (r + d) / (2gd) = 576/8192 -> r = 448.
+    let r = 448;
+    let contexts = [1024usize, 2048, 4096, 8192, 16384, 32768];
+    let mut rows = vec![];
+    for &ctx in &contexts {
+        let mut row = Json::obj();
+        row.set("context", Json::Num(ctx as f64));
+        for hw in profiles {
+            // vLLM grows the batch until KV memory is exhausted; cap 64.
+            let pick_batch = |arch: ArchModel| -> Option<(f64, f64)> {
+                let mut best = None;
+                for b in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+                    if let Some(tps) = decode_throughput(&dims, arch, hw, b, ctx as f64) {
+                        best = Some((b, tps));
+                    }
+                }
+                best
+            };
+            let gqa = pick_batch(ArchModel::Gqa);
+            let mla = pick_batch(ArchModel::Mla { r, low_rank_q: false });
+            let mla_lrq = pick_batch(ArchModel::Mla { r, low_rank_q: true });
+            let mut cell = Json::obj();
+            cell.set("gqa_tps", opt_num(gqa.map(|x| x.1)));
+            cell.set("mla_tps", opt_num(mla.map(|x| x.1)));
+            cell.set("mla_lowrank_q_tps", opt_num(mla_lrq.map(|x| x.1)));
+            cell.set(
+                "speedup",
+                match (gqa, mla) {
+                    (Some(g), Some(m)) => Json::Num(m.1 / g.1),
+                    (None, Some(_)) => Json::Str("inf (GQA OOM)".into()),
+                    _ => Json::Null,
+                },
+            );
+            row.set(&hw.name, cell);
+        }
+        rows.push(row);
+    }
+    Json::Arr(rows)
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::Num(v),
+        None => Json::Str("OOM".into()),
+    }
+}
+
+pub fn print_table4(j: &Json) {
+    if let Some(rows) = j.as_arr() {
+        for row in rows {
+            let ctx = row.get("context").and_then(Json::as_f64).unwrap_or(0.0);
+            print!("    ctx {:>6}:", ctx as usize);
+            if let Some(obj) = row.as_obj() {
+                for (k, v) in obj {
+                    if k == "context" {
+                        continue;
+                    }
+                    let g = fmt_cell(v.get("gqa_tps"));
+                    let m = fmt_cell(v.get("mla_tps"));
+                    let s = match v.get("speedup") {
+                        Some(Json::Num(x)) => format!("{x:.1}x"),
+                        Some(Json::Str(s)) => s.clone(),
+                        _ => "-".into(),
+                    };
+                    print!("  [{k}] gqa={g} mla={m} ({s})");
+                }
+            }
+            println!();
+        }
+    }
+}
+
+fn fmt_cell(v: Option<&Json>) -> String {
+    match v {
+        Some(Json::Num(x)) => format!("{x:.0}"),
+        Some(Json::Str(s)) => s.clone(),
+        _ => "-".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareProfile;
+
+    #[test]
+    fn param_count_matches_7b() {
+        let d = ModelDims::llama2_7b();
+        let n = d.n_params();
+        assert!(n > 6.0e9 && n < 7.5e9, "{n}");
+    }
+
+    #[test]
+    fn kv_bytes_match_llama2() {
+        let d = ModelDims::llama2_7b();
+        // 2 * 32 heads * 128 dim * 32 layers * 2 bytes = 512 KiB/token
+        assert_eq!(d.kv_bytes_per_token() as u64, 524_288);
+        // paper's 92.97% row
+        let ratio = 1.0 - d.mla_kv_bytes_per_token(448) / d.kv_bytes_per_token();
+        assert!((ratio - 0.9297).abs() < 1e-3, "{ratio}");
+    }
+
+    #[test]
+    fn mla_wins_and_gap_grows_with_context() {
+        let d = ModelDims::llama2_7b();
+        let hw = &HardwareProfile::paper_profiles()[1];
+        let s = |ctx: f64| {
+            let g = decode_throughput(&d, ArchModel::Gqa, hw, 2.0, ctx).unwrap();
+            let m = decode_throughput(
+                &d, ArchModel::Mla { r: 448, low_rank_q: false }, hw, 2.0, ctx,
+            )
+            .unwrap();
+            m / g
+        };
+        let (s1, s8) = (s(1024.0), s(8192.0));
+        assert!(s1 > 1.0, "MLA should win at 1k: {s1}");
+        assert!(s8 > s1, "speedup should grow with context: {s1} vs {s8}");
+    }
+
+    #[test]
+    fn gqa_ooms_first_on_24gb() {
+        let d = ModelDims::llama2_7b();
+        let hw = &HardwareProfile::paper_profiles()[0]; // 24 GB
+        // Paper Table 4: LLaMA-2-7B OOMs at 16K on the 24GB card (their
+        // batch); with batch 32 the model reproduces the cliff.
+        let gqa = decode_throughput(&d, ArchModel::Gqa, hw, 8.0, 16384.0);
+        let mla = decode_throughput(
+            &d, ArchModel::Mla { r: 448, low_rank_q: false }, hw, 8.0, 16384.0,
+        );
+        assert!(gqa.is_none(), "GQA should OOM");
+        assert!(mla.is_some(), "MLA should fit");
+    }
+
+    #[test]
+    fn table4_shape() {
+        let t = table4_model(&HardwareProfile::paper_profiles());
+        let rows = t.as_arr().unwrap();
+        assert_eq!(rows.len(), 6);
+        // 8K context on the smallest card: speedup should be large (paper: 10.6x)
+        let row8k = &rows[3];
+        let cell = row8k.get("165.2TF|24GB").unwrap();
+        if let Some(Json::Num(s)) = cell.get("speedup") {
+            assert!(*s > 3.0, "8k speedup too small: {s}");
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids cleanly (see /opt/xla-example/README.md).
+//!
+//! Weights are uploaded once and stay device-resident (`execute_b`);
+//! per-step tensors (tokens, positions, KV caches) cross the host/device
+//! boundary each step because XLA 0.1.6 returns tuple outputs as a single
+//! tuple buffer that cannot be re-fed. This makes the decode step's cost
+//! scale with KV-cache bytes — the exact quantity TransMLA compresses —
+//! so measured CPU speedups are structurally faithful to the paper's
+//! memory-bound decode regime (DESIGN.md §Hardware-Adaptation).
+
+use crate::config::ModelConfig;
+use crate::json::Json;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+// NOTE: `xla::PjRtClient` is Rc-backed (not Send); the Runtime is
+// single-threaded by construction — the server runs the engine on a
+// dedicated thread and talks to it over channels.
+
+/// Dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let dt = match j.get("dtype").and_then(Json::as_str) {
+            Some("float32") => Dtype::F32,
+            Some("int32") => Dtype::I32,
+            other => bail!("unsupported dtype {:?}", other),
+        };
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSpec { dtype: dt, shape })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported HLO entry point, as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub arch: String,
+    pub rank: Option<usize>,
+    pub batch: Option<usize>,
+    pub seq: usize,
+    pub params: Vec<String>,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    pub config: ModelConfig,
+}
+
+/// Parsed `artifacts/manifest.json`.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, ArtifactSpec>,
+    pub configs: HashMap<String, ModelConfig>,
+    pub table1_ranks: HashMap<String, Vec<usize>>,
+    pub sweep_ranks: HashMap<String, Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!("read {}/manifest.json — run `make artifacts`",
+                        dir.display())
+            })?;
+        let j = Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for e in j.get("entries").and_then(Json::as_arr).context("entries")? {
+            let cfg = ModelConfig::from_json(e.get("config").context("config")?)?;
+            let spec = ArtifactSpec {
+                name: e.get("name").and_then(Json::as_str).context("name")?.into(),
+                file: e.get("file").and_then(Json::as_str).context("file")?.into(),
+                kind: e.get("kind").and_then(Json::as_str).context("kind")?.into(),
+                arch: e.get("arch").and_then(Json::as_str).context("arch")?.into(),
+                rank: e.get("rank").and_then(Json::as_usize),
+                batch: e.get("batch").and_then(Json::as_usize),
+                seq: e.get("seq").and_then(Json::as_usize).context("seq")?,
+                params: e
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .context("params")?
+                    .iter()
+                    .map(|p| p.as_str().unwrap_or("").to_string())
+                    .collect(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("inputs")?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("outputs")?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                config: cfg,
+            };
+            entries.insert(spec.name.clone(), spec);
+        }
+        let mut configs = HashMap::new();
+        if let Some(cs) = j.get("configs").and_then(Json::as_obj) {
+            for (k, v) in cs {
+                configs.insert(k.clone(), ModelConfig::from_json(v)?);
+            }
+        }
+        let parse_ranks = |key: &str| -> HashMap<String, Vec<usize>> {
+            let mut out = HashMap::new();
+            if let Some(m) = j.get(key).and_then(Json::as_obj) {
+                for (k, v) in m {
+                    if let Some(arr) = v.as_arr() {
+                        out.insert(
+                            k.clone(),
+                            arr.iter().filter_map(Json::as_usize).collect(),
+                        );
+                    }
+                }
+            }
+            out
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+            configs,
+            table1_ranks: parse_ranks("table1_ranks"),
+            sweep_ranks: parse_ranks("sweep_ranks"),
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+}
+
+/// Host value crossing into an executable.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>), // data, shape
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn i32_vec(v: Vec<i32>) -> Value {
+        let n = v.len();
+        Value::I32(v, vec![n])
+    }
+
+    pub fn i32_mat(v: Vec<i32>, shape: &[usize]) -> Value {
+        Value::I32(v, shape.to_vec())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Value::F32(t) => {
+                if t.shape.is_empty() {
+                    xla::Literal::scalar(t.data[0])
+                } else {
+                    let dims: Vec<i64> =
+                        t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data).reshape(&dims)?
+                }
+            }
+            Value::I32(v, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    let dims: Vec<i64> =
+                        shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        })
+    }
+}
+
+/// Convert an output literal into a host f32 tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match lit.ty()? {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?,
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        other => bail!("unsupported output type {:?}", other),
+    };
+    Tensor::new(&dims, data)
+}
+
+/// A compiled artifact ready to execute.
+pub struct Exec {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Exec {
+    /// Execute with host values; returns host tensors (tuple flattened).
+    pub fn run(&self, args: &[Value]) -> Result<Vec<Tensor>> {
+        self.check_arity(args.len())?;
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let bufs = self.exe.execute::<xla::Literal>(&lits)?;
+        untuple(&bufs[0][0])
+    }
+
+    /// Execute with device-resident leading args (weights) followed by
+    /// fresh host values — the decode hot path.
+    ///
+    /// SAFETY NOTE: `buffer_from_host_literal` transfers asynchronously;
+    /// the source literals MUST outlive the execution (xla_extension
+    /// CHECK-fails — or worse — if a literal is freed mid-copy). We
+    /// therefore keep them alive until the outputs have materialised.
+    pub fn run_b(
+        &self,
+        device_args: &[xla::PjRtBuffer],
+        host_args: &[Value],
+    ) -> Result<Vec<Tensor>> {
+        self.check_arity(device_args.len() + host_args.len())?;
+        let lits: Vec<xla::Literal> = host_args
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let uploaded: Vec<xla::PjRtBuffer> = lits
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = device_args.iter().collect();
+        bufs.extend(uploaded.iter());
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        let tensors = untuple(&out[0][0])?;
+        drop(lits); // keep the host literals alive past the execution
+        Ok(tensors)
+    }
+
+    /// Like `run_b`, but the trailing f32 tensors are borrowed rather than
+    /// wrapped in `Value` — avoids cloning multi-MB KV caches on the
+    /// decode hot path (§Perf in EXPERIMENTS.md).
+    pub fn run_b_mixed(
+        &self,
+        device_args: &[xla::PjRtBuffer],
+        host_args: &[Value],
+        tensor_args: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.check_arity(device_args.len() + host_args.len() + tensor_args.len())?;
+        let mut lits: Vec<xla::Literal> = host_args
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        for t in tensor_args {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(&t.data).reshape(&dims)?);
+        }
+        let uploaded: Vec<xla::PjRtBuffer> = lits
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = device_args.iter().collect();
+        bufs.extend(uploaded.iter());
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        let tensors = untuple(&out[0][0])?;
+        drop(lits);
+        Ok(tensors)
+    }
+
+    /// Upload a host value, returning the device buffer AND the backing
+    /// literal — the caller must keep the literal alive as long as the
+    /// buffer may still be read (async transfer, see `run_b`).
+    pub fn upload_owned(&self, v: &Value) -> Result<(xla::PjRtBuffer, xla::Literal)> {
+        let lit = v.to_literal()?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok((buf, lit))
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.spec.inputs.len() {
+            bail!(
+                "artifact `{}` wants {} args, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                got
+            );
+        }
+        Ok(())
+    }
+}
+
+fn untuple(buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
+    let lit = buf.to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    parts.iter().map(literal_to_tensor).collect()
+}
+
+/// The PJRT runtime: one CPU client + a compiled-executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, Arc<Exec>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an artifact (cached across callers).
+    pub fn load(&self, name: &str) -> Result<Arc<Exec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.spec(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exec = Arc::new(Exec { spec, exe, client: self.client.clone() });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host value; returns (buffer, literal) — keep the literal
+    /// alive while the buffer may still be in flight (async transfer).
+    pub fn upload_owned(&self, v: &Value) -> Result<(xla::PjRtBuffer, xla::Literal)> {
+        let lit = v.to_literal()?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok((buf, lit))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

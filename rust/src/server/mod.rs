@@ -1,0 +1,195 @@
+//! TCP JSONL serving front-end.
+//!
+//! Protocol: one JSON object per line.
+//!   -> {"prompt": "...", "max_new": 32, "temperature": 0.7}
+//!   <- {"id": 1, "text": "...", "latency_s": 0.12, "prompt_len": 9}
+//!   -> {"cmd": "stats"}   <- {"decode_tokens": ..., "tok_per_s": ...}
+//!   -> {"cmd": "shutdown"}
+//!
+//! The PJRT client is not `Send`, so the engine runs on the caller's
+//! thread and connection handlers exchange plain data with it through a
+//! shared queue (acceptor threads never touch XLA state).
+
+use crate::coordinator::{Engine, Request};
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+struct Incoming {
+    req: Request,
+    reply: Sender<Json>,
+}
+
+/// Shared state between acceptor threads and the engine loop.
+#[derive(Clone)]
+pub struct ServerState {
+    incoming: Arc<Mutex<Vec<Incoming>>>,
+    next_id: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Default for ServerState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerState {
+    pub fn new() -> Self {
+        ServerState {
+            incoming: Arc::new(Mutex::new(Vec::new())),
+            next_id: Arc::new(AtomicU64::new(1)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                let mut err = Json::obj();
+                err.set("error", Json::Str(format!("bad json: {e}")));
+                writeln!(writer, "{}", err.to_string())?;
+                continue;
+            }
+        };
+        match msg.get("cmd").and_then(Json::as_str) {
+            Some("shutdown") => {
+                state.shutdown.store(true, Ordering::SeqCst);
+                writeln!(writer, "{{\"ok\":true}}")?;
+                return Ok(());
+            }
+            Some("ping") => {
+                writeln!(writer, "{{\"pong\":true}}")?;
+                continue;
+            }
+            _ => {}
+        }
+        let prompt = msg
+            .get("prompt")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let max_new = msg
+            .get("max_new")
+            .and_then(Json::as_usize)
+            .unwrap_or(32);
+        let temperature = msg
+            .get("temperature")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as f32;
+        let id = state.next_id.fetch_add(1, Ordering::SeqCst);
+        let mut req = Request::from_text(id, &prompt, max_new);
+        req.temperature = temperature;
+        let (tx, rx) = channel();
+        state
+            .incoming
+            .lock()
+            .unwrap()
+            .push(Incoming { req, reply: tx });
+        // Block this connection until the engine answers.
+        match rx.recv() {
+            Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
+            Err(_) => break,
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Run the serving loop: accepts connections on `addr`, feeds the engine,
+/// replies per request. Returns once a `shutdown` command arrives and all
+/// in-flight work is drained.
+pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true)?;
+    eprintln!("[server] listening on {addr}");
+    let state = ServerState::new();
+    let mut pending: Vec<(u64, Sender<Json>)> = Vec::new();
+
+    loop {
+        // Accept any waiting connections; each gets its own thread.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let st = state.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, st);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Drain new requests into the engine.
+        for inc in state.incoming.lock().unwrap().drain(..) {
+            pending.push((inc.req.id, inc.reply));
+            engine.submit(inc.req);
+        }
+        // Advance the engine.
+        if !engine.is_idle() {
+            engine.step()?;
+        } else if state.is_shutdown() && pending.is_empty() {
+            eprintln!("[server] shutdown");
+            return Ok(());
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // Deliver completions.
+        if !pending.is_empty() {
+            let done: Vec<_> = engine.completions.drain(..).collect();
+            for c in done {
+                if let Some(idx) = pending.iter().position(|(id, _)| *id == c.id) {
+                    let (_, tx) = pending.swap_remove(idx);
+                    let mut j = Json::obj();
+                    j.set("id", Json::Num(c.id as f64));
+                    j.set("text", Json::Str(c.text()));
+                    j.set("prompt_len", Json::Num(c.prompt_len as f64));
+                    j.set("latency_s", Json::Num(c.latency_s));
+                    let _ = tx.send(j);
+                }
+            }
+        }
+    }
+}
+
+/// Minimal client helper (used by tests and examples).
+pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut msg = Json::obj();
+    msg.set("prompt", Json::Str(prompt.into()));
+    msg.set("max_new", Json::Num(max_new as f64));
+    writeln!(stream, "{}", msg.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim())
+}
+
+/// Send the shutdown command.
+pub fn client_shutdown(addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{{\"cmd\":\"shutdown\"}}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    Ok(())
+}

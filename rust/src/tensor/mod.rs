@@ -1,0 +1,328 @@
+//! Dense row-major f32 tensors — the substrate for the Rust-side
+//! conversion toolchain (weights are at most `[L, 256, 768]` here, so a
+//! straightforward cache-blocked matmul is plenty).
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal_f32(std)).collect(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of rows / columns for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// View row i of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// 2-D matrix product: [m,k] x [k,n] -> [m,n], cache-blocked (ikj).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.cols() != other.rows() {
+            bail!("matmul shapes {:?} x {:?}", self.shape, other.shape);
+        }
+        let (m, k, n) = (self.rows(), self.cols(), other.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Transpose of a 2-D tensor.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// Select columns (2-D) by index list.
+    pub fn select_cols(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let m = self.rows();
+        let mut out = vec![0.0f32; m * idx.len()];
+        for i in 0..m {
+            let row = self.row(i);
+            for (jj, &j) in idx.iter().enumerate() {
+                out[i * idx.len() + jj] = row[j];
+            }
+        }
+        Tensor { shape: vec![m, idx.len()], data: out }
+    }
+
+    /// Horizontal concat of 2-D tensors with equal row counts.
+    pub fn hcat(parts: &[&Tensor]) -> Result<Tensor> {
+        let m = parts[0].rows();
+        let n: usize = parts.iter().map(|p| p.cols()).sum();
+        for p in parts {
+            if p.rank() != 2 || p.rows() != m {
+                bail!("hcat shape mismatch");
+            }
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let mut off = 0;
+            for p in parts {
+                let c = p.cols();
+                out[i * n + off..i * n + off + c].copy_from_slice(p.row(i));
+                off += c;
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Slice columns [lo, hi) of a 2-D tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        self.select_cols(&(lo..hi).collect::<Vec<_>>())
+    }
+
+    /// Slice along axis 0 (any rank): returns sub-tensor [i] with rank-1.
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        let inner = &parts[0].shape;
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            if &p.shape != inner {
+                bail!("stack shape mismatch {:?} vs {:?}", p.shape, inner);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(inner);
+        Tensor::new(&shape, data)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch");
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        })
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("sub shape mismatch");
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        })
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean L2 norm of rows (2-D).
+    pub fn mean_row_norm(&self) -> f32 {
+        let m = self.rows();
+        let mut s = 0.0f64;
+        for i in 0..m {
+            s += self
+                .row(i)
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt();
+        }
+        (s / m as f64) as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Identity matrix.
+pub fn eye(n: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        t.set2(i, i, 1.0);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let c = a.matmul(&eye(7)).unwrap();
+        assert!(a.max_abs_diff(&c) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[4, 9], 1.0, &mut rng);
+        assert!(a.t().t().max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn hcat_slice_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[3, 2], 1.0, &mut rng);
+        let c = Tensor::hcat(&[&a, &b]).unwrap();
+        assert!(c.slice_cols(0, 4).max_abs_diff(&a) < 1e-9);
+        assert!(c.slice_cols(4, 6).max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn stack_index_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape, vec![2, 2, 3]);
+        assert!(s.index0(1).max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::new(&[2, 2], vec![0.0; 3]).is_err());
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn mean_row_norm_constant() {
+        let t = Tensor::ones(&[4, 9]);
+        assert!((t.mean_row_norm() - 3.0).abs() < 1e-6);
+    }
+}

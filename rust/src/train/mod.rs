@@ -1,0 +1,135 @@
+//! Training loop: drives the AOT train-step executable (fwd + bwd + Adam
+//! inside one HLO module) from Rust. Used to pretrain the GQA byte-LM and
+//! to fine-tune converted MLA models (the paper's recovery experiments).
+
+use crate::corpus::Corpus;
+use crate::model::Params;
+use crate::runtime::{Exec, Value};
+use crate::tensor::Tensor;
+use crate::util::{Rng, Timer};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub tokens: usize,
+    pub seconds: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the last k steps (smoother than the single final
+    /// minibatch).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n);
+        self.losses[n - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+pub struct Trainer {
+    exec: Arc<Exec>,
+    pub params: Params,
+    m: Params,
+    v: Params,
+    pub step: usize,
+    batch: usize,
+    seq: usize,
+}
+
+impl Trainer {
+    pub fn new(exec: Arc<Exec>, params: Params) -> Result<Self> {
+        if exec.spec.kind != "train" {
+            bail!("`{}` is not a train artifact", exec.spec.name);
+        }
+        let n = exec.spec.params.len();
+        // train artifact ABI: params*3 + step + lr + tokens
+        if exec.spec.inputs.len() != 3 * n + 3 {
+            bail!("unexpected train arity");
+        }
+        for (i, key) in exec.spec.params.iter().enumerate() {
+            let have = &params.get(key)?.shape;
+            let want = &exec.spec.inputs[i].shape;
+            if have != want {
+                bail!("param `{key}`: shape {have:?} != {want:?}");
+            }
+        }
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        let batch = exec.spec.batch.context("train batch")?;
+        let seq = exec.spec.seq;
+        Ok(Trainer { exec, params, m, v, step: 0, batch, seq })
+    }
+
+    /// One optimizer step on a [batch, seq] token matrix; returns the loss.
+    pub fn step_on(&mut self, tokens: Vec<i32>, lr: f32) -> Result<f32> {
+        if tokens.len() != self.batch * self.seq {
+            bail!("train batch wants {}x{}", self.batch, self.seq);
+        }
+        self.step += 1;
+        let mut args: Vec<Value> = Vec::with_capacity(self.exec.spec.inputs.len());
+        args.extend(self.params.values());
+        args.extend(self.m.values());
+        args.extend(self.v.values());
+        args.push(Value::scalar_f32(self.step as f32));
+        args.push(Value::scalar_f32(lr));
+        args.push(Value::i32_mat(tokens, &[self.batch, self.seq]));
+        let mut outs = self.exec.run(&args)?;
+        let loss = outs
+            .pop()
+            .context("train loss output")?
+            .data
+            .first()
+            .copied()
+            .context("loss scalar")?;
+        let n = self.params.keys.len();
+        let mut it = outs.into_iter();
+        let take = |it: &mut dyn Iterator<Item = Tensor>, n: usize| -> Vec<Tensor> {
+            it.take(n).collect()
+        };
+        self.params.tensors = take(&mut it, n);
+        self.m.tensors = take(&mut it, n);
+        self.v.tensors = take(&mut it, n);
+        Ok(loss)
+    }
+
+    /// Train for `steps` minibatches sampled from the corpus.
+    pub fn run(
+        &mut self,
+        corpus: &Corpus,
+        steps: usize,
+        lr: f32,
+        seed: u64,
+        log_every: usize,
+        label: &str,
+    ) -> Result<TrainReport> {
+        let mut rng = Rng::new(seed);
+        let mut losses = Vec::with_capacity(steps);
+        let timer = Timer::start();
+        for s in 0..steps {
+            let tokens = corpus.sample_batch(self.batch, self.seq, &mut rng);
+            let loss = self.step_on(tokens, lr)?;
+            losses.push(loss);
+            if log_every > 0 && (s + 1) % log_every == 0 {
+                eprintln!(
+                    "[train:{label}] step {:>4}/{steps} loss {loss:.4} ({:.2}s)",
+                    s + 1,
+                    timer.elapsed_s()
+                );
+            }
+        }
+        Ok(TrainReport {
+            steps,
+            tokens: steps * self.batch * self.seq,
+            seconds: timer.elapsed_s(),
+            losses,
+        })
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate utilities: deterministic PRNG, timing/statistics, and a
+//! miniature property-testing framework.
+//!
+//! The build image is fully offline and its vendor set contains only the
+//! `xla` and `anyhow` crates, so `rand`, `criterion` and `proptest` are
+//! re-implemented here at the scale this project needs (see DESIGN.md's
+//! substitution table).
+
+pub mod prng;
+pub mod prop;
+pub mod timing;
+
+pub use prng::Rng;
+pub use timing::{BenchStats, Timer};

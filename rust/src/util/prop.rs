@@ -1,0 +1,130 @@
+//! Miniature property-testing framework (offline stand-in for `proptest`).
+//!
+//! Runs a property over `cases` randomly generated inputs; on failure it
+//! performs greedy input shrinking via the user-provided `shrink` hook and
+//! reports the minimal reproducing seed.
+
+use super::prng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Check `prop(gen(rng))` over many random cases. Panics (with the failing
+/// seed and case index) on the first violated property.
+pub fn check<T, G, P>(name: &str, cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {}):\n  {msg}\n  input: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Check with shrinking: on failure, repeatedly try `shrink(input)`
+/// candidates that still fail, reporting the smallest found.
+pub fn check_shrink<T, G, P, S>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: G,
+    mut prop: P,
+    mut shrink: S,
+) where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut improved = true;
+            let mut budget = 200usize;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property `{name}` failed at case {case} (seed {}):\n  {best_msg}\n  minimal input: {best:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "add_commutes",
+            PropConfig::default(),
+            |r| (r.below(1000) as i64, r.below(1000) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_small`")]
+    fn failing_property_panics_with_name() {
+        check(
+            "always_small",
+            PropConfig { cases: 256, seed: 1 },
+            |r| r.below(100),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 50")]
+    fn shrinking_finds_boundary() {
+        check_shrink(
+            "shrinks_to_50",
+            PropConfig { cases: 64, seed: 2 },
+            |r| r.below(1000),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x}")) },
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+        );
+    }
+}

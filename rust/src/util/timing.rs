@@ -1,0 +1,108 @@
+//! Timing + statistics helpers shared by the engine metrics and the
+//! in-repo benchmark harness (`rust/benches/harness.rs`).
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Summary statistics over a set of timing samples (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let v = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        v.sqrt()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((self.samples.len() - 1) as f64 * p / 100.0).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Time `f` with warmup; returns stats over `iters` runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+    }
+    BenchStats::new(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = BenchStats::new(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.percentile(50.0), 2.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut n = 0;
+        let st = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(st.samples.len(), 5);
+    }
+}

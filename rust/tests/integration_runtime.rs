@@ -1,0 +1,118 @@
+//! Integration: artifact loading + HLO execution + decode/prefill
+//! consistency across the PJRT boundary (requires `make artifacts`).
+
+use std::path::Path;
+use transmla::corpus::Corpus;
+use transmla::eval::evaluate;
+use transmla::model::init_gqa;
+use transmla::runtime::{Runtime, Value};
+use transmla::util::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_has_expected_inventory() {
+    let rt = runtime();
+    for name in [
+        "llama2tiny_gqa_prefill",
+        "llama2tiny_gqa_decode_b1",
+        "llama2tiny_gqa_decode_b8",
+        "llama2tiny_gqa_decode_b8_t128",
+        "llama2tiny_mla_decode_r4_b8_t256",
+        "llama2tiny_gqa_train",
+        "llama2tiny_calib",
+        "llama2tiny_merged_prefill",
+        "llama2tiny_mla_prefill_r128",
+        "llama2tiny_mla_train_r4",
+        "smoltiny_gqa_prefill",
+    ] {
+        assert!(rt.manifest.entries.contains_key(name), "{name} missing");
+    }
+}
+
+#[test]
+fn prefill_runs_and_loss_is_ln_v_at_random_init() {
+    let rt = runtime();
+    let cfg = rt.manifest.configs["llama2tiny"].clone();
+    let params = init_gqa(&cfg, 0);
+    let exec = rt.load("llama2tiny_gqa_prefill").unwrap();
+    let corpus = Corpus::synthetic(3, 200_000);
+    let batches = corpus.val_batches(8, cfg.max_seq);
+    let ev = evaluate(&exec, &params, &batches[..1]).unwrap();
+    assert!((ev.loss - (cfg.vocab as f64).ln()).abs() < 1.0, "{}", ev.loss);
+    assert!(ev.ppl.is_finite());
+}
+
+#[test]
+fn gqa_decode_matches_prefill_logits_through_hlo() {
+    let rt = runtime();
+    let cfg = rt.manifest.configs["llama2tiny"].clone();
+    let params = init_gqa(&cfg, 7);
+    let prefill = rt.load("llama2tiny_gqa_prefill").unwrap();
+    let decode = rt.load("llama2tiny_gqa_decode_b8").unwrap();
+
+    let corpus = Corpus::synthetic(5, 200_000);
+    let mut rng = Rng::new(0);
+    let t = cfg.max_seq;
+    let tokens = corpus.sample_batch(8, t, &mut rng);
+
+    let mut args = params.values();
+    args.push(Value::i32_mat(tokens.clone(), &[8, t]));
+    let outs = prefill.run(&args).unwrap();
+    let (logits_p, kc, vc) = (&outs[0], &outs[1], &outs[2]);
+
+    // Re-decode position `pos` for every row: feeding token[pos] with the
+    // prefill cache (entries > pos are stale but masked) must reproduce
+    // the prefill logits at that position.
+    let pos = 37usize;
+    let tok: Vec<i32> = (0..8).map(|b| tokens[b * t + pos]).collect();
+    let pos_v: Vec<i32> = vec![pos as i32; 8];
+    let mut dargs = params.values();
+    dargs.push(Value::i32_vec(tok));
+    dargs.push(Value::i32_vec(pos_v));
+    dargs.push(Value::F32(kc.clone()));
+    dargs.push(Value::F32(vc.clone()));
+    let douts = decode.run(&dargs).unwrap();
+    let logits_d = &douts[0];
+
+    let v = cfg.vocab;
+    let mut worst = 0.0f32;
+    for b in 0..8 {
+        for i in 0..v {
+            let a = logits_p.data[(b * t + pos) * v + i];
+            let c = logits_d.data[b * v + i];
+            worst = worst.max((a - c).abs());
+        }
+    }
+    assert!(worst < 2e-3, "decode/prefill divergence {worst}");
+}
+
+#[test]
+fn train_step_executes_and_reduces_loss() {
+    let rt = runtime();
+    let cfg = rt.manifest.configs["llama2tiny"].clone();
+    let exec = rt.load("llama2tiny_gqa_train").unwrap();
+    let mut trainer =
+        transmla::train::Trainer::new(exec, init_gqa(&cfg, 1)).unwrap();
+    let corpus = Corpus::synthetic(9, 400_000);
+    let rep = trainer.run(&corpus, 8, 2e-3, 4, 0, "test").unwrap();
+    assert_eq!(rep.losses.len(), 8);
+    let first = rep.losses[0];
+    let last = rep.losses[7];
+    assert!(last < first, "loss should drop: {first} -> {last}");
+    assert!(first < 6.0 && first > 4.0, "ln(256)-ish start: {first}");
+}
+
+#[test]
+fn value_roundtrip_shapes() {
+    let rt = runtime();
+    // i32 literal roundtrip through an upload.
+    let v = Value::i32_mat(vec![1, 2, 3, 4, 5, 6], &[2, 3]);
+    let (buf, _lit) = rt.upload_owned(&v).unwrap();
+    let lit = buf.to_literal_sync().unwrap();
+    let t = transmla::runtime::literal_to_tensor(&lit).unwrap();
+    assert_eq!(t.shape, vec![2, 3]);
+    assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+}
