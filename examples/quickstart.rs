@@ -11,6 +11,7 @@
 
 use anyhow::{Context, Result};
 use std::path::Path;
+use transmla::backend::SimBackend;
 use transmla::config::EngineConfig;
 use transmla::convert::{convert_model, ConvertOptions};
 use transmla::coordinator::engine::Arch;
@@ -22,7 +23,24 @@ use transmla::runtime::Runtime;
 use transmla::util::Rng;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let rt = match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Bare checkout: show the serving loop hermetically instead.
+            eprintln!("[quickstart] artifact runtime unavailable ({e:#})");
+            eprintln!("[quickstart] demonstrating the engine over SimBackend");
+            for (label, be) in [("GQA sim", SimBackend::gqa(8)), ("MLA sim", SimBackend::mla(8, 4))] {
+                let mut engine = Engine::new(be, EngineConfig::default());
+                let out = engine.generate(vec![Request::from_text(0, "the model ", 32)])?;
+                println!(
+                    "[{label}] {:5.1} tok/s | {} tokens generated",
+                    engine.decode_throughput(),
+                    out[0].tokens.len()
+                );
+            }
+            return Ok(());
+        }
+    };
     let cfg_name = "llama2tiny";
     let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
 
@@ -61,7 +79,7 @@ fn main() -> Result<()> {
         ("MLA ", Arch::Mla { rank }, absorbed),
     ] {
         let bundle = ModelBundle::load(&rt, cfg_name, arch, 8, params)?;
-        let mut engine = Engine::new(bundle, EngineConfig::default());
+        let mut engine = Engine::with_bundle(bundle, EngineConfig::default());
         let out = engine.generate(vec![Request::from_text(0, prompt, 48)])?;
         println!(
             "[{label}] {:5.1} tok/s | {}{}",

@@ -88,7 +88,7 @@ fn main() -> Result<()> {
             };
             let bundle =
                 ModelBundle::load_named(&rt, cfg_name, arch, 8, params, &pname, &dname)?;
-            let mut engine = Engine::new(bundle, EngineConfig::default());
+            let mut engine = Engine::with_bundle(bundle, EngineConfig::default());
             // Paper protocol: input length == output length == ctx/2.
             let half = ctx_len / 2;
             let mut wl_rng = Rng::new(11);
@@ -106,7 +106,7 @@ fn main() -> Result<()> {
             engine.slots_check()?;
             let tps = engine.decode_throughput();
             let lat = engine
-                .completions
+                .take_completions()
                 .iter()
                 .map(|c| c.latency_s)
                 .collect::<Vec<_>>();

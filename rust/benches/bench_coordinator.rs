@@ -5,13 +5,27 @@
 mod harness;
 
 use harness::Bench;
+use transmla::backend::SimBackend;
+use transmla::config::EngineConfig;
 use transmla::coordinator::sampling;
+use transmla::coordinator::{Engine, Request};
 use transmla::kvcache::{CacheLayout, KvCache, SlotAllocator};
 use transmla::tensor::Tensor;
 use transmla::util::Rng;
 
 fn main() {
     let b = Bench::new();
+
+    // Full admit -> decode -> complete loop over the hermetic backend:
+    // the pure-L3 cost of one serving cycle (scheduler + sequence
+    // manager + splice + sampling), no XLA in the path.
+    b.run("sim_engine_full_loop_16req", || {
+        let mut e = Engine::new(SimBackend::gqa(8), EngineConfig::default());
+        for i in 0..16 {
+            e.submit(Request::from_text(i, "coordinator hot path", 8));
+        }
+        e.run_to_completion().unwrap();
+    });
 
     b.run("slot_alloc_release_1k_cycles", || {
         let mut a = SlotAllocator::new(8);

@@ -1,16 +1,21 @@
-//! Bench: end-to-end serving throughput, GQA vs absorbed-MLA — the
-//! measured-CPU counterpart of the paper's Figure 4 / Table 4 (the
-//! analytical-GPU counterpart lives in `transmla exp table4`).
+//! Bench: end-to-end serving throughput.
 //!
-//! Requires `make artifacts`. Uses a random-init model (throughput does
-//! not depend on weight values).
+//! Two tiers:
+//!   * **hermetic** (always runs): the full engine loop over `SimBackend`
+//!     for each scheduling policy and both cache layouts — measures the
+//!     L3 overhead (scheduling, slot lifecycle, splicing, sampling) with
+//!     no artifacts required;
+//!   * **artifact-backed** (when `make artifacts` + a real `xla` runtime
+//!     are present): GQA vs absorbed-MLA — the measured-CPU counterpart
+//!     of the paper's Figure 4 / Table 4.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use harness::Bench;
 use std::path::Path;
-use transmla::config::EngineConfig;
+use transmla::backend::{SimBackend, SimConfig};
+use transmla::config::{EngineConfig, PolicyKind};
 use transmla::convert::{convert_model, Calib, ConvertOptions};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
@@ -20,12 +25,55 @@ use transmla::runtime::Runtime;
 use transmla::tensor::Tensor;
 use transmla::util::Rng;
 
+fn sim_workload(b: &Bench, policy: PolicyKind, label: &str) {
+    let n_req = if b.quick { 16 } else { 64 };
+    let mean = b.run(&format!("sim_engine_{label}_{n_req}req"), || {
+        let mut engine = Engine::new(
+            SimBackend::new(SimConfig { capacity: 128, prefill_seq: 128, ..SimConfig::gqa(8) })
+                .unwrap(),
+            EngineConfig { policy, ..Default::default() },
+        );
+        for i in 0..n_req {
+            engine.submit(Request::from_text(i, "the scheduler balances the memory budget", 24));
+        }
+        engine.run_to_completion().unwrap();
+    });
+    let toks = n_req as f64 * 24.0;
+    b.report(&format!("sim_engine_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
+}
+
 fn main() {
     let b = Bench::new();
+
+    // -- hermetic tier: policies + layouts over the sim backend ----------
+    for (label, policy) in [
+        ("admit_first", PolicyKind::AdmitFirst),
+        ("decode_first", PolicyKind::DecodeFirst),
+        ("hybrid4", PolicyKind::Hybrid { min_free: 4 }),
+    ] {
+        sim_workload(&b, policy, label);
+    }
+    for (label, sim) in [
+        ("gqa_layout", SimConfig::gqa(8)),
+        ("mla_r4_layout", SimConfig::mla(8, 4)),
+    ] {
+        b.run(&format!("sim_engine_{label}_32req"), || {
+            let mut engine = Engine::new(
+                SimBackend::new(sim.clone()).unwrap(),
+                EngineConfig::default(),
+            );
+            for i in 0..32 {
+                engine.submit(Request::from_text(i, "layout traffic", 16));
+            }
+            engine.run_to_completion().unwrap();
+        });
+    }
+
+    // -- artifact tier: the paper's Figure 4 / Table 4 measurement -------
     let rt = match Runtime::new(Path::new("artifacts")) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping bench_serving: {e:#} (run `make artifacts`)");
+            eprintln!("artifact tier skipped: {e:#} (run `make artifacts`)");
             return;
         }
     };
@@ -76,7 +124,7 @@ fn main() {
                 &rt, cfg_name, arch, 8, params.clone(), &pname, &dname,
             )
             .unwrap();
-            let mut engine = Engine::new(bundle, EngineConfig::default());
+            let mut engine = Engine::with_bundle(bundle, EngineConfig::default());
             let half = ctx / 2;
             let mut wl = Rng::new(3);
             let n_req = if b.quick { 8 } else { 16 };

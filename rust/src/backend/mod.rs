@@ -1,0 +1,96 @@
+//! Execution backends: the layer below the serving engine.
+//!
+//! An [`ExecBackend`] is anything that can run the two model entry points
+//! the continuous batcher needs:
+//!
+//!   * **prefill** — a fixed-shape `[Bp, T]` token matrix in, per-position
+//!     logits `[Bp, T, V]` plus per-row caches `[L, Bp, T, ...]` out;
+//!   * **decode** — one token + position per slot in, next-token logits
+//!     `[B, V]` out, with the slot caches advanced in place.
+//!
+//! Two implementations ship:
+//!
+//!   * [`XlaBackend`] wraps the AOT-compiled HLO artifacts through the
+//!     PJRT runtime (`make artifacts` + real `xla` bindings required) —
+//!     the measured-performance path;
+//!   * [`SimBackend`] is a deterministic pure-Rust model of the same
+//!     contract (both `CacheLayout::Gqa` and `CacheLayout::Mla`), so the
+//!     engine, scheduler, server, benches, and integration tests run
+//!     hermetically on a bare checkout.
+//!
+//! The engine (`coordinator::engine`) only ever sees `dyn ExecBackend`;
+//! everything XLA-specific lives in [`xla`].
+
+pub mod sim;
+pub mod xla;
+
+use crate::kvcache::{CacheLayout, KvCache};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+pub use sim::{SimBackend, SimConfig};
+pub use xla::{ModelBundle, XlaBackend};
+
+/// Which architecture a backend serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Gqa,
+    Mla { rank: usize },
+}
+
+/// Static geometry of a backend — everything the engine and the
+/// sequence manager need to size caches, clamp prompts, and read logits.
+#[derive(Clone, Debug)]
+pub struct BackendSpec {
+    pub arch: Arch,
+    /// Human-readable identity (config/artifact name or "sim").
+    pub name: String,
+    pub layout: CacheLayout,
+    pub n_layers: usize,
+    pub vocab: usize,
+    /// Decode batch width (number of slots).
+    pub batch: usize,
+    /// Max rows per prefill call.
+    pub prefill_batch: usize,
+    /// Sequence length of the prefill entry point.
+    pub prefill_seq: usize,
+    /// Cache capacity T of the decode entry point.
+    pub capacity: usize,
+}
+
+impl BackendSpec {
+    /// Longest admissible prompt: one slot position must remain for the
+    /// first generated token, and the prompt must fit both entry points.
+    pub fn max_prompt(&self) -> usize {
+        self.capacity.min(self.prefill_seq).saturating_sub(1)
+    }
+
+    /// A fresh, zeroed slot cache pool matching this spec.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.layout, self.n_layers, self.batch, self.capacity)
+    }
+}
+
+/// Output of one prefill call.
+pub struct PrefillOut {
+    /// Per-position logits `[Bp, T, V]`.
+    pub logits: Tensor,
+    /// Cache tensors `[L, Bp, T, ...]` in the layout's buffer order
+    /// (GQA: k, v; MLA: latent, rope-key).
+    pub caches: Vec<Tensor>,
+}
+
+/// A model execution backend (prefill + decode over an opaque cache).
+pub trait ExecBackend {
+    fn spec(&self) -> &BackendSpec;
+
+    /// Run prefill over a padded `[prefill_batch * prefill_seq]` token
+    /// matrix (row-major; unused rows/positions zero).
+    fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillOut>;
+
+    /// Advance every slot one step: `tokens[s]` / `pos[s]` are the last
+    /// sampled token and its write position for slot `s` (0/0 for idle
+    /// slots — backends must be position-masked so idle slots are inert).
+    /// Updates `cache` in place and returns logits `[batch * vocab]`.
+    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut KvCache) -> Result<Tensor>;
+}

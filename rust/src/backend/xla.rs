@@ -1,0 +1,176 @@
+//! XLA execution backend: the AOT-artifact path.
+//!
+//! [`ModelBundle`] owns the compiled prefill/decode pair and the
+//! device-resident weights for one model; [`XlaBackend`] adapts it to the
+//! [`ExecBackend`] contract the engine consumes. The artifact ABI
+//! (manifest names, argument order, tuple outputs) is unchanged from the
+//! original fused engine — nothing on the `python/compile` side moves.
+
+use super::{Arch, BackendSpec, ExecBackend, PrefillOut};
+use crate::kvcache::{CacheLayout, KvCache};
+use crate::model::Params;
+use crate::runtime::{Exec, Runtime, Value};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// The compiled artifact pair + device-resident weights for one model.
+pub struct ModelBundle {
+    pub arch: Arch,
+    pub cfg_name: String,
+    pub prefill: Arc<Exec>,
+    pub decode: Arc<Exec>,
+    pub params: Params,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// Host literals backing `param_bufs` — kept alive for the bundle's
+    /// lifetime because PJRT host->device transfers are asynchronous.
+    _param_lits: Vec<xla::Literal>,
+    pub layout: CacheLayout,
+    pub batch: usize,
+    pub prefill_batch: usize,
+    pub capacity: usize,
+}
+
+impl ModelBundle {
+    pub fn load(
+        rt: &Runtime,
+        cfg_name: &str,
+        arch: Arch,
+        batch: usize,
+        params: Params,
+    ) -> Result<ModelBundle> {
+        let (prefill_name, decode_name) = match arch {
+            Arch::Gqa => (
+                format!("{cfg_name}_gqa_prefill"),
+                format!("{cfg_name}_gqa_decode_b{batch}"),
+            ),
+            Arch::Mla { rank } => (
+                format!("{cfg_name}_mla_prefill_r{rank}"),
+                format!("{cfg_name}_mla_decode_r{rank}_b{batch}"),
+            ),
+        };
+        Self::load_named(rt, cfg_name, arch, batch, params, &prefill_name, &decode_name)
+    }
+
+    /// Load with explicit artifact names (context-length variants carry a
+    /// `_t{T}` suffix on the decode artifact).
+    pub fn load_named(
+        rt: &Runtime,
+        cfg_name: &str,
+        arch: Arch,
+        batch: usize,
+        params: Params,
+        prefill_name: &str,
+        decode_name: &str,
+    ) -> Result<ModelBundle> {
+        let prefill = rt.load(prefill_name)?;
+        let decode = rt.load(decode_name)?;
+        params.check_against(&decode.spec)?;
+        let cfg = &decode.spec.config;
+        let layout = match arch {
+            Arch::Gqa => CacheLayout::Gqa { g: cfg.n_kv_groups, d: cfg.head_dim },
+            Arch::Mla { rank } => CacheLayout::Mla { r: rank, dr: cfg.head_dim },
+        };
+        let mut param_bufs = Vec::new();
+        let mut _param_lits = Vec::new();
+        for v in params.values() {
+            let (buf, lit) = prefill.upload_owned(&v)?;
+            param_bufs.push(buf);
+            _param_lits.push(lit);
+        }
+        let prefill_batch = prefill.spec.batch.context("prefill batch")?;
+        // Cache capacity comes from the decode artifact's cache input
+        // shape [L, B, T, ...] (context-length variants differ from the
+        // config's max_seq).
+        let n = decode.spec.params.len();
+        let capacity = decode.spec.inputs[n + 2].shape[2];
+        Ok(ModelBundle {
+            arch,
+            cfg_name: cfg_name.to_string(),
+            prefill,
+            decode,
+            params,
+            param_bufs,
+            _param_lits,
+            layout,
+            batch,
+            prefill_batch,
+            capacity,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.decode.spec.config.n_layers
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.decode.spec.config.vocab
+    }
+
+    /// Sequence length of the prefill entry point.
+    pub fn prefill_seq(&self) -> usize {
+        self.prefill.spec.inputs.last().map(|a| a.shape[1]).unwrap_or(0)
+    }
+}
+
+/// `ExecBackend` over a [`ModelBundle`] (PJRT execution).
+pub struct XlaBackend {
+    bundle: ModelBundle,
+    spec: BackendSpec,
+}
+
+impl XlaBackend {
+    pub fn new(bundle: ModelBundle) -> XlaBackend {
+        let spec = BackendSpec {
+            arch: bundle.arch,
+            name: bundle.cfg_name.clone(),
+            layout: bundle.layout,
+            n_layers: bundle.n_layers(),
+            vocab: bundle.vocab(),
+            batch: bundle.batch,
+            prefill_batch: bundle.prefill_batch,
+            prefill_seq: bundle.prefill_seq(),
+            capacity: bundle.capacity,
+        };
+        XlaBackend { bundle, spec }
+    }
+
+    pub fn bundle(&self) -> &ModelBundle {
+        &self.bundle
+    }
+}
+
+impl ExecBackend for XlaBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillOut> {
+        let (bp, t) = (self.spec.prefill_batch, self.spec.prefill_seq);
+        let outs = self.bundle.prefill.run_b(
+            &self.bundle.param_bufs,
+            &[Value::i32_mat(tokens.to_vec(), &[bp, t])],
+        )?;
+        let mut it = outs.into_iter();
+        let logits = it.next().context("prefill logits")?;
+        let caches: Vec<Tensor> = it.collect();
+        Ok(PrefillOut { logits, caches })
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut KvCache) -> Result<Tensor> {
+        let outs = self.bundle.decode.run_b_mixed(
+            &self.bundle.param_bufs,
+            &[
+                Value::i32_vec(tokens.to_vec()),
+                Value::i32_vec(pos.to_vec()),
+            ],
+            &[&cache.bufs[0], &cache.bufs[1]],
+        )?;
+        let mut it = outs.into_iter();
+        let logits = it.next().context("decode logits")?;
+        let c0 = it.next().context("cache0")?;
+        let c1 = it.next().context("cache1")?;
+        cache.store(vec![c0, c1])?;
+        Ok(logits)
+    }
+}

@@ -80,6 +80,42 @@ impl ModelConfig {
     }
 }
 
+/// Which scheduling policy the engine runs (see `coordinator::scheduler`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// Admit whenever a slot is free (the original engine behaviour).
+    #[default]
+    AdmitFirst,
+    /// Drain the active batch before admitting new requests.
+    DecodeFirst,
+    /// Admit only once `min_free` slots are free (or nothing is active).
+    Hybrid { min_free: usize },
+}
+
+impl PolicyKind {
+    /// Parse `admit-first` / `decode-first` / `hybrid` / `hybrid:N`.
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "admit-first" => Ok(PolicyKind::AdmitFirst),
+            "decode-first" => Ok(PolicyKind::DecodeFirst),
+            "hybrid" => Ok(PolicyKind::Hybrid { min_free: 2 }),
+            other => match other.strip_prefix("hybrid:") {
+                Some(n) => Ok(PolicyKind::Hybrid {
+                    min_free: n
+                        .parse()
+                        .ok()
+                        .with_context(|| format!("bad hybrid threshold `{n}`"))?,
+                }),
+                None => {
+                    anyhow::bail!(
+                        "unknown policy `{other}` (admit-first|decode-first|hybrid[:N])"
+                    )
+                }
+            },
+        }
+    }
+}
+
 /// Engine/serving settings.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -90,6 +126,8 @@ pub struct EngineConfig {
     /// Sampling temperature (0 = greedy).
     pub temperature: f32,
     pub seed: u64,
+    /// Scheduling policy (admission vs decode per iteration).
+    pub policy: PolicyKind,
 }
 
 impl Default for EngineConfig {
@@ -99,6 +137,7 @@ impl Default for EngineConfig {
             max_new_tokens: 64,
             temperature: 0.0,
             seed: 0,
+            policy: PolicyKind::AdmitFirst,
         }
     }
 }
@@ -171,6 +210,23 @@ mod tests {
         let c = ModelConfig::from_json(&j).unwrap();
         let n = c.n_params();
         assert!(n > 3_000_000 && n < 6_000_000, "{n}");
+    }
+
+    #[test]
+    fn policy_kind_parses() {
+        assert_eq!(PolicyKind::parse("admit-first").unwrap(), PolicyKind::AdmitFirst);
+        assert_eq!(PolicyKind::parse("decode-first").unwrap(), PolicyKind::DecodeFirst);
+        assert_eq!(
+            PolicyKind::parse("hybrid:3").unwrap(),
+            PolicyKind::Hybrid { min_free: 3 }
+        );
+        assert_eq!(
+            PolicyKind::parse("hybrid").unwrap(),
+            PolicyKind::Hybrid { min_free: 2 }
+        );
+        assert!(PolicyKind::parse("nope").is_err());
+        assert!(PolicyKind::parse("hybrid:x").is_err());
+        assert_eq!(EngineConfig::default().policy, PolicyKind::AdmitFirst);
     }
 
     #[test]

@@ -1,176 +1,92 @@
-//! The serving engine: continuous batching over fixed decode slots.
+//! The serving engine: continuous batching over fixed decode slots,
+//! layered as Backend / Scheduler / SequenceManager.
 //!
-//! One `Engine` drives one architecture (GQA baseline or converted MLA)
-//! through its AOT prefill/decode executables:
+//! One `Engine` drives one [`ExecBackend`] (compiled XLA artifacts or the
+//! hermetic simulator) through three decoupled concerns:
 //!
-//!   * **admission** — up to `batch` queued requests are prefilled in one
-//!     fixed-shape prefill call; their caches are spliced into free slots;
-//!   * **decode** — all active slots advance one token per step through
-//!     the decode executable (position-masked, so idle slots are inert);
-//!   * **completion** — finished slots are released immediately and can be
-//!     refilled on the next admission, vLLM-style.
+//!   * **scheduling** — a pluggable [`SchedulePolicy`] decides each
+//!     iteration between admission (prefill) and decode;
+//!   * **execution** — the backend runs prefill/decode over the opaque
+//!     slot cache pool (`KvCache`), layout-agnostic (GQA or MLA-latent);
+//!   * **sequences** — a [`SequenceManager`] owns slot lifecycle, per-slot
+//!     length tracking, completion rules, and latency accounting.
 //!
-//! Weights live on-device for the whole engine lifetime; only the caches
-//! and per-step scalars cross the host boundary (see runtime/mod.rs).
+//! Completion frees a slot immediately for the next admission,
+//! vLLM-style. Finished requests accumulate until [`Engine::take_completions`]
+//! drains them (the server does this every loop iteration).
 
+use crate::backend::{BackendSpec, ExecBackend, ModelBundle, XlaBackend};
 use crate::config::EngineConfig;
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::sampling;
-use crate::kvcache::{CacheLayout, KvCache, SlotAllocator};
+use crate::coordinator::scheduler::{self, Action, SchedView, SchedulePolicy};
+use crate::coordinator::seqmgr::SequenceManager;
+use crate::kvcache::KvCache;
 use crate::metrics::Metrics;
-use crate::model::Params;
-use crate::runtime::{Exec, Runtime, Value};
 use crate::util::{Rng, Timer};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::collections::VecDeque;
-use std::sync::Arc;
 use std::time::Instant;
 
-/// Which architecture an engine serves.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Arch {
-    Gqa,
-    Mla { rank: usize },
-}
+// Re-exported here because the engine's `Arch` predates the backend
+// layer; existing imports (`coordinator::engine::Arch`) keep working.
+pub use crate::backend::Arch;
 
-/// The compiled artifact pair + device-resident weights for one model.
-pub struct ModelBundle {
-    pub arch: Arch,
-    pub cfg_name: String,
-    pub prefill: Arc<Exec>,
-    pub decode: Arc<Exec>,
-    pub params: Params,
-    param_bufs: Vec<xla::PjRtBuffer>,
-    /// Host literals backing `param_bufs` — kept alive for the bundle's
-    /// lifetime because PJRT host->device transfers are asynchronous.
-    _param_lits: Vec<xla::Literal>,
-    pub layout: CacheLayout,
-    pub batch: usize,
-    pub prefill_batch: usize,
-    pub capacity: usize,
-}
-
-impl ModelBundle {
-    pub fn load(
-        rt: &Runtime,
-        cfg_name: &str,
-        arch: Arch,
-        batch: usize,
-        params: Params,
-    ) -> Result<ModelBundle> {
-        let (prefill_name, decode_name) = match arch {
-            Arch::Gqa => (
-                format!("{cfg_name}_gqa_prefill"),
-                format!("{cfg_name}_gqa_decode_b{batch}"),
-            ),
-            Arch::Mla { rank } => (
-                format!("{cfg_name}_mla_prefill_r{rank}"),
-                format!("{cfg_name}_mla_decode_r{rank}_b{batch}"),
-            ),
-        };
-        Self::load_named(rt, cfg_name, arch, batch, params, &prefill_name, &decode_name)
-    }
-
-    /// Load with explicit artifact names (context-length variants carry a
-    /// `_t{T}` suffix on the decode artifact).
-    pub fn load_named(
-        rt: &Runtime,
-        cfg_name: &str,
-        arch: Arch,
-        batch: usize,
-        params: Params,
-        prefill_name: &str,
-        decode_name: &str,
-    ) -> Result<ModelBundle> {
-        let prefill = rt.load(prefill_name)?;
-        let decode = rt.load(decode_name)?;
-        params.check_against(&decode.spec)?;
-        let cfg = &decode.spec.config;
-        let layout = match arch {
-            Arch::Gqa => CacheLayout::Gqa { g: cfg.n_kv_groups, d: cfg.head_dim },
-            Arch::Mla { rank } => CacheLayout::Mla { r: rank, dr: cfg.head_dim },
-        };
-        let mut param_bufs = Vec::new();
-        let mut _param_lits = Vec::new();
-        for v in params.values() {
-            let (buf, lit) = prefill.upload_owned(&v)?;
-            param_bufs.push(buf);
-            _param_lits.push(lit);
-        }
-        let prefill_batch = prefill.spec.batch.context("prefill batch")?;
-        // Cache capacity comes from the decode artifact's cache input
-        // shape [L, B, T, ...] (context-length variants differ from the
-        // config's max_seq).
-        let n = decode.spec.params.len();
-        let capacity = decode.spec.inputs[n + 2].shape[2];
-        Ok(ModelBundle {
-            arch,
-            cfg_name: cfg_name.to_string(),
-            prefill,
-            decode,
-            params,
-            param_bufs,
-            _param_lits,
-            layout,
-            batch,
-            prefill_batch,
-            capacity,
-        })
-    }
-
-    pub fn n_layers(&self) -> usize {
-        self.decode.spec.config.n_layers
-    }
-
-    pub fn vocab(&self) -> usize {
-        self.decode.spec.config.vocab
-    }
-}
-
-struct SeqState {
-    req: Request,
-    slot: usize,
-    /// Position the next decode step writes to (prompt_len initially).
-    next_pos: usize,
-    last_token: i32,
-    generated: Vec<i32>,
-    admitted: Instant,
-    enqueued: Instant,
-}
-
-/// Continuous-batching serving engine for one model bundle.
+/// Continuous-batching serving engine over one execution backend.
 pub struct Engine {
-    pub bundle: ModelBundle,
+    backend: Box<dyn ExecBackend>,
     pub cache: KvCache,
-    slots: SlotAllocator,
-    seqs: Vec<Option<SeqState>>,
+    seqs: SequenceManager,
     queue: VecDeque<(Request, Instant)>,
-    pub completions: Vec<Completion>,
+    completions: Vec<Completion>,
     pub metrics: Metrics,
     rng: Rng,
     cfg: EngineConfig,
+    policy: Box<dyn SchedulePolicy>,
+    /// (active-before, admitted request ids) per admission — the
+    /// observable ordering trace the policy tests assert on. Bounded to
+    /// the most recent [`ADMISSION_LOG_CAP`] entries so a long-running
+    /// server does not accumulate history.
+    admission_log: Vec<(usize, Vec<u64>)>,
 }
 
+/// Most recent admissions kept for inspection (`Engine::admission_log`).
+const ADMISSION_LOG_CAP: usize = 64;
+
 impl Engine {
-    pub fn new(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
-        let cache = KvCache::new(
-            bundle.layout,
-            bundle.n_layers(),
-            bundle.batch,
-            bundle.capacity,
-        );
-        let batch = bundle.batch;
+    /// Build over any backend (the hermetic path: `Engine::new(SimBackend::gqa(8), cfg)`).
+    pub fn new<B: ExecBackend + 'static>(backend: B, cfg: EngineConfig) -> Engine {
+        Engine::from_boxed(Box::new(backend), cfg)
+    }
+
+    pub fn from_boxed(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Engine {
+        let spec = backend.spec().clone();
+        let cache = spec.new_cache();
         Engine {
-            bundle,
+            backend,
             cache,
-            slots: SlotAllocator::new(batch),
-            seqs: (0..batch).map(|_| None).collect(),
+            seqs: SequenceManager::new(spec.batch, spec.capacity),
             queue: VecDeque::new(),
             completions: Vec::new(),
             metrics: Metrics::new(),
             rng: Rng::new(cfg.seed),
+            policy: scheduler::build(cfg.policy),
             cfg,
+            admission_log: Vec::new(),
         }
+    }
+
+    /// Build over compiled artifacts (the XLA path).
+    pub fn with_bundle(bundle: ModelBundle, cfg: EngineConfig) -> Engine {
+        Engine::new(XlaBackend::new(bundle), cfg)
+    }
+
+    pub fn spec(&self) -> &BackendSpec {
+        self.backend.spec()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -183,22 +99,48 @@ impl Engine {
     }
 
     pub fn n_active(&self) -> usize {
-        self.slots.n_active()
+        self.seqs.n_active()
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.slots.n_active() == 0
+        self.queue.is_empty() && self.seqs.n_active() == 0
     }
 
-    /// One scheduler iteration: admit new requests (prefill) if there is
-    /// room, otherwise advance all active sequences one decode step.
-    pub fn step(&mut self) -> Result<()> {
-        if !self.queue.is_empty() && self.slots.n_free() > 0 {
-            self.admit()?;
-        } else if self.slots.n_active() > 0 {
-            self.decode_step()?;
+    /// Drain all finished requests accumulated since the last call.
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Admission trace: (active sequences at admission time, request ids
+    /// admitted), one entry per prefill call.
+    pub fn admission_log(&self) -> &[(usize, Vec<u64>)] {
+        &self.admission_log
+    }
+
+    /// One scheduler iteration: the policy picks admission or decode.
+    pub fn step(&mut self) -> Result<Action> {
+        let view = SchedView {
+            queued: self.queue.len(),
+            active: self.seqs.n_active(),
+            free_slots: self.seqs.n_free(),
+            prefill_batch: self.backend.spec().prefill_batch,
+        };
+        let action = self.policy.decide(&view);
+        match action {
+            Action::Admit(n) => self.admit(n)?,
+            Action::Decode => self.decode_step()?,
+            Action::Idle => {
+                if !self.is_idle() {
+                    bail!(
+                        "policy `{}` idled with pending work ({} queued, {} active)",
+                        self.policy.name(),
+                        self.queue.len(),
+                        self.seqs.n_active()
+                    );
+                }
+            }
         }
-        Ok(())
+        Ok(action)
     }
 
     /// Run until all submitted work is complete.
@@ -209,78 +151,79 @@ impl Engine {
         Ok(())
     }
 
-    /// Convenience: submit prompts, run, return completions in order.
+    /// Convenience: submit prompts, run, return all drained completions
+    /// in request-id order.
     pub fn generate(&mut self, reqs: Vec<Request>) -> Result<Vec<Completion>> {
-        let first = self.completions.len();
         for r in reqs {
             self.submit(r);
         }
         self.run_to_completion()?;
-        let mut out: Vec<Completion> = self.completions[first..].to_vec();
+        let mut out = self.take_completions();
         out.sort_by_key(|c| c.id);
         Ok(out)
     }
 
     // -- admission / prefill -------------------------------------------------
 
-    fn admit(&mut self) -> Result<()> {
-        let n = self
-            .queue
-            .len()
-            .min(self.slots.n_free())
-            .min(self.bundle.prefill_batch);
+    fn admit(&mut self, want: usize) -> Result<()> {
+        let spec = self.backend.spec().clone();
+        let n = want
+            .min(self.queue.len())
+            .min(self.seqs.n_free())
+            .min(spec.prefill_batch);
+        if n == 0 {
+            return Ok(());
+        }
+        let active_before = self.seqs.n_active();
         let mut admitted = Vec::with_capacity(n);
         for _ in 0..n {
             let (req, enq) = self.queue.pop_front().unwrap();
             admitted.push((req, enq));
         }
 
-        // The prefill artifact has its own (fixed) sequence length; the
-        // decode cache capacity may be shorter for context-length variants
-        // (splice truncates).
-        let t = self.bundle.prefill.spec.inputs.last().unwrap().shape[1];
-        let max_prompt = self.bundle.capacity.min(t) - 1;
-        let bp = self.bundle.prefill_batch;
+        // The prefill entry point has its own (fixed) sequence length;
+        // the decode cache capacity may be shorter for context-length
+        // variants (splice truncates).
+        let t = spec.prefill_seq;
+        let max_prompt = spec.max_prompt();
+        let bp = spec.prefill_batch;
         let mut tokens = vec![0i32; bp * t];
         for (row, (req, _)) in admitted.iter().enumerate() {
             let len = req.prompt.len().min(max_prompt);
             tokens[row * t..row * t + len].copy_from_slice(&req.prompt[..len]);
         }
 
+        let prefill_started = Instant::now();
         let timer = Timer::start();
-        let outs = self.bundle.prefill.run_b(
-            &self.bundle.param_bufs,
-            &[Value::i32_mat(tokens, &[bp, t])],
-        )?;
+        let out = self.backend.prefill(&tokens)?;
         self.metrics.observe("prefill_s", timer.elapsed_s());
-        let (logits, caches) = outs.split_first().context("prefill outputs")?;
+        self.metrics.observe("admit_n", n as f64);
 
         let now = Instant::now();
-        let vocab = self.bundle.vocab();
+        let vocab = spec.vocab;
+        let mut ids = Vec::with_capacity(n);
         for (row, (req, enq)) in admitted.into_iter().enumerate() {
-            let slot = self.slots.alloc(req.id).context("slot alloc")?;
-            self.cache.splice_from(caches, row, slot)?;
             let plen = req.prompt.len().min(max_prompt);
             self.metrics.inc("prefill_tokens", plen as u64);
-            // logits [Bp, T, V]: next token follows position plen-1.
-            let off = (row * t + (plen - 1)) * vocab;
+            // logits [Bp, T, V]: the next token follows position plen-1.
+            // An empty prompt clamps to position 0 (the artifact's pad
+            // row) instead of underflowing — see the regression test.
+            let off = (row * t + plen.saturating_sub(1)) * vocab;
             let temp = self.effective_temp(&req);
             let first_tok = sampling::sample(
-                &logits.data[off..off + vocab],
+                &out.logits.data[off..off + vocab],
                 temp,
                 &mut self.rng,
             );
-            self.seqs[slot] = Some(SeqState {
-                next_pos: plen,
-                last_token: first_tok,
-                generated: vec![first_tok],
-                admitted: now,
-                enqueued: enq,
-                slot,
-                req,
-            });
+            ids.push(req.id);
+            let slot = self.seqs.admit(req, plen, first_tok, enq, prefill_started, now)?;
+            self.cache.splice_from(&out.caches, row, slot)?;
             // A prompt that already fills the cache finishes immediately.
             self.maybe_complete(slot)?;
+        }
+        self.admission_log.push((active_before, ids));
+        if self.admission_log.len() > ADMISSION_LOG_CAP {
+            self.admission_log.remove(0);
         }
         Ok(())
     }
@@ -296,81 +239,50 @@ impl Engine {
     // -- decode ---------------------------------------------------------------
 
     fn decode_step(&mut self) -> Result<()> {
-        let b = self.bundle.batch;
-        let mut token = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        for slot in 0..b {
-            if let Some(seq) = &self.seqs[slot] {
-                token[slot] = seq.last_token;
-                pos[slot] = seq.next_pos as i32;
-            }
-        }
+        let (token, pos) = self.seqs.decode_io();
         let timer = Timer::start();
-        let outs = self.bundle.decode.run_b_mixed(
-            &self.bundle.param_bufs,
-            &[Value::i32_vec(token), Value::i32_vec(pos)],
-            &[&self.cache.bufs[0], &self.cache.bufs[1]],
-        )?;
+        let logits = self.backend.decode(&token, &pos, &mut self.cache)?;
         self.metrics.observe("decode_s", timer.elapsed_s());
-        let mut it = outs.into_iter();
-        let logits = it.next().context("decode logits")?;
-        let c0 = it.next().context("cache0")?;
-        let c1 = it.next().context("cache1")?;
-        self.cache.store(vec![c0, c1])?;
 
-        let vocab = self.bundle.vocab();
-        let active = self.slots.active_slots();
+        let vocab = self.backend.spec().vocab;
+        let active = self.seqs.active_slots();
         self.metrics.inc("decode_tokens", active.len() as u64);
         self.metrics.inc("decode_steps", 1);
         for slot in active {
             let temp = {
-                let seq = self.seqs[slot].as_ref().unwrap();
+                let seq = self.seqs.seq(slot).expect("active slot has state");
                 self.effective_temp(&seq.req)
             };
             let row = &logits.data[slot * vocab..(slot + 1) * vocab];
             let tok = sampling::sample(row, temp, &mut self.rng);
-            let seq = self.seqs[slot].as_mut().unwrap();
-            seq.next_pos += 1;
-            seq.last_token = tok;
-            seq.generated.push(tok);
+            self.seqs.push_token(slot, tok)?;
             self.maybe_complete(slot)?;
         }
         Ok(())
     }
 
     fn maybe_complete(&mut self, slot: usize) -> Result<()> {
-        let done = {
-            let seq = self.seqs[slot].as_ref().unwrap();
-            let max_new = seq.req.max_new_tokens.min(
-                self.bundle.capacity.saturating_sub(seq.req.prompt.len()),
-            );
-            seq.generated.len() >= max_new.max(1)
-                || seq.next_pos + 1 >= self.bundle.capacity
-        };
-        if !done {
+        if !self.seqs.is_done(slot) {
             return Ok(());
         }
-        let seq = self.seqs[slot].take().unwrap();
-        self.slots.release(seq.slot)?;
+        let c = self.seqs.finish(slot)?;
         self.metrics.inc("completed", 1);
-        self.completions.push(Completion {
-            id: seq.req.id,
-            prompt_len: seq.req.prompt.len(),
-            tokens: seq.generated,
-            latency_s: seq.enqueued.elapsed().as_secs_f64(),
-            queue_s: (seq.admitted - seq.enqueued).as_secs_f64(),
-        });
+        self.metrics.observe("latency_s", c.latency_s);
+        self.metrics.observe("queue_s", c.queue_s);
+        self.metrics.observe("ttft_s", c.ttft_s);
+        if c.tpot_s > 0.0 {
+            self.metrics.observe("tpot_s", c.tpot_s);
+        }
+        self.completions.push(c);
         Ok(())
     }
 
     /// Decode throughput measured so far (generated tokens / decode time).
+    /// Uses lifetime totals, so it stays exact on long-running servers
+    /// where the percentile window has trimmed old samples.
     pub fn decode_throughput(&self) -> f64 {
         let toks = self.metrics.counter("decode_tokens") as f64;
-        let time: f64 = self
-            .metrics
-            .stats("decode_s")
-            .map(|s| s.samples.iter().sum())
-            .unwrap_or(0.0);
+        let time = self.metrics.total("decode_s");
         if time > 0.0 {
             toks / time
         } else {
@@ -379,14 +291,61 @@ impl Engine {
     }
 
     pub fn slots_check(&self) -> Result<()> {
-        self.slots.check_invariants()?;
-        for (i, s) in self.seqs.iter().enumerate() {
-            match (s, self.slots.owner_of(i)) {
-                (Some(seq), Some(owner)) if seq.req.id == owner => {}
-                (None, None) => {}
-                _ => bail!("slot {i} state and allocator disagree"),
-            }
-        }
-        Ok(())
+        self.seqs.check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+
+    fn engine(seed: u64) -> Engine {
+        Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig { seed, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn admit_decode_complete_loop() {
+        let mut e = engine(0);
+        let comps = e
+            .generate(vec![
+                Request::from_text(0, "hello", 4),
+                Request::from_text(1, "world!", 6),
+            ])
+            .unwrap();
+        assert_eq!(comps.len(), 2);
+        assert_eq!(comps[0].tokens.len(), 4);
+        assert_eq!(comps[1].tokens.len(), 6);
+        assert!(e.is_idle());
+        e.slots_check().unwrap();
+    }
+
+    #[test]
+    fn empty_prompt_does_not_panic() {
+        // Regression: plen == 0 used to underflow `(plen - 1)` when
+        // indexing prefill logits.
+        let mut e = engine(1);
+        let comps = e.generate(vec![Request::new(0, vec![], 3)]).unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].prompt_len, 0);
+        assert_eq!(comps[0].tokens.len(), 3);
+        e.slots_check().unwrap();
+    }
+
+    #[test]
+    fn completions_drain_instead_of_growing() {
+        let mut e = engine(2);
+        e.submit(Request::from_text(0, "abc", 2));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_completions().len(), 1);
+        assert!(e.take_completions().is_empty(), "drained");
+        e.submit(Request::from_text(1, "def", 2));
+        e.run_to_completion().unwrap();
+        let again = e.take_completions();
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].id, 1);
     }
 }

@@ -1,15 +1,28 @@
-//! L3 coordinator — the serving system around the AOT-compiled models:
-//! request queue, continuous batcher, prefill/decode scheduler, sampling,
-//! and per-request accounting.
+//! L3 coordinator — the serving system around the execution backends:
+//! request queue, continuous batcher, pluggable prefill/decode scheduler,
+//! sequence/slot lifecycle, sampling, and per-request accounting.
 //!
 //! This is the paper's deployment story: after TransMLA conversion the
 //! MLA model drops into the same engine as the GQA baseline (same slots,
 //! same scheduler), but with the latent cache layout — the serving-side
 //! speedup of Sec. 5.4 falls out of the smaller per-step cache traffic.
+//!
+//! Layering (see `backend` for the execution side):
+//!
+//!   * [`engine`] — the continuous-batching loop over `dyn ExecBackend`;
+//!   * [`scheduler`] — `SchedulePolicy` (admit-first / decode-first /
+//!     hybrid) deciding admission vs decode each iteration;
+//!   * [`seqmgr`] — `SequenceManager`: slot lifecycle, length tracking,
+//!     completion rules, TTFT/TPOT accounting.
 
 pub mod engine;
 pub mod request;
 pub mod sampling;
+pub mod scheduler;
+pub mod seqmgr;
 
-pub use engine::{Engine, ModelBundle};
+pub use crate::backend::{Arch, ModelBundle};
+pub use engine::Engine;
 pub use request::{Completion, Request};
+pub use scheduler::{Action, SchedView, SchedulePolicy};
+pub use seqmgr::SequenceManager;

@@ -25,10 +25,15 @@ pub struct Completion {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
-    /// Wall-clock seconds from admission to completion.
+    /// Wall-clock seconds from enqueue to completion.
     pub latency_s: f64,
-    /// Seconds spent queued before prefill.
+    /// Seconds spent queued before this request's prefill started.
     pub queue_s: f64,
+    /// Time to first token (enqueue -> prefill done), seconds; always
+    /// >= `queue_s` by the prefill duration.
+    pub ttft_s: f64,
+    /// Mean time per decoded output token, seconds (0 if none decoded).
+    pub tpot_s: f64,
 }
 
 impl Completion {
@@ -56,6 +61,8 @@ mod tests {
             tokens: vec![111, 107],
             latency_s: 0.0,
             queue_s: 0.0,
+            ttft_s: 0.0,
+            tpot_s: 0.0,
         };
         assert_eq!(c.text(), "ok");
     }

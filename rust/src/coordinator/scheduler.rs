@@ -1,0 +1,204 @@
+//! Scheduling policies: who gets the next engine iteration — queued
+//! requests (prefill/admission) or active sequences (decode)?
+//!
+//! In the memory-bound decode regime TransMLA targets, this choice
+//! dominates tail latency: a prefill call stalls every active decode for
+//! a full fixed-shape prefill, so admitting one request into one free
+//! slot can cost every running sequence a step. The engine therefore
+//! delegates the choice to a [`SchedulePolicy`] selected via
+//! `EngineConfig::policy`:
+//!
+//!   * [`AdmitFirst`] — admit whenever a slot is free (the original fused
+//!     engine's behaviour; best TTFT, worst TPOT under load);
+//!   * [`DecodeFirst`] — drain the active batch before admitting (best
+//!     TPOT, worst TTFT);
+//!   * [`Hybrid`] — admit only when at least `min_free` slots are free
+//!     (or nothing is running), amortising each prefill stall over a
+//!     bigger admission batch.
+
+use crate::config::PolicyKind;
+
+/// What the engine should do this iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Admit up to `n` queued requests through one prefill call.
+    Admit(usize),
+    /// Advance all active slots one decode step.
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// Scheduler-visible engine state.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedView {
+    pub queued: usize,
+    pub active: usize,
+    pub free_slots: usize,
+    pub prefill_batch: usize,
+}
+
+impl SchedView {
+    /// Largest admissible batch right now.
+    fn admissible(&self) -> usize {
+        self.queued.min(self.free_slots).min(self.prefill_batch)
+    }
+}
+
+pub trait SchedulePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Pick the next action. Contract: never return `Idle` while
+    /// `queued + active > 0` and progress is possible (the engine treats
+    /// that as a policy bug and fails loudly instead of spinning).
+    fn decide(&mut self, v: &SchedView) -> Action;
+}
+
+/// Admit whenever a slot is free — the seed engine's behaviour.
+pub struct AdmitFirst;
+
+impl SchedulePolicy for AdmitFirst {
+    fn name(&self) -> &'static str {
+        "admit-first"
+    }
+
+    fn decide(&mut self, v: &SchedView) -> Action {
+        if v.admissible() > 0 {
+            Action::Admit(v.admissible())
+        } else if v.active > 0 {
+            Action::Decode
+        } else {
+            Action::Idle
+        }
+    }
+}
+
+/// Drain the active batch before admitting anything new.
+pub struct DecodeFirst;
+
+impl SchedulePolicy for DecodeFirst {
+    fn name(&self) -> &'static str {
+        "decode-first"
+    }
+
+    fn decide(&mut self, v: &SchedView) -> Action {
+        if v.active > 0 {
+            Action::Decode
+        } else if v.admissible() > 0 {
+            Action::Admit(v.admissible())
+        } else {
+            Action::Idle
+        }
+    }
+}
+
+/// Admit only when at least `min_free` slots are free (or the engine is
+/// fully drained), so a single free slot never stalls a full batch of
+/// active decodes for one prefill.
+pub struct Hybrid {
+    pub min_free: usize,
+}
+
+impl SchedulePolicy for Hybrid {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn decide(&mut self, v: &SchedView) -> Action {
+        // Note: when nothing is active, the first branch always admits
+        // (if anything is admissible), so the policy cannot deadlock
+        // below the threshold.
+        let n = v.admissible();
+        if n > 0 && (v.active == 0 || v.free_slots >= self.min_free.max(1)) {
+            Action::Admit(n)
+        } else if v.active > 0 {
+            Action::Decode
+        } else {
+            Action::Idle
+        }
+    }
+}
+
+/// Instantiate the policy selected in the engine config.
+pub fn build(kind: PolicyKind) -> Box<dyn SchedulePolicy> {
+    match kind {
+        PolicyKind::AdmitFirst => Box::new(AdmitFirst),
+        PolicyKind::DecodeFirst => Box::new(DecodeFirst),
+        PolicyKind::Hybrid { min_free } => Box::new(Hybrid { min_free }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(queued: usize, active: usize, free: usize) -> SchedView {
+        SchedView { queued, active, free_slots: free, prefill_batch: 8 }
+    }
+
+    #[test]
+    fn admit_first_matches_seed_behaviour() {
+        let mut p = AdmitFirst;
+        assert_eq!(p.decide(&v(3, 0, 8)), Action::Admit(3));
+        assert_eq!(p.decide(&v(10, 7, 1)), Action::Admit(1), "one free slot admits");
+        assert_eq!(p.decide(&v(0, 5, 3)), Action::Decode);
+        assert_eq!(p.decide(&v(4, 8, 0)), Action::Decode);
+        assert_eq!(p.decide(&v(0, 0, 8)), Action::Idle);
+    }
+
+    #[test]
+    fn decode_first_drains_before_admitting() {
+        let mut p = DecodeFirst;
+        assert_eq!(p.decide(&v(10, 7, 1)), Action::Decode);
+        assert_eq!(p.decide(&v(10, 0, 8)), Action::Admit(8));
+        assert_eq!(p.decide(&v(0, 0, 8)), Action::Idle);
+    }
+
+    #[test]
+    fn hybrid_waits_for_threshold_but_never_deadlocks() {
+        let mut p = Hybrid { min_free: 4 };
+        // One free slot no longer stalls every active decode.
+        assert_eq!(p.decide(&v(10, 7, 1)), Action::Decode);
+        assert_eq!(p.decide(&v(10, 4, 4)), Action::Admit(4));
+        // Fully drained: admit regardless of the threshold.
+        assert_eq!(p.decide(&v(2, 0, 8)), Action::Admit(2));
+        // min_free = 1 degrades to admit-first.
+        let mut p1 = Hybrid { min_free: 1 };
+        assert_eq!(p1.decide(&v(10, 7, 1)), Action::Admit(1));
+    }
+
+    #[test]
+    fn no_policy_idles_with_pending_work() {
+        let mut policies: Vec<Box<dyn SchedulePolicy>> = vec![
+            Box::new(AdmitFirst),
+            Box::new(DecodeFirst),
+            Box::new(Hybrid { min_free: 3 }),
+            Box::new(Hybrid { min_free: 0 }),
+        ];
+        let batch = 4usize;
+        for p in policies.iter_mut() {
+            for queued in 0..4 {
+                for active in 0..=batch {
+                    let view = SchedView {
+                        queued,
+                        active,
+                        free_slots: batch - active,
+                        prefill_batch: 2,
+                    };
+                    let act = p.decide(&view);
+                    if queued + active > 0 {
+                        assert_ne!(
+                            act,
+                            Action::Idle,
+                            "{} idled on {view:?}",
+                            p.name()
+                        );
+                    }
+                    if let Action::Admit(n) = act {
+                        assert!(n > 0 && n <= view.admissible(), "{} over-admits", p.name());
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Sequence/slot lifecycle: one place that owns per-sequence state,
+//! slot allocation, per-slot length tracking, completion rules, and the
+//! TTFT / TPOT / latency accounting that the metrics and the server
+//! report. The engine talks to the backend; this type tracks what every
+//! slot is doing.
+
+use crate::coordinator::request::{Completion, Request};
+use crate::kvcache::SlotAllocator;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// One active sequence pinned to a decode slot.
+pub struct SeqState {
+    pub req: Request,
+    pub slot: usize,
+    /// Effective prompt length after clamping to the backend geometry.
+    pub prompt_len: usize,
+    /// Position the next decode step writes to (prompt_len initially).
+    pub next_pos: usize,
+    pub last_token: i32,
+    pub generated: Vec<i32>,
+    pub enqueued: Instant,
+    /// When this request's prefill call started (end of queueing).
+    pub prefill_started: Instant,
+    /// When prefill finished and the first token existed (TTFT point).
+    pub admitted: Instant,
+}
+
+/// Owns `SeqState` and slot lifecycle for one engine.
+pub struct SequenceManager {
+    slots: SlotAllocator,
+    seqs: Vec<Option<SeqState>>,
+    /// Decode cache capacity T (completion bound).
+    capacity: usize,
+}
+
+impl SequenceManager {
+    pub fn new(batch: usize, capacity: usize) -> SequenceManager {
+        SequenceManager {
+            slots: SlotAllocator::new(batch),
+            seqs: (0..batch).map(|_| None).collect(),
+            capacity,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.n_active()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.slots.n_free()
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.slots.active_slots()
+    }
+
+    pub fn seq(&self, slot: usize) -> Option<&SeqState> {
+        self.seqs.get(slot).and_then(Option::as_ref)
+    }
+
+    /// Bind a freshly prefilled request to a free slot.
+    pub fn admit(
+        &mut self,
+        req: Request,
+        prompt_len: usize,
+        first_token: i32,
+        enqueued: Instant,
+        prefill_started: Instant,
+        now: Instant,
+    ) -> Result<usize> {
+        let slot = self.slots.alloc(req.id).context("slot alloc")?;
+        self.seqs[slot] = Some(SeqState {
+            prompt_len,
+            next_pos: prompt_len,
+            last_token: first_token,
+            generated: vec![first_token],
+            enqueued,
+            prefill_started,
+            admitted: now,
+            slot,
+            req,
+        });
+        Ok(slot)
+    }
+
+    /// Token + write-position vectors for the next decode call
+    /// (idle slots contribute 0/0; backends mask them by position).
+    pub fn decode_io(&self) -> (Vec<i32>, Vec<i32>) {
+        let b = self.batch();
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for (slot, s) in self.seqs.iter().enumerate() {
+            if let Some(seq) = s {
+                token[slot] = seq.last_token;
+                pos[slot] = seq.next_pos as i32;
+            }
+        }
+        (token, pos)
+    }
+
+    /// Record one decoded token for an active slot.
+    pub fn push_token(&mut self, slot: usize, tok: i32) -> Result<()> {
+        let seq = self.seqs[slot].as_mut().context("push on idle slot")?;
+        seq.next_pos += 1;
+        seq.last_token = tok;
+        seq.generated.push(tok);
+        Ok(())
+    }
+
+    /// Has this sequence hit its token budget or the cache capacity?
+    pub fn is_done(&self, slot: usize) -> bool {
+        match &self.seqs[slot] {
+            None => false,
+            Some(seq) => {
+                let max_new = seq
+                    .req
+                    .max_new_tokens
+                    .min(self.capacity.saturating_sub(seq.prompt_len));
+                seq.generated.len() >= max_new.max(1)
+                    || seq.next_pos + 1 >= self.capacity
+            }
+        }
+    }
+
+    /// Release the slot and produce the completion record with latency,
+    /// queueing, TTFT, and TPOT accounting.
+    pub fn finish(&mut self, slot: usize) -> Result<Completion> {
+        let seq = match self.seqs[slot].take() {
+            Some(s) => s,
+            None => bail!("finish on idle slot {slot}"),
+        };
+        self.slots.release(seq.slot)?;
+        let now = Instant::now();
+        let latency_s = now.duration_since(seq.enqueued).as_secs_f64();
+        // queue_s ends when prefill starts; ttft_s additionally includes
+        // the prefill itself (first token exists at `admitted`).
+        let queue_s = seq.prefill_started.duration_since(seq.enqueued).as_secs_f64();
+        let ttft_s = seq.admitted.duration_since(seq.enqueued).as_secs_f64();
+        let decoded = seq.generated.len().saturating_sub(1);
+        let tpot_s = if decoded > 0 {
+            now.duration_since(seq.admitted).as_secs_f64() / decoded as f64
+        } else {
+            0.0
+        };
+        Ok(Completion {
+            id: seq.req.id,
+            prompt_len: seq.req.prompt.len(),
+            tokens: seq.generated,
+            latency_s,
+            queue_s,
+            ttft_s,
+            tpot_s,
+        })
+    }
+
+    /// Slot allocator and per-slot state must agree exactly.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.slots.check_invariants()?;
+        for (i, s) in self.seqs.iter().enumerate() {
+            match (s, self.slots.owner_of(i)) {
+                (Some(seq), Some(owner)) if seq.req.id == owner => {}
+                (None, None) => {}
+                _ => bail!("slot {i} state and allocator disagree"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, plen: usize, max_new: usize) -> Request {
+        Request::new(id, vec![1; plen], max_new)
+    }
+
+    #[test]
+    fn admit_track_finish_cycle() {
+        let mut m = SequenceManager::new(2, 32);
+        let t0 = Instant::now();
+        let slot = m.admit(req(7, 3, 4), 3, 42, t0, t0, t0).unwrap();
+        assert_eq!(m.n_active(), 1);
+        assert_eq!(m.seq(slot).unwrap().next_pos, 3);
+        assert!(!m.is_done(slot), "one token of four");
+        m.push_token(slot, 43).unwrap();
+        m.push_token(slot, 44).unwrap();
+        m.push_token(slot, 45).unwrap();
+        assert!(m.is_done(slot));
+        let c = m.finish(slot).unwrap();
+        assert_eq!(c.id, 7);
+        assert_eq!(c.tokens, vec![42, 43, 44, 45]);
+        assert_eq!(m.n_active(), 0);
+        m.check_invariants().unwrap();
+        assert!(m.finish(slot).is_err(), "double finish must fail");
+    }
+
+    #[test]
+    fn capacity_bounds_generation() {
+        let mut m = SequenceManager::new(1, 8);
+        let t0 = Instant::now();
+        // Prompt of 6 in capacity 8: at most 2 new tokens fit.
+        let slot = m.admit(req(1, 6, 100), 6, 9, t0, t0, t0).unwrap();
+        m.push_token(slot, 9).unwrap();
+        assert!(m.is_done(slot), "next_pos+1 reached capacity");
+    }
+
+    #[test]
+    fn empty_prompt_still_yields_a_token() {
+        let mut m = SequenceManager::new(1, 8);
+        let t0 = Instant::now();
+        let slot = m.admit(req(1, 0, 0), 0, 5, t0, t0, t0).unwrap();
+        // max_new 0 clamps to 1: the prefill token completes it.
+        assert!(m.is_done(slot));
+        let c = m.finish(slot).unwrap();
+        assert_eq!(c.tokens, vec![5]);
+        assert_eq!(c.prompt_len, 0);
+    }
+
+    #[test]
+    fn decode_io_masks_idle_slots() {
+        let mut m = SequenceManager::new(3, 16);
+        let t0 = Instant::now();
+        let slot = m.admit(req(1, 2, 4), 2, 77, t0, t0, t0).unwrap();
+        let (tok, pos) = m.decode_io();
+        for s in 0..3 {
+            if s == slot {
+                assert_eq!((tok[s], pos[s]), (77, 2));
+            } else {
+                assert_eq!((tok[s], pos[s]), (0, 0));
+            }
+        }
+    }
+}

@@ -465,7 +465,7 @@ fn measure_throughput(
     let bundle = ModelBundle::load_named(
         ctx.rt, &ctx.cfg_name, arch, batch, params, &prefill_name, &decode_name,
     )?;
-    let mut engine = Engine::new(bundle, EngineConfig::default());
+    let mut engine = Engine::with_bundle(bundle, EngineConfig::default());
 
     // Paper's protocol: input length = output length = ctx/2.
     let half = (ctx_len / 2).min(ctx_len - 8);
@@ -509,7 +509,7 @@ pub fn table5(ctx: &ExpContext) -> Result<Json> {
     let gen_with = |params: &Params, label: &str| -> Result<Json> {
         let bundle = ModelBundle::load(ctx.rt, &ctx.cfg_name,
                                        Arch::Mla { rank }, 8, params.clone())?;
-        let mut engine = Engine::new(bundle, EngineConfig::default());
+        let mut engine = Engine::with_bundle(bundle, EngineConfig::default());
         let reqs: Vec<Request> = prompts
             .iter()
             .enumerate()

@@ -5,16 +5,57 @@
 //!
 //! * **L1/L2 (build-time Python)** — Pallas decode-attention kernels and the
 //!   JAX transformer models, AOT-lowered to HLO text in `artifacts/`.
-//! * **L3 (this crate)** — the serving coordinator (continuous batching,
-//!   KV-cache management, PJRT runtime), the full TransMLA conversion
-//!   toolchain (RoRoPE, FreqFold, BKV, joint PCA, Absorb) over an in-repo
-//!   tensor/linalg substrate, a training loop, evaluation drivers for every
-//!   table/figure in the paper, and an analytical accelerator model for the
-//!   paper's three GPU profiles.
+//! * **L3 (this crate)** — the serving stack, the full TransMLA conversion
+//!   toolchain (RoRoPE, FreqFold, BKV, joint PCA, Absorb), a training loop,
+//!   evaluation drivers for every table/figure in the paper, and an
+//!   analytical accelerator model for the paper's three GPU profiles.
 //!
-//! Python never runs on the request path: once `make artifacts` has been
-//! executed, everything here is self-contained.
+//! # Serving architecture (Backend / Scheduler / SequenceManager)
+//!
+//! The serving core is three decoupled layers:
+//!
+//! * [`backend`] — the [`backend::ExecBackend`] trait (prefill/decode over
+//!   an opaque slot-cache) with two implementations:
+//!   [`backend::XlaBackend`] executes the AOT artifacts through PJRT, and
+//!   [`backend::SimBackend`] is a deterministic pure-Rust model of the same
+//!   contract for both `CacheLayout::Gqa` and `CacheLayout::Mla`, so the
+//!   engine, server, benches, and integration tests run **hermetically on a
+//!   bare checkout** — no `make artifacts`, no XLA runtime.
+//! * [`coordinator::scheduler`] — pluggable `SchedulePolicy`
+//!   (admit-first / decode-first / hybrid), selected via
+//!   [`config::EngineConfig`]: who gets the next iteration, queued prefills
+//!   or active decodes.
+//! * [`coordinator::seqmgr`] — `SequenceManager`: slot lifecycle, per-slot
+//!   length tracking, completion rules, and TTFT/TPOT/latency accounting.
+//!
+//! [`coordinator::engine::Engine`] composes the three and exposes
+//! `submit` / `step` / `generate` / `take_completions`.
+//!
+//! # Module map
+//!
+//! | module        | role                                                    |
+//! |---------------|---------------------------------------------------------|
+//! | [`backend`]   | execution backends: `ExecBackend`, `SimBackend`, `XlaBackend`, `ModelBundle` |
+//! | [`coordinator`] | engine, scheduler policies, sequence manager, sampling, request types |
+//! | [`kvcache`]   | slot cache pool + layout-aware byte accounting (GQA vs MLA) |
+//! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
+//! | [`server`]    | TCP JSONL front-end with stats + in-band protocol errors |
+//! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |
+//! | [`config`]    | model/engine/policy/hardware configuration               |
+//! | [`convert`]   | TransMLA conversion toolchain (RoRoPE, FreqFold, BKV, PCA, Absorb) |
+//! | [`model`]     | parameter containers, init, checkpoint IO                |
+//! | [`train`]     | AOT train-step driver                                    |
+//! | [`eval`]      | perplexity/accuracy + paper experiment drivers           |
+//! | [`corpus`]    | deterministic synthetic byte corpus                      |
+//! | [`perfmodel`] | analytical GPU serving model (paper Fig. 4 / Table 4)    |
+//! | [`tensor`], [`linalg`] | dense f32 substrate for the converter          |
+//! | [`io`], [`json`], [`util`] | checkpoint archive, JSON, PRNG/timing/prop-testing |
+//!
+//! Python never runs on the request path, and with the `SimBackend` neither
+//! does XLA: a bare `cargo test -q` exercises the full admit → decode →
+//! complete loop in both cache layouts.
 
+pub mod backend;
 pub mod config;
 pub mod convert;
 pub mod coordinator;

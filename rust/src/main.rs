@@ -5,7 +5,8 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use transmla::config::EngineConfig;
+use transmla::backend::{SimBackend, SimConfig};
+use transmla::config::{EngineConfig, PolicyKind};
 use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
@@ -36,6 +37,11 @@ COMMANDS
 COMMON FLAGS
   --artifacts DIR   artifact directory (default: artifacts)
   --config NAME     model config (default: llama2tiny)
+  --backend xla|sim backend for generate/serve (default: xla; `sim` is the
+                    hermetic deterministic backend — no artifacts needed)
+  --policy P        scheduling policy: admit-first|decode-first|hybrid[:N]
+  --batch N         decode slots (sim backend; default 8)
+  --capacity N      sim cache capacity (default 256)
 ";
 
 fn main() {
@@ -104,17 +110,64 @@ fn run() -> Result<()> {
     }
     let art_dir = PathBuf::from(args.str_flag("artifacts", "artifacts"));
     let cfg_name = args.str_flag("config", "llama2tiny").to_string();
-    let rt = Runtime::new(&art_dir)?;
 
+    // The sim backend is hermetic: generate/serve must work on a bare
+    // checkout, so the artifact runtime is only constructed on the paths
+    // that execute compiled HLO.
     match args.cmd.as_str() {
-        "selfcheck" => selfcheck(&rt, &cfg_name),
-        "train" => cmd_train(&rt, &cfg_name, &args),
-        "convert" => cmd_convert(&rt, &cfg_name, &args),
-        "ppl" => cmd_ppl(&rt, &cfg_name, &args),
-        "generate" => cmd_generate(&rt, &cfg_name, &args),
-        "serve" => cmd_serve(&rt, &cfg_name, &args),
-        "exp" => cmd_exp(&rt, &cfg_name, &args),
-        other => bail!("unknown command `{other}` (try `transmla help`)"),
+        "generate" => cmd_generate(&art_dir, &cfg_name, &args),
+        "serve" => cmd_serve(&art_dir, &cfg_name, &args),
+        _ => {
+            let rt = Runtime::new(&art_dir)?;
+            match args.cmd.as_str() {
+                "selfcheck" => selfcheck(&rt, &cfg_name),
+                "train" => cmd_train(&rt, &cfg_name, &args),
+                "convert" => cmd_convert(&rt, &cfg_name, &args),
+                "ppl" => cmd_ppl(&rt, &cfg_name, &args),
+                "exp" => cmd_exp(&rt, &cfg_name, &args),
+                other => bail!("unknown command `{other}` (try `transmla help`)"),
+            }
+        }
+    }
+}
+
+/// Engine settings from the common flags.
+fn engine_cfg(args: &Args) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        policy: PolicyKind::parse(args.str_flag("policy", "admit-first"))?,
+        seed: args.usize_flag("seed", 0) as u64,
+        ..EngineConfig::default()
+    })
+}
+
+/// Build an engine for generate/serve: hermetic sim or artifact-backed.
+fn build_engine(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<Engine> {
+    let cfg = engine_cfg(args)?;
+    match args.str_flag("backend", "xla") {
+        "sim" => {
+            let batch = args.usize_flag("batch", 8);
+            let capacity = args.usize_flag("capacity", 256);
+            let base = match parse_arch(args)? {
+                Arch::Gqa => SimConfig::gqa(batch),
+                Arch::Mla { rank } => SimConfig::mla(batch, rank),
+            };
+            let sim = SimBackend::new(SimConfig {
+                capacity,
+                prefill_seq: capacity,
+                seed: cfg.seed,
+                ..base
+            })?;
+            Ok(Engine::new(sim, cfg))
+        }
+        "xla" => {
+            let rt = Runtime::new(art_dir)?;
+            let params = load_ckpt_or_init(&rt, cfg_name, args)?;
+            let arch = parse_arch(args)?;
+            let batch = args.usize_flag("batch", 8);
+            let bundle = ModelBundle::load(&rt, cfg_name, arch, batch, params)?;
+            Ok(Engine::with_bundle(bundle, cfg))
+        }
+        other => bail!("unknown backend `{other}` (xla|sim)"),
     }
 }
 
@@ -251,11 +304,8 @@ fn cmd_ppl(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_generate(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
-    let params = load_ckpt_or_init(rt, cfg_name, args)?;
-    let arch = parse_arch(args)?;
-    let bundle = ModelBundle::load(rt, cfg_name, arch, 8, params)?;
-    let mut engine = Engine::new(bundle, EngineConfig::default());
+fn cmd_generate(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
+    let mut engine = build_engine(art_dir, cfg_name, args)?;
     let prompt = args.str_flag("prompt", "the model ");
     let max_new = args.usize_flag("max-new", 64);
     let mut req = Request::from_text(0, prompt, max_new);
@@ -265,15 +315,17 @@ fn cmd_generate(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
         .unwrap_or(0.0);
     let comps = engine.generate(vec![req])?;
     println!("{prompt}{}", comps[0].text());
-    eprintln!("[{:.1} tok/s decode]", engine.decode_throughput());
+    eprintln!(
+        "[{:.1} tok/s decode | backend `{}` | policy `{}`]",
+        engine.decode_throughput(),
+        engine.spec().name,
+        engine.policy_name()
+    );
     Ok(())
 }
 
-fn cmd_serve(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
-    let params = load_ckpt_or_init(rt, cfg_name, args)?;
-    let arch = parse_arch(args)?;
-    let bundle = ModelBundle::load(rt, cfg_name, arch, 8, params)?;
-    let mut engine = Engine::new(bundle, EngineConfig::default());
+fn cmd_serve(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
+    let mut engine = build_engine(art_dir, cfg_name, args)?;
     let addr = args.str_flag("addr", "127.0.0.1:7433");
     server::serve(&mut engine, addr)
 }

@@ -4,12 +4,31 @@ use crate::util::timing::BenchStats;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Percentile summary of one latency series (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Most recent samples retained per series: percentiles are computed
+/// over a sliding window so a long-running server holds bounded memory.
+/// Lifetime aggregates (count + sum) are tracked separately and stay
+/// exact — `decode_throughput` style rates never lose trimmed history.
+const MAX_SAMPLES_PER_SERIES: usize = 4096;
+
 /// Engine-wide metrics registry.
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
     counters: BTreeMap<String, u64>,
     samples: BTreeMap<String, Vec<f64>>,
+    /// Lifetime (count, sum) per sample series, immune to window trims.
+    totals: BTreeMap<String, (u64, f64)>,
 }
 
 impl Default for Metrics {
@@ -24,6 +43,7 @@ impl Metrics {
             started: Instant::now(),
             counters: BTreeMap::new(),
             samples: BTreeMap::new(),
+            totals: BTreeMap::new(),
         }
     }
 
@@ -37,10 +57,25 @@ impl Metrics {
 
     /// Record a latency/duration sample in seconds.
     pub fn observe(&mut self, name: &str, seconds: f64) {
-        self.samples
-            .entry(name.to_string())
-            .or_default()
-            .push(seconds);
+        let t = self.totals.entry(name.to_string()).or_insert((0, 0.0));
+        t.0 += 1;
+        t.1 += seconds;
+        let v = self.samples.entry(name.to_string()).or_default();
+        if v.len() >= MAX_SAMPLES_PER_SERIES {
+            // Drop the older half; amortized O(1) per observe.
+            v.drain(..MAX_SAMPLES_PER_SERIES / 2);
+        }
+        v.push(seconds);
+    }
+
+    /// Lifetime sum of a sample series (exact even after window trims).
+    pub fn total(&self, name: &str) -> f64 {
+        self.totals.get(name).map(|t| t.1).unwrap_or(0.0)
+    }
+
+    /// Lifetime observation count of a sample series.
+    pub fn n_observed(&self, name: &str) -> u64 {
+        self.totals.get(name).map(|t| t.0).unwrap_or(0)
     }
 
     pub fn stats(&self, name: &str) -> Option<BenchStats> {
@@ -48,6 +83,28 @@ impl Metrics {
             .get(name)
             .filter(|s| !s.is_empty())
             .map(|s| BenchStats::new(s.clone()))
+    }
+
+    /// Percentile summary of a sample series (None if empty/missing).
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        self.stats(name).map(|st| Summary {
+            n: st.samples.len(),
+            mean: st.mean(),
+            p50: st.percentile(50.0),
+            p95: st.percentile(95.0),
+            p99: st.percentile(99.0),
+            max: st.max(),
+        })
+    }
+
+    /// All counters, for external reporting (server `stats` command).
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    /// Names of all recorded sample series.
+    pub fn sample_names(&self) -> Vec<String> {
+        self.samples.keys().cloned().collect()
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -67,11 +124,12 @@ impl Metrics {
         for (k, s) in &self.samples {
             let st = BenchStats::new(s.clone());
             out.push_str(&format!(
-                "{k}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms max={:.3}ms\n",
+                "{k}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms\n",
                 s.len(),
                 st.mean() * 1e3,
                 st.percentile(50.0) * 1e3,
                 st.percentile(95.0) * 1e3,
+                st.percentile(99.0) * 1e3,
                 st.max() * 1e3,
             ));
         }
@@ -100,6 +158,36 @@ mod tests {
     fn missing_series_is_none() {
         let m = Metrics::new();
         assert!(m.stats("nope").is_none());
+        assert!(m.summary("nope").is_none());
         assert_eq!(m.counter("nope"), 0);
+    }
+
+    #[test]
+    fn window_bounds_samples_but_totals_stay_exact() {
+        let mut m = Metrics::new();
+        let n = MAX_SAMPLES_PER_SERIES * 2 + 10;
+        for _ in 0..n {
+            m.observe("step", 1.0);
+        }
+        let kept = m.stats("step").unwrap().samples.len();
+        assert!(kept <= MAX_SAMPLES_PER_SERIES, "window leaked: {kept}");
+        assert_eq!(m.n_observed("step"), n as u64);
+        assert!((m.total("step") - n as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let mut m = Metrics::new();
+        for i in 0..100 {
+            m.observe("lat", (i + 1) as f64 / 100.0);
+        }
+        let s = m.summary("lat").unwrap();
+        assert_eq!(s.n, 100);
+        assert!((s.p50 - 0.50).abs() < 0.02, "p50={}", s.p50);
+        assert!((s.p95 - 0.95).abs() < 0.02, "p95={}", s.p95);
+        assert!((s.p99 - 0.99).abs() < 0.02, "p99={}", s.p99);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!(m.report().contains("p99="));
+        assert_eq!(m.sample_names(), vec!["lat".to_string()]);
     }
 }

@@ -2,13 +2,23 @@
 //!
 //! Protocol: one JSON object per line.
 //!   -> {"prompt": "...", "max_new": 32, "temperature": 0.7}
-//!   <- {"id": 1, "text": "...", "latency_s": 0.12, "prompt_len": 9}
-//!   -> {"cmd": "stats"}   <- {"decode_tokens": ..., "tok_per_s": ...}
-//!   -> {"cmd": "shutdown"}
+//!   <- {"id": 1, "text": "...", "latency_s": 0.12, "ttft_s": 0.02,
+//!       "tpot_s": 0.005, "prompt_len": 9}
+//!   -> {"cmd": "stats"}    <- {"counters": {...}, "policy": "...",
+//!                              "decode_s": {"p50": ..., "p95": ..., "p99": ...}, ...}
+//!   -> {"cmd": "ping"}     <- {"pong": true}
+//!   -> {"cmd": "shutdown"} <- {"ok": true}
 //!
-//! The PJRT client is not `Send`, so the engine runs on the caller's
-//! thread and connection handlers exchange plain data with it through a
-//! shared queue (acceptor threads never touch XLA state).
+//! Error paths answer in-band instead of dropping the line:
+//!   bad JSON        <- {"error": "bad json: ..."}
+//!   unknown cmd     <- {"error": "unknown cmd `...`"}
+//!   missing prompt  <- {"error": "missing prompt"}
+//!
+//! The engine runs on the caller's thread (the XLA client is not `Send`);
+//! connection handlers exchange plain data with it through a shared
+//! queue, so acceptor threads never touch backend state. Completions are
+//! drained from the engine every loop iteration (`take_completions`), so
+//! long-running servers hold no unbounded history.
 
 use crate::coordinator::{Engine, Request};
 use crate::json::Json;
@@ -19,9 +29,11 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
-struct Incoming {
-    req: Request,
-    reply: Sender<Json>,
+enum Incoming {
+    /// A generation request awaiting a completion reply.
+    Req { req: Request, reply: Sender<Json> },
+    /// A stats snapshot request (answered by the engine loop).
+    Stats { reply: Sender<Json> },
 }
 
 /// Shared state between acceptor threads and the engine loop.
@@ -52,8 +64,13 @@ impl ServerState {
     }
 }
 
+fn error_json(msg: &str) -> Json {
+    let mut err = Json::obj();
+    err.set("error", Json::Str(msg.to_string()));
+    err
+}
+
 fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
-    let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -64,9 +81,7 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
         let msg = match Json::parse(&line) {
             Ok(m) => m,
             Err(e) => {
-                let mut err = Json::obj();
-                err.set("error", Json::Str(format!("bad json: {e}")));
-                writeln!(writer, "{}", err.to_string())?;
+                writeln!(writer, "{}", error_json(&format!("bad json: {e}")).to_string())?;
                 continue;
             }
         };
@@ -80,17 +95,41 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
                 writeln!(writer, "{{\"pong\":true}}")?;
                 continue;
             }
-            _ => {}
+            Some("stats") => {
+                let (tx, rx) = channel();
+                state
+                    .incoming
+                    .lock()
+                    .unwrap()
+                    .push(Incoming::Stats { reply: tx });
+                match rx.recv() {
+                    Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
+                    Err(_) => break,
+                }
+                continue;
+            }
+            Some(other) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    error_json(&format!("unknown cmd `{other}`")).to_string()
+                )?;
+                continue;
+            }
+            None => {}
         }
-        let prompt = msg
-            .get("prompt")
-            .and_then(Json::as_str)
-            .unwrap_or("")
-            .to_string();
+        let prompt = match msg.get("prompt").and_then(Json::as_str) {
+            Some(p) if !p.is_empty() => p.to_string(),
+            _ => {
+                writeln!(writer, "{}", error_json("missing prompt").to_string())?;
+                continue;
+            }
+        };
         let max_new = msg
             .get("max_new")
             .and_then(Json::as_usize)
-            .unwrap_or(32);
+            .unwrap_or(32)
+            .max(1);
         let temperature = msg
             .get("temperature")
             .and_then(Json::as_f64)
@@ -103,15 +142,55 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
             .incoming
             .lock()
             .unwrap()
-            .push(Incoming { req, reply: tx });
+            .push(Incoming::Req { req, reply: tx });
         // Block this connection until the engine answers.
         match rx.recv() {
             Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
             Err(_) => break,
         }
     }
-    let _ = peer;
     Ok(())
+}
+
+/// Stats snapshot: counters, throughput, and p50/p95/p99 latency
+/// summaries for every recorded series (decode_s, prefill_s, latency_s,
+/// queue_s, ttft_s, tpot_s, ...).
+fn stats_json(engine: &Engine) -> Json {
+    let m = &engine.metrics;
+    let mut j = Json::obj();
+    let mut counters = Json::obj();
+    for (k, v) in m.counters() {
+        counters.set(k, Json::Num(*v as f64));
+    }
+    j.set("counters", counters);
+    j.set("policy", Json::Str(engine.policy_name().to_string()));
+    j.set("decode_tok_per_s", Json::Num(engine.decode_throughput()));
+    j.set("uptime_s", Json::Num(m.elapsed_s()));
+    for name in m.sample_names() {
+        if let Some(s) = m.summary(&name) {
+            let mut sj = Json::obj();
+            sj.set("n", Json::Num(s.n as f64));
+            sj.set("mean", Json::Num(s.mean));
+            sj.set("p50", Json::Num(s.p50));
+            sj.set("p95", Json::Num(s.p95));
+            sj.set("p99", Json::Num(s.p99));
+            sj.set("max", Json::Num(s.max));
+            j.set(&name, sj);
+        }
+    }
+    j
+}
+
+fn completion_json(c: &crate::coordinator::Completion) -> Json {
+    let mut j = Json::obj();
+    j.set("id", Json::Num(c.id as f64));
+    j.set("text", Json::Str(c.text()));
+    j.set("prompt_len", Json::Num(c.prompt_len as f64));
+    j.set("latency_s", Json::Num(c.latency_s));
+    j.set("queue_s", Json::Num(c.queue_s));
+    j.set("ttft_s", Json::Num(c.ttft_s));
+    j.set("tpot_s", Json::Num(c.tpot_s));
+    j
 }
 
 /// Run the serving loop: accepts connections on `addr`, feeds the engine,
@@ -121,7 +200,11 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("bind {addr}"))?;
     listener.set_nonblocking(true)?;
-    eprintln!("[server] listening on {addr}");
+    eprintln!(
+        "[server] listening on {addr} (backend `{}`, policy `{}`)",
+        engine.spec().name,
+        engine.policy_name()
+    );
     let state = ServerState::new();
     let mut pending: Vec<(u64, Sender<Json>)> = Vec::new();
 
@@ -139,10 +222,17 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
                 Err(e) => return Err(e.into()),
             }
         }
-        // Drain new requests into the engine.
+        // Drain new work into the engine; answer stats immediately.
         for inc in state.incoming.lock().unwrap().drain(..) {
-            pending.push((inc.req.id, inc.reply));
-            engine.submit(inc.req);
+            match inc {
+                Incoming::Req { req, reply } => {
+                    pending.push((req.id, reply));
+                    engine.submit(req);
+                }
+                Incoming::Stats { reply } => {
+                    let _ = reply.send(stats_json(engine));
+                }
+            }
         }
         // Advance the engine.
         if !engine.is_idle() {
@@ -153,19 +243,12 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
         } else {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
-        // Deliver completions.
-        if !pending.is_empty() {
-            let done: Vec<_> = engine.completions.drain(..).collect();
-            for c in done {
-                if let Some(idx) = pending.iter().position(|(id, _)| *id == c.id) {
-                    let (_, tx) = pending.swap_remove(idx);
-                    let mut j = Json::obj();
-                    j.set("id", Json::Num(c.id as f64));
-                    j.set("text", Json::Str(c.text()));
-                    j.set("prompt_len", Json::Num(c.prompt_len as f64));
-                    j.set("latency_s", Json::Num(c.latency_s));
-                    let _ = tx.send(j);
-                }
+        // Deliver completions (drained every iteration so the history
+        // cannot grow without bound in server mode).
+        for c in engine.take_completions() {
+            if let Some(idx) = pending.iter().position(|(id, _)| *id == c.id) {
+                let (_, tx) = pending.swap_remove(idx);
+                let _ = tx.send(completion_json(&c));
             }
         }
     }
@@ -173,15 +256,26 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
 
 /// Minimal client helper (used by tests and examples).
 pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<Json> {
-    let mut stream = TcpStream::connect(addr)?;
     let mut msg = Json::obj();
     msg.set("prompt", Json::Str(prompt.into()));
     msg.set("max_new", Json::Num(max_new as f64));
-    writeln!(stream, "{}", msg.to_string())?;
+    client_line(addr, &msg.to_string())
+}
+
+/// Send one raw protocol line and return the first reply line (exercises
+/// error paths that a well-formed helper could never produce).
+pub fn client_line(addr: &str, line: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    Json::parse(line.trim())
+    let mut out = String::new();
+    reader.read_line(&mut out)?;
+    Json::parse(out.trim())
+}
+
+/// Fetch the stats snapshot.
+pub fn client_stats(addr: &str) -> Result<Json> {
+    client_line(addr, "{\"cmd\":\"stats\"}")
 }
 
 /// Send the shutdown command.

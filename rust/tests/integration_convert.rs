@@ -1,6 +1,8 @@
 //! Integration: the Rust conversion toolchain validated through the AOT
 //! MLA artifacts (the same invariances the python suite proves against
-//! the jax models, here proven against the compiled HLO).
+//! the jax models, here proven against the compiled HLO). Requires
+//! `make artifacts` + a real `xla` runtime; every test skips cleanly on
+//! a bare checkout.
 
 use std::path::Path;
 use transmla::convert::{
@@ -21,8 +23,14 @@ struct Setup {
     batches: Vec<Vec<i32>>,
 }
 
-fn setup() -> Setup {
-    let rt = Runtime::new(Path::new("artifacts")).expect("make artifacts");
+fn setup() -> Option<Setup> {
+    let rt = match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (artifact runtime unavailable): {e:#}");
+            return None;
+        }
+    };
     let cfg = rt.manifest.configs["llama2tiny"].clone();
     // Prefer the trained checkpoint (realistic activation statistics);
     // fall back to random init on a fresh clone.
@@ -38,12 +46,12 @@ fn setup() -> Setup {
     let toks = corpus.sample_batch(8, cfg.max_seq, &mut rng);
     let calib = capture_calib(&calib_exec, &gqa, &toks, 512).unwrap();
     let batches = corpus.val_batches(8, cfg.max_seq).into_iter().take(1).collect();
-    Setup { rt, cfg, gqa, calib, batches }
+    Some(Setup { rt, cfg, gqa, calib, batches })
 }
 
 #[test]
 fn merged_form_is_exact_through_hlo() {
-    let s = setup();
+    let Some(s) = setup() else { return };
     let gqa_exec = s.rt.load("llama2tiny_gqa_prefill").unwrap();
     let merged_exec = s.rt.load("llama2tiny_merged_prefill").unwrap();
     let base = evaluate(&gqa_exec, &s.gqa, &s.batches).unwrap();
@@ -59,7 +67,7 @@ fn merged_form_is_exact_through_hlo() {
 
 #[test]
 fn rorope_rotation_is_exact_through_hlo() {
-    let s = setup();
+    let Some(s) = setup() else { return };
     let gqa_exec = s.rt.load("llama2tiny_gqa_prefill").unwrap();
     let merged_exec = s.rt.load("llama2tiny_merged_prefill").unwrap();
     let base = evaluate(&gqa_exec, &s.gqa, &s.batches).unwrap();
@@ -82,7 +90,7 @@ fn rorope_rotation_is_exact_through_hlo() {
 
 #[test]
 fn full_rank_conversion_matches_merged_masked_through_hlo() {
-    let s = setup();
+    let Some(s) = setup() else { return };
     // Full-rank latent: the ONLY approximation left is RoPE removal on
     // heads 1..g-1, identical to the merged model with a head-0 mask.
     let r_full = 192; // largest exported rank (< full 480, so compare trend)
@@ -117,7 +125,7 @@ fn full_rank_conversion_matches_merged_masked_through_hlo() {
 
 #[test]
 fn reabsorbed_trainable_matches_absorbed_through_hlo() {
-    let s = setup();
+    let Some(s) = setup() else { return };
     let (train_p, absorbed, _) =
         convert_model(&s.gqa, &s.calib, &s.cfg, &ConvertOptions::transmla(32))
             .unwrap();
@@ -130,7 +138,7 @@ fn reabsorbed_trainable_matches_absorbed_through_hlo() {
 
 #[test]
 fn compression_error_monotone_in_rank_through_hlo() {
-    let s = setup();
+    let Some(s) = setup() else { return };
     let gqa_exec = s.rt.load("llama2tiny_gqa_prefill").unwrap();
     let base = evaluate(&gqa_exec, &s.gqa, &s.batches).unwrap();
     let mut errs = vec![];
@@ -162,7 +170,7 @@ fn compression_error_monotone_in_rank_through_hlo() {
 
 #[test]
 fn mha2mla_baseline_runs_through_hlo() {
-    let s = setup();
+    let Some(s) = setup() else { return };
     let (_, absorbed, diag) =
         convert_model(&s.gqa, &s.calib, &s.cfg, &ConvertOptions::mha2mla(32))
             .unwrap();

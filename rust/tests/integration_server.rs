@@ -1,0 +1,137 @@
+//! Integration: the TCP JSONL server protocol — happy path, error paths
+//! (bad JSON, unknown cmd, missing prompt), and the stats command —
+//! hermetically over `SimBackend` (no artifacts, no XLA runtime).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+use transmla::backend::SimBackend;
+use transmla::config::{EngineConfig, PolicyKind};
+use transmla::coordinator::Engine;
+use transmla::json::Json;
+use transmla::server;
+
+fn start_server(addr: &'static str, policy: PolicyKind) -> JoinHandle<()> {
+    let handle = std::thread::spawn(move || {
+        let mut e = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig { policy, ..Default::default() },
+        );
+        server::serve(&mut e, addr).unwrap();
+    });
+    // Wait until the listener answers pings.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
+            if j.get("pong").is_some() {
+                return handle;
+            }
+        }
+        assert!(Instant::now() < deadline, "server at {addr} never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn err_text(j: &Json) -> String {
+    j.get("error")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("expected an error reply, got {j:?}"))
+        .to_string()
+}
+
+#[test]
+fn request_stats_shutdown_roundtrip() {
+    let addr = "127.0.0.1:18431";
+    let handle = start_server(addr, PolicyKind::AdmitFirst);
+
+    let resp = server::client_request(addr, "hello server", 4).unwrap();
+    assert!(resp.get("text").is_some(), "{resp:?}");
+    assert_eq!(resp.get("prompt_len").and_then(Json::as_usize), Some(12));
+    assert!(resp.get("latency_s").is_some());
+    assert!(resp.get("ttft_s").is_some());
+    assert!(resp.get("tpot_s").is_some());
+
+    let stats = server::client_stats(addr).unwrap();
+    assert_eq!(
+        stats.get("policy").and_then(Json::as_str),
+        Some("admit-first")
+    );
+    let counters = stats.get("counters").expect("counters object");
+    assert_eq!(counters.get("completed").and_then(Json::as_usize), Some(1));
+    assert_eq!(counters.get("requests").and_then(Json::as_usize), Some(1));
+    // Percentile summaries are present for the latency series.
+    for series in ["decode_s", "prefill_s", "latency_s", "queue_s"] {
+        let s = stats
+            .get(series)
+            .unwrap_or_else(|| panic!("stats missing `{series}`: {stats:?}"));
+        for key in ["p50", "p95", "p99", "mean", "n"] {
+            assert!(s.get(key).is_some(), "`{series}` missing `{key}`");
+        }
+    }
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn protocol_error_paths_answer_in_band() {
+    let addr = "127.0.0.1:18432";
+    let handle = start_server(addr, PolicyKind::Hybrid { min_free: 2 });
+
+    let bad = server::client_line(addr, "{not json at all").unwrap();
+    assert!(err_text(&bad).contains("bad json"), "{bad:?}");
+
+    let unknown = server::client_line(addr, "{\"cmd\":\"frobnicate\"}").unwrap();
+    assert!(err_text(&unknown).contains("unknown cmd"), "{unknown:?}");
+
+    let missing = server::client_line(addr, "{\"max_new\": 4}").unwrap();
+    assert!(err_text(&missing).contains("missing prompt"), "{missing:?}");
+
+    let empty = server::client_line(addr, "{\"prompt\": \"\"}").unwrap();
+    assert!(err_text(&empty).contains("missing prompt"), "{empty:?}");
+
+    // The connection survives an error line: errors are answered in-band,
+    // then a valid request on the same socket still works.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    writeln!(stream, "{{\"cmd\":\"nope\"}}").unwrap();
+    writeln!(stream, "{{\"prompt\":\"still alive\",\"max_new\":2}}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(err_text(&Json::parse(line.trim()).unwrap()).contains("unknown cmd"));
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let ok = Json::parse(line.trim()).unwrap();
+    assert!(ok.get("text").is_some(), "{ok:?}");
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_all_complete() {
+    let addr = "127.0.0.1:18433";
+    let handle = start_server(addr, PolicyKind::DecodeFirst);
+
+    let clients: Vec<JoinHandle<usize>> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let resp =
+                    server::client_request(addr, "concurrent load test", 2 + i % 3)
+                        .unwrap();
+                resp.get("text").and_then(Json::as_str).unwrap().len()
+            })
+        })
+        .collect();
+    for c in clients {
+        assert!(c.join().unwrap() > 0);
+    }
+
+    let stats = server::client_stats(addr).unwrap();
+    let counters = stats.get("counters").expect("counters");
+    assert_eq!(counters.get("completed").and_then(Json::as_usize), Some(6));
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}

@@ -1,0 +1,155 @@
+//! Offline stand-in for the `anyhow` crate, API-compatible with the
+//! subset this repository uses: `Result`, `Error`, `Context` (on both
+//! `Result` and `Option`), and the `anyhow!` / `bail!` macros.
+//!
+//! The build environment has no registry access, so the error type is a
+//! plain message string with context chaining (`"ctx: cause"`), which is
+//! exactly how the call sites consume it (`{e}` / `{e:#}` formatting and
+//! `to_string()`); nothing here downcasts.
+
+use std::fmt;
+
+/// A string-backed error with context chaining.
+///
+/// Deliberately does NOT implement `std::error::Error` so that the
+/// blanket `From<E: std::error::Error>` below does not conflict with the
+/// reflexive `From<Error> for Error` (the same trick real `anyhow` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `"{ctx}: {self}"`.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` with any displayable
+/// error, or `Option`).
+pub trait Context<T> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 7);
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 7");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let o: Option<u32> = None;
+        let e = o.context("missing thing").unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+
+        let r: Result<u32> = fails().context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: broke at 7");
+
+        let r: Result<u32> = fails().with_context(|| format!("layer {}", 2));
+        assert_eq!(r.unwrap_err().to_string(), "layer 2: broke at 7");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file/xyz")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! API stub for the `xla` PJRT bindings (xla_extension 0.5.1).
+//!
+//! The offline build image cannot link the native XLA runtime, so this
+//! crate provides the exact type/function surface `transmla::runtime`
+//! compiles against, with every fallible operation returning a clear
+//! "XLA runtime unavailable" error at *runtime*. The serving stack does
+//! not depend on it working: the hermetic `SimBackend` drives the engine,
+//! server, benches, and integration tests with no artifacts at all.
+//!
+//! To execute real AOT artifacts, point the `xla` path dependency in
+//! `rust/Cargo.toml` at a checkout of the real bindings (same API); no
+//! source change in `transmla` is required.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' error enum surface-wise.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(op: &str) -> Error {
+    Error {
+        msg: format!(
+            "XLA runtime unavailable ({op}): built against the bundled API \
+             stub — point the `xla` path dependency at the real \
+             xla_extension bindings to execute artifacts"
+        ),
+    }
+}
+
+/// Element dtype of a literal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal (tensor value crossing the PJRT boundary).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(unavailable("Literal::ty"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle (Rc-backed in the real bindings; not `Send`).
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Wrapped XLA computation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("XLA runtime unavailable"), "{e}");
+    }
+}
