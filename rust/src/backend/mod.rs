@@ -24,9 +24,10 @@
 pub mod sim;
 pub mod xla;
 
-use crate::kvcache::{CacheLayout, KvCache};
+use crate::config::CacheKind;
+use crate::kvcache::{CacheLayout, KvCache, PagedKvCache};
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 pub use sim::{SimBackend, SimConfig};
 pub use xla::{ModelBundle, XlaBackend};
@@ -69,6 +70,155 @@ impl BackendSpec {
     pub fn new_cache(&self) -> KvCache {
         KvCache::new(self.layout, self.n_layers, self.batch, self.capacity)
     }
+
+    /// Blocks a `block_size`-token paged pool needs per full-capacity
+    /// sequence.
+    fn blocks_per_seq(&self, block_size: usize) -> usize {
+        (self.capacity + block_size - 1) / block_size.max(1)
+    }
+
+    /// A fresh cache store of the requested kind. A paged store defaults
+    /// to at most the fixed pool's worst-case byte budget —
+    /// `batch * capacity` tokens rounded *down* to whole blocks (never
+    /// more memory than fixed, even when `block_size` does not divide
+    /// `capacity`) — but never fewer blocks than one full-capacity
+    /// sequence, so admission can always make progress on a drained
+    /// engine. `n_blocks` overrides the default; it must still fit one
+    /// full sequence.
+    pub fn new_cache_store(&self, kind: CacheKind) -> Result<CacheStore> {
+        match kind {
+            CacheKind::Fixed => Ok(CacheStore::Fixed(self.new_cache())),
+            CacheKind::Paged { block_size, n_blocks } => {
+                if block_size == 0 {
+                    bail!("paged cache block size must be >= 1");
+                }
+                let per_seq = self.blocks_per_seq(block_size);
+                let n = n_blocks
+                    .unwrap_or(per_seq.max(self.batch * self.capacity / block_size));
+                if n < per_seq {
+                    bail!(
+                        "paged pool of {n} blocks cannot hold one \
+                         full-capacity sequence ({per_seq} blocks)"
+                    );
+                }
+                Ok(CacheStore::Paged(PagedKvCache::new(
+                    self.layout,
+                    self.n_layers,
+                    self.batch,
+                    block_size,
+                    n,
+                )?))
+            }
+        }
+    }
+}
+
+/// The engine's cache, behind one seam: the fixed worst-case slot pool
+/// (what the XLA decode artifacts operate on) or the paged block pool.
+/// Fixed-pool operations that have no paged counterpart are no-ops on
+/// the paged arm and vice versa, so the engine stays kind-agnostic.
+pub enum CacheStore {
+    Fixed(KvCache),
+    Paged(PagedKvCache),
+}
+
+impl CacheStore {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            CacheStore::Fixed(_) => "fixed",
+            CacheStore::Paged(_) => "paged",
+        }
+    }
+
+    pub fn as_fixed_mut(&mut self) -> Option<&mut KvCache> {
+        match self {
+            CacheStore::Fixed(kv) => Some(kv),
+            CacheStore::Paged(_) => None,
+        }
+    }
+
+    pub fn as_paged(&self) -> Option<&PagedKvCache> {
+        match self {
+            CacheStore::Fixed(_) => None,
+            CacheStore::Paged(p) => Some(p),
+        }
+    }
+
+    /// Splice prefill output row `src` into `slot`. The paged pool
+    /// copies exactly `len` positions (nothing else is materialised);
+    /// the fixed pool keeps its historical copy-to-capacity behaviour
+    /// (the padded tail is position-masked anyway).
+    pub fn splice_from(
+        &mut self,
+        prefill_bufs: &[Tensor],
+        src: usize,
+        slot: usize,
+        len: usize,
+    ) -> Result<()> {
+        match self {
+            CacheStore::Fixed(kv) => kv.splice_from(prefill_bufs, src, slot),
+            CacheStore::Paged(p) => p.splice_from(prefill_bufs, src, slot, len),
+        }
+    }
+
+    /// Bind `slot` to a new sequence: reserve its bounded token demand
+    /// and materialise the prompt. No-op for the fixed pool (the slot
+    /// row is the reservation).
+    pub fn admit_slot(
+        &mut self,
+        slot: usize,
+        reserve_tokens: usize,
+        initial_len: usize,
+    ) -> Result<()> {
+        match self {
+            CacheStore::Fixed(_) => Ok(()),
+            CacheStore::Paged(p) => p.admit_slot(slot, reserve_tokens, initial_len),
+        }
+    }
+
+    /// Ensure `slot` covers `len` positions before a decode write.
+    pub fn grow(&mut self, slot: usize, len: usize) -> Result<()> {
+        match self {
+            CacheStore::Fixed(_) => Ok(()),
+            CacheStore::Paged(p) => p.grow(slot, len),
+        }
+    }
+
+    /// Return `slot`'s memory to the pool. Paged: blocks go back to the
+    /// free list. Fixed: a no-op — the slot row stays reserved by
+    /// construction and correctness comes from position masking, so
+    /// zeroing it (`KvCache::clear_slot`) would be a pure-hygiene
+    /// multi-MB memset on the completion hot path.
+    pub fn release_slot(&mut self, slot: usize) -> Result<()> {
+        match self {
+            CacheStore::Fixed(_) => Ok(()),
+            CacheStore::Paged(p) => p.release_slot(slot).map(|_| ()),
+        }
+    }
+
+    pub fn bytes_total(&self) -> usize {
+        match self {
+            CacheStore::Fixed(kv) => kv.bytes_total(),
+            CacheStore::Paged(p) => p.bytes_total(),
+        }
+    }
+
+    /// Bytes actually committed: the whole pool for the fixed cache
+    /// (every slot row is reserved up front), allocated blocks only for
+    /// the paged cache.
+    pub fn bytes_in_use(&self) -> usize {
+        match self {
+            CacheStore::Fixed(kv) => kv.bytes_total(),
+            CacheStore::Paged(p) => p.bytes_in_use(),
+        }
+    }
+
+    pub fn check_invariants(&self) -> Result<()> {
+        match self {
+            CacheStore::Fixed(_) => Ok(()),
+            CacheStore::Paged(p) => p.check_invariants(),
+        }
+    }
 }
 
 /// Output of one prefill call.
@@ -92,5 +242,8 @@ pub trait ExecBackend {
     /// sampled token and its write position for slot `s` (0/0 for idle
     /// slots — backends must be position-masked so idle slots are inert).
     /// Updates `cache` in place and returns logits `[batch * vocab]`.
-    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut KvCache) -> Result<Tensor>;
+    /// Backends may reject cache kinds they cannot drive (the XLA
+    /// artifacts require the fixed padded pool).
+    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut CacheStore)
+        -> Result<Tensor>;
 }

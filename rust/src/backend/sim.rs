@@ -21,8 +21,8 @@
 //! full admit → decode → complete engine loop, the scheduler policies,
 //! and the server protocol all run against this backend.
 
-use super::{Arch, BackendSpec, ExecBackend, PrefillOut};
-use crate::kvcache::{CacheLayout, KvCache};
+use super::{Arch, BackendSpec, CacheStore, ExecBackend, PrefillOut};
+use crate::kvcache::{CacheLayout, KvCache, PagedKvCache};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -119,24 +119,39 @@ impl SimBackend {
         }
     }
 
-    /// Write the state row (exact chunks + filler) into a pair of cache
-    /// buffers shaped `[L, B, T, inner]`, at (layer, row, pos), all layers.
-    fn write_rows(&self, bufs: &mut [Tensor], row: usize, pos: usize, state: u64) {
+    /// The cache row values (exact state chunks + derived filler) for
+    /// both layout buffers — the single encoding used by the fixed and
+    /// the paged write paths, so the two cache kinds are bit-identical.
+    fn row_values(&self, state: u64) -> (Vec<f32>, Vec<f32>) {
         let (i0, i1) = inner_dims(self.spec.layout);
-        let (b, t) = (bufs[0].shape[1], bufs[0].shape[2]);
-        for l in 0..self.spec.n_layers {
-            for j in 0..i0 + i1 {
-                let val = if j < STATE_CHUNKS {
-                    ((state >> (16 * j)) & 0xFFFF) as f32
-                } else {
-                    unit(mix(state, 0xF1_11ED ^ j as u64)) * 2.0 - 1.0
-                };
-                if j < i0 {
-                    bufs[0].data[((l * b + row) * t + pos) * i0 + j] = val;
-                } else {
-                    bufs[1].data[((l * b + row) * t + pos) * i1 + (j - i0)] = val;
-                }
+        let mut v0 = vec![0.0f32; i0];
+        let mut v1 = vec![0.0f32; i1];
+        for j in 0..i0 + i1 {
+            let val = if j < STATE_CHUNKS {
+                ((state >> (16 * j)) & 0xFFFF) as f32
+            } else {
+                unit(mix(state, 0xF1_11ED ^ j as u64)) * 2.0 - 1.0
+            };
+            if j < i0 {
+                v0[j] = val;
+            } else {
+                v1[j - i0] = val;
             }
+        }
+        (v0, v1)
+    }
+
+    /// Write the state row into a pair of cache buffers shaped
+    /// `[L, B, T, inner]`, at (layer, row, pos), all layers.
+    fn write_rows(&self, bufs: &mut [Tensor], row: usize, pos: usize, state: u64) {
+        let (v0, v1) = self.row_values(state);
+        let (b, t) = (bufs[0].shape[1], bufs[0].shape[2]);
+        let (i0, i1) = (v0.len(), v1.len());
+        for l in 0..self.spec.n_layers {
+            let o0 = ((l * b + row) * t + pos) * i0;
+            bufs[0].data[o0..o0 + i0].copy_from_slice(&v0);
+            let o1 = ((l * b + row) * t + pos) * i1;
+            bufs[1].data[o1..o1 + i1].copy_from_slice(&v1);
         }
     }
 
@@ -145,16 +160,51 @@ impl SimBackend {
         let (i0, i1) = inner_dims(self.spec.layout);
         // Layer 0 rows of buffers shaped [L, B, T, inner].
         let t = cache.bufs[0].shape[2];
-        let mut state = 0u64;
-        for j in 0..STATE_CHUNKS {
-            let val = if j < i0 {
-                cache.bufs[0].data[(slot * t + pos) * i0 + j]
-            } else {
-                cache.bufs[1].data[(slot * t + pos) * i1 + (j - i0)]
-            };
-            state |= ((val as u64) & 0xFFFF) << (16 * j);
-        }
+        let o0 = (slot * t + pos) * i0;
+        let o1 = (slot * t + pos) * i1;
+        state_of_rows(
+            &cache.bufs[0].data[o0..o0 + i0],
+            &cache.bufs[1].data[o1..o1 + i1],
+        )
+    }
+
+    /// One decode step for one slot over the fixed padded pool.
+    fn decode_slot_fixed(&self, cache: &mut KvCache, slot: usize, token: i32, p: usize) -> u64 {
+        let prev = if p == 0 {
+            self.base_state
+        } else {
+            self.read_state(cache, slot, p - 1)
+        };
+        let state = step_state(prev, token, p);
+        self.write_rows(&mut cache.bufs, slot, p, state);
         state
+    }
+
+    /// One decode step for one slot over the paged block pool. Returns
+    /// `None` for idle slots (block table does not cover the write
+    /// position — the paged equivalent of position masking).
+    fn decode_slot_paged(
+        &self,
+        cache: &mut PagedKvCache,
+        slot: usize,
+        token: i32,
+        p: usize,
+    ) -> Result<Option<u64>> {
+        if !cache.covers(slot, p) {
+            return Ok(None);
+        }
+        let prev = if p == 0 {
+            self.base_state
+        } else {
+            state_of_rows(cache.row(0, slot, 0, p - 1)?, cache.row(1, slot, 0, p - 1)?)
+        };
+        let state = step_state(prev, token, p);
+        let (v0, v1) = self.row_values(state);
+        for l in 0..self.spec.n_layers {
+            cache.row_mut(0, slot, l, p)?.copy_from_slice(&v0);
+            cache.row_mut(1, slot, l, p)?.copy_from_slice(&v1);
+        }
+        Ok(Some(state))
     }
 }
 
@@ -187,41 +237,70 @@ impl ExecBackend for SimBackend {
         Ok(PrefillOut { logits, caches })
     }
 
-    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut KvCache) -> Result<Tensor> {
+    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut CacheStore) -> Result<Tensor> {
         let (b, v) = (self.spec.batch, self.spec.vocab);
         if tokens.len() != b || pos.len() != b {
             bail!("sim decode wants {b} tokens+positions");
         }
-        if cache.capacity != self.spec.capacity || cache.batch != b {
-            bail!(
-                "sim decode cache geometry {}x{} != spec {}x{}",
-                cache.batch, cache.capacity, b, self.spec.capacity
-            );
+        match cache {
+            CacheStore::Fixed(kv) => {
+                if kv.capacity != self.spec.capacity || kv.batch != b {
+                    bail!(
+                        "sim decode cache geometry {}x{} != spec {}x{}",
+                        kv.batch, kv.capacity, b, self.spec.capacity
+                    );
+                }
+            }
+            CacheStore::Paged(p) => {
+                let (i0, i1) = inner_dims(self.spec.layout);
+                if p.n_slots() != b || p.inner_dim(0) != i0 || p.inner_dim(1) != i1 {
+                    bail!(
+                        "sim decode paged cache geometry ({} slots, inner \
+                         {}x{}) != spec ({b} slots, inner {i0}x{i1})",
+                        p.n_slots(), p.inner_dim(0), p.inner_dim(1)
+                    );
+                }
+            }
         }
         let mut logits = Tensor::zeros(&[b, v]);
         for slot in 0..b {
             let p = pos[slot] as usize;
-            if p >= cache.capacity {
-                bail!("sim decode position {p} >= capacity {}", cache.capacity);
+            if p >= self.spec.capacity {
+                bail!("sim decode position {p} >= capacity {}", self.spec.capacity);
             }
-            let prev = if p == 0 {
-                self.base_state
-            } else {
-                self.read_state(cache, slot, p - 1)
+            // The paged arm skips slots whose block table does not cover
+            // the write position (idle slots); the fixed arm writes every
+            // row exactly as the padded artifacts do — active slots
+            // produce identical states either way, so the two cache
+            // kinds are completion-identical by construction.
+            let state = match cache {
+                CacheStore::Fixed(kv) => {
+                    Some(self.decode_slot_fixed(kv, slot, tokens[slot], p))
+                }
+                CacheStore::Paged(pc) => {
+                    self.decode_slot_paged(pc, slot, tokens[slot], p)?
+                }
             };
-            let state = step_state(prev, tokens[slot], p);
-            self.write_rows(&mut cache.bufs, slot, p, state);
-            self.logits_row(state, &mut logits.data[slot * v..(slot + 1) * v]);
+            if let Some(state) = state {
+                self.logits_row(state, &mut logits.data[slot * v..(slot + 1) * v]);
+            }
         }
         Ok(logits)
     }
 }
 
 fn inner_dims(layout: CacheLayout) -> (usize, usize) {
-    match layout {
-        CacheLayout::Gqa { g, d } => (g * d, g * d),
-        CacheLayout::Mla { r, dr } => (r, dr),
+    layout.inner_dims()
+}
+
+/// Reconstruct the prefix state from one cache row's two inner slices.
+fn state_of_rows(r0: &[f32], r1: &[f32]) -> u64 {
+    let mut state = 0u64;
+    for j in 0..STATE_CHUNKS {
+        let val = if j < r0.len() { r0[j] } else { r1[j - r0.len()] };
+        state |= ((val as u64) & 0xFFFF) << (16 * j);
     }
+    state
 }
 
 /// SplitMix64-style avalanche of `a` perturbed by `b`.
@@ -265,7 +344,7 @@ mod tests {
             assert_eq!(out.logits.shape, vec![s.prefill_batch, s.prefill_seq, s.vocab]);
             assert_eq!(out.caches.len(), 2);
             assert_eq!(out.caches[0].shape[..3], [s.n_layers, s.prefill_batch, s.prefill_seq]);
-            let mut cache = s.new_cache();
+            let mut cache = CacheStore::Fixed(s.new_cache());
             let logits = be
                 .decode(&vec![7; s.batch], &vec![3; s.batch], &mut cache)
                 .unwrap();
@@ -282,8 +361,9 @@ mod tests {
         let s = be.spec().clone();
         let toks = prompt();
         let out = be.prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 2)).unwrap();
-        let mut cache = s.new_cache();
-        cache.splice_from(&out.caches, 2, 1).unwrap();
+        let mut fixed = s.new_cache();
+        fixed.splice_from(&out.caches, 2, 1).unwrap();
+        let mut cache = CacheStore::Fixed(fixed);
 
         let p = toks.len() - 1;
         let mut dt = vec![0i32; s.batch];
@@ -294,6 +374,50 @@ mod tests {
         let want = &out.logits.data[(2 * s.prefill_seq + p) * s.vocab..][..s.vocab];
         let got = &logits.data[s.vocab..2 * s.vocab];
         assert_eq!(want, got, "decode diverged from prefill at pos {p}");
+    }
+
+    #[test]
+    fn paged_decode_matches_fixed_decode_and_prefill() {
+        // The paged block pool must reproduce the fixed pool bit-exactly
+        // for active slots, and leave idle slots inert.
+        for mut be in [SimBackend::gqa(4), SimBackend::mla(4, 4)] {
+            let s = be.spec().clone();
+            let toks = prompt();
+            let out = be
+                .prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 2))
+                .unwrap();
+
+            let mut fixed = s.new_cache();
+            fixed.splice_from(&out.caches, 2, 1).unwrap();
+            let mut fixed = CacheStore::Fixed(fixed);
+
+            let mut paged = crate::kvcache::PagedKvCache::new(
+                s.layout, s.n_layers, s.batch, 8, 64,
+            )
+            .unwrap();
+            paged.admit_slot(1, toks.len() + 4, toks.len()).unwrap();
+            paged
+                .splice_from(&out.caches, 2, 1, toks.len())
+                .unwrap();
+            let mut paged = CacheStore::Paged(paged);
+
+            let p = toks.len() - 1;
+            let mut dt = vec![0i32; s.batch];
+            let mut dp = vec![0i32; s.batch];
+            dt[1] = toks[p];
+            dp[1] = p as i32;
+            let lf = be.decode(&dt, &dp, &mut fixed).unwrap();
+            let lp = be.decode(&dt, &dp, &mut paged).unwrap();
+            assert_eq!(
+                lf.data[s.vocab..2 * s.vocab],
+                lp.data[s.vocab..2 * s.vocab],
+                "paged decode diverged from fixed at pos {p}"
+            );
+            let want = &out.logits.data[(2 * s.prefill_seq + p) * s.vocab..][..s.vocab];
+            assert_eq!(want, &lp.data[s.vocab..2 * s.vocab]);
+            // Idle slots (no block table) produced no logits energy.
+            assert!(lp.data[..s.vocab].iter().all(|&x| x == 0.0));
+        }
     }
 
     #[test]

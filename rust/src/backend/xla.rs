@@ -6,12 +6,12 @@
 //! (manifest names, argument order, tuple outputs) is unchanged from the
 //! original fused engine — nothing on the `python/compile` side moves.
 
-use super::{Arch, BackendSpec, ExecBackend, PrefillOut};
-use crate::kvcache::{CacheLayout, KvCache};
+use super::{Arch, BackendSpec, CacheStore, ExecBackend, PrefillOut};
+use crate::kvcache::CacheLayout;
 use crate::model::Params;
 use crate::runtime::{Exec, Runtime, Value};
 use crate::tensor::Tensor;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 /// The compiled artifact pair + device-resident weights for one model.
@@ -157,20 +157,28 @@ impl ExecBackend for XlaBackend {
         Ok(PrefillOut { logits, caches })
     }
 
-    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut KvCache) -> Result<Tensor> {
-        let outs = self.bundle.decode.run_b_mixed(
+    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut CacheStore) -> Result<Tensor> {
+        // The AOT decode artifacts compute over the fixed padded cache
+        // shape [L, B, T, ...]; the paged pool has no artifact ABI (yet).
+        let kv = match cache.as_fixed_mut() {
+            Some(kv) => kv,
+            None => bail!("xla backend requires the fixed slot cache (--cache fixed)"),
+        };
+        // The cache tensors go in as the trailing inputs and come back
+        // as the trailing outputs, written in place — no per-step
+        // reallocation or full-buffer store round-trip.
+        let (c0, c1) = kv.bufs.split_at_mut(1);
+        let mut outs = self.bundle.decode.run_b_mixed_io(
             &self.bundle.param_bufs,
             &[
                 Value::i32_vec(tokens.to_vec()),
                 Value::i32_vec(pos.to_vec()),
             ],
-            &[&cache.bufs[0], &cache.bufs[1]],
+            &mut [&mut c0[0], &mut c1[0]],
         )?;
-        let mut it = outs.into_iter();
-        let logits = it.next().context("decode logits")?;
-        let c0 = it.next().context("cache0")?;
-        let c1 = it.next().context("cache1")?;
-        cache.store(vec![c0, c1])?;
-        Ok(logits)
+        if outs.len() != 1 {
+            bail!("decode artifact returned {} leading outputs, want 1", outs.len());
+        }
+        Ok(outs.remove(0))
     }
 }

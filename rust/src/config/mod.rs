@@ -116,6 +116,53 @@ impl PolicyKind {
     }
 }
 
+/// Which KV-cache store the engine allocates (see `kvcache`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKind {
+    /// One worst-case `capacity`-length row per slot (the seed layout;
+    /// what the XLA decode artifacts operate on).
+    Fixed,
+    /// Block-granular paged allocation: `block_size`-token blocks over a
+    /// shared pool. `n_blocks` of `None` sizes the pool to the fixed
+    /// store's worst-case byte budget.
+    Paged { block_size: usize, n_blocks: Option<usize> },
+}
+
+impl Default for CacheKind {
+    fn default() -> Self {
+        CacheKind::Fixed
+    }
+}
+
+/// Default tokens per block for the paged cache.
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+impl CacheKind {
+    /// Parse `fixed` / `paged` / `paged:B` (B = block size in tokens).
+    pub fn parse(s: &str) -> Result<CacheKind> {
+        match s {
+            "fixed" => Ok(CacheKind::Fixed),
+            "paged" => Ok(CacheKind::Paged {
+                block_size: DEFAULT_BLOCK_SIZE,
+                n_blocks: None,
+            }),
+            other => match other.strip_prefix("paged:") {
+                Some(b) => {
+                    let block_size: usize = b
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .with_context(|| format!("bad block size `{b}`"))?;
+                    Ok(CacheKind::Paged { block_size, n_blocks: None })
+                }
+                None => {
+                    anyhow::bail!("unknown cache kind `{other}` (fixed|paged[:B])")
+                }
+            },
+        }
+    }
+}
+
 /// Engine/serving settings.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -128,6 +175,8 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Scheduling policy (admission vs decode per iteration).
     pub policy: PolicyKind,
+    /// KV-cache store (fixed slot rows vs paged blocks).
+    pub cache: CacheKind,
 }
 
 impl Default for EngineConfig {
@@ -138,6 +187,7 @@ impl Default for EngineConfig {
             temperature: 0.0,
             seed: 0,
             policy: PolicyKind::AdmitFirst,
+            cache: CacheKind::Fixed,
         }
     }
 }
@@ -227,6 +277,23 @@ mod tests {
         assert!(PolicyKind::parse("nope").is_err());
         assert!(PolicyKind::parse("hybrid:x").is_err());
         assert_eq!(EngineConfig::default().policy, PolicyKind::AdmitFirst);
+    }
+
+    #[test]
+    fn cache_kind_parses() {
+        assert_eq!(CacheKind::parse("fixed").unwrap(), CacheKind::Fixed);
+        assert_eq!(
+            CacheKind::parse("paged").unwrap(),
+            CacheKind::Paged { block_size: DEFAULT_BLOCK_SIZE, n_blocks: None }
+        );
+        assert_eq!(
+            CacheKind::parse("paged:32").unwrap(),
+            CacheKind::Paged { block_size: 32, n_blocks: None }
+        );
+        assert!(CacheKind::parse("paged:0").is_err());
+        assert!(CacheKind::parse("paged:x").is_err());
+        assert!(CacheKind::parse("nope").is_err());
+        assert_eq!(EngineConfig::default().cache, CacheKind::Fixed);
     }
 
     #[test]

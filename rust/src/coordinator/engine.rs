@@ -7,7 +7,8 @@
 //!   * **scheduling** — a pluggable [`SchedulePolicy`] decides each
 //!     iteration between admission (prefill) and decode;
 //!   * **execution** — the backend runs prefill/decode over the opaque
-//!     slot cache pool (`KvCache`), layout-agnostic (GQA or MLA-latent);
+//!     cache store (fixed slot pool or paged block pool), layout-agnostic
+//!     (GQA or MLA-latent);
 //!   * **sequences** — a [`SequenceManager`] owns slot lifecycle, per-slot
 //!     length tracking, completion rules, and latency accounting.
 //!
@@ -15,13 +16,12 @@
 //! vLLM-style. Finished requests accumulate until [`Engine::take_completions`]
 //! drains them (the server does this every loop iteration).
 
-use crate::backend::{BackendSpec, ExecBackend, ModelBundle, XlaBackend};
+use crate::backend::{BackendSpec, CacheStore, ExecBackend, ModelBundle, XlaBackend};
 use crate::config::EngineConfig;
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::sampling;
 use crate::coordinator::scheduler::{self, Action, SchedView, SchedulePolicy};
-use crate::coordinator::seqmgr::SequenceManager;
-use crate::kvcache::KvCache;
+use crate::coordinator::seqmgr::{bounded_cache_tokens, SequenceManager};
 use crate::metrics::Metrics;
 use crate::util::{Rng, Timer};
 use anyhow::{bail, Result};
@@ -35,7 +35,7 @@ pub use crate::backend::Arch;
 /// Continuous-batching serving engine over one execution backend.
 pub struct Engine {
     backend: Box<dyn ExecBackend>,
-    pub cache: KvCache,
+    pub cache: CacheStore,
     seqs: SequenceManager,
     queue: VecDeque<(Request, Instant)>,
     completions: Vec<Completion>,
@@ -55,14 +55,22 @@ const ADMISSION_LOG_CAP: usize = 64;
 
 impl Engine {
     /// Build over any backend (the hermetic path: `Engine::new(SimBackend::gqa(8), cfg)`).
+    /// Panics on an unbuildable cache config; use [`Engine::try_new`]
+    /// where the config comes from user input.
     pub fn new<B: ExecBackend + 'static>(backend: B, cfg: EngineConfig) -> Engine {
+        Engine::try_new(backend, cfg).expect("engine cache config")
+    }
+
+    /// Fallible construction: surfaces cache-store sizing errors (e.g. a
+    /// paged pool too small for one full-capacity sequence).
+    pub fn try_new<B: ExecBackend + 'static>(backend: B, cfg: EngineConfig) -> Result<Engine> {
         Engine::from_boxed(Box::new(backend), cfg)
     }
 
-    pub fn from_boxed(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Engine {
+    pub fn from_boxed(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Result<Engine> {
         let spec = backend.spec().clone();
-        let cache = spec.new_cache();
-        Engine {
+        let cache = spec.new_cache_store(cfg.cache)?;
+        Ok(Engine {
             backend,
             cache,
             seqs: SequenceManager::new(spec.batch, spec.capacity),
@@ -73,7 +81,7 @@ impl Engine {
             policy: scheduler::build(cfg.policy),
             cfg,
             admission_log: Vec::new(),
-        }
+        })
     }
 
     /// Build over compiled artifacts (the XLA path).
@@ -117,12 +125,65 @@ impl Engine {
         &self.admission_log
     }
 
+    /// How many of the next queued requests the cache store can take
+    /// right now, looking at most `limit` deep: all of them for the
+    /// fixed pool, the prefix whose cumulative bounded block demand fits
+    /// the unreserved pool for the paged one. FIFO: a head request that
+    /// does not fit blocks later ones rather than being reordered
+    /// around. Single source of truth for both the scheduler's view and
+    /// the actual admission pop in [`Engine::admit`].
+    fn plan_admissions(&self, limit: usize) -> usize {
+        let spec = self.backend.spec();
+        let limit = limit.min(self.queue.len());
+        match &self.cache {
+            CacheStore::Fixed(_) => limit,
+            CacheStore::Paged(p) => {
+                let mut blocks_left = p.n_unreserved();
+                let mut n = 0;
+                for (req, _) in self.queue.iter().take(limit) {
+                    let plen = req.prompt.len().min(spec.max_prompt());
+                    let need = p.blocks_for(bounded_cache_tokens(
+                        plen,
+                        req.max_new_tokens,
+                        spec.capacity,
+                    ));
+                    if need > blocks_left {
+                        break;
+                    }
+                    blocks_left -= need;
+                    n += 1;
+                }
+                n
+            }
+        }
+    }
+
+    /// Admission capacity the scheduler sees: free decode slots, clamped
+    /// by free cache blocks when the paged pool is short (admit on
+    /// blocks-free, not slots-free). When every queued request fits, the
+    /// raw free-slot count is reported — exactly what the pre-paged
+    /// engine passed — so policy thresholds (hybrid `min_free`) behave
+    /// identically across cache kinds and backend prefill widths; only a
+    /// genuine block shortage shrinks the scheduler's view.
+    fn admit_capacity(&self) -> usize {
+        let free = self.seqs.n_free();
+        // One prefill call can admit at most prefill_batch requests, so
+        // the block plan never needs to look deeper than that.
+        let depth = free.min(self.backend.spec().prefill_batch);
+        let fit = self.plan_admissions(depth);
+        if fit >= self.queue.len().min(depth) {
+            free
+        } else {
+            fit
+        }
+    }
+
     /// One scheduler iteration: the policy picks admission or decode.
     pub fn step(&mut self) -> Result<Action> {
         let view = SchedView {
             queued: self.queue.len(),
             active: self.seqs.n_active(),
-            free_slots: self.seqs.n_free(),
+            free_slots: self.admit_capacity(),
             prefill_batch: self.backend.spec().prefill_batch,
         };
         let action = self.policy.decide(&view);
@@ -167,14 +228,17 @@ impl Engine {
 
     fn admit(&mut self, want: usize) -> Result<()> {
         let spec = self.backend.spec().clone();
-        let n = want
+        let limit = want
             .min(self.queue.len())
             .min(self.seqs.n_free())
             .min(spec.prefill_batch);
+        let active_before = self.seqs.n_active();
+        // Pop the queue prefix that fits the cache store — the same rule
+        // `admit_capacity` showed the scheduler.
+        let n = self.plan_admissions(limit);
         if n == 0 {
             return Ok(());
         }
-        let active_before = self.seqs.n_active();
         let mut admitted = Vec::with_capacity(n);
         for _ in 0..n {
             let (req, enq) = self.queue.pop_front().unwrap();
@@ -216,8 +280,10 @@ impl Engine {
                 &mut self.rng,
             );
             ids.push(req.id);
-            let slot = self.seqs.admit(req, plen, first_tok, enq, prefill_started, now)?;
-            self.cache.splice_from(&out.caches, row, slot)?;
+            let slot = self.seqs.admit(
+                req, plen, first_tok, enq, prefill_started, now, &mut self.cache,
+            )?;
+            self.cache.splice_from(&out.caches, row, slot, plen)?;
             // A prompt that already fills the cache finishes immediately.
             self.maybe_complete(slot)?;
         }
@@ -239,6 +305,11 @@ impl Engine {
     // -- decode ---------------------------------------------------------------
 
     fn decode_step(&mut self) -> Result<()> {
+        // Materialise the blocks this step writes (paged; no-op fixed).
+        self.seqs.grow_for_decode(&mut self.cache)?;
+        if let CacheStore::Paged(p) = &self.cache {
+            self.metrics.observe("blocks_in_use", p.blocks_in_use() as f64);
+        }
         let (token, pos) = self.seqs.decode_io();
         let timer = Timer::start();
         let logits = self.backend.decode(&token, &pos, &mut self.cache)?;
@@ -265,7 +336,7 @@ impl Engine {
         if !self.seqs.is_done(slot) {
             return Ok(());
         }
-        let c = self.seqs.finish(slot)?;
+        let c = self.seqs.finish(slot, &mut self.cache)?;
         self.metrics.inc("completed", 1);
         self.metrics.observe("latency_s", c.latency_s);
         self.metrics.observe("queue_s", c.queue_s);
@@ -291,14 +362,68 @@ impl Engine {
     }
 
     pub fn slots_check(&self) -> Result<()> {
-        self.seqs.check_invariants()
+        self.seqs.check_invariants()?;
+        self.cache.check_invariants()
     }
+
+    /// Snapshot of the cache store's memory accounting, for the server
+    /// `stats` command and benches: actual bytes committed vs what the
+    /// worst-case fixed reservation would hold (`batch * capacity`).
+    pub fn cache_stats(&self) -> CacheStats {
+        let spec = self.backend.spec();
+        let bytes_worst_case = spec.batch
+            * spec.capacity
+            * spec.layout.per_token_per_layer()
+            * spec.n_layers
+            * 4;
+        match &self.cache {
+            CacheStore::Fixed(kv) => CacheStats {
+                kind: "fixed",
+                bytes_total: kv.bytes_total(),
+                bytes_in_use: kv.bytes_total(),
+                bytes_worst_case,
+                block_size: 0,
+                blocks_total: 0,
+                blocks_in_use: 0,
+                blocks_reserved: 0,
+            },
+            CacheStore::Paged(p) => CacheStats {
+                kind: "paged",
+                bytes_total: p.bytes_total(),
+                bytes_in_use: p.bytes_in_use(),
+                bytes_worst_case,
+                block_size: p.block_size,
+                blocks_total: p.n_blocks(),
+                blocks_in_use: p.blocks_in_use(),
+                blocks_reserved: p.blocks_reserved(),
+            },
+        }
+    }
+}
+
+/// Cache memory accounting snapshot (see [`Engine::cache_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheStats {
+    pub kind: &'static str,
+    /// Bytes the pool's backing tensors occupy.
+    pub bytes_total: usize,
+    /// Bytes actually committed to live sequences (equals `bytes_total`
+    /// for the fixed pool — every slot row is reserved up front).
+    pub bytes_in_use: usize,
+    /// What a worst-case `batch * capacity` reservation would occupy.
+    pub bytes_worst_case: usize,
+    /// Zero for the fixed pool.
+    pub block_size: usize,
+    pub blocks_total: usize,
+    pub blocks_in_use: usize,
+    pub blocks_reserved: usize,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::SimBackend;
+    use crate::config::CacheKind;
 
     fn engine(seed: u64) -> Engine {
         Engine::new(
@@ -333,6 +458,62 @@ mod tests {
         assert_eq!(comps[0].prompt_len, 0);
         assert_eq!(comps[0].tokens.len(), 3);
         e.slots_check().unwrap();
+    }
+
+    #[test]
+    fn capacity_bounded_prompt_emits_the_final_token() {
+        // Regression for the `next_pos + 1 >= capacity` off-by-one: a
+        // prompt of capacity-2 leaves two cache writes, and the final
+        // sampled token needs none — three tokens, not two.
+        let mut e = engine(7);
+        let cap = e.spec().capacity;
+        let comps = e
+            .generate(vec![Request::new(0, vec![65; cap - 2], 100)])
+            .unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].tokens.len(), 3, "capacity-2 prompt yields 3 tokens");
+        e.slots_check().unwrap();
+    }
+
+    #[test]
+    fn paged_cache_runs_the_full_loop_and_releases_blocks() {
+        let mut e = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                cache: CacheKind::Paged { block_size: 8, n_blocks: None },
+                ..Default::default()
+            },
+        );
+        let comps = e
+            .generate(vec![
+                Request::from_text(0, "hello", 4),
+                Request::from_text(1, "paged world", 6),
+                Request::new(2, vec![], 3), // empty prompt pages too
+            ])
+            .unwrap();
+        assert_eq!(comps.len(), 3);
+        assert_eq!(comps[0].tokens.len(), 4);
+        assert_eq!(comps[1].tokens.len(), 6);
+        assert_eq!(comps[2].tokens.len(), 3);
+        let cs = e.cache_stats();
+        assert_eq!(cs.kind, "paged");
+        assert_eq!(cs.blocks_in_use, 0, "all blocks released on completion");
+        assert_eq!(cs.blocks_reserved, 0);
+        assert!(e.metrics.summary("blocks_in_use").is_some());
+        e.slots_check().unwrap();
+    }
+
+    #[test]
+    fn undersized_paged_pool_is_a_construction_error() {
+        let r = Engine::try_new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                // One 8-token block cannot hold a 64-token sequence.
+                cache: CacheKind::Paged { block_size: 8, n_blocks: Some(1) },
+                ..Default::default()
+            },
+        );
+        assert!(r.is_err(), "pool below one full sequence must be rejected");
     }
 
     #[test]

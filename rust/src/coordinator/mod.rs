@@ -21,8 +21,8 @@ pub mod sampling;
 pub mod scheduler;
 pub mod seqmgr;
 
-pub use crate::backend::{Arch, ModelBundle};
-pub use engine::Engine;
+pub use crate::backend::{Arch, CacheStore, ModelBundle};
+pub use engine::{CacheStats, Engine};
 pub use request::{Completion, Request};
 pub use scheduler::{Action, SchedView, SchedulePolicy};
 pub use seqmgr::SequenceManager;

@@ -34,6 +34,11 @@ pub enum Action {
 pub struct SchedView {
     pub queued: usize,
     pub active: usize,
+    /// Admission capacity, not raw slot count: the engine clamps this to
+    /// what the cache store can actually hold — for the paged cache, the
+    /// queue prefix whose bounded block demands fit the unreserved pool.
+    /// Policies therefore admit on blocks-free, not slots-free, with no
+    /// paging knowledge of their own.
     pub free_slots: usize,
     pub prefill_batch: usize,
 }

@@ -4,10 +4,22 @@
 //! report. The engine talks to the backend; this type tracks what every
 //! slot is doing.
 
+use crate::backend::CacheStore;
 use crate::coordinator::request::{Completion, Request};
 use crate::kvcache::SlotAllocator;
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
+
+/// Total cache positions a sequence with this geometry can ever write:
+/// the prompt plus one position per decode step. The final sampled token
+/// is never fed back, so it needs no cache write — a sequence emitting
+/// `n` tokens only writes `n - 1` decode positions. This is the paged
+/// cache's admission-time reservation (bounded actual demand, not the
+/// worst-case capacity).
+pub fn bounded_cache_tokens(prompt_len: usize, max_new: usize, capacity: usize) -> usize {
+    let room = capacity.saturating_sub(prompt_len) + 1;
+    prompt_len + max_new.min(room).max(1) - 1
+}
 
 /// One active sequence pinned to a decode slot.
 pub struct SeqState {
@@ -63,7 +75,11 @@ impl SequenceManager {
         self.seqs.get(slot).and_then(Option::as_ref)
     }
 
-    /// Bind a freshly prefilled request to a free slot.
+    /// Bind a freshly prefilled request to a free slot, reserving its
+    /// bounded cache demand in the store (block table for the paged
+    /// cache; no-op for the fixed pool, whose slot row *is* the
+    /// reservation).
+    #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &mut self,
         req: Request,
@@ -72,8 +88,15 @@ impl SequenceManager {
         enqueued: Instant,
         prefill_started: Instant,
         now: Instant,
+        cache: &mut CacheStore,
     ) -> Result<usize> {
         let slot = self.slots.alloc(req.id).context("slot alloc")?;
+        let reserve = bounded_cache_tokens(prompt_len, req.max_new_tokens, self.capacity);
+        if let Err(e) = cache.admit_slot(slot, reserve, prompt_len) {
+            // Roll the slot back so allocator and seq state stay in step.
+            let _ = self.slots.release(slot);
+            return Err(e);
+        }
         self.seqs[slot] = Some(SeqState {
             prompt_len,
             next_pos: prompt_len,
@@ -103,6 +126,20 @@ impl SequenceManager {
         (token, pos)
     }
 
+    /// Grow every active slot's cache to cover its next write position —
+    /// called before each decode step so the backend's in-place writes
+    /// always land in materialised blocks. Growth draws on the
+    /// admission-time reservation, so it cannot fail for a healthy
+    /// engine. No-op over the fixed pool.
+    pub fn grow_for_decode(&self, cache: &mut CacheStore) -> Result<()> {
+        for (slot, s) in self.seqs.iter().enumerate() {
+            if let Some(seq) = s {
+                cache.grow(slot, seq.next_pos + 1)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Record one decoded token for an active slot.
     pub fn push_token(&mut self, slot: usize, tok: i32) -> Result<()> {
         let seq = self.seqs[slot].as_mut().context("push on idle slot")?;
@@ -113,28 +150,35 @@ impl SequenceManager {
     }
 
     /// Has this sequence hit its token budget or the cache capacity?
+    ///
+    /// The capacity bound is `next_pos >= capacity`, not
+    /// `next_pos + 1 >= capacity`: the final sampled token is never fed
+    /// back through decode, so it needs no cache write, and a sequence
+    /// may therefore emit one more token than it has cache positions
+    /// left. The old `+ 1` bound silently dropped the last emittable
+    /// token of every capacity-bounded sequence (and the `max_new` clamp
+    /// below had the matching off-by-one).
     pub fn is_done(&self, slot: usize) -> bool {
         match &self.seqs[slot] {
             None => false,
             Some(seq) => {
-                let max_new = seq
-                    .req
-                    .max_new_tokens
-                    .min(self.capacity.saturating_sub(seq.prompt_len));
+                let room = self.capacity.saturating_sub(seq.prompt_len) + 1;
+                let max_new = seq.req.max_new_tokens.min(room);
                 seq.generated.len() >= max_new.max(1)
-                    || seq.next_pos + 1 >= self.capacity
+                    || seq.next_pos >= self.capacity
             }
         }
     }
 
-    /// Release the slot and produce the completion record with latency,
-    /// queueing, TTFT, and TPOT accounting.
-    pub fn finish(&mut self, slot: usize) -> Result<Completion> {
+    /// Release the slot (and its cache memory) and produce the completion
+    /// record with latency, queueing, TTFT, and TPOT accounting.
+    pub fn finish(&mut self, slot: usize, cache: &mut CacheStore) -> Result<Completion> {
         let seq = match self.seqs[slot].take() {
             Some(s) => s,
             None => bail!("finish on idle slot {slot}"),
         };
         self.slots.release(seq.slot)?;
+        cache.release_slot(slot)?;
         let now = Instant::now();
         let latency_s = now.duration_since(seq.enqueued).as_secs_f64();
         // queue_s ends when prefill starts; ttft_s additionally includes
@@ -175,16 +219,22 @@ impl SequenceManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::{CacheLayout, KvCache, PagedKvCache};
 
     fn req(id: u64, plen: usize, max_new: usize) -> Request {
         Request::new(id, vec![1; plen], max_new)
     }
 
+    fn store(batch: usize, cap: usize) -> CacheStore {
+        CacheStore::Fixed(KvCache::new(CacheLayout::Mla { r: 4, dr: 4 }, 1, batch, cap))
+    }
+
     #[test]
     fn admit_track_finish_cycle() {
         let mut m = SequenceManager::new(2, 32);
+        let mut c = store(2, 32);
         let t0 = Instant::now();
-        let slot = m.admit(req(7, 3, 4), 3, 42, t0, t0, t0).unwrap();
+        let slot = m.admit(req(7, 3, 4), 3, 42, t0, t0, t0, &mut c).unwrap();
         assert_eq!(m.n_active(), 1);
         assert_eq!(m.seq(slot).unwrap().next_pos, 3);
         assert!(!m.is_done(slot), "one token of four");
@@ -192,41 +242,64 @@ mod tests {
         m.push_token(slot, 44).unwrap();
         m.push_token(slot, 45).unwrap();
         assert!(m.is_done(slot));
-        let c = m.finish(slot).unwrap();
-        assert_eq!(c.id, 7);
-        assert_eq!(c.tokens, vec![42, 43, 44, 45]);
+        let c2 = m.finish(slot, &mut c).unwrap();
+        assert_eq!(c2.id, 7);
+        assert_eq!(c2.tokens, vec![42, 43, 44, 45]);
         assert_eq!(m.n_active(), 0);
         m.check_invariants().unwrap();
-        assert!(m.finish(slot).is_err(), "double finish must fail");
+        assert!(m.finish(slot, &mut c).is_err(), "double finish must fail");
     }
 
     #[test]
-    fn capacity_bounds_generation() {
+    fn capacity_bounds_generation_without_dropping_the_last_token() {
+        // Regression for the off-by-one: a prompt of capacity-2 has two
+        // cache writes left (positions cap-2 and cap-1) and the final
+        // sampled token needs none, so THREE tokens are emittable — the
+        // old `next_pos + 1 >= capacity` bound stopped at two.
         let mut m = SequenceManager::new(1, 8);
+        let mut c = store(1, 8);
         let t0 = Instant::now();
-        // Prompt of 6 in capacity 8: at most 2 new tokens fit.
-        let slot = m.admit(req(1, 6, 100), 6, 9, t0, t0, t0).unwrap();
-        m.push_token(slot, 9).unwrap();
-        assert!(m.is_done(slot), "next_pos+1 reached capacity");
+        let slot = m.admit(req(1, 6, 100), 6, 9, t0, t0, t0, &mut c).unwrap();
+        m.push_token(slot, 10).unwrap();
+        assert!(!m.is_done(slot), "position 7 is still writable");
+        m.push_token(slot, 11).unwrap();
+        assert!(m.is_done(slot), "next_pos reached capacity");
+        let done = m.finish(slot, &mut c).unwrap();
+        assert_eq!(done.tokens.len(), 3, "capacity-2 prompt yields 3 tokens");
+    }
+
+    #[test]
+    fn bounded_cache_tokens_matches_the_completion_rule() {
+        // prompt 6, cap 8: 3 tokens emittable, last needs no write.
+        assert_eq!(bounded_cache_tokens(6, 100, 8), 8);
+        assert_eq!(bounded_cache_tokens(6, 2, 8), 7);
+        // Empty prompt: n tokens cost n-1 writes.
+        assert_eq!(bounded_cache_tokens(0, 3, 64), 2);
+        // max_new 0 clamps to one (write-free) token.
+        assert_eq!(bounded_cache_tokens(5, 0, 64), 5);
+        // Never exceeds capacity.
+        assert!(bounded_cache_tokens(63, 1000, 64) <= 64);
     }
 
     #[test]
     fn empty_prompt_still_yields_a_token() {
         let mut m = SequenceManager::new(1, 8);
+        let mut c = store(1, 8);
         let t0 = Instant::now();
-        let slot = m.admit(req(1, 0, 0), 0, 5, t0, t0, t0).unwrap();
+        let slot = m.admit(req(1, 0, 0), 0, 5, t0, t0, t0, &mut c).unwrap();
         // max_new 0 clamps to 1: the prefill token completes it.
         assert!(m.is_done(slot));
-        let c = m.finish(slot).unwrap();
-        assert_eq!(c.tokens, vec![5]);
-        assert_eq!(c.prompt_len, 0);
+        let done = m.finish(slot, &mut c).unwrap();
+        assert_eq!(done.tokens, vec![5]);
+        assert_eq!(done.prompt_len, 0);
     }
 
     #[test]
     fn decode_io_masks_idle_slots() {
         let mut m = SequenceManager::new(3, 16);
+        let mut c = store(3, 16);
         let t0 = Instant::now();
-        let slot = m.admit(req(1, 2, 4), 2, 77, t0, t0, t0).unwrap();
+        let slot = m.admit(req(1, 2, 4), 2, 77, t0, t0, t0, &mut c).unwrap();
         let (tok, pos) = m.decode_io();
         for s in 0..3 {
             if s == slot {
@@ -235,5 +308,51 @@ mod tests {
                 assert_eq!((tok[s], pos[s]), (0, 0));
             }
         }
+    }
+
+    #[test]
+    fn paged_lifecycle_grows_and_releases_blocks() {
+        let mut m = SequenceManager::new(2, 32);
+        let mut c = CacheStore::Paged(
+            PagedKvCache::new(CacheLayout::Mla { r: 4, dr: 4 }, 1, 2, 4, 16).unwrap(),
+        );
+        let t0 = Instant::now();
+        // Prompt 5 + max_new 6 -> bounded demand 10 tokens = 3 blocks.
+        let slot = m.admit(req(1, 5, 6), 5, 42, t0, t0, t0, &mut c).unwrap();
+        {
+            let p = c.as_paged().unwrap();
+            assert_eq!(p.blocks_in_use(), 2, "prompt of 5 spans 2 blocks");
+            assert_eq!(p.blocks_reserved(), 1, "one block held back for decode");
+        }
+        for t in 0..5 {
+            m.grow_for_decode(&mut c).unwrap();
+            m.push_token(slot, 50 + t).unwrap();
+        }
+        assert!(m.is_done(slot));
+        {
+            let p = c.as_paged().unwrap();
+            assert_eq!(p.blocks_in_use(), 3, "grew within the reservation");
+            c.check_invariants().unwrap();
+        }
+        m.finish(slot, &mut c).unwrap();
+        let p = c.as_paged().unwrap();
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.blocks_reserved(), 0);
+        c.check_invariants().unwrap();
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_rolls_back_the_slot_when_blocks_run_out() {
+        let mut m = SequenceManager::new(2, 32);
+        // Only 2 blocks of 4 tokens: a long sequence cannot fit.
+        let mut c = CacheStore::Paged(
+            PagedKvCache::new(CacheLayout::Mla { r: 4, dr: 4 }, 1, 2, 4, 2).unwrap(),
+        );
+        let t0 = Instant::now();
+        assert!(m.admit(req(1, 20, 8), 20, 1, t0, t0, t0, &mut c).is_err());
+        assert_eq!(m.n_active(), 0, "slot rolled back");
+        m.check_invariants().unwrap();
+        c.check_invariants().unwrap();
     }
 }

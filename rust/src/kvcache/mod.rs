@@ -1,15 +1,23 @@
-//! KV-cache management: slot-based cache pool shared by the continuous
-//! batcher, with layout-aware byte accounting for GQA vs MLA-latent
-//! caches.
+//! KV-cache management: the fixed slot-based cache pool shared by the
+//! continuous batcher, and the paged block-granular pool ([`paged`]),
+//! with layout-aware byte accounting for GQA vs MLA-latent caches.
 //!
 //! The decode artifacts operate on fixed-shape padded caches
 //! (`[L, B, T, ...]`); a **slot** is one batch row. The manager owns the
 //! host-side backing tensors, splices prefill output into slots, and
 //! enforces the allocation invariants that the property tests target
 //! (no double-allocation, no leaks, byte accounting exact).
+//!
+//! [`paged`] replaces the worst-case per-slot row reservation with
+//! ref-counted fixed-size blocks over one shared pool, so a short prompt
+//! only holds the blocks it actually writes.
+
+pub mod paged;
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
+
+pub use paged::{BlockAllocator, PagedKvCache};
 
 /// Cache layout per architecture.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,6 +34,15 @@ impl CacheLayout {
         match *self {
             CacheLayout::Gqa { g, d } => 2 * g * d,
             CacheLayout::Mla { r, dr } => r + dr,
+        }
+    }
+
+    /// Inner (per-token, per-layer) widths of the two backing buffers:
+    /// GQA -> (k, v) = (g*d, g*d); MLA -> (latent, rope-key) = (r, dr).
+    pub fn inner_dims(&self) -> (usize, usize) {
+        match *self {
+            CacheLayout::Gqa { g, d } => (g * d, g * d),
+            CacheLayout::Mla { r, dr } => (r, dr),
         }
     }
 }
@@ -71,6 +88,12 @@ impl KvCache {
         }
         for (mine, theirs) in self.bufs.iter_mut().zip(prefill_bufs) {
             let (l_mine, b_mine) = (mine.shape[0], mine.shape[1]);
+            if theirs.shape.len() < 3 || theirs.shape[0] != l_mine {
+                bail!(
+                    "cache layer count mismatch {:?} vs {:?}",
+                    mine.shape, theirs.shape
+                );
+            }
             let b_theirs = theirs.shape[1];
             let t_theirs = theirs.shape[2];
             let row_mine: usize = mine.shape[3..].iter().product::<usize>();
@@ -96,22 +119,13 @@ impl KvCache {
         Ok(())
     }
 
-    /// Replace the backing tensors with the decode step's outputs.
-    pub fn store(&mut self, new_bufs: Vec<Tensor>) -> Result<()> {
-        if new_bufs.len() != self.bufs.len() {
-            bail!("store arity mismatch");
-        }
-        for (mine, new) in self.bufs.iter_mut().zip(new_bufs) {
-            if mine.shape != new.shape {
-                bail!("store shape {:?} vs {:?}", mine.shape, new.shape);
-            }
-            *mine = new;
-        }
-        Ok(())
-    }
-
     /// Zero one slot (hygiene; correctness comes from position masking).
-    pub fn clear_slot(&mut self, slot: usize) {
+    /// Bounds-checked: an out-of-range slot returns the same "slot out of
+    /// range" error as `splice_from` instead of panicking.
+    pub fn clear_slot(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("slot out of range: {slot} >= batch {}", self.batch);
+        }
         for buf in &mut self.bufs {
             let b = buf.shape[1];
             let row: usize = buf.shape[2..].iter().product();
@@ -121,6 +135,7 @@ impl KvCache {
                 buf.data[off..off + row].iter_mut().for_each(|x| *x = 0.0);
             }
         }
+        Ok(())
     }
 }
 
@@ -245,12 +260,31 @@ mod tests {
     }
 
     #[test]
+    fn splice_rejects_layer_count_mismatch() {
+        // Regression: a prefill buffer with fewer layers used to panic
+        // out-of-bounds in the copy loop instead of returning Err.
+        let mut c = KvCache::new(CacheLayout::Mla { r: 2, dr: 2 }, 2, 2, 4);
+        let short_c = Tensor::zeros(&[1, 2, 4, 2]);
+        let short_kr = Tensor::zeros(&[1, 2, 4, 2]);
+        let err = c.splice_from(&[short_c, short_kr], 0, 0).unwrap_err();
+        assert!(err.to_string().contains("layer count"), "{err}");
+    }
+
+    #[test]
+    fn clear_slot_out_of_range_is_an_error_not_a_panic() {
+        let mut c = KvCache::new(CacheLayout::Mla { r: 2, dr: 2 }, 1, 2, 4);
+        let err = c.clear_slot(2).unwrap_err();
+        assert!(err.to_string().contains("slot out of range"), "{err}");
+        c.clear_slot(1).unwrap();
+    }
+
+    #[test]
     fn clear_slot_zeroes_only_that_slot() {
         let mut c = KvCache::new(CacheLayout::Gqa { g: 1, d: 2 }, 2, 2, 3);
         for b in &mut c.bufs {
             b.data.iter_mut().for_each(|x| *x = 1.0);
         }
-        c.clear_slot(0);
+        c.clear_slot(0).unwrap();
         let row = 3 * 1 * 2;
         for buf in &c.bufs {
             for l in 0..2 {

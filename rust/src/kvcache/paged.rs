@@ -1,0 +1,692 @@
+//! Paged block-granular KV cache: vLLM-style block tables over one
+//! shared ref-counted pool, replacing the fixed pool's worst-case
+//! per-slot row reservation.
+//!
+//! The fixed [`super::KvCache`] reserves a full `capacity`-length row per
+//! slot, so a 16-token prompt costs as much memory as an 8K one and
+//! concurrency is bounded by the worst case. Here the unit of allocation
+//! is a **block** of `block_size` tokens:
+//!
+//!   * [`BlockAllocator`] owns the ref-counted free list (ref counts so
+//!     future prefix-sharing / copy-on-write can alias blocks across
+//!     sequences) with the same leak/double-free invariant checking as
+//!     `SlotAllocator::check_invariants`;
+//!   * [`PagedKvCache`] holds one backing tensor pair shaped
+//!     `[n_blocks, L, block_size, inner]` (layout-aware: GQA k/v or MLA
+//!     latent/rope-key) plus a per-slot **block table** mapping token
+//!     position -> (block, offset).
+//!
+//! Admission *reserves* the sequence's bounded demand (prompt plus its
+//! clamped `max_new`, not the cache capacity) so lazy per-step `grow`
+//! can never fail mid-decode, and the scheduler can admit on blocks-free
+//! rather than slots-free.
+
+use super::CacheLayout;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Ref-counted fixed-size block allocator with a free list.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    refcount: Vec<u32>,
+    free: Vec<usize>,
+}
+
+impl BlockAllocator {
+    pub fn new(n_blocks: usize) -> Self {
+        BlockAllocator {
+            refcount: vec![0; n_blocks],
+            free: (0..n_blocks).rev().collect(),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_in_use(&self) -> usize {
+        self.n_blocks() - self.n_free()
+    }
+
+    /// Take a free block (refcount 1), or None when the pool is empty.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b], 0);
+        self.refcount[b] = 1;
+        Some(b)
+    }
+
+    /// Bump the refcount of an allocated block (prefix sharing / CoW).
+    pub fn retain(&mut self, block: usize) -> Result<()> {
+        match self.refcount.get_mut(block) {
+            Some(rc) if *rc > 0 => {
+                *rc += 1;
+                Ok(())
+            }
+            Some(_) => bail!("retain of free block {block}"),
+            None => bail!("block {block} out of range"),
+        }
+    }
+
+    /// Drop one reference; returns true when the block went back to the
+    /// free list. Releasing a free block is a double free and errors.
+    pub fn release(&mut self, block: usize) -> Result<bool> {
+        match self.refcount.get_mut(block) {
+            Some(rc) if *rc > 0 => {
+                *rc -= 1;
+                if *rc == 0 {
+                    self.free.push(block);
+                    Ok(true)
+                } else {
+                    Ok(false)
+                }
+            }
+            Some(_) => bail!("double free of block {block}"),
+            None => bail!("block {block} out of range"),
+        }
+    }
+
+    pub fn refcount_of(&self, block: usize) -> u32 {
+        self.refcount.get(block).copied().unwrap_or(0)
+    }
+
+    /// Internal consistency: free list and refcounts agree, no
+    /// duplicates, no leaks (mirrors `SlotAllocator::check_invariants`).
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut on_free = vec![false; self.n_blocks()];
+        for &b in &self.free {
+            if b >= self.n_blocks() {
+                bail!("free block {b} out of range");
+            }
+            if on_free[b] {
+                bail!("block {b} twice in free list");
+            }
+            on_free[b] = true;
+            if self.refcount[b] != 0 {
+                bail!("block {b} both free and referenced");
+            }
+        }
+        for (b, &on) in on_free.iter().enumerate() {
+            if self.refcount[b] == 0 && !on {
+                bail!("block {b} leaked (zero refs, not in free list)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paged cache pool: per-sequence block tables over shared blocks.
+pub struct PagedKvCache {
+    pub layout: CacheLayout,
+    pub n_layers: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+    alloc: BlockAllocator,
+    /// Backing tensors, one per layout buffer (GQA: k, v; MLA: latent,
+    /// rope-key), shaped `[n_blocks, L, block_size, inner]`.
+    pool: Vec<Tensor>,
+    /// Per-slot block tables: `tables[slot][pos / block_size]` is the
+    /// block holding token position `pos`.
+    tables: Vec<Vec<usize>>,
+    /// Blocks reserved at admission but not yet in the table, per slot.
+    reserved: Vec<usize>,
+}
+
+impl PagedKvCache {
+    pub fn new(
+        layout: CacheLayout,
+        n_layers: usize,
+        n_slots: usize,
+        block_size: usize,
+        n_blocks: usize,
+    ) -> Result<Self> {
+        if n_layers == 0 || n_slots == 0 || block_size == 0 || n_blocks == 0 {
+            bail!(
+                "degenerate paged cache geometry: layers {n_layers}, slots \
+                 {n_slots}, block_size {block_size}, blocks {n_blocks}"
+            );
+        }
+        let (i0, i1) = layout.inner_dims();
+        let pool = vec![
+            Tensor::zeros(&[n_blocks, n_layers, block_size, i0]),
+            Tensor::zeros(&[n_blocks, n_layers, block_size, i1]),
+        ];
+        Ok(PagedKvCache {
+            layout,
+            n_layers,
+            block_size,
+            alloc: BlockAllocator::new(n_blocks),
+            pool,
+            tables: (0..n_slots).map(|_| Vec::new()).collect(),
+            reserved: vec![0; n_slots],
+        })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.alloc.n_blocks()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.alloc.n_in_use()
+    }
+
+    /// Blocks promised to admitted sequences but not yet allocated.
+    pub fn blocks_reserved(&self) -> usize {
+        self.reserved.iter().sum()
+    }
+
+    /// Blocks available for *new* admissions: free minus outstanding
+    /// reservations (the scheduler's blocks-free admission signal).
+    pub fn n_unreserved(&self) -> usize {
+        self.alloc.n_free().saturating_sub(self.blocks_reserved())
+    }
+
+    /// Blocks needed to hold `tokens` cache positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        (tokens + self.block_size - 1) / self.block_size
+    }
+
+    /// Inner (per-token, per-layer) width of pool buffer `buf`.
+    pub fn inner_dim(&self, buf: usize) -> usize {
+        self.pool[buf].shape[3]
+    }
+
+    pub fn bytes_per_token(&self) -> usize {
+        self.layout.per_token_per_layer() * self.n_layers * 4
+    }
+
+    pub fn bytes_total(&self) -> usize {
+        self.pool.iter().map(|b| b.len() * 4).sum()
+    }
+
+    /// Bytes actually held by allocated blocks.
+    pub fn bytes_in_use(&self) -> usize {
+        self.blocks_in_use() * self.block_size * self.bytes_per_token()
+    }
+
+    /// Bind `slot` to a fresh sequence: reserve `reserve_tokens` worth of
+    /// blocks (its bounded lifetime demand) and materialise the first
+    /// `initial_len` positions (the prompt, about to be spliced).
+    pub fn admit_slot(
+        &mut self,
+        slot: usize,
+        reserve_tokens: usize,
+        initial_len: usize,
+    ) -> Result<()> {
+        if slot >= self.tables.len() {
+            bail!("slot out of range: {slot} >= {}", self.tables.len());
+        }
+        if !self.tables[slot].is_empty() || self.reserved[slot] != 0 {
+            bail!("slot {slot} already admitted");
+        }
+        let need = self.blocks_for(reserve_tokens.max(initial_len));
+        if need > self.n_unreserved() {
+            bail!(
+                "out of cache blocks: slot {slot} needs {need}, {} unreserved",
+                self.n_unreserved()
+            );
+        }
+        self.reserved[slot] = need;
+        self.grow(slot, initial_len)
+    }
+
+    /// Ensure the slot's table covers `len` token positions, drawing new
+    /// blocks from the slot's admission-time reservation (so growth
+    /// during decode can never race another sequence for memory).
+    pub fn grow(&mut self, slot: usize, len: usize) -> Result<()> {
+        if slot >= self.tables.len() {
+            bail!("slot out of range: {slot} >= {}", self.tables.len());
+        }
+        let want = self.blocks_for(len);
+        while self.tables[slot].len() < want {
+            if self.reserved[slot] == 0 {
+                bail!(
+                    "slot {slot} grew past its reservation ({} blocks)",
+                    self.tables[slot].len()
+                );
+            }
+            let b = match self.alloc.alloc() {
+                Some(b) => b,
+                None => bail!("block pool exhausted despite reservation"),
+            };
+            self.reserved[slot] -= 1;
+            self.tables[slot].push(b);
+        }
+        Ok(())
+    }
+
+    /// Release every block the slot holds plus its unused reservation;
+    /// returns the number of blocks returned to the free list.
+    pub fn release_slot(&mut self, slot: usize) -> Result<usize> {
+        if slot >= self.tables.len() {
+            bail!("slot out of range: {slot} >= {}", self.tables.len());
+        }
+        let blocks = std::mem::take(&mut self.tables[slot]);
+        let mut freed = 0;
+        for b in blocks {
+            if self.alloc.release(b)? {
+                freed += 1;
+            }
+        }
+        self.reserved[slot] = 0;
+        Ok(freed)
+    }
+
+    /// Does the slot's table cover token position `pos`? (False for idle
+    /// slots — backends use this as the position mask.)
+    pub fn covers(&self, slot: usize, pos: usize) -> bool {
+        match self.tables.get(slot) {
+            Some(t) => pos / self.block_size < t.len(),
+            None => false,
+        }
+    }
+
+    fn offset(&self, buf: usize, slot: usize, layer: usize, pos: usize) -> Result<usize> {
+        let table = match self.tables.get(slot) {
+            Some(t) => t,
+            None => bail!("slot out of range: {slot} >= {}", self.tables.len()),
+        };
+        let block = match table.get(pos / self.block_size) {
+            Some(&b) => b,
+            None => bail!(
+                "position {pos} beyond slot {slot}'s block table ({} blocks)",
+                table.len()
+            ),
+        };
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range");
+        }
+        let inner = self.pool[buf].shape[3];
+        let off = pos % self.block_size;
+        Ok(((block * self.n_layers + layer) * self.block_size + off) * inner)
+    }
+
+    /// The inner-dim row of pool buffer `buf` at (slot, layer, pos).
+    pub fn row(&self, buf: usize, slot: usize, layer: usize, pos: usize) -> Result<&[f32]> {
+        let inner = self.pool[buf].shape[3];
+        let o = self.offset(buf, slot, layer, pos)?;
+        Ok(&self.pool[buf].data[o..o + inner])
+    }
+
+    pub fn row_mut(
+        &mut self,
+        buf: usize,
+        slot: usize,
+        layer: usize,
+        pos: usize,
+    ) -> Result<&mut [f32]> {
+        let inner = self.pool[buf].shape[3];
+        let o = self.offset(buf, slot, layer, pos)?;
+        Ok(&mut self.pool[buf].data[o..o + inner])
+    }
+
+    /// Splice prefill output (tensors `[L, Bp, T, inner...]`) row `src`
+    /// into `slot`, copying only the first `len` positions — unlike the
+    /// fixed pool there is no padded tail to fill. The slot must already
+    /// cover `len` positions (admit_slot/grow first).
+    pub fn splice_from(
+        &mut self,
+        prefill_bufs: &[Tensor],
+        src: usize,
+        slot: usize,
+        len: usize,
+    ) -> Result<()> {
+        if prefill_bufs.len() != self.pool.len() {
+            bail!("layout mismatch");
+        }
+        if len > 0 && !self.covers(slot, len - 1) {
+            bail!("slot {slot} block table does not cover {len} positions");
+        }
+        for (i, theirs) in prefill_bufs.iter().enumerate() {
+            if theirs.shape.len() < 3 || theirs.shape[0] != self.n_layers {
+                bail!(
+                    "cache layer count mismatch: pool has {} layers, \
+                     prefill buffer is {:?}",
+                    self.n_layers, theirs.shape
+                );
+            }
+            let bp = theirs.shape[1];
+            let t = theirs.shape[2];
+            let inner: usize = theirs.shape[3..].iter().product();
+            if inner != self.pool[i].shape[3] {
+                bail!(
+                    "cache inner shape mismatch {:?} vs {:?}",
+                    self.pool[i].shape, theirs.shape
+                );
+            }
+            if src >= bp {
+                bail!("slot out of range");
+            }
+            if len > t {
+                bail!("splice wants {len} positions, prefill has {t}");
+            }
+            for l in 0..self.n_layers {
+                for pos in 0..len {
+                    let src_off = ((l * bp + src) * t + pos) * inner;
+                    let dst_off = self.offset(i, slot, l, pos)?;
+                    let src_row = &theirs.data[src_off..src_off + inner];
+                    self.pool[i].data[dst_off..dst_off + inner]
+                        .copy_from_slice(src_row);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocator consistency plus table/refcount agreement: every block
+    /// reference in some table is accounted for by exactly its refcount,
+    /// and outstanding reservations never exceed the free list.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.alloc.check_invariants()?;
+        let mut refs = vec![0u32; self.alloc.n_blocks()];
+        for (slot, table) in self.tables.iter().enumerate() {
+            for &b in table {
+                if b >= refs.len() {
+                    bail!("slot {slot} references out-of-range block {b}");
+                }
+                refs[b] += 1;
+            }
+        }
+        for (b, &r) in refs.iter().enumerate() {
+            if r != self.alloc.refcount_of(b) {
+                bail!(
+                    "block {b} refcount {} != {r} table references",
+                    self.alloc.refcount_of(b)
+                );
+            }
+        }
+        if self.blocks_reserved() > self.alloc.n_free() {
+            bail!(
+                "reserved {} blocks exceed {} free",
+                self.blocks_reserved(),
+                self.alloc.n_free()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::Rng;
+
+    fn mla_cache(slots: usize, block_size: usize, blocks: usize) -> PagedKvCache {
+        PagedKvCache::new(CacheLayout::Mla { r: 2, dr: 2 }, 2, slots, block_size, blocks)
+            .unwrap()
+    }
+
+    #[test]
+    fn allocator_alloc_release_cycle() {
+        let mut a = BlockAllocator::new(3);
+        let b1 = a.alloc().unwrap();
+        let b2 = a.alloc().unwrap();
+        assert_ne!(b1, b2);
+        assert_eq!(a.n_in_use(), 2);
+        assert!(a.release(b1).unwrap(), "refcount 1 frees");
+        assert!(a.release(b1).is_err(), "double free must fail");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocator_refcounts_defer_the_free() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        a.retain(b).unwrap();
+        assert_eq!(a.refcount_of(b), 2);
+        assert!(!a.release(b).unwrap(), "still referenced");
+        assert!(a.release(b).unwrap(), "last ref frees");
+        assert!(a.retain(b).is_err(), "retain of a free block must fail");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocator_exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(1);
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn props_block_allocator_invariants_under_random_workload() {
+        check(
+            "block_allocator_invariants",
+            PropConfig { cases: 200, seed: 77 },
+            |r: &mut Rng| {
+                let n = 1 + r.below(8);
+                let ops: Vec<u8> = (0..96).map(|_| r.next_u64() as u8).collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut a = BlockAllocator::new(*n);
+                // live[i] = (block, refs we still hold on it)
+                let mut live: Vec<(usize, u32)> = vec![];
+                for &op in ops {
+                    match op % 3 {
+                        0 => {
+                            if let Some(b) = a.alloc() {
+                                if live.iter().any(|&(x, _)| x == b) {
+                                    return Err(format!("block {b} double-allocated"));
+                                }
+                                live.push((b, 1));
+                            } else if live.len() != *n {
+                                return Err("alloc failed below capacity".into());
+                            }
+                        }
+                        1 => {
+                            if !live.is_empty() {
+                                let i = (op as usize / 3) % live.len();
+                                live[i].1 += 1;
+                                a.retain(live[i].0).map_err(|e| e.to_string())?;
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let i = (op as usize / 3) % live.len();
+                                let freed =
+                                    a.release(live[i].0).map_err(|e| e.to_string())?;
+                                live[i].1 -= 1;
+                                if freed != (live[i].1 == 0) {
+                                    return Err(format!(
+                                        "block {} freed={freed} with {} refs held",
+                                        live[i].0, live[i].1
+                                    ));
+                                }
+                                if live[i].1 == 0 {
+                                    live.remove(i);
+                                }
+                            }
+                        }
+                    }
+                    a.check_invariants().map_err(|e| e.to_string())?;
+                    if a.n_in_use() != live.len() {
+                        return Err("in-use count mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn admit_grow_release_lifecycle() {
+        let mut c = mla_cache(2, 4, 6);
+        // Reserve 10 tokens (3 blocks), materialise the 5-token prompt.
+        c.admit_slot(0, 10, 5).unwrap();
+        assert_eq!(c.blocks_in_use(), 2, "5 tokens span 2 blocks of 4");
+        assert_eq!(c.blocks_reserved(), 1, "one block still reserved");
+        assert_eq!(c.n_unreserved(), 3);
+        assert!(c.covers(0, 4) && !c.covers(0, 8));
+        c.grow(0, 9).unwrap();
+        assert_eq!(c.blocks_in_use(), 3);
+        assert_eq!(c.blocks_reserved(), 0);
+        assert!(c.grow(0, 13).is_err(), "growth past reservation fails");
+        c.check_invariants().unwrap();
+        assert_eq!(c.release_slot(0).unwrap(), 3);
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.n_unreserved(), 6);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_respects_outstanding_reservations() {
+        let mut c = mla_cache(3, 4, 4);
+        // Slot 0 reserves 3 blocks but only materialises 1.
+        c.admit_slot(0, 12, 2).unwrap();
+        assert_eq!(c.n_unreserved(), 1);
+        // A second sequence may only take the 1 unreserved block.
+        assert!(c.admit_slot(1, 8, 2).is_err(), "would eat slot 0's reserve");
+        c.admit_slot(1, 4, 2).unwrap();
+        assert_eq!(c.n_unreserved(), 0);
+        assert!(c.admit_slot(2, 1, 1).is_err(), "pool fully committed");
+        // Slot 0's lazy growth still succeeds: its blocks were promised.
+        c.grow(0, 12).unwrap();
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_admit_and_bad_slots_error() {
+        let mut c = mla_cache(2, 4, 4);
+        c.admit_slot(0, 4, 2).unwrap();
+        assert!(c.admit_slot(0, 4, 2).is_err(), "slot already admitted");
+        assert!(c.admit_slot(9, 4, 2).is_err(), "slot out of range");
+        assert!(c.grow(9, 1).is_err());
+        assert!(c.release_slot(9).is_err());
+        assert!(c.row(0, 0, 0, 7).is_err(), "beyond the block table");
+    }
+
+    #[test]
+    fn rows_roundtrip_through_blocks() {
+        let mut c = mla_cache(2, 4, 8);
+        c.admit_slot(1, 7, 7).unwrap();
+        for pos in 0..7 {
+            for l in 0..2 {
+                let v = (pos * 10 + l) as f32;
+                c.row_mut(0, 1, l, pos).unwrap().fill(v);
+                c.row_mut(1, 1, l, pos).unwrap().fill(-v);
+            }
+        }
+        for pos in 0..7 {
+            for l in 0..2 {
+                let v = (pos * 10 + l) as f32;
+                assert_eq!(c.row(0, 1, l, pos).unwrap(), [v, v]);
+                assert_eq!(c.row(1, 1, l, pos).unwrap(), [-v, -v]);
+            }
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn splice_copies_the_right_prefill_row() {
+        let mut c = mla_cache(2, 4, 8);
+        c.admit_slot(0, 6, 6).unwrap();
+        // Prefill buffers [L=2, Bp=3, T=8, inner=2]; mark row 1.
+        let mut src_c = Tensor::zeros(&[2, 3, 8, 2]);
+        let src_kr = Tensor::zeros(&[2, 3, 8, 2]);
+        for l in 0..2 {
+            for t in 0..8 {
+                for x in 0..2 {
+                    src_c.data[((l * 3 + 1) * 8 + t) * 2 + x] =
+                        (l * 1000 + t * 10 + x) as f32;
+                }
+            }
+        }
+        c.splice_from(&[src_c, src_kr], 1, 0, 6).unwrap();
+        assert_eq!(c.row(0, 0, 0, 0).unwrap(), [0.0, 1.0]);
+        assert_eq!(c.row(0, 0, 0, 5).unwrap(), [50.0, 51.0]);
+        assert_eq!(c.row(0, 0, 1, 3).unwrap(), [1030.0, 1031.0]);
+        // Positions past the splice length were never touched.
+        assert!(c.row(0, 0, 0, 6).is_err(), "position 6 not materialised");
+    }
+
+    #[test]
+    fn splice_validates_layer_count_like_the_fixed_pool() {
+        let mut c = mla_cache(1, 4, 4);
+        c.admit_slot(0, 4, 4).unwrap();
+        let short_c = Tensor::zeros(&[1, 1, 4, 2]);
+        let short_kr = Tensor::zeros(&[1, 1, 4, 2]);
+        let err = c.splice_from(&[short_c, short_kr], 0, 0, 4).unwrap_err();
+        assert!(err.to_string().contains("layer count"), "{err}");
+    }
+
+    #[test]
+    fn byte_accounting_tracks_blocks_not_worst_case() {
+        let c0 = mla_cache(4, 16, 16);
+        assert_eq!(c0.bytes_per_token(), (2 + 2) * 2 * 4);
+        assert_eq!(c0.bytes_total(), 16 * 16 * c0.bytes_per_token());
+        assert_eq!(c0.bytes_in_use(), 0);
+        let mut c = mla_cache(4, 16, 16);
+        c.admit_slot(0, 20, 20).unwrap();
+        assert_eq!(c.bytes_in_use(), 2 * 16 * c.bytes_per_token());
+    }
+
+    #[test]
+    fn props_paged_cache_invariants_under_random_workload() {
+        check(
+            "paged_cache_invariants",
+            PropConfig { cases: 120, seed: 41 },
+            |r: &mut Rng| {
+                let slots = 1 + r.below(4);
+                let blocks = 2 + r.below(10);
+                let ops: Vec<u64> = (0..48).map(|_| r.next_u64()).collect();
+                (slots, blocks, ops)
+            },
+            |(slots, blocks, ops)| {
+                let mut c = PagedKvCache::new(
+                    CacheLayout::Mla { r: 2, dr: 2 },
+                    1,
+                    *slots,
+                    4,
+                    *blocks,
+                )
+                .map_err(|e| e.to_string())?;
+                // active[slot] = Some(reserved_tokens) while admitted.
+                let mut active: Vec<Option<usize>> = vec![None; *slots];
+                for &op in ops {
+                    let slot = (op as usize / 4) % *slots;
+                    match op % 3 {
+                        0 => {
+                            if active[slot].is_none() {
+                                let tokens = 1 + (op as usize / 16) % 12;
+                                let initial = 1 + (op as usize / 64) % tokens;
+                                let fits = c.blocks_for(tokens) <= c.n_unreserved();
+                                let got = c.admit_slot(slot, tokens, initial);
+                                if fits != got.is_ok() {
+                                    return Err(format!(
+                                        "admit fits={fits} but result {got:?}"
+                                    ));
+                                }
+                                if got.is_ok() {
+                                    active[slot] = Some(tokens);
+                                }
+                            }
+                        }
+                        1 => {
+                            if let Some(tokens) = active[slot] {
+                                // Growth within the reservation always works.
+                                let len = 1 + (op as usize / 8) % tokens;
+                                c.grow(slot, len).map_err(|e| e.to_string())?;
+                            }
+                        }
+                        _ => {
+                            if active[slot].take().is_some() {
+                                c.release_slot(slot).map_err(|e| e.to_string())?;
+                            }
+                        }
+                    }
+                    c.check_invariants().map_err(|e| e.to_string())?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

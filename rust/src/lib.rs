@@ -15,12 +15,15 @@
 //! The serving core is three decoupled layers:
 //!
 //! * [`backend`] — the [`backend::ExecBackend`] trait (prefill/decode over
-//!   an opaque slot-cache) with two implementations:
+//!   an opaque cache store) with two implementations:
 //!   [`backend::XlaBackend`] executes the AOT artifacts through PJRT, and
 //!   [`backend::SimBackend`] is a deterministic pure-Rust model of the same
 //!   contract for both `CacheLayout::Gqa` and `CacheLayout::Mla`, so the
 //!   engine, server, benches, and integration tests run **hermetically on a
-//!   bare checkout** — no `make artifacts`, no XLA runtime.
+//!   bare checkout** — no `make artifacts`, no XLA runtime. The
+//!   [`backend::CacheStore`] seam lets the engine run over either the
+//!   fixed slot pool (what the artifacts bake in) or the paged block pool
+//!   (`SimBackend` drives both, completion-identically).
 //! * [`coordinator::scheduler`] — pluggable `SchedulePolicy`
 //!   (admit-first / decode-first / hybrid), selected via
 //!   [`config::EngineConfig`]: who gets the next iteration, queued prefills
@@ -37,7 +40,7 @@
 //! |---------------|---------------------------------------------------------|
 //! | [`backend`]   | execution backends: `ExecBackend`, `SimBackend`, `XlaBackend`, `ModelBundle` |
 //! | [`coordinator`] | engine, scheduler policies, sequence manager, sampling, request types |
-//! | [`kvcache`]   | slot cache pool + layout-aware byte accounting (GQA vs MLA) |
+//! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with layout-aware byte accounting (GQA vs MLA) |
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
 //! | [`server`]    | TCP JSONL front-end with stats + in-band protocol errors |
 //! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{EngineConfig, PolicyKind};
+use transmla::config::{CacheKind, EngineConfig, PolicyKind};
 use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
@@ -42,6 +42,11 @@ COMMON FLAGS
   --policy P        scheduling policy: admit-first|decode-first|hybrid[:N]
   --batch N         decode slots (sim backend; default 8)
   --capacity N      sim cache capacity (default 256)
+  --cache K         KV-cache store: fixed|paged (default fixed; paged needs
+                    --backend sim — the XLA artifacts bake in the fixed pool)
+  --block-size N    paged cache tokens per block (default 16)
+  --cache-blocks N  paged pool size in blocks (default: the fixed pool's
+                    worst-case byte budget, batch * ceil(capacity/block))
 ";
 
 fn main() {
@@ -133,9 +138,28 @@ fn run() -> Result<()> {
 
 /// Engine settings from the common flags.
 fn engine_cfg(args: &Args) -> Result<EngineConfig> {
+    let mut cache = CacheKind::parse(args.str_flag("cache", "fixed"))?;
+    if let CacheKind::Paged { ref mut block_size, ref mut n_blocks } = cache {
+        if let Some(b) = args.get("block-size") {
+            *block_size = b
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .with_context(|| format!("bad --block-size `{b}`"))?;
+        }
+        if let Some(n) = args.get("cache-blocks") {
+            *n_blocks = Some(
+                n.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .with_context(|| format!("bad --cache-blocks `{n}`"))?,
+            );
+        }
+    }
     Ok(EngineConfig {
         policy: PolicyKind::parse(args.str_flag("policy", "admit-first"))?,
         seed: args.usize_flag("seed", 0) as u64,
+        cache,
         ..EngineConfig::default()
     })
 }
@@ -157,9 +181,15 @@ fn build_engine(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<Engine> {
                 seed: cfg.seed,
                 ..base
             })?;
-            Ok(Engine::new(sim, cfg))
+            Engine::try_new(sim, cfg)
         }
         "xla" => {
+            if cfg.cache != CacheKind::Fixed {
+                bail!(
+                    "--cache paged requires --backend sim: the AOT decode \
+                     artifacts operate on the fixed padded cache"
+                );
+            }
             let rt = Runtime::new(art_dir)?;
             let params = load_ckpt_or_init(&rt, cfg_name, args)?;
             let arch = parse_arch(args)?;

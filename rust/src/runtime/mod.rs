@@ -210,6 +210,29 @@ impl Value {
     }
 }
 
+/// Copy an output literal into an existing host tensor in place
+/// (shape- and dtype-checked). `Literal::to_vec` still materialises a
+/// staging buffer on the bindings side, so this trades one extra memcpy
+/// for keeping the destination allocation stable — the win is standing
+/// multi-MB cache buffers that never churn through the allocator, not
+/// fewer copies. (Bindings with a direct copy-into would remove the
+/// staging buffer here with no caller change.)
+pub fn copy_literal_into(lit: &xla::Literal, dst: &mut Tensor) -> Result<()> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    if dims != dst.shape {
+        bail!("in-place output shape {:?} vs buffer {:?}", dims, dst.shape);
+    }
+    match lit.ty()? {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            dst.data.copy_from_slice(&data);
+        }
+        other => bail!("in-place reuse expects f32 output, got {:?}", other),
+    }
+    Ok(())
+}
+
 /// Convert an output literal into a host f32 tensor.
 pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape()?;
@@ -302,6 +325,61 @@ impl Exec {
         let tensors = untuple(&out[0][0])?;
         drop(lits);
         Ok(tensors)
+    }
+
+    /// Like `run_b_mixed`, but the trailing tensors are **in/out**: they
+    /// are uploaded as the executable's trailing inputs, and after
+    /// execution the same number of trailing tuple outputs is written
+    /// back into them in place. Leading outputs (logits) are returned as
+    /// fresh tensors. The caller's buffers (the engine's KV cache) stay
+    /// the same allocations across every decode step — no realloc churn
+    /// and no full-buffer swap through the cache — at the cost of one
+    /// staging memcpy per output until the bindings grow a direct
+    /// copy-into (see `copy_literal_into`). It is also the write path a
+    /// paged decode artifact would need (outputs landing in
+    /// caller-managed memory).
+    pub fn run_b_mixed_io(
+        &self,
+        device_args: &[xla::PjRtBuffer],
+        host_args: &[Value],
+        io_tensors: &mut [&mut Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.check_arity(device_args.len() + host_args.len() + io_tensors.len())?;
+        let mut lits: Vec<xla::Literal> = host_args
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        for t in io_tensors.iter() {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(&t.data).reshape(&dims)?);
+        }
+        let uploaded: Vec<xla::PjRtBuffer> = lits
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = device_args.iter().collect();
+        bufs.extend(uploaded.iter());
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() < io_tensors.len() {
+            bail!(
+                "artifact `{}` returned {} outputs, expected >= {} in-place",
+                self.spec.name,
+                parts.len(),
+                io_tensors.len()
+            );
+        }
+        let n_lead = parts.len() - io_tensors.len();
+        let lead: Vec<Tensor> = parts[..n_lead]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        for (part, dst) in parts[n_lead..].iter().zip(io_tensors.iter_mut()) {
+            copy_literal_into(part, &mut **dst)?;
+        }
+        drop(lits); // keep the host literals alive past the execution
+        Ok(lead)
     }
 
     /// Upload a host value, returning the device buffer AND the backing

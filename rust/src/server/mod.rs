@@ -166,6 +166,19 @@ fn stats_json(engine: &Engine) -> Json {
     j.set("policy", Json::Str(engine.policy_name().to_string()));
     j.set("decode_tok_per_s", Json::Num(engine.decode_throughput()));
     j.set("uptime_s", Json::Num(m.elapsed_s()));
+    // Cache memory accounting: actual bytes committed vs the worst-case
+    // batch*capacity reservation (the paged cache's whole point).
+    let cs = engine.cache_stats();
+    let mut cache = Json::obj();
+    cache.set("kind", Json::Str(cs.kind.to_string()));
+    cache.set("bytes_total", Json::Num(cs.bytes_total as f64));
+    cache.set("bytes_in_use", Json::Num(cs.bytes_in_use as f64));
+    cache.set("bytes_worst_case", Json::Num(cs.bytes_worst_case as f64));
+    cache.set("block_size", Json::Num(cs.block_size as f64));
+    cache.set("blocks_total", Json::Num(cs.blocks_total as f64));
+    cache.set("blocks_in_use", Json::Num(cs.blocks_in_use as f64));
+    cache.set("blocks_reserved", Json::Num(cs.blocks_reserved as f64));
+    j.set("cache", cache);
     for name in m.sample_names() {
         if let Some(s) = m.summary(&name) {
             let mut sj = Json::obj();

@@ -5,9 +5,9 @@
 //! XLA runtime. (The same engine over real PJRT executables is covered by
 //! `integration_runtime` when artifacts are present.)
 
-use transmla::backend::SimBackend;
-use transmla::config::{EngineConfig, PolicyKind};
-use transmla::coordinator::{Engine, Request};
+use transmla::backend::{SimBackend, SimConfig};
+use transmla::config::{CacheKind, EngineConfig, PolicyKind};
+use transmla::coordinator::{Action, Engine, Request};
 
 fn engine(seed: u64) -> Engine {
     Engine::new(
@@ -150,18 +150,29 @@ fn overlong_prompts_are_clamped_and_complete() {
 
 /// 2 slots; A is long, B and C are short. Returns (completion order,
 /// admission trace as (active-at-admission, admitted ids)).
-fn run_scripted(policy: PolicyKind) -> (Vec<u64>, Vec<(usize, Vec<u64>)>) {
+fn run_scripted_with_cache(
+    policy: PolicyKind,
+    cache: CacheKind,
+) -> (Vec<u64>, Vec<(usize, Vec<u64>)>, Vec<Vec<i32>>) {
     let mut e = Engine::new(
         SimBackend::gqa(2),
-        EngineConfig { policy, ..Default::default() },
+        EngineConfig { policy, cache, ..Default::default() },
     );
     e.submit(Request::from_text(0, "aaaaaaaa", 8)); // A: long
     e.submit(Request::from_text(1, "bbbbbbbb", 2)); // B: short
     e.submit(Request::from_text(2, "cccccccc", 2)); // C: short
     e.run_to_completion().unwrap();
     e.slots_check().unwrap();
-    let order: Vec<u64> = e.take_completions().iter().map(|c| c.id).collect();
-    (order, e.admission_log().to_vec())
+    let mut comps = e.take_completions();
+    let order: Vec<u64> = comps.iter().map(|c| c.id).collect();
+    comps.sort_by_key(|c| c.id);
+    let tokens: Vec<Vec<i32>> = comps.into_iter().map(|c| c.tokens).collect();
+    (order, e.admission_log().to_vec(), tokens)
+}
+
+fn run_scripted(policy: PolicyKind) -> (Vec<u64>, Vec<(usize, Vec<u64>)>) {
+    let (order, log, _) = run_scripted_with_cache(policy, CacheKind::Fixed);
+    (order, log)
 }
 
 #[test]
@@ -195,6 +206,143 @@ fn hybrid_threshold_controls_the_admission_ordering() {
     let (order, log) = run_scripted(PolicyKind::Hybrid { min_free: 1 });
     assert_eq!(order, vec![1, 2, 0]);
     assert_eq!(log[1], (1, vec![2]));
+}
+
+// ---------------------------------------------------------------------------
+// Paged block cache: completion-identical to the fixed pool, and strictly
+// more concurrency under the same byte budget on mixed-context workloads.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paged_and_fixed_caches_are_completion_identical() {
+    // Same scripted arrivals, every policy, both cache kinds: identical
+    // completion order, admission trace, and token-for-token output.
+    for policy in [
+        PolicyKind::AdmitFirst,
+        PolicyKind::DecodeFirst,
+        PolicyKind::Hybrid { min_free: 2 },
+    ] {
+        let fixed = run_scripted_with_cache(policy, CacheKind::Fixed);
+        let paged = run_scripted_with_cache(
+            policy,
+            CacheKind::Paged { block_size: 16, n_blocks: None },
+        );
+        assert_eq!(fixed.0, paged.0, "{policy:?}: completion order diverged");
+        assert_eq!(fixed.1, paged.1, "{policy:?}: admission trace diverged");
+        assert_eq!(fixed.2, paged.2, "{policy:?}: tokens diverged");
+    }
+}
+
+#[test]
+fn paged_hybrid_admits_like_fixed_when_blocks_are_plentiful() {
+    // Regression: the block-aware scheduler view must not shrink below
+    // hybrid's `min_free` threshold just because the queue is short —
+    // only a genuine block shortage may defer admission.
+    for cache in [
+        CacheKind::Fixed,
+        CacheKind::Paged { block_size: 16, n_blocks: None },
+    ] {
+        let mut e = Engine::new(
+            SimBackend::gqa(3),
+            EngineConfig {
+                policy: PolicyKind::Hybrid { min_free: 2 },
+                cache,
+                ..Default::default()
+            },
+        );
+        e.submit(Request::from_text(0, "long running seq", 8));
+        assert_eq!(e.step().unwrap(), Action::Admit(1));
+        e.submit(Request::from_text(1, "late arrival", 2));
+        // 1 active, 2 free slots, 1 queued, blocks plentiful: the hybrid
+        // threshold is met, so both cache kinds admit immediately.
+        assert_eq!(e.step().unwrap(), Action::Admit(1), "{cache:?} deferred");
+        e.run_to_completion().unwrap();
+        e.slots_check().unwrap();
+    }
+}
+
+#[test]
+fn paged_mla_layout_runs_the_full_loop() {
+    let mut e = Engine::new(
+        SimBackend::mla(8, 4),
+        EngineConfig {
+            cache: CacheKind::Paged { block_size: 8, n_blocks: None },
+            ..Default::default()
+        },
+    );
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request::from_text(i, "the latent cache pages", 6))
+        .collect();
+    let comps = e.generate(reqs).unwrap();
+    assert_eq!(comps.len(), 12);
+    assert!(comps.iter().all(|c| c.tokens.len() == 6));
+    assert_eq!(e.cache_stats().blocks_in_use, 0);
+    e.slots_check().unwrap();
+}
+
+/// The acceptance scenario: same total cache byte budget, mixed-context
+/// workload of short prompts. The fixed pool reserves worst-case rows, so
+/// its byte budget only buys 4 slots; the paged pool spends blocks on
+/// actual demand and admits all 8 short requests concurrently.
+#[test]
+fn paged_admits_more_short_sequences_under_the_same_byte_budget() {
+    let capacity = 64usize;
+    let block_size = 16usize;
+    // Fixed: 4 slots x 64 tokens reserved = 256 token-rows of budget.
+    let mut fixed = Engine::new(
+        SimBackend::new(SimConfig { capacity, prefill_seq: capacity, ..SimConfig::gqa(4) })
+            .unwrap(),
+        EngineConfig::default(),
+    );
+    // Paged: 8 slots over the SAME budget — 16 blocks x 16 tokens = 256.
+    let mut paged = Engine::new(
+        SimBackend::new(SimConfig { capacity, prefill_seq: capacity, ..SimConfig::gqa(8) })
+            .unwrap(),
+        EngineConfig {
+            cache: CacheKind::Paged { block_size, n_blocks: Some(16) },
+            ..Default::default()
+        },
+    );
+    assert_eq!(
+        fixed.cache_stats().bytes_total,
+        paged.cache_stats().bytes_total,
+        "the comparison is only fair at equal byte budgets"
+    );
+
+    // 8 short requests: prompt 8 + max_new 8 -> bounded demand 15 tokens
+    // = 1 block each, where the fixed pool would reserve 64 tokens each.
+    for e in [&mut fixed, &mut paged] {
+        for i in 0..8 {
+            e.submit(Request::from_text(i, "short ask", 8));
+        }
+        e.run_to_completion().unwrap();
+        e.slots_check().unwrap();
+    }
+    let fixed_comps = fixed.take_completions();
+    let paged_comps = paged.take_completions();
+    assert_eq!(fixed_comps.len(), 8);
+    assert_eq!(paged_comps.len(), 8);
+
+    // First admission wave: the fixed pool is capped by its 4 worst-case
+    // slots; the paged pool admits all 8 at once.
+    let fixed_wave = fixed.admission_log()[0].1.len();
+    let paged_wave = paged.admission_log()[0].1.len();
+    assert_eq!(fixed_wave, 4, "fixed admits its slot count");
+    assert_eq!(paged_wave, 8, "paged admits the whole burst");
+    assert!(
+        paged_wave > fixed_wave,
+        "paged must admit strictly more concurrent sequences"
+    );
+
+    // And both engines produce the same tokens per request (the sim model
+    // is batch-invariant, so concurrency does not change content).
+    let mut f = fixed_comps;
+    f.sort_by_key(|c| c.id);
+    let mut p = paged_comps;
+    p.sort_by_key(|c| c.id);
+    for (a, b) in f.iter().zip(p.iter()) {
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+    }
 }
 
 #[test]

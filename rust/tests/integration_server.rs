@@ -7,7 +7,7 @@ use std::net::TcpStream;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 use transmla::backend::SimBackend;
-use transmla::config::{EngineConfig, PolicyKind};
+use transmla::config::{CacheKind, EngineConfig, PolicyKind};
 use transmla::coordinator::Engine;
 use transmla::json::Json;
 use transmla::server;
@@ -69,6 +69,54 @@ fn request_stats_shutdown_roundtrip() {
             assert!(s.get(key).is_some(), "`{series}` missing `{key}`");
         }
     }
+    // Cache memory accounting rides along in every stats snapshot.
+    let cache = stats.get("cache").expect("cache accounting object");
+    assert_eq!(cache.get("kind").and_then(Json::as_str), Some("fixed"));
+    let total = cache.get("bytes_total").and_then(Json::as_usize).unwrap();
+    let in_use = cache.get("bytes_in_use").and_then(Json::as_usize).unwrap();
+    assert!(total > 0 && in_use == total, "fixed pool is fully committed");
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn paged_server_reports_block_accounting() {
+    let addr = "127.0.0.1:18434";
+    let handle = std::thread::spawn(move || {
+        let mut e = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                cache: CacheKind::Paged { block_size: 16, n_blocks: None },
+                ..Default::default()
+            },
+        );
+        server::serve(&mut e, addr).unwrap();
+    });
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
+            if j.get("pong").is_some() {
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "server at {addr} never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let resp = server::client_request(addr, "page me", 4).unwrap();
+    assert!(resp.get("text").is_some(), "{resp:?}");
+
+    let stats = server::client_stats(addr).unwrap();
+    let cache = stats.get("cache").expect("cache accounting object");
+    assert_eq!(cache.get("kind").and_then(Json::as_str), Some("paged"));
+    assert!(cache.get("blocks_total").and_then(Json::as_usize).unwrap() > 0);
+    // All requests completed, so every block is back on the free list;
+    // the pool's resident bytes stay at the configured budget.
+    assert_eq!(cache.get("blocks_in_use").and_then(Json::as_usize), Some(0));
+    let total = cache.get("bytes_total").and_then(Json::as_usize).unwrap();
+    let worst = cache.get("bytes_worst_case").and_then(Json::as_usize).unwrap();
+    assert_eq!(total, worst, "default paged pool matches the fixed budget");
 
     server::client_shutdown(addr).unwrap();
     handle.join().unwrap();
