@@ -1,14 +1,16 @@
 //! Bench: paged vs fixed KV-cache under a mixed-context workload at the
 //! SAME total byte budget — the paged pool's concurrency and memory
-//! utilisation advantage, plus the raw block-allocator and block-table
-//! hot paths. Fully hermetic (SimBackend; no artifacts).
+//! utilisation advantage — plus the chunked-vs-monolithic prefill
+//! decode-stall (the TPOT tail the StepPlan pipeline bounds) and the raw
+//! block-allocator and block-table hot paths. Fully hermetic
+//! (SimBackend; no artifacts).
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use harness::Bench;
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{CacheKind, EngineConfig};
+use transmla::config::{CacheKind, EngineConfig, PolicyKind};
 use transmla::coordinator::{Engine, Request};
 use transmla::kvcache::{BlockAllocator, CacheLayout, PagedKvCache};
 
@@ -93,6 +95,60 @@ fn main() {
         waves.1 as f64 / waves.0.max(1) as f64,
         "x first-wave admissions at equal bytes",
     );
+
+    // Chunked vs monolithic prefill: the TPOT stall a long admission
+    // inflicts on active decodes. `decode_stall` is the max number of
+    // prefill tokens processed between two consecutive decode steps —
+    // one whole prompt under admit-first, one chunk under chunked:N.
+    let stall_run = |policy: PolicyKind| -> (usize, usize) {
+        let mut e = Engine::new(
+            SimBackend::new(SimConfig {
+                capacity: 128,
+                prefill_seq: 128,
+                ..SimConfig::gqa(4)
+            })
+            .unwrap(),
+            EngineConfig { policy, ..Default::default() },
+        );
+        for i in 0..3 {
+            e.submit(Request::from_text(i, "steady decode traffic", 40));
+        }
+        for _ in 0..5 {
+            e.step().unwrap();
+        }
+        e.submit(Request::new(3, vec![65; 96], 8));
+        let (mut max_gap, mut gap) = (0usize, 0usize);
+        while !e.is_idle() {
+            let pre = e.metrics.counter("prefill_tokens");
+            let dec = e.metrics.counter("decode_steps");
+            e.step().unwrap();
+            gap += (e.metrics.counter("prefill_tokens") - pre) as usize;
+            if e.metrics.counter("decode_steps") > dec {
+                max_gap = max_gap.max(gap);
+                gap = 0;
+            }
+        }
+        (max_gap, e.metrics.counter("decode_steps") as usize)
+    };
+    for (label, policy) in [
+        ("monolithic", PolicyKind::AdmitFirst),
+        ("chunked_8", PolicyKind::Chunked { chunk_tokens: 8 }),
+    ] {
+        let mean = b.run(&format!("long_admit_{label}_wall"), || {
+            stall_run(policy);
+        });
+        let (stall, steps) = stall_run(policy);
+        b.report(
+            &format!("long_admit_{label}_decode_stall"),
+            stall as f64,
+            "prefill tokens between decode steps (max)",
+        );
+        b.report(
+            &format!("long_admit_{label}_decode_steps"),
+            steps as f64,
+            &format!("steps in {mean:.2e}s"),
+        );
+    }
 
     // Raw allocator hot path: alloc/release cycles through the free list.
     b.run("block_alloc_release_1k_cycles", || {

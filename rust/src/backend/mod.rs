@@ -1,12 +1,18 @@
 //! Execution backends: the layer below the serving engine.
 //!
-//! An [`ExecBackend`] is anything that can run the two model entry points
-//! the continuous batcher needs:
+//! An [`ExecBackend`] is anything that can run the three model entry
+//! points the StepPlan pipeline needs:
 //!
-//!   * **prefill** — a fixed-shape `[Bp, T]` token matrix in, per-position
-//!     logits `[Bp, T, V]` plus per-row caches `[L, Bp, T, ...]` out;
-//!   * **decode** — one token + position per slot in, next-token logits
-//!     `[B, V]` out, with the slot caches advanced in place.
+//!   * **prefill** — a rows-sized `[rows, T]` token matrix in,
+//!     per-position logits `[rows, T, V]` plus per-row caches
+//!     `[L, rows, T, ...]` out (the monolithic admission path);
+//!   * **prefill_chunk** — resumable single-sequence prefill: one prompt
+//!     prefix in, the chunk's cache rows written in place into the
+//!     sequence's slot, last-position logits `[V]` out (the chunked,
+//!     decode-overlapped admission path);
+//!   * **decode** — one token + position + active flag per slot in,
+//!     next-token logits `[B, V]` out, with the slot caches advanced in
+//!     place.
 //!
 //! Two implementations ship:
 //!
@@ -221,12 +227,14 @@ impl CacheStore {
     }
 }
 
-/// Output of one prefill call.
+/// Output of one batched prefill call.
 pub struct PrefillOut {
-    /// Per-position logits `[Bp, T, V]`.
+    /// Per-position logits `[rows, T, V]` (`SimBackend` sizes the rows
+    /// dim to the request; `XlaBackend` always returns the artifact's
+    /// full `[Bp, T, V]`).
     pub logits: Tensor,
-    /// Cache tensors `[L, Bp, T, ...]` in the layout's buffer order
-    /// (GQA: k, v; MLA: latent, rope-key).
+    /// Cache tensors `[L, rows, T, ...]` in the layout's buffer order
+    /// (GQA: k, v; MLA: latent, rope-key), same rows convention.
     pub caches: Vec<Tensor>,
 }
 
@@ -234,16 +242,48 @@ pub struct PrefillOut {
 pub trait ExecBackend {
     fn spec(&self) -> &BackendSpec;
 
-    /// Run prefill over a padded `[prefill_batch * prefill_seq]` token
-    /// matrix (row-major; unused rows/positions zero).
-    fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillOut>;
+    /// Run batched prefill over `rows` prompts packed row-major into a
+    /// `rows * prefill_seq` token matrix (`rows <= prefill_batch`;
+    /// unused positions zero). `SimBackend` sizes its compute and output
+    /// buffers to `rows`; `XlaBackend` pads back up to the artifact's
+    /// fixed `[Bp, T]` shape internally, so the AOT ABI is untouched.
+    fn prefill(&mut self, tokens: &[i32], rows: usize) -> Result<PrefillOut>;
 
-    /// Advance every slot one step: `tokens[s]` / `pos[s]` are the last
-    /// sampled token and its write position for slot `s` (0/0 for idle
-    /// slots — backends must be position-masked so idle slots are inert).
-    /// Updates `cache` in place and returns logits `[batch * vocab]`.
-    /// Backends may reject cache kinds they cannot drive (the XLA
-    /// artifacts require the fixed padded pool).
-    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut CacheStore)
-        -> Result<Tensor>;
+    /// Resumable chunked prefill for ONE sequence. `tokens` is the
+    /// prompt prefix up to the end of this chunk; positions
+    /// `start_pos..tokens.len()` are new. Writes those cache rows
+    /// straight into `slot`'s rows of `cache` and returns the logits row
+    /// `[vocab]` at the chunk's last position. `SimBackend` resumes
+    /// exactly from the cache state at `start_pos - 1` (both layouts,
+    /// both stores); `XlaBackend` recomputes the prefix through its
+    /// fixed-shape prefill artifact and re-splices positions
+    /// `0..tokens.len()` — the AOT contract is untouched, chunking there
+    /// trades recompute for decode overlap.
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        slot: usize,
+        start_pos: usize,
+        cache: &mut CacheStore,
+    ) -> Result<Tensor>;
+
+    /// Advance the decoding slots one step: `tokens[s]` / `pos[s]` are
+    /// the last sampled token and its write position for slot `s`, and
+    /// `active[s]` marks the slots decoding this step (idle and
+    /// mid-prefill slots are false, with `tokens`/`pos` zeroed).
+    /// Backends must leave inactive slots untouched where the store
+    /// allows it — a mid-prefill slot holds live cache rows that a later
+    /// chunk will resume from. (The XLA decode artifacts write pos-0
+    /// rows for inactive slots — fixed ABI — which is safe there because
+    /// the chunked XLA path re-splices the whole prefix.) Updates
+    /// `cache` in place and returns logits `[batch * vocab]`. Backends
+    /// may reject cache kinds they cannot drive (the XLA artifacts
+    /// require the fixed padded pool).
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        cache: &mut CacheStore,
+    ) -> Result<Tensor>;
 }

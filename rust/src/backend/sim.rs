@@ -213,19 +213,29 @@ impl ExecBackend for SimBackend {
         &self.spec
     }
 
-    fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillOut> {
+    fn prefill(&mut self, tokens: &[i32], rows: usize) -> Result<PrefillOut> {
         let (bp, t, v) = (self.spec.prefill_batch, self.spec.prefill_seq, self.spec.vocab);
-        if tokens.len() != bp * t {
-            bail!("sim prefill wants {} tokens, got {}", bp * t, tokens.len());
+        if rows == 0 || rows > bp {
+            bail!("sim prefill rows {rows} out of range (prefill_batch {bp})");
         }
+        if tokens.len() != rows * t {
+            bail!(
+                "sim prefill wants {} tokens for {rows} rows, got {}",
+                rows * t,
+                tokens.len()
+            );
+        }
+        // Buffers are sized to the admitted rows, not the full prefill
+        // batch — admitting one short prompt no longer zero-fills (and
+        // scans) a `[Bp, T, V]` logits buffer.
         let (i0, i1) = inner_dims(self.spec.layout);
         let l = self.spec.n_layers;
         let mut caches = vec![
-            Tensor::zeros(&[l, bp, t, i0]),
-            Tensor::zeros(&[l, bp, t, i1]),
+            Tensor::zeros(&[l, rows, t, i0]),
+            Tensor::zeros(&[l, rows, t, i1]),
         ];
-        let mut logits = Tensor::zeros(&[bp, t, v]);
-        for row in 0..bp {
+        let mut logits = Tensor::zeros(&[rows, t, v]);
+        for row in 0..rows {
             let mut state = self.base_state;
             for pos in 0..t {
                 state = step_state(state, tokens[row * t + pos], pos);
@@ -237,10 +247,69 @@ impl ExecBackend for SimBackend {
         Ok(PrefillOut { logits, caches })
     }
 
-    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut CacheStore) -> Result<Tensor> {
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        slot: usize,
+        start_pos: usize,
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
+        let v = self.spec.vocab;
+        let end = tokens.len();
+        if start_pos >= end {
+            bail!("sim prefill_chunk: empty chunk ({start_pos}..{end})");
+        }
+        if end > self.spec.capacity {
+            bail!(
+                "sim prefill_chunk: {end} tokens exceed capacity {}",
+                self.spec.capacity
+            );
+        }
+        if slot >= self.spec.batch {
+            bail!("sim prefill_chunk: slot {slot} out of range");
+        }
+        // Exact resume: the rolling state lives in the cache row at
+        // `start_pos - 1`, for either store — chunked prefill is
+        // bit-identical to monolithic by construction.
+        let mut state = if start_pos == 0 {
+            self.base_state
+        } else {
+            match cache {
+                CacheStore::Fixed(kv) => self.read_state(kv, slot, start_pos - 1),
+                CacheStore::Paged(p) => state_of_rows(
+                    p.row(0, slot, 0, start_pos - 1)?,
+                    p.row(1, slot, 0, start_pos - 1)?,
+                ),
+            }
+        };
+        for pos in start_pos..end {
+            state = step_state(state, tokens[pos], pos);
+            match cache {
+                CacheStore::Fixed(kv) => self.write_rows(&mut kv.bufs, slot, pos, state),
+                CacheStore::Paged(p) => {
+                    let (v0, v1) = self.row_values(state);
+                    for l in 0..self.spec.n_layers {
+                        p.row_mut(0, slot, l, pos)?.copy_from_slice(&v0);
+                        p.row_mut(1, slot, l, pos)?.copy_from_slice(&v1);
+                    }
+                }
+            }
+        }
+        let mut logits = Tensor::zeros(&[v]);
+        self.logits_row(state, &mut logits.data);
+        Ok(logits)
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
         let (b, v) = (self.spec.batch, self.spec.vocab);
-        if tokens.len() != b || pos.len() != b {
-            bail!("sim decode wants {b} tokens+positions");
+        if tokens.len() != b || pos.len() != b || active.len() != b {
+            bail!("sim decode wants {b} tokens+positions+active flags");
         }
         match cache {
             CacheStore::Fixed(kv) => {
@@ -264,15 +333,21 @@ impl ExecBackend for SimBackend {
         }
         let mut logits = Tensor::zeros(&[b, v]);
         for slot in 0..b {
+            // Inactive slots (idle or mid-prefill) are skipped entirely:
+            // a prefilling slot's cache rows are live resume state for
+            // the next chunk, so even a "harmless" pos-0 write would
+            // corrupt it. Their logits rows stay zero.
+            if !active[slot] {
+                continue;
+            }
             let p = pos[slot] as usize;
             if p >= self.spec.capacity {
                 bail!("sim decode position {p} >= capacity {}", self.spec.capacity);
             }
-            // The paged arm skips slots whose block table does not cover
-            // the write position (idle slots); the fixed arm writes every
-            // row exactly as the padded artifacts do — active slots
-            // produce identical states either way, so the two cache
-            // kinds are completion-identical by construction.
+            // The paged arm additionally skips slots whose block table
+            // does not cover the write position — active slots produce
+            // identical states either way, so the two cache kinds are
+            // completion-identical by construction.
             let state = match cache {
                 CacheStore::Fixed(kv) => {
                     Some(self.decode_slot_fixed(kv, slot, tokens[slot], p))
@@ -339,17 +414,43 @@ mod tests {
         for mut be in [SimBackend::gqa(4), SimBackend::mla(4, 4)] {
             let s = be.spec().clone();
             let out = be
-                .prefill(&padded(&prompt(), s.prefill_batch, s.prefill_seq, 0))
+                .prefill(&padded(&prompt(), s.prefill_batch, s.prefill_seq, 0), s.prefill_batch)
                 .unwrap();
             assert_eq!(out.logits.shape, vec![s.prefill_batch, s.prefill_seq, s.vocab]);
             assert_eq!(out.caches.len(), 2);
             assert_eq!(out.caches[0].shape[..3], [s.n_layers, s.prefill_batch, s.prefill_seq]);
             let mut cache = CacheStore::Fixed(s.new_cache());
             let logits = be
-                .decode(&vec![7; s.batch], &vec![3; s.batch], &mut cache)
+                .decode(
+                    &vec![7; s.batch],
+                    &vec![3; s.batch],
+                    &vec![true; s.batch],
+                    &mut cache,
+                )
                 .unwrap();
             assert_eq!(logits.shape, vec![s.batch, s.vocab]);
         }
+    }
+
+    #[test]
+    fn prefill_sizes_buffers_to_the_admitted_rows() {
+        // Regression for the full-batch zero-fill: one admitted prompt
+        // must not allocate (or compute) a `[Bp, T, V]` logits buffer.
+        let mut be = SimBackend::gqa(8);
+        let s = be.spec().clone();
+        let toks = prompt();
+        let one = be.prefill(&padded(&toks, 1, s.prefill_seq, 0), 1).unwrap();
+        assert_eq!(one.logits.shape, vec![1, s.prefill_seq, s.vocab]);
+        assert_eq!(one.caches[0].shape[1], 1, "cache rows sized to request");
+        // Row content is identical to the same prompt in a full batch.
+        let full = be
+            .prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 0), s.prefill_batch)
+            .unwrap();
+        let n = s.prefill_seq * s.vocab;
+        assert_eq!(one.logits.data[..n], full.logits.data[..n]);
+        // Bad rows counts are rejected.
+        assert!(be.prefill(&padded(&toks, 1, s.prefill_seq, 0), 2).is_err());
+        assert!(be.prefill(&padded(&toks, 1, s.prefill_seq, 0), 0).is_err());
     }
 
     #[test]
@@ -360,7 +461,9 @@ mod tests {
         let mut be = SimBackend::gqa(4);
         let s = be.spec().clone();
         let toks = prompt();
-        let out = be.prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 2)).unwrap();
+        let out = be
+            .prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 2), s.prefill_batch)
+            .unwrap();
         let mut fixed = s.new_cache();
         fixed.splice_from(&out.caches, 2, 1).unwrap();
         let mut cache = CacheStore::Fixed(fixed);
@@ -368,9 +471,11 @@ mod tests {
         let p = toks.len() - 1;
         let mut dt = vec![0i32; s.batch];
         let mut dp = vec![0i32; s.batch];
+        let mut act = vec![false; s.batch];
         dt[1] = toks[p];
         dp[1] = p as i32;
-        let logits = be.decode(&dt, &dp, &mut cache).unwrap();
+        act[1] = true;
+        let logits = be.decode(&dt, &dp, &act, &mut cache).unwrap();
         let want = &out.logits.data[(2 * s.prefill_seq + p) * s.vocab..][..s.vocab];
         let got = &logits.data[s.vocab..2 * s.vocab];
         assert_eq!(want, got, "decode diverged from prefill at pos {p}");
@@ -384,7 +489,7 @@ mod tests {
             let s = be.spec().clone();
             let toks = prompt();
             let out = be
-                .prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 2))
+                .prefill(&padded(&toks, s.prefill_batch, s.prefill_seq, 2), s.prefill_batch)
                 .unwrap();
 
             let mut fixed = s.new_cache();
@@ -404,10 +509,12 @@ mod tests {
             let p = toks.len() - 1;
             let mut dt = vec![0i32; s.batch];
             let mut dp = vec![0i32; s.batch];
+            let mut act = vec![false; s.batch];
             dt[1] = toks[p];
             dp[1] = p as i32;
-            let lf = be.decode(&dt, &dp, &mut fixed).unwrap();
-            let lp = be.decode(&dt, &dp, &mut paged).unwrap();
+            act[1] = true;
+            let lf = be.decode(&dt, &dp, &act, &mut fixed).unwrap();
+            let lp = be.decode(&dt, &dp, &act, &mut paged).unwrap();
             assert_eq!(
                 lf.data[s.vocab..2 * s.vocab],
                 lp.data[s.vocab..2 * s.vocab],
@@ -425,15 +532,79 @@ mod tests {
         let mut a = SimBackend::gqa(2);
         let mut b = SimBackend::gqa(2);
         let s = a.spec().clone();
-        let solo = a.prefill(&padded(&prompt(), s.prefill_batch, s.prefill_seq, 0)).unwrap();
+        let solo = a
+            .prefill(&padded(&prompt(), s.prefill_batch, s.prefill_seq, 0), s.prefill_batch)
+            .unwrap();
         // Same prompt in row 0, different garbage in row 1.
         let mut mixed_toks = padded(&prompt(), s.prefill_batch, s.prefill_seq, 0);
         for (i, tok) in mixed_toks[s.prefill_seq..].iter_mut().enumerate() {
             *tok = (i % 250) as i32 + 1;
         }
-        let mixed = b.prefill(&mixed_toks).unwrap();
+        let mixed = b.prefill(&mixed_toks, s.prefill_batch).unwrap();
         let n = s.prefill_seq * s.vocab;
         assert_eq!(solo.logits.data[..n], mixed.logits.data[..n]);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bit_exactly() {
+        // The chunk entry point must resume from the cache and reproduce
+        // the monolithic prefill bit-for-bit: same final logits, same
+        // cache rows over the prompt — for both layouts and both stores,
+        // across uneven chunk boundaries.
+        for mut be in [SimBackend::gqa(4), SimBackend::mla(4, 4)] {
+            let s = be.spec().clone();
+            let toks = prompt();
+            let plen = toks.len();
+            // Monolithic reference: one-row prefill spliced into slot 1.
+            let out = be.prefill(&padded(&toks, 1, s.prefill_seq, 0), 1).unwrap();
+            let mut mono = s.new_cache();
+            mono.splice_from(&out.caches, 0, 1).unwrap();
+
+            let mut fixed = CacheStore::Fixed(s.new_cache());
+            let mut paged =
+                crate::kvcache::PagedKvCache::new(s.layout, s.n_layers, s.batch, 8, 64)
+                    .unwrap();
+            paged.admit_slot(1, plen + 1, plen).unwrap();
+            let mut paged = CacheStore::Paged(paged);
+
+            let mut start = 0usize;
+            let mut last: Option<(Tensor, Tensor)> = None;
+            for end in [1usize, 3, 9, plen] {
+                let lf = be.prefill_chunk(&toks[..end], 1, start, &mut fixed).unwrap();
+                let lp = be.prefill_chunk(&toks[..end], 1, start, &mut paged).unwrap();
+                assert_eq!(lf.data, lp.data, "stores diverged at chunk end {end}");
+                last = Some((lf, lp));
+                start = end;
+            }
+            // Final chunk logits == monolithic logits at the last prompt
+            // position.
+            let want = &out.logits.data[(plen - 1) * s.vocab..][..s.vocab];
+            let (lf, lp) = last.unwrap();
+            assert_eq!(want, &lf.data[..]);
+            assert_eq!(want, &lp.data[..]);
+            // Fixed-store chunked cache rows == monolithic spliced rows
+            // over every prompt position, every layer, both buffers.
+            if let CacheStore::Fixed(kv) = &fixed {
+                for (buf, (mine, theirs)) in
+                    kv.bufs.iter().zip(mono.bufs.iter()).enumerate()
+                {
+                    // Inner width per position (GQA bufs are [L,B,T,g,d],
+                    // MLA [L,B,T,r]): the product of the trailing dims.
+                    let inner: usize = mine.shape[3..].iter().product();
+                    let (b, t) = (mine.shape[1], mine.shape[2]);
+                    for l in 0..s.n_layers {
+                        for pos in 0..plen {
+                            let off = ((l * b + 1) * t + pos) * inner;
+                            assert_eq!(
+                                mine.data[off..off + inner],
+                                theirs.data[off..off + inner],
+                                "buf {buf} layer {l} pos {pos} diverged"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

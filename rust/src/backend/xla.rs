@@ -145,11 +145,27 @@ impl ExecBackend for XlaBackend {
         &self.spec
     }
 
-    fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillOut> {
+    fn prefill(&mut self, tokens: &[i32], rows: usize) -> Result<PrefillOut> {
         let (bp, t) = (self.spec.prefill_batch, self.spec.prefill_seq);
+        if rows == 0 || rows > bp {
+            bail!("xla prefill rows {rows} out of range (prefill_batch {bp})");
+        }
+        if tokens.len() != rows * t {
+            bail!(
+                "xla prefill wants {} tokens for {rows} rows, got {}",
+                rows * t,
+                tokens.len()
+            );
+        }
+        // The AOT artifact's input shape is fixed at `[Bp, T]`: pad the
+        // admitted rows back up to the full matrix (the sim backend
+        // instead sizes its buffers to `rows`). Outputs keep the full
+        // `Bp` rows dim; callers index rows < `rows`.
+        let mut padded = tokens.to_vec();
+        padded.resize(bp * t, 0);
         let outs = self.bundle.prefill.run_b(
             &self.bundle.param_bufs,
-            &[Value::i32_mat(tokens.to_vec(), &[bp, t])],
+            &[Value::i32_mat(padded, &[bp, t])],
         )?;
         let mut it = outs.into_iter();
         let logits = it.next().context("prefill logits")?;
@@ -157,7 +173,44 @@ impl ExecBackend for XlaBackend {
         Ok(PrefillOut { logits, caches })
     }
 
-    fn decode(&mut self, tokens: &[i32], pos: &[i32], cache: &mut CacheStore) -> Result<Tensor> {
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        slot: usize,
+        start_pos: usize,
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
+        let (t, v) = (self.spec.prefill_seq, self.spec.vocab);
+        let end = tokens.len();
+        if start_pos >= end {
+            bail!("xla prefill_chunk: empty chunk ({start_pos}..{end})");
+        }
+        if end > t {
+            bail!("xla prefill_chunk: {end} tokens exceed prefill_seq {t}");
+        }
+        // The AOT ABI has no per-position resume entry, so chunking the
+        // XLA path recomputes the whole prefix through the fixed-shape
+        // prefill artifact and re-splices positions 0..end — O(end)
+        // recompute per chunk traded for decode overlap, with the
+        // artifacts themselves untouched. (This also heals the pos-0
+        // rows the decode artifact writes for inactive slots.)
+        let mut row0 = vec![0i32; t];
+        row0[..end].copy_from_slice(tokens);
+        let out = self.prefill(&row0, 1)?;
+        cache.splice_from(&out.caches, 0, slot, end)?;
+        let off = (end - 1) * v;
+        let mut row = Tensor::zeros(&[v]);
+        row.data.copy_from_slice(&out.logits.data[off..off + v]);
+        Ok(row)
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        _active: &[bool],
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
         // The AOT decode artifacts compute over the fixed padded cache
         // shape [L, B, T, ...]; the paged pool has no artifact ABI (yet).
         let kv = match cache.as_fixed_mut() {

@@ -90,28 +90,46 @@ pub enum PolicyKind {
     DecodeFirst,
     /// Admit only once `min_free` slots are free (or nothing is active).
     Hybrid { min_free: usize },
+    /// Chunked, decode-overlapped prefill: admit eagerly and feed prompts
+    /// into the cache at most `chunk_tokens` per iteration, decoding in
+    /// the same iteration (see `coordinator::scheduler::Chunked`).
+    Chunked { chunk_tokens: usize },
 }
 
+/// Default prefill-chunk token budget per iteration for `chunked`.
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
+
 impl PolicyKind {
-    /// Parse `admit-first` / `decode-first` / `hybrid` / `hybrid:N`.
+    /// Parse `admit-first` / `decode-first` / `hybrid[:N]` / `chunked[:N]`.
     pub fn parse(s: &str) -> Result<PolicyKind> {
         match s {
             "admit-first" => Ok(PolicyKind::AdmitFirst),
             "decode-first" => Ok(PolicyKind::DecodeFirst),
             "hybrid" => Ok(PolicyKind::Hybrid { min_free: 2 }),
-            other => match other.strip_prefix("hybrid:") {
-                Some(n) => Ok(PolicyKind::Hybrid {
-                    min_free: n
-                        .parse()
-                        .ok()
-                        .with_context(|| format!("bad hybrid threshold `{n}`"))?,
-                }),
-                None => {
+            "chunked" => Ok(PolicyKind::Chunked { chunk_tokens: DEFAULT_PREFILL_CHUNK }),
+            other => {
+                if let Some(n) = other.strip_prefix("hybrid:") {
+                    Ok(PolicyKind::Hybrid {
+                        min_free: n
+                            .parse()
+                            .ok()
+                            .with_context(|| format!("bad hybrid threshold `{n}`"))?,
+                    })
+                } else if let Some(n) = other.strip_prefix("chunked:") {
+                    Ok(PolicyKind::Chunked {
+                        chunk_tokens: n
+                            .parse::<usize>()
+                            .ok()
+                            .filter(|&c| c > 0)
+                            .with_context(|| format!("bad chunk size `{n}`"))?,
+                    })
+                } else {
                     anyhow::bail!(
-                        "unknown policy `{other}` (admit-first|decode-first|hybrid[:N])"
+                        "unknown policy `{other}` \
+                         (admit-first|decode-first|hybrid[:N]|chunked[:N])"
                     )
                 }
-            },
+            }
         }
     }
 }
@@ -274,8 +292,18 @@ mod tests {
             PolicyKind::parse("hybrid").unwrap(),
             PolicyKind::Hybrid { min_free: 2 }
         );
+        assert_eq!(
+            PolicyKind::parse("chunked:8").unwrap(),
+            PolicyKind::Chunked { chunk_tokens: 8 }
+        );
+        assert_eq!(
+            PolicyKind::parse("chunked").unwrap(),
+            PolicyKind::Chunked { chunk_tokens: DEFAULT_PREFILL_CHUNK }
+        );
         assert!(PolicyKind::parse("nope").is_err());
         assert!(PolicyKind::parse("hybrid:x").is_err());
+        assert!(PolicyKind::parse("chunked:0").is_err());
+        assert!(PolicyKind::parse("chunked:x").is_err());
         assert_eq!(EngineConfig::default().policy, PolicyKind::AdmitFirst);
     }
 

@@ -1,16 +1,23 @@
 //! The serving engine: continuous batching over fixed decode slots,
-//! layered as Backend / Scheduler / SequenceManager.
+//! layered as Backend / Scheduler / SequenceManager — the scheduler
+//! *builds* a per-iteration [`StepPlan`], this engine *executes* it.
 //!
 //! One `Engine` drives one [`ExecBackend`] (compiled XLA artifacts or the
 //! hermetic simulator) through three decoupled concerns:
 //!
-//!   * **scheduling** — a pluggable [`SchedulePolicy`] decides each
-//!     iteration between admission (prefill) and decode;
-//!   * **execution** — the backend runs prefill/decode over the opaque
-//!     cache store (fixed slot pool or paged block pool), layout-agnostic
-//!     (GQA or MLA-latent);
-//!   * **sequences** — a [`SequenceManager`] owns slot lifecycle, per-slot
-//!     length tracking, completion rules, and latency accounting.
+//!   * **scheduling** — a pluggable [`SchedulePolicy`] emits a plan over
+//!     the three queues (waiting → prefilling → decoding): how many
+//!     requests to admit, how much prefill work to run (one batched
+//!     monolithic call, or a bounded resumable chunk), and whether to
+//!     decode — all composable in the SAME iteration, so a long prompt
+//!     entering the cache never stalls active decodes for more than one
+//!     chunk under the `chunked` policy;
+//!   * **execution** — the backend runs prefill / prefill_chunk / decode
+//!     over the opaque cache store (fixed slot pool or paged block
+//!     pool), layout-agnostic (GQA or MLA-latent);
+//!   * **sequences** — a [`SequenceManager`] owns slot lifecycle, the
+//!     prefilling/decoding phase split with its per-slot watermark,
+//!     completion rules, and latency accounting.
 //!
 //! Completion frees a slot immediately for the next admission,
 //! vLLM-style. Finished requests accumulate until [`Engine::take_completions`]
@@ -20,11 +27,11 @@ use crate::backend::{BackendSpec, CacheStore, ExecBackend, ModelBundle, XlaBacke
 use crate::config::EngineConfig;
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::sampling;
-use crate::coordinator::scheduler::{self, Action, SchedView, SchedulePolicy};
-use crate::coordinator::seqmgr::{bounded_cache_tokens, SequenceManager};
+use crate::coordinator::scheduler::{self, PrefillWork, SchedView, SchedulePolicy, StepPlan};
+use crate::coordinator::seqmgr::{bounded_cache_tokens, SeqPhase, SequenceManager};
 use crate::metrics::Metrics;
 use crate::util::{Rng, Timer};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -38,16 +45,21 @@ pub struct Engine {
     pub cache: CacheStore,
     seqs: SequenceManager,
     queue: VecDeque<(Request, Instant)>,
+    /// Slots currently in the `Prefilling` phase, FIFO by admission —
+    /// chunk budget is spent head-first so earlier requests reach their
+    /// first token first.
+    prefillq: VecDeque<usize>,
     completions: Vec<Completion>,
     pub metrics: Metrics,
     rng: Rng,
     cfg: EngineConfig,
     policy: Box<dyn SchedulePolicy>,
     /// (active-before, admitted request ids) per admission — the
-    /// observable ordering trace the policy tests assert on. Bounded to
-    /// the most recent [`ADMISSION_LOG_CAP`] entries so a long-running
-    /// server does not accumulate history.
-    admission_log: Vec<(usize, Vec<u64>)>,
+    /// observable ordering trace the policy tests assert on. A ring
+    /// buffer bounded to the most recent [`ADMISSION_LOG_CAP`] entries
+    /// (trimming is O(1); the old `Vec::remove(0)` shifted the whole log
+    /// on every admission past the cap).
+    admission_log: VecDeque<(usize, Vec<u64>)>,
 }
 
 /// Most recent admissions kept for inspection (`Engine::admission_log`).
@@ -75,12 +87,13 @@ impl Engine {
             cache,
             seqs: SequenceManager::new(spec.batch, spec.capacity),
             queue: VecDeque::new(),
+            prefillq: VecDeque::new(),
             completions: Vec::new(),
             metrics: Metrics::new(),
             rng: Rng::new(cfg.seed),
             policy: scheduler::build(cfg.policy),
             cfg,
-            admission_log: Vec::new(),
+            admission_log: VecDeque::new(),
         })
     }
 
@@ -106,8 +119,19 @@ impl Engine {
         self.queue.len()
     }
 
+    /// Slot-bound sequences in either phase (prefilling + decoding).
     pub fn n_active(&self) -> usize {
         self.seqs.n_active()
+    }
+
+    /// Sequences still feeding their prompt into the cache.
+    pub fn n_prefilling(&self) -> usize {
+        self.seqs.n_prefilling()
+    }
+
+    /// Sequences in the decode queue.
+    pub fn n_decoding(&self) -> usize {
+        self.seqs.n_decoding()
     }
 
     pub fn is_idle(&self) -> bool {
@@ -120,9 +144,17 @@ impl Engine {
     }
 
     /// Admission trace: (active sequences at admission time, request ids
-    /// admitted), one entry per prefill call.
-    pub fn admission_log(&self) -> &[(usize, Vec<u64>)] {
+    /// admitted), one entry per admission batch (one prefill call on the
+    /// monolithic path; one slot-binding batch on the chunked path).
+    pub fn admission_log(&self) -> &VecDeque<(usize, Vec<u64>)> {
         &self.admission_log
+    }
+
+    fn log_admission(&mut self, active_before: usize, ids: Vec<u64>) {
+        self.admission_log.push_back((active_before, ids));
+        if self.admission_log.len() > ADMISSION_LOG_CAP {
+            self.admission_log.pop_front();
+        }
     }
 
     /// How many of the next queued requests the cache store can take
@@ -131,7 +163,7 @@ impl Engine {
     /// the unreserved pool for the paged one. FIFO: a head request that
     /// does not fit blocks later ones rather than being reordered
     /// around. Single source of truth for both the scheduler's view and
-    /// the actual admission pop in [`Engine::admit`].
+    /// the actual admission pop in [`Engine::pop_admissions`].
     fn plan_admissions(&self, limit: usize) -> usize {
         let spec = self.backend.spec();
         let limit = limit.min(self.queue.len());
@@ -167,7 +199,7 @@ impl Engine {
     /// genuine block shortage shrinks the scheduler's view.
     fn admit_capacity(&self) -> usize {
         let free = self.seqs.n_free();
-        // One prefill call can admit at most prefill_batch requests, so
+        // One admission batch takes at most prefill_batch requests, so
         // the block plan never needs to look deeper than that.
         let depth = free.min(self.backend.spec().prefill_batch);
         let fit = self.plan_admissions(depth);
@@ -178,30 +210,59 @@ impl Engine {
         }
     }
 
-    /// One scheduler iteration: the policy picks admission or decode.
-    pub fn step(&mut self) -> Result<Action> {
+    /// One scheduler iteration: the policy builds a [`StepPlan`] over the
+    /// three queues; the engine executes it — admissions, then prefill
+    /// work, then a decode step, composable in one iteration.
+    pub fn step(&mut self) -> Result<StepPlan> {
         let view = SchedView {
             queued: self.queue.len(),
-            active: self.seqs.n_active(),
+            prefilling: self.seqs.n_prefilling(),
+            decoding: self.seqs.n_decoding(),
             free_slots: self.admit_capacity(),
             prefill_batch: self.backend.spec().prefill_batch,
         };
-        let action = self.policy.decide(&view);
-        match action {
-            Action::Admit(n) => self.admit(n)?,
-            Action::Decode => self.decode_step()?,
-            Action::Idle => {
-                if !self.is_idle() {
+        let plan = self.policy.plan(&view);
+        if plan.is_idle() {
+            if !self.is_idle() {
+                bail!(
+                    "policy `{}` idled with pending work ({} queued, {} prefilling, \
+                     {} decoding)",
+                    self.policy.name(),
+                    self.queue.len(),
+                    self.seqs.n_prefilling(),
+                    self.seqs.n_decoding()
+                );
+            }
+            return Ok(plan);
+        }
+        match plan.prefill {
+            // The degenerate pre-StepPlan path: admission and full
+            // prefill fused into one batched call.
+            PrefillWork::Monolithic => {
+                if plan.admit > 0 {
+                    self.admit_monolithic(plan.admit)?;
+                }
+            }
+            PrefillWork::Chunk { max_tokens } => {
+                if plan.admit > 0 {
+                    self.admit_prefilling(plan.admit)?;
+                }
+                self.prefill_chunk_step(max_tokens)?;
+            }
+            PrefillWork::None => {
+                if plan.admit > 0 {
                     bail!(
-                        "policy `{}` idled with pending work ({} queued, {} active)",
+                        "policy `{}` admitted {} requests without prefill work",
                         self.policy.name(),
-                        self.queue.len(),
-                        self.seqs.n_active()
+                        plan.admit
                     );
                 }
             }
         }
-        Ok(action)
+        if plan.decode {
+            self.decode_step()?;
+        }
+        Ok(plan)
     }
 
     /// Run until all submitted work is complete.
@@ -224,34 +285,42 @@ impl Engine {
         Ok(out)
     }
 
-    // -- admission / prefill -------------------------------------------------
+    // -- admission -----------------------------------------------------------
 
-    fn admit(&mut self, want: usize) -> Result<()> {
-        let spec = self.backend.spec().clone();
+    /// Pop the queue prefix that fits the cache store — the same rule
+    /// `admit_capacity` showed the scheduler.
+    fn pop_admissions(&mut self, want: usize) -> Vec<(Request, Instant)> {
+        let prefill_batch = self.backend.spec().prefill_batch;
         let limit = want
             .min(self.queue.len())
             .min(self.seqs.n_free())
-            .min(spec.prefill_batch);
-        let active_before = self.seqs.n_active();
-        // Pop the queue prefix that fits the cache store — the same rule
-        // `admit_capacity` showed the scheduler.
+            .min(prefill_batch);
         let n = self.plan_admissions(limit);
+        (0..n).map(|_| self.queue.pop_front().unwrap()).collect()
+    }
+
+    /// Monolithic admission: one batched prefill call covers every
+    /// admitted prompt end-to-end; the sequences enter `Decoding`
+    /// directly with their first token sampled.
+    fn admit_monolithic(&mut self, want: usize) -> Result<()> {
+        let spec = self.backend.spec().clone();
+        let admitted = self.pop_admissions(want);
+        let n = admitted.len();
         if n == 0 {
             return Ok(());
         }
-        let mut admitted = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (req, enq) = self.queue.pop_front().unwrap();
-            admitted.push((req, enq));
-        }
+        let active_before = self.seqs.n_active();
 
         // The prefill entry point has its own (fixed) sequence length;
         // the decode cache capacity may be shorter for context-length
-        // variants (splice truncates).
+        // variants (splice truncates). The token matrix (and the sim
+        // backend's compute + logits buffers) is sized to the admitted
+        // rows — admitting one short prompt no longer zero-fills a full
+        // `Bp x prefill_seq` matrix; only the XLA path pads back up to
+        // its fixed artifact shape.
         let t = spec.prefill_seq;
         let max_prompt = spec.max_prompt();
-        let bp = spec.prefill_batch;
-        let mut tokens = vec![0i32; bp * t];
+        let mut tokens = vec![0i32; n * t];
         for (row, (req, _)) in admitted.iter().enumerate() {
             let len = req.prompt.len().min(max_prompt);
             tokens[row * t..row * t + len].copy_from_slice(&req.prompt[..len]);
@@ -259,19 +328,21 @@ impl Engine {
 
         let prefill_started = Instant::now();
         let timer = Timer::start();
-        let out = self.backend.prefill(&tokens)?;
+        let out = self.backend.prefill(&tokens, n)?;
         self.metrics.observe("prefill_s", timer.elapsed_s());
         self.metrics.observe("admit_n", n as f64);
 
         let now = Instant::now();
         let vocab = spec.vocab;
+        // Output rows dim: `n` from the sim backend, the full prefill
+        // batch from the XLA one; the position stride is `t` either way.
         let mut ids = Vec::with_capacity(n);
         for (row, (req, enq)) in admitted.into_iter().enumerate() {
             let plen = req.prompt.len().min(max_prompt);
             self.metrics.inc("prefill_tokens", plen as u64);
-            // logits [Bp, T, V]: the next token follows position plen-1.
-            // An empty prompt clamps to position 0 (the artifact's pad
-            // row) instead of underflowing — see the regression test.
+            // logits [rows, T, V]: the next token follows position
+            // plen-1. An empty prompt clamps to position 0 (the pad row)
+            // instead of underflowing — see the regression test.
             let off = (row * t + plen.saturating_sub(1)) * vocab;
             let temp = self.effective_temp(&req);
             let first_tok = sampling::sample(
@@ -287,9 +358,92 @@ impl Engine {
             // A prompt that already fills the cache finishes immediately.
             self.maybe_complete(slot)?;
         }
-        self.admission_log.push((active_before, ids));
-        if self.admission_log.len() > ADMISSION_LOG_CAP {
-            self.admission_log.remove(0);
+        self.log_admission(active_before, ids);
+        Ok(())
+    }
+
+    /// Chunked admission: bind requests to slots (cache reserved, phase
+    /// `Prefilling`) without running any model code — their prompts
+    /// enter the cache chunk-by-chunk on this and subsequent iterations.
+    fn admit_prefilling(&mut self, want: usize) -> Result<()> {
+        let max_prompt = self.backend.spec().max_prompt();
+        let admitted = self.pop_admissions(want);
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        let active_before = self.seqs.n_active();
+        let now = Instant::now();
+        self.metrics.observe("admit_n", admitted.len() as f64);
+        let mut ids = Vec::with_capacity(admitted.len());
+        for (req, enq) in admitted {
+            let plen = req.prompt.len().min(max_prompt);
+            ids.push(req.id);
+            let slot = self
+                .seqs
+                .admit_prefilling(req, plen, enq, now, &mut self.cache)?;
+            self.prefillq.push_back(slot);
+        }
+        self.log_admission(active_before, ids);
+        Ok(())
+    }
+
+    // -- chunked prefill -----------------------------------------------------
+
+    /// Advance the prefilling queue (FIFO) by at most `budget` prompt
+    /// tokens through the backend's resumable chunk entry point. A
+    /// sequence whose final chunk lands samples its first token and
+    /// joins the decode queue in the same iteration. Paged-cache block
+    /// growth happens here at chunk granularity, drawing on the
+    /// admission-time reservation.
+    fn prefill_chunk_step(&mut self, budget: usize) -> Result<()> {
+        let mut left = budget.max(1);
+        while left > 0 {
+            let slot = match self.prefillq.front() {
+                Some(&s) => s,
+                None => break,
+            };
+            let (done, plen) = {
+                let seq = self.seqs.seq(slot).context("prefilling slot has state")?;
+                match seq.phase {
+                    SeqPhase::Prefilling { done } => (done, seq.prompt_len),
+                    SeqPhase::Decoding => {
+                        bail!("decoding slot {slot} on the prefill queue")
+                    }
+                }
+            };
+            // An empty prompt still needs one pad-token step to produce
+            // its first logits row — the same pad state the monolithic
+            // path reads at padded position 0.
+            let target = plen.max(1);
+            // saturating: `left` is usize::MAX for drain plans.
+            let end = target.min(done.saturating_add(left));
+            let prefix: Vec<i32> = if plen == 0 {
+                vec![0]
+            } else {
+                let seq = self.seqs.seq(slot).context("prefilling slot has state")?;
+                seq.req.prompt[..end].to_vec()
+            };
+            self.cache.grow(slot, end)?;
+            let timer = Timer::start();
+            let logits = self.backend.prefill_chunk(&prefix, slot, done, &mut self.cache)?;
+            self.metrics.observe("chunk_s", timer.elapsed_s());
+            let processed = end - done;
+            self.metrics.inc("prefill_chunks", 1);
+            self.metrics.inc("prefill_tokens", processed as u64);
+            self.metrics.observe("chunk_tokens", processed as f64);
+            left = left.saturating_sub(processed);
+            self.seqs.record_prefill(slot, end)?;
+            if end >= target {
+                // Prompt fully in cache: first token, decode queue.
+                self.prefillq.pop_front();
+                let temp = {
+                    let seq = self.seqs.seq(slot).context("prefilled slot has state")?;
+                    self.effective_temp(&seq.req)
+                };
+                let tok = sampling::sample(&logits.data, temp, &mut self.rng);
+                self.seqs.finish_prefill(slot, tok, Instant::now())?;
+                self.maybe_complete(slot)?;
+            }
         }
         Ok(())
     }
@@ -310,18 +464,18 @@ impl Engine {
         if let CacheStore::Paged(p) = &self.cache {
             self.metrics.observe("blocks_in_use", p.blocks_in_use() as f64);
         }
-        let (token, pos) = self.seqs.decode_io();
+        let (token, pos, active) = self.seqs.decode_io();
         let timer = Timer::start();
-        let logits = self.backend.decode(&token, &pos, &mut self.cache)?;
+        let logits = self.backend.decode(&token, &pos, &active, &mut self.cache)?;
         self.metrics.observe("decode_s", timer.elapsed_s());
 
         let vocab = self.backend.spec().vocab;
-        let active = self.seqs.active_slots();
-        self.metrics.inc("decode_tokens", active.len() as u64);
+        let decoding = self.seqs.decoding_slots();
+        self.metrics.inc("decode_tokens", decoding.len() as u64);
         self.metrics.inc("decode_steps", 1);
-        for slot in active {
+        for slot in decoding {
             let temp = {
-                let seq = self.seqs.seq(slot).expect("active slot has state");
+                let seq = self.seqs.seq(slot).expect("decoding slot has state");
                 self.effective_temp(&seq.req)
             };
             let row = &logits.data[slot * vocab..(slot + 1) * vocab];
@@ -340,6 +494,7 @@ impl Engine {
         self.metrics.inc("completed", 1);
         self.metrics.observe("latency_s", c.latency_s);
         self.metrics.observe("queue_s", c.queue_s);
+        self.metrics.observe("req_prefill_s", c.prefill_s);
         self.metrics.observe("ttft_s", c.ttft_s);
         if c.tpot_s > 0.0 {
             self.metrics.observe("tpot_s", c.tpot_s);
@@ -423,7 +578,7 @@ pub struct CacheStats {
 mod tests {
     use super::*;
     use crate::backend::SimBackend;
-    use crate::config::CacheKind;
+    use crate::config::{CacheKind, PolicyKind};
 
     fn engine(seed: u64) -> Engine {
         Engine::new(
@@ -473,6 +628,61 @@ mod tests {
         assert_eq!(comps.len(), 1);
         assert_eq!(comps[0].tokens.len(), 3, "capacity-2 prompt yields 3 tokens");
         e.slots_check().unwrap();
+    }
+
+    #[test]
+    fn chunked_policy_runs_the_full_loop_on_both_stores() {
+        for cache in [
+            CacheKind::Fixed,
+            CacheKind::Paged { block_size: 8, n_blocks: None },
+        ] {
+            let mut e = Engine::new(
+                SimBackend::gqa(4),
+                EngineConfig {
+                    policy: PolicyKind::Chunked { chunk_tokens: 3 },
+                    cache,
+                    ..Default::default()
+                },
+            );
+            let comps = e
+                .generate(vec![
+                    Request::from_text(0, "a long prompt that takes chunks", 5),
+                    Request::from_text(1, "short", 4),
+                    Request::new(2, vec![], 3), // empty prompt chunks too
+                ])
+                .unwrap();
+            assert_eq!(comps.len(), 3, "{cache:?}");
+            assert_eq!(comps[0].tokens.len(), 5);
+            assert_eq!(comps[1].tokens.len(), 4);
+            assert_eq!(comps[2].tokens.len(), 3);
+            assert!(e.metrics.counter("prefill_chunks") > 0);
+            assert!(e.is_idle());
+            e.slots_check().unwrap();
+        }
+    }
+
+    #[test]
+    fn chunked_ttft_decomposes_into_queue_and_prefill() {
+        let mut e = Engine::new(
+            SimBackend::gqa(2),
+            EngineConfig {
+                policy: PolicyKind::Chunked { chunk_tokens: 4 },
+                ..Default::default()
+            },
+        );
+        let comps = e
+            .generate(vec![Request::from_text(0, "a chunked prompt arrives", 3)])
+            .unwrap();
+        let c = &comps[0];
+        let sum = c.queue_s + c.prefill_s;
+        assert!(
+            (c.ttft_s - sum).abs() <= 1e-9,
+            "ttft {} != queue {} + prefill {}",
+            c.ttft_s,
+            c.queue_s,
+            c.prefill_s
+        );
+        assert!(e.metrics.summary("req_prefill_s").is_some());
     }
 
     #[test]
@@ -528,5 +738,25 @@ mod tests {
         let again = e.take_completions();
         assert_eq!(again.len(), 1);
         assert_eq!(again[0].id, 1);
+    }
+
+    #[test]
+    fn admission_log_stays_bounded() {
+        // The ring buffer keeps only the most recent entries.
+        let mut e = Engine::new(
+            SimBackend::gqa(1),
+            EngineConfig {
+                policy: PolicyKind::DecodeFirst,
+                ..Default::default()
+            },
+        );
+        for i in 0..(super::ADMISSION_LOG_CAP as u64 + 10) {
+            e.submit(Request::from_text(i, "x", 1));
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.admission_log().len(), super::ADMISSION_LOG_CAP);
+        // The newest admission is the last request id.
+        let last = e.admission_log().back().unwrap();
+        assert_eq!(last.1, vec![super::ADMISSION_LOG_CAP as u64 + 9]);
     }
 }

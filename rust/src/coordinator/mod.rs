@@ -9,11 +9,15 @@
 //!
 //! Layering (see `backend` for the execution side):
 //!
-//!   * [`engine`] — the continuous-batching loop over `dyn ExecBackend`;
+//!   * [`engine`] — the continuous-batching loop over `dyn ExecBackend`:
+//!     a `StepPlan` *executor*;
 //!   * [`scheduler`] — `SchedulePolicy` (admit-first / decode-first /
-//!     hybrid) deciding admission vs decode each iteration;
-//!   * [`seqmgr`] — `SequenceManager`: slot lifecycle, length tracking,
-//!     completion rules, TTFT/TPOT accounting.
+//!     hybrid / chunked) building a per-iteration `StepPlan` over the
+//!     three queues (waiting → prefilling → decoding) — admissions,
+//!     bounded prefill work, and a decode step compose in one iteration;
+//!   * [`seqmgr`] — `SequenceManager`: slot lifecycle with the
+//!     prefilling/decoding phase split and per-slot prefilled watermark,
+//!     completion rules, TTFT (queue + prefill) / TPOT accounting.
 
 pub mod engine;
 pub mod request;
@@ -24,5 +28,5 @@ pub mod seqmgr;
 pub use crate::backend::{Arch, CacheStore, ModelBundle};
 pub use engine::{CacheStats, Engine};
 pub use request::{Completion, Request};
-pub use scheduler::{Action, SchedView, SchedulePolicy};
-pub use seqmgr::SequenceManager;
+pub use scheduler::{PrefillWork, SchedView, SchedulePolicy, StepPlan};
+pub use seqmgr::{SeqPhase, SequenceManager};

@@ -29,6 +29,10 @@ pub struct Completion {
     pub latency_s: f64,
     /// Seconds spent queued before this request's prefill started.
     pub queue_s: f64,
+    /// Seconds from prefill start to first token — the prefill component
+    /// of TTFT (under chunked prefill this spans the interleaved decode
+    /// steps too). `ttft_s = queue_s + prefill_s`.
+    pub prefill_s: f64,
     /// Time to first token (enqueue -> prefill done), seconds; always
     /// >= `queue_s` by the prefill duration.
     pub ttft_s: f64,
@@ -61,6 +65,7 @@ mod tests {
             tokens: vec![111, 107],
             latency_s: 0.0,
             queue_s: 0.0,
+            prefill_s: 0.0,
             ttft_s: 0.0,
             tpot_s: 0.0,
         };

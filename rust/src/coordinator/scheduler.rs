@@ -1,39 +1,98 @@
-//! Scheduling policies: who gets the next engine iteration — queued
-//! requests (prefill/admission) or active sequences (decode)?
+//! Scheduling: per-iteration **step plans** over the three serving
+//! queues — waiting (submitted, no slot yet) → prefilling (slot bound,
+//! prompt entering the cache chunk-by-chunk) → decoding (emitting
+//! tokens).
 //!
-//! In the memory-bound decode regime TransMLA targets, this choice
-//! dominates tail latency: a prefill call stalls every active decode for
-//! a full fixed-shape prefill, so admitting one request into one free
-//! slot can cost every running sequence a step. The engine therefore
-//! delegates the choice to a [`SchedulePolicy`] selected via
-//! `EngineConfig::policy`:
+//! In the memory-bound decode regime TransMLA targets, admission policy
+//! dominates tail latency: a monolithic prefill call stalls every active
+//! decode for the full prompt, so admitting one request can cost every
+//! running sequence a step. The pre-StepPlan scheduler could only pick
+//! *one* mutually-exclusive action per iteration (admit XOR decode);
+//! a [`StepPlan`] instead composes admission, bounded prefill work, and
+//! a decode step in the SAME iteration, which is what lets a long prompt
+//! enter the cache without ever stalling decode for more than one chunk.
 //!
-//!   * [`AdmitFirst`] — admit whenever a slot is free (the original fused
-//!     engine's behaviour; best TTFT, worst TPOT under load);
+//! Policies, selected via `EngineConfig::policy`:
+//!
+//!   * [`AdmitFirst`] — admit whenever a slot is free and prefill the
+//!     admitted prompts to completion in one batched call (the original
+//!     fused engine's behaviour; best TTFT, worst TPOT under load);
 //!   * [`DecodeFirst`] — drain the active batch before admitting (best
 //!     TPOT, worst TTFT);
 //!   * [`Hybrid`] — admit only when at least `min_free` slots are free
-//!     (or nothing is running), amortising each prefill stall over a
-//!     bigger admission batch.
+//!     (or nothing is running), amortising each monolithic prefill stall
+//!     over a bigger admission batch;
+//!   * [`Chunked`] — the pipeline's native policy: admit eagerly (slot
+//!     binding runs no model code), advance the prefilling queue by at
+//!     most `chunk_tokens` prompt tokens, and decode in the same
+//!     iteration. TPOT stall is bounded by one chunk instead of one
+//!     prompt.
+//!
+//! The first three are degenerate plans (admit+monolithic-prefill XOR
+//! decode), so their observable admission orderings are unchanged from
+//! the `Action` era — the integration suite still asserts them.
 
 use crate::config::PolicyKind;
 
-/// What the engine should do this iteration.
+/// Prefill work for one engine iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Action {
-    /// Admit up to `n` queued requests through one prefill call.
-    Admit(usize),
-    /// Advance all active slots one decode step.
-    Decode,
-    /// Nothing to do.
-    Idle,
+pub enum PrefillWork {
+    /// No prefill this iteration.
+    None,
+    /// Prefill every admitted prompt to completion in one batched
+    /// fixed-shape call (the pre-StepPlan behaviour: stalls decode for
+    /// the whole prompt, but admits a batch through a single call).
+    Monolithic,
+    /// Advance the prefilling queue (FIFO) by at most `max_tokens`
+    /// prompt tokens through the backend's resumable chunk entry point.
+    Chunk { max_tokens: usize },
 }
 
-/// Scheduler-visible engine state.
+/// What the engine executes this iteration. The fields compose — a
+/// bounded prefill chunk can ride along with a decode step instead of
+/// stalling it, which is the whole point of the plan pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Pop up to this many waiting requests and bind them to slots.
+    pub admit: usize,
+    /// Prefill execution mode for this iteration.
+    pub prefill: PrefillWork,
+    /// Advance the decoding queue one step.
+    pub decode: bool,
+}
+
+impl StepPlan {
+    /// The empty plan (legal only when no work is pending).
+    pub const IDLE: StepPlan =
+        StepPlan { admit: 0, prefill: PrefillWork::None, decode: false };
+
+    /// Admit `n` requests and prefill their prompts to completion in one
+    /// batched call — the degenerate plan the monolithic policies emit.
+    pub fn admit_monolithic(n: usize) -> StepPlan {
+        StepPlan { admit: n, prefill: PrefillWork::Monolithic, decode: false }
+    }
+
+    /// Decode only.
+    pub fn decode_only() -> StepPlan {
+        StepPlan { admit: 0, prefill: PrefillWork::None, decode: true }
+    }
+
+    /// Does this plan do nothing at all?
+    pub fn is_idle(&self) -> bool {
+        self.admit == 0 && self.prefill == PrefillWork::None && !self.decode
+    }
+}
+
+/// Scheduler-visible engine state: the sizes of the three queues plus
+/// admission capacity.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedView {
+    /// Waiting requests (no slot bound yet).
     pub queued: usize,
-    pub active: usize,
+    /// Slot-bound sequences whose prompts are still entering the cache.
+    pub prefilling: usize,
+    /// Slot-bound sequences emitting tokens.
+    pub decoding: usize,
     /// Admission capacity, not raw slot count: the engine clamps this to
     /// what the cache store can actually hold — for the paged cache, the
     /// queue prefix whose bounded block demands fit the unreserved pool.
@@ -48,15 +107,36 @@ impl SchedView {
     fn admissible(&self) -> usize {
         self.queued.min(self.free_slots).min(self.prefill_batch)
     }
+
+    /// Slot-bound sequences in either in-flight phase.
+    pub fn in_flight(&self) -> usize {
+        self.prefilling + self.decoding
+    }
 }
 
 pub trait SchedulePolicy {
     fn name(&self) -> &'static str;
 
-    /// Pick the next action. Contract: never return `Idle` while
-    /// `queued + active > 0` and progress is possible (the engine treats
-    /// that as a policy bug and fails loudly instead of spinning).
-    fn decide(&mut self, v: &SchedView) -> Action;
+    /// Build the next iteration's plan. Contract (anti-starvation):
+    /// never return an idle plan while `queued + prefilling + decoding
+    /// > 0` and progress is possible — i.e. something is admissible,
+    /// prefilling, or decoding. The engine treats a violation as a
+    /// policy bug and fails loudly instead of spinning. The property
+    /// test below checks every policy against randomized views.
+    fn plan(&mut self, v: &SchedView) -> StepPlan;
+}
+
+/// A prefilling queue normally only exists under [`Chunked`], but the
+/// anti-starvation contract binds every policy over every view (a view
+/// with prefilling sequences can reach a monolithic policy if the engine
+/// was rebuilt mid-flight or a policy is driven directly): finish them
+/// in one unbounded chunk.
+fn drain_prefilling() -> StepPlan {
+    StepPlan {
+        admit: 0,
+        prefill: PrefillWork::Chunk { max_tokens: usize::MAX },
+        decode: false,
+    }
 }
 
 /// Admit whenever a slot is free — the seed engine's behaviour.
@@ -67,13 +147,15 @@ impl SchedulePolicy for AdmitFirst {
         "admit-first"
     }
 
-    fn decide(&mut self, v: &SchedView) -> Action {
+    fn plan(&mut self, v: &SchedView) -> StepPlan {
         if v.admissible() > 0 {
-            Action::Admit(v.admissible())
-        } else if v.active > 0 {
-            Action::Decode
+            StepPlan::admit_monolithic(v.admissible())
+        } else if v.prefilling > 0 {
+            drain_prefilling()
+        } else if v.decoding > 0 {
+            StepPlan::decode_only()
         } else {
-            Action::Idle
+            StepPlan::IDLE
         }
     }
 }
@@ -86,20 +168,22 @@ impl SchedulePolicy for DecodeFirst {
         "decode-first"
     }
 
-    fn decide(&mut self, v: &SchedView) -> Action {
-        if v.active > 0 {
-            Action::Decode
+    fn plan(&mut self, v: &SchedView) -> StepPlan {
+        if v.decoding > 0 {
+            StepPlan::decode_only()
+        } else if v.prefilling > 0 {
+            drain_prefilling()
         } else if v.admissible() > 0 {
-            Action::Admit(v.admissible())
+            StepPlan::admit_monolithic(v.admissible())
         } else {
-            Action::Idle
+            StepPlan::IDLE
         }
     }
 }
 
 /// Admit only when at least `min_free` slots are free (or the engine is
 /// fully drained), so a single free slot never stalls a full batch of
-/// active decodes for one prefill.
+/// active decodes for one monolithic prefill.
 pub struct Hybrid {
     pub min_free: usize,
 }
@@ -109,18 +193,44 @@ impl SchedulePolicy for Hybrid {
         "hybrid"
     }
 
-    fn decide(&mut self, v: &SchedView) -> Action {
-        // Note: when nothing is active, the first branch always admits
-        // (if anything is admissible), so the policy cannot deadlock
-        // below the threshold.
+    fn plan(&mut self, v: &SchedView) -> StepPlan {
+        // Note: when nothing is in flight, the first branch always
+        // admits (if anything is admissible), so the policy cannot
+        // deadlock below the threshold.
         let n = v.admissible();
-        if n > 0 && (v.active == 0 || v.free_slots >= self.min_free.max(1)) {
-            Action::Admit(n)
-        } else if v.active > 0 {
-            Action::Decode
+        if n > 0 && (v.in_flight() == 0 || v.free_slots >= self.min_free.max(1)) {
+            StepPlan::admit_monolithic(n)
+        } else if v.prefilling > 0 {
+            drain_prefilling()
+        } else if v.decoding > 0 {
+            StepPlan::decode_only()
         } else {
-            Action::Idle
+            StepPlan::IDLE
         }
+    }
+}
+
+/// The StepPlan pipeline's native policy: admit eagerly (binding a slot
+/// runs no model code), advance the prefilling queue by at most
+/// `chunk_tokens` prompt tokens, and decode in the SAME iteration — a
+/// long prompt never stalls active decodes for more than one chunk.
+pub struct Chunked {
+    pub chunk_tokens: usize,
+}
+
+impl SchedulePolicy for Chunked {
+    fn name(&self) -> &'static str {
+        "chunked"
+    }
+
+    fn plan(&mut self, v: &SchedView) -> StepPlan {
+        let admit = v.admissible();
+        let prefill = if v.prefilling > 0 || admit > 0 {
+            PrefillWork::Chunk { max_tokens: self.chunk_tokens.max(1) }
+        } else {
+            PrefillWork::None
+        };
+        StepPlan { admit, prefill, decode: v.decoding > 0 }
     }
 }
 
@@ -130,80 +240,164 @@ pub fn build(kind: PolicyKind) -> Box<dyn SchedulePolicy> {
         PolicyKind::AdmitFirst => Box::new(AdmitFirst),
         PolicyKind::DecodeFirst => Box::new(DecodeFirst),
         PolicyKind::Hybrid { min_free } => Box::new(Hybrid { min_free }),
+        PolicyKind::Chunked { chunk_tokens } => Box::new(Chunked { chunk_tokens }),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::Rng;
 
-    fn v(queued: usize, active: usize, free: usize) -> SchedView {
-        SchedView { queued, active, free_slots: free, prefill_batch: 8 }
+    fn v(queued: usize, prefilling: usize, decoding: usize, free: usize) -> SchedView {
+        SchedView { queued, prefilling, decoding, free_slots: free, prefill_batch: 8 }
     }
 
     #[test]
     fn admit_first_matches_seed_behaviour() {
         let mut p = AdmitFirst;
-        assert_eq!(p.decide(&v(3, 0, 8)), Action::Admit(3));
-        assert_eq!(p.decide(&v(10, 7, 1)), Action::Admit(1), "one free slot admits");
-        assert_eq!(p.decide(&v(0, 5, 3)), Action::Decode);
-        assert_eq!(p.decide(&v(4, 8, 0)), Action::Decode);
-        assert_eq!(p.decide(&v(0, 0, 8)), Action::Idle);
+        assert_eq!(p.plan(&v(3, 0, 0, 8)), StepPlan::admit_monolithic(3));
+        assert_eq!(
+            p.plan(&v(10, 0, 7, 1)),
+            StepPlan::admit_monolithic(1),
+            "one free slot admits"
+        );
+        assert_eq!(p.plan(&v(0, 0, 5, 3)), StepPlan::decode_only());
+        assert_eq!(p.plan(&v(4, 0, 8, 0)), StepPlan::decode_only());
+        assert!(p.plan(&v(0, 0, 0, 8)).is_idle());
     }
 
     #[test]
     fn decode_first_drains_before_admitting() {
         let mut p = DecodeFirst;
-        assert_eq!(p.decide(&v(10, 7, 1)), Action::Decode);
-        assert_eq!(p.decide(&v(10, 0, 8)), Action::Admit(8));
-        assert_eq!(p.decide(&v(0, 0, 8)), Action::Idle);
+        assert_eq!(p.plan(&v(10, 0, 7, 1)), StepPlan::decode_only());
+        assert_eq!(p.plan(&v(10, 0, 0, 8)), StepPlan::admit_monolithic(8));
+        assert!(p.plan(&v(0, 0, 0, 8)).is_idle());
     }
 
     #[test]
     fn hybrid_waits_for_threshold_but_never_deadlocks() {
         let mut p = Hybrid { min_free: 4 };
         // One free slot no longer stalls every active decode.
-        assert_eq!(p.decide(&v(10, 7, 1)), Action::Decode);
-        assert_eq!(p.decide(&v(10, 4, 4)), Action::Admit(4));
+        assert_eq!(p.plan(&v(10, 0, 7, 1)), StepPlan::decode_only());
+        assert_eq!(p.plan(&v(10, 0, 4, 4)), StepPlan::admit_monolithic(4));
         // Fully drained: admit regardless of the threshold.
-        assert_eq!(p.decide(&v(2, 0, 8)), Action::Admit(2));
+        assert_eq!(p.plan(&v(2, 0, 0, 8)), StepPlan::admit_monolithic(2));
         // min_free = 1 degrades to admit-first.
         let mut p1 = Hybrid { min_free: 1 };
-        assert_eq!(p1.decide(&v(10, 7, 1)), Action::Admit(1));
+        assert_eq!(p1.plan(&v(10, 0, 7, 1)), StepPlan::admit_monolithic(1));
     }
 
     #[test]
-    fn no_policy_idles_with_pending_work() {
-        let mut policies: Vec<Box<dyn SchedulePolicy>> = vec![
-            Box::new(AdmitFirst),
-            Box::new(DecodeFirst),
-            Box::new(Hybrid { min_free: 3 }),
-            Box::new(Hybrid { min_free: 0 }),
-        ];
-        let batch = 4usize;
-        for p in policies.iter_mut() {
-            for queued in 0..4 {
-                for active in 0..=batch {
-                    let view = SchedView {
-                        queued,
-                        active,
-                        free_slots: batch - active,
-                        prefill_batch: 2,
-                    };
-                    let act = p.decide(&view);
-                    if queued + active > 0 {
-                        assert_ne!(
-                            act,
-                            Action::Idle,
-                            "{} idled on {view:?}",
-                            p.name()
-                        );
+    fn chunked_overlaps_prefill_with_decode() {
+        let mut p = Chunked { chunk_tokens: 8 };
+        // The headline plan: admit, chunk, AND decode in one iteration.
+        assert_eq!(
+            p.plan(&v(1, 1, 3, 2)),
+            StepPlan {
+                admit: 1,
+                prefill: PrefillWork::Chunk { max_tokens: 8 },
+                decode: true,
+            }
+        );
+        // Nothing waiting or prefilling: pure decode.
+        assert_eq!(p.plan(&v(0, 0, 3, 5)), StepPlan::decode_only());
+        // Prefilling but no decodes yet: chunk only.
+        assert_eq!(
+            p.plan(&v(0, 2, 0, 0)),
+            StepPlan {
+                admit: 0,
+                prefill: PrefillWork::Chunk { max_tokens: 8 },
+                decode: false,
+            }
+        );
+        assert!(p.plan(&v(0, 0, 0, 8)).is_idle());
+        // A zero chunk config degrades to 1 token, never a no-op plan.
+        let mut z = Chunked { chunk_tokens: 0 };
+        assert_eq!(
+            z.plan(&v(0, 1, 0, 0)).prefill,
+            PrefillWork::Chunk { max_tokens: 1 }
+        );
+    }
+
+    #[test]
+    fn monolithic_policies_drain_foreign_prefilling_state() {
+        // The contract holds even on views these policies never create
+        // themselves: prefilling sequences must be finished, not idled on.
+        for p in [&mut AdmitFirst as &mut dyn SchedulePolicy, &mut DecodeFirst] {
+            let plan = p.plan(&v(0, 2, 0, 6));
+            assert!(
+                matches!(plan.prefill, PrefillWork::Chunk { max_tokens } if max_tokens > 0),
+                "{} idles on prefilling sequences",
+                p.name()
+            );
+        }
+        let mut h = Hybrid { min_free: 4 };
+        let plan = h.plan(&v(0, 2, 0, 1));
+        assert!(matches!(plan.prefill, PrefillWork::Chunk { .. }));
+    }
+
+    /// The documented anti-starvation contract, property-tested: no
+    /// policy (old or new) may return an idle plan while work is pending
+    /// and progress is possible, over randomized `SchedView`s — plus the
+    /// plan sanity bounds (never over-admit, never decode an empty
+    /// decode queue, never admit without prefill work to follow).
+    #[test]
+    fn props_no_policy_idles_with_pending_work() {
+        check(
+            "scheduler_anti_starvation",
+            PropConfig { cases: 500, seed: 0xA11CE },
+            |r: &mut Rng| {
+                let batch = 1 + r.below(8);
+                let prefilling = r.below(batch + 1);
+                let decoding = r.below(batch + 1 - prefilling);
+                let free = batch - prefilling - decoding;
+                SchedView {
+                    queued: r.below(6),
+                    prefilling,
+                    decoding,
+                    // The engine may clamp admission capacity below the
+                    // raw free-slot count (paged block shortage); the
+                    // contract must hold under the clamp too.
+                    free_slots: r.below(free + 1),
+                    prefill_batch: 1 + r.below(4),
+                }
+            },
+            |view| {
+                let mut policies: Vec<Box<dyn SchedulePolicy>> = vec![
+                    Box::new(AdmitFirst),
+                    Box::new(DecodeFirst),
+                    Box::new(Hybrid { min_free: 3 }),
+                    Box::new(Hybrid { min_free: 0 }),
+                    Box::new(Chunked { chunk_tokens: 4 }),
+                    Box::new(Chunked { chunk_tokens: 0 }),
+                ];
+                let pending = view.queued + view.prefilling + view.decoding > 0;
+                let possible =
+                    view.admissible() > 0 || view.prefilling > 0 || view.decoding > 0;
+                for p in policies.iter_mut() {
+                    let plan = p.plan(view);
+                    if pending && possible && plan.is_idle() {
+                        return Err(format!("{} idled on {view:?}", p.name()));
                     }
-                    if let Action::Admit(n) = act {
-                        assert!(n > 0 && n <= view.admissible(), "{} over-admits", p.name());
+                    if plan.admit > view.admissible() {
+                        return Err(format!("{} over-admits on {view:?}", p.name()));
+                    }
+                    if plan.decode && view.decoding == 0 {
+                        return Err(format!("{} decodes an empty queue", p.name()));
+                    }
+                    if plan.admit > 0 && plan.prefill == PrefillWork::None {
+                        return Err(format!("{} admits without prefill work", p.name()));
+                    }
+                    if let PrefillWork::Chunk { max_tokens } = plan.prefill {
+                        if max_tokens == 0 {
+                            return Err(format!("{} emits a zero-token chunk", p.name()));
+                        }
                     }
                 }
-            }
-        }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,8 +1,16 @@
 //! Sequence/slot lifecycle: one place that owns per-sequence state,
-//! slot allocation, per-slot length tracking, completion rules, and the
-//! TTFT / TPOT / latency accounting that the metrics and the server
-//! report. The engine talks to the backend; this type tracks what every
-//! slot is doing.
+//! slot allocation, the prefilling/decoding phase split, per-slot length
+//! tracking, completion rules, and the TTFT / TPOT / latency accounting
+//! that the metrics and the server report. The engine talks to the
+//! backend; this type tracks what every slot is doing.
+//!
+//! A slot-bound sequence moves through two phases (see [`SeqPhase`]):
+//! **Prefilling** — slot bound and cache reserved, with a per-slot
+//! *prefilled watermark* tracking how much of the prompt is in cache
+//! (advanced chunk-by-chunk under the chunked policy, or in one shot by
+//! the monolithic path) — then **Decoding** once the first token exists.
+//! TTFT accounting splits accordingly: `queue_s` (enqueue → slot bound /
+//! prefill started) vs `prefill_s` (prefill started → first token).
 
 use crate::backend::CacheStore;
 use crate::coordinator::request::{Completion, Request};
@@ -21,10 +29,22 @@ pub fn bounded_cache_tokens(prompt_len: usize, max_new: usize, capacity: usize) 
     prompt_len + max_new.min(room).max(1) - 1
 }
 
+/// Lifecycle phase of a slot-bound sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Slot bound and cache reserved; `done` prompt positions are in the
+    /// cache (the prefilled watermark). No tokens emitted yet.
+    Prefilling { done: usize },
+    /// Prompt fully in cache; emitting tokens.
+    Decoding,
+}
+
 /// One active sequence pinned to a decode slot.
 pub struct SeqState {
     pub req: Request,
     pub slot: usize,
+    /// Where in the prefill→decode lifecycle this sequence is.
+    pub phase: SeqPhase,
     /// Effective prompt length after clamping to the backend geometry.
     pub prompt_len: usize,
     /// Position the next decode step writes to (prompt_len initially).
@@ -32,9 +52,11 @@ pub struct SeqState {
     pub last_token: i32,
     pub generated: Vec<i32>,
     pub enqueued: Instant,
-    /// When this request's prefill call started (end of queueing).
+    /// When this request's prefill started (end of queueing): the slot
+    /// bind under the chunked policy, the batched call otherwise.
     pub prefill_started: Instant,
     /// When prefill finished and the first token existed (TTFT point).
+    /// Provisional (= `prefill_started`) while still prefilling.
     pub admitted: Instant,
 }
 
@@ -59,6 +81,7 @@ impl SequenceManager {
         self.seqs.len()
     }
 
+    /// Slot-bound sequences in either phase (prefilling + decoding).
     pub fn n_active(&self) -> usize {
         self.slots.n_active()
     }
@@ -67,18 +90,77 @@ impl SequenceManager {
         self.slots.n_free()
     }
 
-    pub fn active_slots(&self) -> Vec<usize> {
-        self.slots.active_slots()
+    /// Sequences still feeding their prompt into the cache.
+    pub fn n_prefilling(&self) -> usize {
+        self.seqs
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s.phase, SeqPhase::Prefilling { .. }))
+            .count()
+    }
+
+    /// Sequences in the decode queue.
+    pub fn n_decoding(&self) -> usize {
+        self.n_active() - self.n_prefilling()
+    }
+
+    /// Slots in the `Decoding` phase, ascending.
+    pub fn decoding_slots(&self) -> Vec<usize> {
+        self.seqs
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, s)| match s {
+                Some(seq) if seq.phase == SeqPhase::Decoding => Some(slot),
+                _ => None,
+            })
+            .collect()
     }
 
     pub fn seq(&self, slot: usize) -> Option<&SeqState> {
         self.seqs.get(slot).and_then(Option::as_ref)
     }
 
-    /// Bind a freshly prefilled request to a free slot, reserving its
-    /// bounded cache demand in the store (block table for the paged
-    /// cache; no-op for the fixed pool, whose slot row *is* the
-    /// reservation).
+    /// Bind a request to a free slot, reserving its bounded cache demand
+    /// in the store (block table for the paged cache; no-op for the
+    /// fixed pool, whose slot row *is* the reservation) and materialising
+    /// the first `materialize` positions. The monolithic path needs the
+    /// whole prompt materialised for its splice; the chunked path passes
+    /// 0 and grows block-by-block as chunks land. The sequence starts in
+    /// `Prefilling` at watermark 0.
+    fn bind(
+        &mut self,
+        req: Request,
+        prompt_len: usize,
+        materialize: usize,
+        enqueued: Instant,
+        prefill_started: Instant,
+        cache: &mut CacheStore,
+    ) -> Result<usize> {
+        let slot = self.slots.alloc(req.id).context("slot alloc")?;
+        let reserve = bounded_cache_tokens(prompt_len, req.max_new_tokens, self.capacity);
+        if let Err(e) = cache.admit_slot(slot, reserve, materialize) {
+            // Roll the slot back so allocator and seq state stay in step.
+            let _ = self.slots.release(slot);
+            return Err(e);
+        }
+        self.seqs[slot] = Some(SeqState {
+            phase: SeqPhase::Prefilling { done: 0 },
+            prompt_len,
+            next_pos: prompt_len,
+            last_token: 0,
+            generated: Vec::new(),
+            enqueued,
+            prefill_started,
+            admitted: prefill_started,
+            slot,
+            req,
+        });
+        Ok(slot)
+    }
+
+    /// Bind a freshly *and fully* prefilled request to a free slot — the
+    /// monolithic path: the prompt is already in cache and the first
+    /// token sampled, so the sequence enters `Decoding` directly.
     #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &mut self,
@@ -90,59 +172,106 @@ impl SequenceManager {
         now: Instant,
         cache: &mut CacheStore,
     ) -> Result<usize> {
-        let slot = self.slots.alloc(req.id).context("slot alloc")?;
-        let reserve = bounded_cache_tokens(prompt_len, req.max_new_tokens, self.capacity);
-        if let Err(e) = cache.admit_slot(slot, reserve, prompt_len) {
-            // Roll the slot back so allocator and seq state stay in step.
-            let _ = self.slots.release(slot);
-            return Err(e);
-        }
-        self.seqs[slot] = Some(SeqState {
-            prompt_len,
-            next_pos: prompt_len,
-            last_token: first_token,
-            generated: vec![first_token],
-            enqueued,
-            prefill_started,
-            admitted: now,
-            slot,
-            req,
-        });
+        let slot =
+            self.bind(req, prompt_len, prompt_len, enqueued, prefill_started, cache)?;
+        self.finish_prefill(slot, first_token, now)?;
         Ok(slot)
     }
 
-    /// Token + write-position vectors for the next decode call
-    /// (idle slots contribute 0/0; backends mask them by position).
-    pub fn decode_io(&self) -> (Vec<i32>, Vec<i32>) {
+    /// Chunked admission: bind a request to a slot with its cache
+    /// reservation and enter `Prefilling` at watermark 0 — no model call
+    /// has happened yet, and (paged store) no prompt blocks are
+    /// materialised yet either: they commit at chunk granularity as the
+    /// prompt enters the cache.
+    pub fn admit_prefilling(
+        &mut self,
+        req: Request,
+        prompt_len: usize,
+        enqueued: Instant,
+        prefill_started: Instant,
+        cache: &mut CacheStore,
+    ) -> Result<usize> {
+        self.bind(req, prompt_len, 0, enqueued, prefill_started, cache)
+    }
+
+    /// Advance the prefilled watermark after a chunk wrote prompt
+    /// positions up to (exclusive) `done`. An empty prompt is driven by
+    /// one pad-token step, so the watermark bound is `max(prompt_len, 1)`.
+    pub fn record_prefill(&mut self, slot: usize, done: usize) -> Result<()> {
+        let seq = self.seqs[slot].as_mut().context("record_prefill on idle slot")?;
+        match seq.phase {
+            SeqPhase::Prefilling { done: prev }
+                if done >= prev && done <= seq.prompt_len.max(1) =>
+            {
+                seq.phase = SeqPhase::Prefilling { done };
+                Ok(())
+            }
+            SeqPhase::Prefilling { done: prev } => bail!(
+                "slot {slot} watermark {done} out of order (was {prev}, prompt {})",
+                seq.prompt_len
+            ),
+            SeqPhase::Decoding => bail!("record_prefill on decoding slot {slot}"),
+        }
+    }
+
+    /// Complete prefill: the first sampled token exists, the sequence
+    /// joins the decode queue, and the TTFT clock stops.
+    pub fn finish_prefill(&mut self, slot: usize, first_token: i32, now: Instant) -> Result<()> {
+        let seq = self.seqs[slot].as_mut().context("finish_prefill on idle slot")?;
+        if seq.phase == SeqPhase::Decoding {
+            bail!("finish_prefill on decoding slot {slot}");
+        }
+        seq.phase = SeqPhase::Decoding;
+        seq.admitted = now;
+        seq.last_token = first_token;
+        seq.generated.push(first_token);
+        Ok(())
+    }
+
+    /// Token / write-position / active vectors for the next decode call.
+    /// Only `Decoding`-phase slots are active; idle and prefilling slots
+    /// are masked out (a prefilling slot's cache rows are live resume
+    /// state — the backend must not touch them).
+    pub fn decode_io(&self) -> (Vec<i32>, Vec<i32>, Vec<bool>) {
         let b = self.batch();
         let mut token = vec![0i32; b];
         let mut pos = vec![0i32; b];
+        let mut active = vec![false; b];
         for (slot, s) in self.seqs.iter().enumerate() {
             if let Some(seq) = s {
-                token[slot] = seq.last_token;
-                pos[slot] = seq.next_pos as i32;
+                if seq.phase == SeqPhase::Decoding {
+                    token[slot] = seq.last_token;
+                    pos[slot] = seq.next_pos as i32;
+                    active[slot] = true;
+                }
             }
         }
-        (token, pos)
+        (token, pos, active)
     }
 
-    /// Grow every active slot's cache to cover its next write position —
-    /// called before each decode step so the backend's in-place writes
+    /// Grow every decoding slot's cache to cover its next write position
+    /// — called before each decode step so the backend's in-place writes
     /// always land in materialised blocks. Growth draws on the
     /// admission-time reservation, so it cannot fail for a healthy
-    /// engine. No-op over the fixed pool.
+    /// engine. No-op over the fixed pool. (Prefilling slots grow at
+    /// chunk granularity on the chunk path instead.)
     pub fn grow_for_decode(&self, cache: &mut CacheStore) -> Result<()> {
         for (slot, s) in self.seqs.iter().enumerate() {
             if let Some(seq) = s {
-                cache.grow(slot, seq.next_pos + 1)?;
+                if seq.phase == SeqPhase::Decoding {
+                    cache.grow(slot, seq.next_pos + 1)?;
+                }
             }
         }
         Ok(())
     }
 
-    /// Record one decoded token for an active slot.
+    /// Record one decoded token for a decoding slot.
     pub fn push_token(&mut self, slot: usize, tok: i32) -> Result<()> {
         let seq = self.seqs[slot].as_mut().context("push on idle slot")?;
+        if seq.phase != SeqPhase::Decoding {
+            bail!("push_token on prefilling slot {slot}");
+        }
         seq.next_pos += 1;
         seq.last_token = tok;
         seq.generated.push(tok);
@@ -161,6 +290,8 @@ impl SequenceManager {
     pub fn is_done(&self, slot: usize) -> bool {
         match &self.seqs[slot] {
             None => false,
+            // A prefilling sequence has emitted nothing yet.
+            Some(seq) if matches!(seq.phase, SeqPhase::Prefilling { .. }) => false,
             Some(seq) => {
                 let room = self.capacity.saturating_sub(seq.prompt_len) + 1;
                 let max_new = seq.req.max_new_tokens.min(room);
@@ -181,9 +312,12 @@ impl SequenceManager {
         cache.release_slot(slot)?;
         let now = Instant::now();
         let latency_s = now.duration_since(seq.enqueued).as_secs_f64();
-        // queue_s ends when prefill starts; ttft_s additionally includes
-        // the prefill itself (first token exists at `admitted`).
+        // TTFT decomposes as queue_s (enqueue -> prefill started) +
+        // prefill_s (prefill started -> first token; under the chunked
+        // policy this spans the interleaved decode steps too — that IS
+        // the observed prefill component of TTFT).
         let queue_s = seq.prefill_started.duration_since(seq.enqueued).as_secs_f64();
+        let prefill_s = seq.admitted.duration_since(seq.prefill_started).as_secs_f64();
         let ttft_s = seq.admitted.duration_since(seq.enqueued).as_secs_f64();
         let decoded = seq.generated.len().saturating_sub(1);
         let tpot_s = if decoded > 0 {
@@ -197,12 +331,14 @@ impl SequenceManager {
             tokens: seq.generated,
             latency_s,
             queue_s,
+            prefill_s,
             ttft_s,
             tpot_s,
         })
     }
 
-    /// Slot allocator and per-slot state must agree exactly.
+    /// Slot allocator, per-slot state, and phase bookkeeping must agree
+    /// exactly.
     pub fn check_invariants(&self) -> Result<()> {
         self.slots.check_invariants()?;
         for (i, s) in self.seqs.iter().enumerate() {
@@ -210,6 +346,20 @@ impl SequenceManager {
                 (Some(seq), Some(owner)) if seq.req.id == owner => {}
                 (None, None) => {}
                 _ => bail!("slot {i} state and allocator disagree"),
+            }
+            if let Some(seq) = s {
+                match seq.phase {
+                    SeqPhase::Decoding if seq.generated.is_empty() => {
+                        bail!("decoding slot {i} has no first token")
+                    }
+                    SeqPhase::Prefilling { .. } if !seq.generated.is_empty() => {
+                        bail!("prefilling slot {i} already emitted tokens")
+                    }
+                    SeqPhase::Prefilling { done } if done > seq.prompt_len.max(1) => {
+                        bail!("slot {i} watermark {done} past its prompt")
+                    }
+                    _ => {}
+                }
             }
         }
         Ok(())
@@ -300,14 +450,94 @@ mod tests {
         let mut c = store(3, 16);
         let t0 = Instant::now();
         let slot = m.admit(req(1, 2, 4), 2, 77, t0, t0, t0, &mut c).unwrap();
-        let (tok, pos) = m.decode_io();
+        let (tok, pos, act) = m.decode_io();
         for s in 0..3 {
             if s == slot {
-                assert_eq!((tok[s], pos[s]), (77, 2));
+                assert_eq!((tok[s], pos[s], act[s]), (77, 2, true));
             } else {
-                assert_eq!((tok[s], pos[s]), (0, 0));
+                assert_eq!((tok[s], pos[s], act[s]), (0, 0, false));
             }
         }
+    }
+
+    #[test]
+    fn prefilling_lifecycle_watermark_then_decode() {
+        let mut m = SequenceManager::new(2, 32);
+        let mut c = store(2, 32);
+        let t0 = Instant::now();
+        let slot = m.admit_prefilling(req(3, 10, 4), 10, t0, t0, &mut c).unwrap();
+        assert_eq!(m.n_active(), 1);
+        assert_eq!(m.n_prefilling(), 1);
+        assert_eq!(m.n_decoding(), 0);
+        assert!(m.decoding_slots().is_empty());
+        assert!(!m.is_done(slot), "prefilling sequences are never done");
+        let (_, _, act) = m.decode_io();
+        assert!(!act[slot], "prefilling slots are masked out of decode");
+        assert!(m.push_token(slot, 1).is_err(), "no decode mid-prefill");
+        m.record_prefill(slot, 6).unwrap();
+        assert!(m.record_prefill(slot, 4).is_err(), "watermark cannot regress");
+        assert!(m.record_prefill(slot, 11).is_err(), "watermark past prompt");
+        m.record_prefill(slot, 10).unwrap();
+        m.check_invariants().unwrap();
+        m.finish_prefill(slot, 42, Instant::now()).unwrap();
+        assert!(m.finish_prefill(slot, 42, Instant::now()).is_err());
+        assert_eq!(m.n_decoding(), 1);
+        assert_eq!(m.decoding_slots(), vec![slot]);
+        let (tok, pos, act) = m.decode_io();
+        assert_eq!((tok[slot], pos[slot], act[slot]), (42, 10, true));
+        for t in 0..3 {
+            m.push_token(slot, 50 + t).unwrap();
+        }
+        assert!(m.is_done(slot));
+        let done = m.finish(slot, &mut c).unwrap();
+        assert_eq!(done.tokens, vec![42, 50, 51, 52]);
+        assert!(done.prefill_s >= 0.0);
+        assert!(done.ttft_s >= done.queue_s);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn empty_prompt_watermark_allows_the_pad_step() {
+        // An empty prompt is driven by one pad-token chunk: the
+        // watermark bound is max(prompt_len, 1), not prompt_len.
+        let mut m = SequenceManager::new(1, 8);
+        let mut c = store(1, 8);
+        let t0 = Instant::now();
+        let slot = m.admit_prefilling(req(1, 0, 2), 0, t0, t0, &mut c).unwrap();
+        m.record_prefill(slot, 1).unwrap();
+        m.finish_prefill(slot, 9, Instant::now()).unwrap();
+        assert_eq!(m.seq(slot).unwrap().next_pos, 0, "decode starts at pos 0");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunked_admission_commits_paged_blocks_at_chunk_granularity() {
+        let mut m = SequenceManager::new(2, 32);
+        let mut c = CacheStore::Paged(
+            PagedKvCache::new(CacheLayout::Mla { r: 4, dr: 4 }, 1, 2, 4, 16).unwrap(),
+        );
+        let t0 = Instant::now();
+        // Prompt 12 + max_new 2 -> bounded demand 13 tokens = 4 blocks,
+        // all reserved but NONE materialised at bind time.
+        let slot = m.admit_prefilling(req(1, 12, 2), 12, t0, t0, &mut c).unwrap();
+        {
+            let p = c.as_paged().unwrap();
+            assert_eq!(p.blocks_in_use(), 0, "no prompt blocks before any chunk");
+            assert_eq!(p.blocks_reserved(), 4, "full bounded demand reserved");
+        }
+        // Chunks land 4 tokens at a time; blocks commit as they land.
+        c.grow(slot, 4).unwrap();
+        m.record_prefill(slot, 4).unwrap();
+        assert_eq!(c.as_paged().unwrap().blocks_in_use(), 1);
+        c.grow(slot, 12).unwrap();
+        m.record_prefill(slot, 12).unwrap();
+        assert_eq!(c.as_paged().unwrap().blocks_in_use(), 3);
+        m.finish_prefill(slot, 7, Instant::now()).unwrap();
+        m.finish(slot, &mut c).unwrap();
+        let p = c.as_paged().unwrap();
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.blocks_reserved(), 0, "unused reservation released too");
+        c.check_invariants().unwrap();
     }
 
     #[test]

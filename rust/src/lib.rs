@@ -10,26 +10,44 @@
 //!   evaluation drivers for every table/figure in the paper, and an
 //!   analytical accelerator model for the paper's three GPU profiles.
 //!
-//! # Serving architecture (Backend / Scheduler / SequenceManager)
+//! # Serving architecture (the StepPlan pipeline)
 //!
-//! The serving core is three decoupled layers:
+//! The serving core is three decoupled layers around one idea: each
+//! engine iteration executes a scheduler-built **plan**, not a single
+//! mutually-exclusive action. A `StepPlan` composes admissions, bounded
+//! prefill work, and a decode step in the SAME iteration, so a long
+//! prompt enters the cache chunk-by-chunk while active sequences keep
+//! decoding — prefill is compute-bound, decode is memory-bound, and
+//! interleaving them is where the TTFT/TPOT frontier moves.
 //!
-//! * [`backend`] — the [`backend::ExecBackend`] trait (prefill/decode over
-//!   an opaque cache store) with two implementations:
-//!   [`backend::XlaBackend`] executes the AOT artifacts through PJRT, and
-//!   [`backend::SimBackend`] is a deterministic pure-Rust model of the same
-//!   contract for both `CacheLayout::Gqa` and `CacheLayout::Mla`, so the
-//!   engine, server, benches, and integration tests run **hermetically on a
-//!   bare checkout** — no `make artifacts`, no XLA runtime. The
-//!   [`backend::CacheStore`] seam lets the engine run over either the
-//!   fixed slot pool (what the artifacts bake in) or the paged block pool
-//!   (`SimBackend` drives both, completion-identically).
-//! * [`coordinator::scheduler`] — pluggable `SchedulePolicy`
-//!   (admit-first / decode-first / hybrid), selected via
-//!   [`config::EngineConfig`]: who gets the next iteration, queued prefills
-//!   or active decodes.
-//! * [`coordinator::seqmgr`] — `SequenceManager`: slot lifecycle, per-slot
-//!   length tracking, completion rules, and TTFT/TPOT/latency accounting.
+//! * [`backend`] — the [`backend::ExecBackend`] trait with three entry
+//!   points: batched `prefill` (rows-sized), resumable single-sequence
+//!   `prefill_chunk` (writes straight into the sequence's cache rows),
+//!   and masked `decode`. [`backend::XlaBackend`] executes the AOT
+//!   artifacts through PJRT (chunking recomputes through the fixed-shape
+//!   prefill artifact — the AOT ABI is untouched); [`backend::SimBackend`]
+//!   is a deterministic pure-Rust model of the same contract for both
+//!   `CacheLayout::Gqa` and `CacheLayout::Mla` with *exact* chunk resume,
+//!   so the engine, server, benches, and integration tests run
+//!   **hermetically on a bare checkout** — no `make artifacts`, no XLA
+//!   runtime. The [`backend::CacheStore`] seam lets the engine run over
+//!   either the fixed slot pool (what the artifacts bake in) or the
+//!   paged block pool (`SimBackend` drives both, completion-identically,
+//!   chunked or monolithic).
+//! * [`coordinator::scheduler`] — pluggable `SchedulePolicy` building a
+//!   per-iteration `StepPlan` over the three queues (waiting →
+//!   prefilling → decoding), selected via [`config::EngineConfig`]:
+//!   admit-first / decode-first / hybrid emit degenerate plans
+//!   (admit+monolithic-prefill XOR decode — the pre-plan behaviour,
+//!   ordering-identical); `chunked:N` admits eagerly, advances the
+//!   prefilling queue by at most N prompt tokens, and decodes in the
+//!   same iteration, bounding the decode stall to one chunk. An
+//!   anti-starvation contract (never idle with pending work) is
+//!   property-tested over every policy.
+//! * [`coordinator::seqmgr`] — `SequenceManager`: slot lifecycle with the
+//!   `Prefilling` → `Decoding` phase split and per-slot prefilled
+//!   watermark, completion rules, and TTFT (queue_s + prefill_s) / TPOT
+//!   / latency accounting.
 //!
 //! [`coordinator::engine::Engine`] composes the three and exposes
 //! `submit` / `step` / `generate` / `take_completions`.
@@ -38,8 +56,8 @@
 //!
 //! | module        | role                                                    |
 //! |---------------|---------------------------------------------------------|
-//! | [`backend`]   | execution backends: `ExecBackend`, `SimBackend`, `XlaBackend`, `ModelBundle` |
-//! | [`coordinator`] | engine, scheduler policies, sequence manager, sampling, request types |
+//! | [`backend`]   | execution backends: `ExecBackend` (prefill / prefill_chunk / decode), `SimBackend`, `XlaBackend`, `ModelBundle` |
+//! | [`coordinator`] | engine (StepPlan executor), scheduler (StepPlan builder: admit-first / decode-first / hybrid / chunked), sequence manager (phase + watermark), sampling, request types |
 //! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with layout-aware byte accounting (GQA vs MLA) |
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
 //! | [`server`]    | TCP JSONL front-end with stats + in-band protocol errors |

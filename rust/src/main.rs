@@ -40,6 +40,9 @@ COMMON FLAGS
   --backend xla|sim backend for generate/serve (default: xla; `sim` is the
                     hermetic deterministic backend — no artifacts needed)
   --policy P        scheduling policy: admit-first|decode-first|hybrid[:N]
+                    |chunked[:N] (chunked = decode-overlapped prefill, at
+                    most N prompt tokens per engine iteration)
+  --prefill-chunk N shorthand for --policy chunked:N
   --batch N         decode slots (sim backend; default 8)
   --capacity N      sim cache capacity (default 256)
   --cache K         KV-cache store: fixed|paged (default fixed; paged needs
@@ -156,8 +159,27 @@ fn engine_cfg(args: &Args) -> Result<EngineConfig> {
             );
         }
     }
+    let mut policy = PolicyKind::parse(args.str_flag("policy", "admit-first"))?;
+    if let Some(raw) = args.get("prefill-chunk") {
+        let chunk = raw
+            .parse::<usize>()
+            .ok()
+            .filter(|&c| c > 0)
+            .with_context(|| format!("bad --prefill-chunk `{raw}`"))?;
+        // Shorthand for --policy chunked:N; an explicit non-chunked
+        // --policy is a conflict, not something to silently override.
+        match (args.get("policy"), policy) {
+            (None, _) | (Some(_), PolicyKind::Chunked { .. }) => {
+                policy = PolicyKind::Chunked { chunk_tokens: chunk };
+            }
+            (Some(p), _) => bail!(
+                "--prefill-chunk {chunk} conflicts with --policy {p} \
+                 (chunked prefill needs --policy chunked)"
+            ),
+        }
+    }
     Ok(EngineConfig {
-        policy: PolicyKind::parse(args.str_flag("policy", "admit-first"))?,
+        policy,
         seed: args.usize_flag("seed", 0) as u64,
         cache,
         ..EngineConfig::default()

@@ -166,6 +166,12 @@ fn stats_json(engine: &Engine) -> Json {
     j.set("policy", Json::Str(engine.policy_name().to_string()));
     j.set("decode_tok_per_s", Json::Num(engine.decode_throughput()));
     j.set("uptime_s", Json::Num(m.elapsed_s()));
+    // Live queue depths of the StepPlan pipeline (waiting -> prefilling
+    // -> decoding); chunk metrics land in the series below
+    // (chunk_s / chunk_tokens) once the chunked policy runs.
+    j.set("queued", Json::Num(engine.n_pending() as f64));
+    j.set("prefilling", Json::Num(engine.n_prefilling() as f64));
+    j.set("decoding", Json::Num(engine.n_decoding() as f64));
     // Cache memory accounting: actual bytes committed vs the worst-case
     // batch*capacity reservation (the paged cache's whole point).
     let cs = engine.cache_stats();
@@ -201,6 +207,7 @@ fn completion_json(c: &crate::coordinator::Completion) -> Json {
     j.set("prompt_len", Json::Num(c.prompt_len as f64));
     j.set("latency_s", Json::Num(c.latency_s));
     j.set("queue_s", Json::Num(c.queue_s));
+    j.set("prefill_s", Json::Num(c.prefill_s));
     j.set("ttft_s", Json::Num(c.ttft_s));
     j.set("tpot_s", Json::Num(c.tpot_s));
     j

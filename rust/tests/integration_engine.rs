@@ -7,7 +7,7 @@
 
 use transmla::backend::{SimBackend, SimConfig};
 use transmla::config::{CacheKind, EngineConfig, PolicyKind};
-use transmla::coordinator::{Action, Engine, Request};
+use transmla::coordinator::{Engine, Request, StepPlan};
 
 fn engine(seed: u64) -> Engine {
     Engine::new(
@@ -167,7 +167,8 @@ fn run_scripted_with_cache(
     let order: Vec<u64> = comps.iter().map(|c| c.id).collect();
     comps.sort_by_key(|c| c.id);
     let tokens: Vec<Vec<i32>> = comps.into_iter().map(|c| c.tokens).collect();
-    (order, e.admission_log().to_vec(), tokens)
+    let log: Vec<(usize, Vec<u64>)> = e.admission_log().iter().cloned().collect();
+    (order, log, tokens)
 }
 
 fn run_scripted(policy: PolicyKind) -> (Vec<u64>, Vec<(usize, Vec<u64>)>) {
@@ -221,6 +222,7 @@ fn paged_and_fixed_caches_are_completion_identical() {
         PolicyKind::AdmitFirst,
         PolicyKind::DecodeFirst,
         PolicyKind::Hybrid { min_free: 2 },
+        PolicyKind::Chunked { chunk_tokens: 4 },
     ] {
         let fixed = run_scripted_with_cache(policy, CacheKind::Fixed);
         let paged = run_scripted_with_cache(
@@ -231,6 +233,111 @@ fn paged_and_fixed_caches_are_completion_identical() {
         assert_eq!(fixed.1, paged.1, "{policy:?}: admission trace diverged");
         assert_eq!(fixed.2, paged.2, "{policy:?}: tokens diverged");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Chunked prefill: bit-identical to monolithic across policies and cache
+// stores, and the overlap win — decode never stalls more than one chunk.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_is_completion_identical_to_monolithic() {
+    // Same scripted workload, every chunk size, both cache stores: the
+    // tokens of every completion must match the monolithic reference
+    // bit-for-bit (the sim model is deterministic and batch-invariant,
+    // so any divergence is a resume bug in the chunk path).
+    for cache in [
+        CacheKind::Fixed,
+        CacheKind::Paged { block_size: 16, n_blocks: None },
+    ] {
+        let reference = run_scripted_with_cache(PolicyKind::AdmitFirst, cache).2;
+        for monolithic in [PolicyKind::DecodeFirst, PolicyKind::Hybrid { min_free: 2 }] {
+            assert_eq!(
+                reference,
+                run_scripted_with_cache(monolithic, cache).2,
+                "{monolithic:?} over {cache:?} diverged from admit-first"
+            );
+        }
+        for chunk in [1usize, 3, 64] {
+            let got =
+                run_scripted_with_cache(PolicyKind::Chunked { chunk_tokens: chunk }, cache).2;
+            assert_eq!(
+                reference, got,
+                "chunked:{chunk} over {cache:?} diverged from monolithic"
+            );
+        }
+    }
+}
+
+/// The acceptance scenario: three sequences are decoding when a long
+/// prompt arrives. Under admit-first, the monolithic prefill stalls
+/// every decode for the whole prompt; under chunked:N, decode keeps
+/// stepping with at most one N-token chunk between steps — and the
+/// completions stay bit-identical.
+#[test]
+fn chunked_prefill_overlaps_decode_and_bounds_the_stall() {
+    let chunk = 8usize;
+    let long_len = 96usize;
+    let capacity = 128usize;
+    let mk = |policy: PolicyKind| {
+        Engine::new(
+            SimBackend::new(SimConfig {
+                capacity,
+                prefill_seq: capacity,
+                ..SimConfig::gqa(4)
+            })
+            .unwrap(),
+            EngineConfig { policy, ..Default::default() },
+        )
+    };
+    // Returns (max prefill tokens between consecutive decode steps,
+    // completions sorted by id).
+    let run = |mut e: Engine| -> (usize, Vec<(u64, Vec<i32>)>) {
+        for i in 0..3 {
+            e.submit(Request::from_text(i, "steady decode traffic", 40));
+        }
+        // Let the steady sequences admit and get a few decode steps in.
+        for _ in 0..5 {
+            e.step().unwrap();
+        }
+        e.submit(Request::new(3, vec![65; long_len], 8));
+        let mut max_gap = 0usize;
+        let mut gap = 0usize;
+        while !e.is_idle() {
+            let pre = e.metrics.counter("prefill_tokens");
+            let dec = e.metrics.counter("decode_steps");
+            e.step().unwrap();
+            gap += (e.metrics.counter("prefill_tokens") - pre) as usize;
+            if e.metrics.counter("decode_steps") > dec {
+                max_gap = max_gap.max(gap);
+                gap = 0;
+            }
+        }
+        e.slots_check().unwrap();
+        let mut comps = e.take_completions();
+        comps.sort_by_key(|c| c.id);
+        (max_gap, comps.into_iter().map(|c| (c.id, c.tokens)).collect())
+    };
+
+    let (mono_gap, mono) = run(mk(PolicyKind::AdmitFirst));
+    let (chunk_gap, chunked) = run(mk(PolicyKind::Chunked { chunk_tokens: chunk }));
+    assert!(
+        mono_gap >= long_len,
+        "monolithic stall must cover the whole long prompt (gap {mono_gap})"
+    );
+    assert!(
+        chunk_gap <= chunk,
+        "chunked decode gap {chunk_gap} exceeds one chunk ({chunk})"
+    );
+    assert!(
+        chunk_gap < mono_gap,
+        "chunked gap {chunk_gap} not strictly below monolithic {mono_gap}"
+    );
+    assert_eq!(mono.len(), 4);
+    assert_eq!(
+        mono, chunked,
+        "chunked completions must be bit-identical to monolithic"
+    );
 }
 
 #[test]
@@ -251,11 +358,15 @@ fn paged_hybrid_admits_like_fixed_when_blocks_are_plentiful() {
             },
         );
         e.submit(Request::from_text(0, "long running seq", 8));
-        assert_eq!(e.step().unwrap(), Action::Admit(1));
+        assert_eq!(e.step().unwrap(), StepPlan::admit_monolithic(1));
         e.submit(Request::from_text(1, "late arrival", 2));
         // 1 active, 2 free slots, 1 queued, blocks plentiful: the hybrid
         // threshold is met, so both cache kinds admit immediately.
-        assert_eq!(e.step().unwrap(), Action::Admit(1), "{cache:?} deferred");
+        assert_eq!(
+            e.step().unwrap(),
+            StepPlan::admit_monolithic(1),
+            "{cache:?} deferred"
+        );
         e.run_to_completion().unwrap();
         e.slots_check().unwrap();
     }

@@ -158,6 +158,39 @@ fn protocol_error_paths_answer_in_band() {
 }
 
 #[test]
+fn chunked_server_reports_pipeline_queues_and_chunk_metrics() {
+    let addr = "127.0.0.1:18435";
+    let handle = start_server(addr, PolicyKind::Chunked { chunk_tokens: 4 });
+
+    let resp = server::client_request(addr, "a prompt long enough to chunk", 4).unwrap();
+    assert!(resp.get("text").is_some(), "{resp:?}");
+    // The TTFT decomposition rides along on every completion.
+    assert!(resp.get("queue_s").is_some());
+    assert!(resp.get("prefill_s").is_some());
+
+    let stats = server::client_stats(addr).unwrap();
+    assert_eq!(stats.get("policy").and_then(Json::as_str), Some("chunked"));
+    // Queue depths of the StepPlan pipeline (drained by now, but present).
+    for depth in ["queued", "prefilling", "decoding"] {
+        assert_eq!(
+            stats.get(depth).and_then(Json::as_usize),
+            Some(0),
+            "stats missing/nonzero `{depth}`: {stats:?}"
+        );
+    }
+    // Chunk metrics: a 29-char prompt at chunk 4 takes several chunks.
+    let counters = stats.get("counters").expect("counters");
+    assert!(counters.get("prefill_chunks").and_then(Json::as_usize).unwrap() >= 8);
+    let chunk_tokens = stats
+        .get("chunk_tokens")
+        .unwrap_or_else(|| panic!("stats missing `chunk_tokens`: {stats:?}"));
+    assert!(chunk_tokens.get("p50").is_some());
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
 fn concurrent_clients_all_complete() {
     let addr = "127.0.0.1:18433";
     let handle = start_server(addr, PolicyKind::DecodeFirst);
