@@ -150,6 +150,66 @@ fn main() {
         );
     }
 
+    // Shared-prefix burst: same 16-block budget, a seed request caches
+    // the common prefix, then 8 identical-prompt requests arrive. With
+    // the prefix cache each needs 1 block beyond the shared 2, so the
+    // whole burst admits at once (slot-capped) instead of blocks-capped —
+    // admission concurrency and TTFT both move.
+    let prefix_run = |prefix_on: bool| -> (usize, f64) {
+        let mut e = Engine::new(
+            SimBackend::new(SimConfig {
+                capacity: 64,
+                prefill_seq: 64,
+                ..SimConfig::gqa(8)
+            })
+            .unwrap(),
+            EngineConfig {
+                cache: CacheKind::Paged { block_size: 8, n_blocks: Some(16) },
+                prefix_cache: prefix_on,
+                ..Default::default()
+            },
+        );
+        let prompt: Vec<i32> = (0..17).map(|i| (i * 13 + 7) % 251).collect();
+        e.submit(Request::new(100, prompt.clone(), 4));
+        e.run_to_completion().unwrap();
+        e.take_completions();
+        for i in 0..8 {
+            e.submit(Request::new(i, prompt.clone(), 4));
+        }
+        e.run_to_completion().unwrap();
+        let wave = e.admission_log()[1].1.len();
+        let comps = e.take_completions();
+        let ttft = comps.iter().map(|c| c.ttft_s).sum::<f64>() / comps.len() as f64;
+        (wave, ttft)
+    };
+    let mut waves = (0usize, 0usize);
+    for (label, on) in [("off", false), ("on", true)] {
+        let mean = b.run(&format!("shared_prefix_burst_prefix_{label}_wall"), || {
+            prefix_run(on);
+        });
+        let (wave, ttft) = prefix_run(on);
+        b.report(
+            &format!("shared_prefix_burst_prefix_{label}_first_wave"),
+            wave as f64,
+            "seqs admitted in the burst wave (equal 16-block budget)",
+        );
+        b.report(
+            &format!("shared_prefix_burst_prefix_{label}_mean_ttft"),
+            ttft,
+            &format!("s (wall {mean:.2e}s)"),
+        );
+        if on {
+            waves.1 = wave;
+        } else {
+            waves.0 = wave;
+        }
+    }
+    b.report(
+        "shared_prefix_prefix_over_off_concurrency",
+        waves.1 as f64 / waves.0.max(1) as f64,
+        "x burst-wave admissions at equal blocks",
+    );
+
     // Raw allocator hot path: alloc/release cycles through the free list.
     b.run("block_alloc_release_1k_cycles", || {
         let mut a = BlockAllocator::new(32);

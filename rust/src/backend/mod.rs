@@ -90,10 +90,19 @@ impl BackendSpec {
     /// `capacity`) — but never fewer blocks than one full-capacity
     /// sequence, so admission can always make progress on a drained
     /// engine. `n_blocks` overrides the default; it must still fit one
-    /// full sequence.
-    pub fn new_cache_store(&self, kind: CacheKind) -> Result<CacheStore> {
+    /// full sequence. `prefix_cache` turns on the cross-sequence prefix
+    /// index (paged only: the fixed pool has no blocks to share).
+    pub fn new_cache_store(&self, kind: CacheKind, prefix_cache: bool) -> Result<CacheStore> {
         match kind {
-            CacheKind::Fixed => Ok(CacheStore::Fixed(self.new_cache())),
+            CacheKind::Fixed => {
+                if prefix_cache {
+                    bail!(
+                        "prefix cache requires the paged cache store \
+                         (--cache paged)"
+                    );
+                }
+                Ok(CacheStore::Fixed(self.new_cache()))
+            }
             CacheKind::Paged { block_size, n_blocks } => {
                 if block_size == 0 {
                     bail!("paged cache block size must be >= 1");
@@ -107,13 +116,17 @@ impl BackendSpec {
                          full-capacity sequence ({per_seq} blocks)"
                     );
                 }
-                Ok(CacheStore::Paged(PagedKvCache::new(
+                let mut p = PagedKvCache::new(
                     self.layout,
                     self.n_layers,
                     self.batch,
                     block_size,
                     n,
-                )?))
+                )?;
+                if prefix_cache {
+                    p.enable_prefix_cache();
+                }
+                Ok(CacheStore::Paged(p))
             }
         }
     }
@@ -151,9 +164,11 @@ impl CacheStore {
     }
 
     /// Splice prefill output row `src` into `slot`. The paged pool
-    /// copies exactly `len` positions (nothing else is materialised);
-    /// the fixed pool keeps its historical copy-to-capacity behaviour
-    /// (the padded tail is position-masked anyway).
+    /// copies exactly `len` positions (nothing else is materialised),
+    /// skipping any shared-prefix positions whose mapped blocks already
+    /// hold those rows; the fixed pool keeps its historical
+    /// copy-to-capacity behaviour (the padded tail is position-masked
+    /// anyway).
     pub fn splice_from(
         &mut self,
         prefill_bufs: &[Tensor],
@@ -168,17 +183,43 @@ impl CacheStore {
     }
 
     /// Bind `slot` to a new sequence: reserve its bounded token demand
-    /// and materialise the prompt. No-op for the fixed pool (the slot
-    /// row is the reservation).
+    /// and materialise the prompt. With the prefix cache on, the paged
+    /// pool first maps the longest indexed prefix of `prompt` into the
+    /// slot's table and reserves only the unshared remainder; the return
+    /// value is the number of prompt positions already covered by shared
+    /// blocks (the caller starts its prefill watermark there). No-op
+    /// returning 0 for the fixed pool (the slot row is the reservation).
     pub fn admit_slot(
         &mut self,
         slot: usize,
         reserve_tokens: usize,
         initial_len: usize,
-    ) -> Result<()> {
+        prompt: &[i32],
+    ) -> Result<usize> {
         match self {
-            CacheStore::Fixed(_) => Ok(()),
-            CacheStore::Paged(p) => p.admit_slot(slot, reserve_tokens, initial_len),
+            CacheStore::Fixed(_) => Ok(0),
+            CacheStore::Paged(p) => {
+                p.admit_slot_shared(slot, reserve_tokens, initial_len, prompt)
+            }
+        }
+    }
+
+    /// Index `slot`'s fully-filled prompt blocks for future sharing (call
+    /// once the whole prompt is in cache). No-op for the fixed pool or
+    /// when the prefix cache is off; returns newly cached blocks.
+    pub fn register_prefix(&mut self, slot: usize, prompt: &[i32]) -> Result<usize> {
+        match self {
+            CacheStore::Fixed(_) => Ok(0),
+            CacheStore::Paged(p) => p.register_prefix(slot, prompt),
+        }
+    }
+
+    /// Freshen the prefix-cache LRU stamp of `prompt`'s cached chain so
+    /// same-wave evictions prefer other victims. No-op for the fixed
+    /// pool or with sharing off.
+    pub fn touch_prefix(&mut self, prompt: &[i32]) {
+        if let CacheStore::Paged(p) = self {
+            p.touch_prefix(prompt);
         }
     }
 

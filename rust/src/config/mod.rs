@@ -195,6 +195,11 @@ pub struct EngineConfig {
     pub policy: PolicyKind,
     /// KV-cache store (fixed slot rows vs paged blocks).
     pub cache: CacheKind,
+    /// Cross-sequence prefix sharing over the paged store
+    /// (`--prefix-cache on`): same-prefix prompts share cached blocks
+    /// copy-on-write instead of each holding a private copy. Requires
+    /// `CacheKind::Paged`; rejected at engine construction otherwise.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -206,6 +211,7 @@ impl Default for EngineConfig {
             seed: 0,
             policy: PolicyKind::AdmitFirst,
             cache: CacheKind::Fixed,
+            prefix_cache: false,
         }
     }
 }

@@ -29,10 +29,11 @@ use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::sampling;
 use crate::coordinator::scheduler::{self, PrefillWork, SchedView, SchedulePolicy, StepPlan};
 use crate::coordinator::seqmgr::{bounded_cache_tokens, SeqPhase, SequenceManager};
+use crate::kvcache::PrefixStats;
 use crate::metrics::Metrics;
 use crate::util::{Rng, Timer};
 use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::time::Instant;
 
 // Re-exported here because the engine's `Arch` predates the backend
@@ -81,7 +82,7 @@ impl Engine {
 
     pub fn from_boxed(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Result<Engine> {
         let spec = backend.spec().clone();
-        let cache = spec.new_cache_store(cfg.cache)?;
+        let cache = spec.new_cache_store(cfg.cache, cfg.prefix_cache)?;
         Ok(Engine {
             backend,
             cache,
@@ -159,9 +160,13 @@ impl Engine {
 
     /// How many of the next queued requests the cache store can take
     /// right now, looking at most `limit` deep: all of them for the
-    /// fixed pool, the prefix whose cumulative bounded block demand fits
-    /// the unreserved pool for the paged one. FIFO: a head request that
-    /// does not fit blocks later ones rather than being reordered
+    /// fixed pool; for the paged one, the queue prefix whose cumulative
+    /// bounded block demand — *net of shared-prefix coverage* — fits the
+    /// unreserved pool plus what LRU eviction of cached prefix blocks
+    /// could reclaim. Blocks any scanned request would share are never
+    /// counted as eviction headroom: evicting them to admit an earlier
+    /// request would invalidate a later one's plan. FIFO: a head request
+    /// that does not fit blocks later ones rather than being reordered
     /// around. Single source of truth for both the scheduler's view and
     /// the actual admission pop in [`Engine::pop_admissions`].
     fn plan_admissions(&self, limit: usize) -> usize {
@@ -170,19 +175,42 @@ impl Engine {
         match &self.cache {
             CacheStore::Fixed(_) => limit,
             CacheStore::Paged(p) => {
-                let mut blocks_left = p.n_unreserved();
+                let demands: Vec<(usize, Vec<usize>)> = self
+                    .queue
+                    .iter()
+                    .take(limit)
+                    .map(|(req, _)| {
+                        let plen = req.prompt.len().min(spec.max_prompt());
+                        let total = p.blocks_for(bounded_cache_tokens(
+                            plen,
+                            req.max_new_tokens,
+                            spec.capacity,
+                        ));
+                        (total, p.peek_shared(&req.prompt[..plen]))
+                    })
+                    .collect();
+                let shared_union: HashSet<usize> = demands
+                    .iter()
+                    .flat_map(|(_, s)| s.iter().copied())
+                    .collect();
+                let mut evictable = p
+                    .evictable_blocks()
+                    .into_iter()
+                    .filter(|b| !shared_union.contains(b))
+                    .count();
+                let mut unreserved = p.n_unreserved();
                 let mut n = 0;
-                for (req, _) in self.queue.iter().take(limit) {
-                    let plen = req.prompt.len().min(spec.max_prompt());
-                    let need = p.blocks_for(bounded_cache_tokens(
-                        plen,
-                        req.max_new_tokens,
-                        spec.capacity,
-                    ));
-                    if need > blocks_left {
+                for (total, shared) in &demands {
+                    let need = total.saturating_sub(shared.len());
+                    if need > unreserved + evictable {
                         break;
                     }
-                    blocks_left -= need;
+                    if need > unreserved {
+                        evictable -= need - unreserved;
+                        unreserved = 0;
+                    } else {
+                        unreserved -= need;
+                    }
                     n += 1;
                 }
                 n
@@ -310,6 +338,14 @@ impl Engine {
             return Ok(());
         }
         let active_before = self.seqs.n_active();
+        // Freshen the LRU stamp of every admitted request's cached
+        // prefix chain before any of them admits: evictions triggered by
+        // earlier admissions in this wave then prefer victims no planned
+        // admission depends on (matching the planner's headroom math).
+        for (req, _) in &admitted {
+            let plen = req.prompt.len().min(spec.max_prompt());
+            self.cache.touch_prefix(&req.prompt[..plen]);
+        }
 
         // The prefill entry point has its own (fixed) sequence length;
         // the decode cache capacity may be shorter for context-length
@@ -337,7 +373,9 @@ impl Engine {
         // Output rows dim: `n` from the sim backend, the full prefill
         // batch from the XLA one; the position stride is `t` either way.
         let mut ids = Vec::with_capacity(n);
-        for (row, (req, enq)) in admitted.into_iter().enumerate() {
+        let mut requeue: Vec<(Request, Instant)> = Vec::new();
+        let mut it = admitted.into_iter().enumerate();
+        for (row, (req, enq)) in it.by_ref() {
             let plen = req.prompt.len().min(max_prompt);
             self.metrics.inc("prefill_tokens", plen as u64);
             // logits [rows, T, V]: the next token follows position
@@ -350,15 +388,50 @@ impl Engine {
                 temp,
                 &mut self.rng,
             );
-            ids.push(req.id);
-            let slot = self.seqs.admit(
+            let id = req.id;
+            match self.seqs.admit(
                 req, plen, first_tok, enq, prefill_started, now, &mut self.cache,
-            )?;
-            self.cache.splice_from(&out.caches, row, slot, plen)?;
-            // A prompt that already fills the cache finishes immediately.
-            self.maybe_complete(slot)?;
+            ) {
+                Ok(slot) => {
+                    ids.push(id);
+                    self.cache.splice_from(&out.caches, row, slot, plen)?;
+                    // Cache the freshly-filled prompt blocks for future
+                    // same-prefix admissions (paged + prefix cache only).
+                    // The prompt now lives in the slot's state — no copy.
+                    let prompt = &self
+                        .seqs
+                        .seq(slot)
+                        .context("admitted slot has state")?
+                        .req
+                        .prompt;
+                    self.cache.register_prefix(slot, &prompt[..plen])?;
+                    // A prompt that already fills the cache finishes
+                    // immediately.
+                    self.maybe_complete(slot)?;
+                }
+                Err((req, e)) => {
+                    // Planned admission no longer fits (a rare plan/admit
+                    // race under prefix eviction): requeue this request
+                    // and the rest of the batch in order and keep
+                    // serving. Only an engine with nothing else in
+                    // flight cannot make progress — fail loudly there
+                    // instead of spinning on the same head request.
+                    if self.seqs.n_active() == 0 {
+                        return Err(e).context("admission on an idle engine");
+                    }
+                    self.metrics.inc("admit_requeued", 1);
+                    requeue.push((req, enq));
+                    requeue.extend(it.by_ref().map(|(_, r)| r));
+                    break;
+                }
+            }
         }
-        self.log_admission(active_before, ids);
+        for r in requeue.into_iter().rev() {
+            self.queue.push_front(r);
+        }
+        if !ids.is_empty() {
+            self.log_admission(active_before, ids);
+        }
         Ok(())
     }
 
@@ -372,18 +445,57 @@ impl Engine {
             return Ok(());
         }
         let active_before = self.seqs.n_active();
+        // Same wave pre-touch as the monolithic path: planned shared
+        // chains become LRU-freshest, so same-wave evictions prefer
+        // other victims.
+        for (req, _) in &admitted {
+            let plen = req.prompt.len().min(max_prompt);
+            self.cache.touch_prefix(&req.prompt[..plen]);
+        }
         let now = Instant::now();
         self.metrics.observe("admit_n", admitted.len() as f64);
         let mut ids = Vec::with_capacity(admitted.len());
-        for (req, enq) in admitted {
+        let mut requeue: Vec<(Request, Instant)> = Vec::new();
+        let mut it = admitted.into_iter();
+        for (req, enq) in it.by_ref() {
             let plen = req.prompt.len().min(max_prompt);
-            ids.push(req.id);
-            let slot = self
-                .seqs
-                .admit_prefilling(req, plen, enq, now, &mut self.cache)?;
-            self.prefillq.push_back(slot);
+            let id = req.id;
+            match self.seqs.admit_prefilling(req, plen, enq, now, &mut self.cache) {
+                Ok(slot) => {
+                    ids.push(id);
+                    // With prefix sharing, the watermark starts at the
+                    // shared coverage: those chunks are skipped outright
+                    // (no recompute, no rewrite) — prefix-cache-aware
+                    // chunking.
+                    if let Some(SeqPhase::Prefilling { done }) =
+                        self.seqs.seq(slot).map(|s| s.phase)
+                    {
+                        if done > 0 {
+                            self.metrics.inc("prefix_tokens_skipped", done as u64);
+                        }
+                    }
+                    self.prefillq.push_back(slot);
+                }
+                Err((req, e)) => {
+                    // Same plan/admit race handling as the monolithic
+                    // path: requeue in order, fail only with no progress
+                    // possible.
+                    if self.seqs.n_active() == 0 {
+                        return Err(e).context("admission on an idle engine");
+                    }
+                    self.metrics.inc("admit_requeued", 1);
+                    requeue.push((req, enq));
+                    requeue.extend(it.by_ref());
+                    break;
+                }
+            }
         }
-        self.log_admission(active_before, ids);
+        for r in requeue.into_iter().rev() {
+            self.queue.push_front(r);
+        }
+        if !ids.is_empty() {
+            self.log_admission(active_before, ids);
+        }
         Ok(())
     }
 
@@ -436,6 +548,12 @@ impl Engine {
             if end >= target {
                 // Prompt fully in cache: first token, decode queue.
                 self.prefillq.pop_front();
+                if plen > 0 {
+                    // Cache the filled prompt blocks for future
+                    // same-prefix admissions (paged + prefix cache only;
+                    // the pad step of an empty prompt caches nothing).
+                    self.cache.register_prefix(slot, &prefix)?;
+                }
                 let temp = {
                     let seq = self.seqs.seq(slot).context("prefilled slot has state")?;
                     self.effective_temp(&seq.req)
@@ -541,6 +659,8 @@ impl Engine {
                 blocks_total: 0,
                 blocks_in_use: 0,
                 blocks_reserved: 0,
+                bytes_deduped: 0,
+                prefix: None,
             },
             CacheStore::Paged(p) => CacheStats {
                 kind: "paged",
@@ -551,6 +671,8 @@ impl Engine {
                 blocks_total: p.n_blocks(),
                 blocks_in_use: p.blocks_in_use(),
                 blocks_reserved: p.blocks_reserved(),
+                bytes_deduped: p.bytes_deduped(),
+                prefix: p.prefix_stats(),
             },
         }
     }
@@ -572,6 +694,13 @@ pub struct CacheStats {
     pub blocks_total: usize,
     pub blocks_in_use: usize,
     pub blocks_reserved: usize,
+    /// Bytes saved right now by cross-sequence block sharing: every
+    /// table reference beyond a block's first would otherwise be a
+    /// private copy. Zero for the fixed pool or with sharing off.
+    pub bytes_deduped: usize,
+    /// Prefix-cache counters (hit rate, blocks shared/cached, evictions);
+    /// `None` for the fixed pool or when `--prefix-cache off`.
+    pub prefix: Option<PrefixStats>,
 }
 
 #[cfg(test)]

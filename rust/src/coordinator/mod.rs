@@ -29,4 +29,4 @@ pub use crate::backend::{Arch, CacheStore, ModelBundle};
 pub use engine::{CacheStats, Engine};
 pub use request::{Completion, Request};
 pub use scheduler::{PrefillWork, SchedView, SchedulePolicy, StepPlan};
-pub use seqmgr::{SeqPhase, SequenceManager};
+pub use seqmgr::{AdmitError, SeqPhase, SequenceManager};

@@ -26,7 +26,10 @@
 //!     binding runs no model code), advance the prefilling queue by at
 //!     most `chunk_tokens` prompt tokens, and decode in the same
 //!     iteration. TPOT stall is bounded by one chunk instead of one
-//!     prompt.
+//!     prompt. With the prefix cache on, chunking is prefix-aware for
+//!     free: a sequence admitted over shared blocks starts its prefill
+//!     watermark at the shared coverage, so chunks fully covered by the
+//!     cached prefix are never scheduled at all.
 //!
 //! The first three are degenerate plans (admit+monolithic-prefill XOR
 //! decode), so their observable admission orderings are unchanged from

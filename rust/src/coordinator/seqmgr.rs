@@ -15,8 +15,13 @@
 use crate::backend::CacheStore;
 use crate::coordinator::request::{Completion, Request};
 use crate::kvcache::SlotAllocator;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::time::Instant;
+
+/// A failed admission hands the request back to the caller (for
+/// requeueing) alongside the cause; slot and cache state are already
+/// rolled back.
+pub type AdmitError = (Request, anyhow::Error);
 
 /// Total cache positions a sequence with this geometry can ever write:
 /// the prompt plus one position per decode step. The final sampled token
@@ -126,7 +131,10 @@ impl SequenceManager {
     /// the first `materialize` positions. The monolithic path needs the
     /// whole prompt materialised for its splice; the chunked path passes
     /// 0 and grows block-by-block as chunks land. The sequence starts in
-    /// `Prefilling` at watermark 0.
+    /// `Prefilling` with its watermark at the store's shared-prefix
+    /// coverage: positions below it were mapped from the prefix cache at
+    /// admission (0 without sharing), so chunked prefill skips straight
+    /// past them — the ROADMAP's prefix-cache-aware chunking.
     fn bind(
         &mut self,
         req: Request,
@@ -135,16 +143,23 @@ impl SequenceManager {
         enqueued: Instant,
         prefill_started: Instant,
         cache: &mut CacheStore,
-    ) -> Result<usize> {
-        let slot = self.slots.alloc(req.id).context("slot alloc")?;
+    ) -> std::result::Result<usize, AdmitError> {
+        let slot = match self.slots.alloc(req.id) {
+            Some(slot) => slot,
+            None => return Err((req, anyhow!("slot alloc: no free slot"))),
+        };
         let reserve = bounded_cache_tokens(prompt_len, req.max_new_tokens, self.capacity);
-        if let Err(e) = cache.admit_slot(slot, reserve, materialize) {
-            // Roll the slot back so allocator and seq state stay in step.
-            let _ = self.slots.release(slot);
-            return Err(e);
-        }
+        let prompt = &req.prompt[..prompt_len.min(req.prompt.len())];
+        let shared = match cache.admit_slot(slot, reserve, materialize, prompt) {
+            Ok(shared) => shared,
+            Err(e) => {
+                // Roll the slot back so allocator and seq state stay in step.
+                let _ = self.slots.release(slot);
+                return Err((req, e));
+            }
+        };
         self.seqs[slot] = Some(SeqState {
-            phase: SeqPhase::Prefilling { done: 0 },
+            phase: SeqPhase::Prefilling { done: shared.min(prompt_len) },
             prompt_len,
             next_pos: prompt_len,
             last_token: 0,
@@ -160,7 +175,9 @@ impl SequenceManager {
 
     /// Bind a freshly *and fully* prefilled request to a free slot — the
     /// monolithic path: the prompt is already in cache and the first
-    /// token sampled, so the sequence enters `Decoding` directly.
+    /// token sampled, so the sequence enters `Decoding` directly. On an
+    /// admission failure the request comes back to the caller
+    /// ([`AdmitError`]) for requeueing.
     #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &mut self,
@@ -171,18 +188,21 @@ impl SequenceManager {
         prefill_started: Instant,
         now: Instant,
         cache: &mut CacheStore,
-    ) -> Result<usize> {
+    ) -> std::result::Result<usize, AdmitError> {
         let slot =
             self.bind(req, prompt_len, prompt_len, enqueued, prefill_started, cache)?;
-        self.finish_prefill(slot, first_token, now)?;
+        self.finish_prefill(slot, first_token, now)
+            .expect("a freshly bound slot accepts its first token");
         Ok(slot)
     }
 
     /// Chunked admission: bind a request to a slot with its cache
-    /// reservation and enter `Prefilling` at watermark 0 — no model call
-    /// has happened yet, and (paged store) no prompt blocks are
+    /// reservation and enter `Prefilling` — no model call has happened
+    /// yet, and (paged store) no *unshared* prompt blocks are
     /// materialised yet either: they commit at chunk granularity as the
-    /// prompt enters the cache.
+    /// prompt enters the cache. With prefix sharing the watermark starts
+    /// at the shared coverage, so chunking skips the cached prefix
+    /// entirely (no recompute, no rewrite).
     pub fn admit_prefilling(
         &mut self,
         req: Request,
@@ -190,7 +210,7 @@ impl SequenceManager {
         enqueued: Instant,
         prefill_started: Instant,
         cache: &mut CacheStore,
-    ) -> Result<usize> {
+    ) -> std::result::Result<usize, AdmitError> {
         self.bind(req, prompt_len, 0, enqueued, prefill_started, cache)
     }
 
@@ -570,6 +590,42 @@ mod tests {
         assert_eq!(p.blocks_reserved(), 0);
         c.check_invariants().unwrap();
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_admission_starts_the_watermark_at_the_prefix() {
+        let mut m = SequenceManager::new(2, 32);
+        let mut c = CacheStore::Paged({
+            let mut p =
+                PagedKvCache::new(CacheLayout::Mla { r: 4, dr: 4 }, 1, 2, 4, 16).unwrap();
+            p.enable_prefix_cache();
+            p
+        });
+        let t0 = Instant::now();
+        // Seed: one sequence fills and registers the 12-token prompt.
+        let prompt: Vec<i32> = (0..12).collect();
+        let seed = Request::new(1, prompt.clone(), 2);
+        let slot = m.admit(seed, 12, 7, t0, t0, t0, &mut c).unwrap();
+        c.register_prefix(slot, &prompt).unwrap();
+        m.push_token(slot, 8).unwrap();
+        m.finish(slot, &mut c).unwrap();
+        // Same-prefix chunked admission: sharing caps at floor(11/4) = 2
+        // blocks, so the watermark starts at 8 of 12 prompt positions.
+        let slot = m
+            .admit_prefilling(Request::new(2, prompt, 2), 12, t0, t0, &mut c)
+            .unwrap();
+        assert_eq!(
+            m.seq(slot).unwrap().phase,
+            SeqPhase::Prefilling { done: 8 },
+            "chunked prefill must skip the shared prefix"
+        );
+        m.check_invariants().unwrap();
+        c.check_invariants().unwrap();
+        // The remainder prefills as usual.
+        m.record_prefill(slot, 12).unwrap();
+        m.finish_prefill(slot, 9, Instant::now()).unwrap();
+        m.finish(slot, &mut c).unwrap();
+        c.check_invariants().unwrap();
     }
 
     #[test]

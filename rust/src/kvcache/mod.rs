@@ -10,14 +10,20 @@
 //!
 //! [`paged`] replaces the worst-case per-slot row reservation with
 //! ref-counted fixed-size blocks over one shared pool, so a short prompt
-//! only holds the blocks it actually writes.
+//! only holds the blocks it actually writes. [`prefix`] adds the
+//! cross-sequence layer on top: a block-granular prefix index so
+//! same-prefix sequences share cached blocks (copy-on-write protected),
+//! with prompt blocks outliving their sequence until memory pressure
+//! evicts them.
 
 pub mod paged;
+pub mod prefix;
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
 pub use paged::{BlockAllocator, PagedKvCache};
+pub use prefix::{PrefixIndex, PrefixStats};
 
 /// Cache layout per architecture.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

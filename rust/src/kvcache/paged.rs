@@ -20,8 +20,18 @@
 //! clamped `max_new`, not the cache capacity) so lazy per-step `grow`
 //! can never fail mid-decode, and the scheduler can admit on blocks-free
 //! rather than slots-free.
+//!
+//! With the optional **prefix cache** enabled
+//! ([`PagedKvCache::enable_prefix_cache`]), a [`super::PrefixIndex`] maps
+//! token-prefix hashes at block granularity to filled block chains:
+//! admission maps the longest cached prefix into the new sequence's table
+//! via `retain` and reserves only the unshared remainder, indexed prompt
+//! blocks outlive their sequence (LRU-evicted under pressure), and any
+//! write to a block other holders still reference triggers copy-on-write
+//! in [`PagedKvCache::row_mut`] — a reader's bytes can never change
+//! underneath it.
 
-use super::CacheLayout;
+use super::{CacheLayout, PrefixIndex, PrefixStats};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -120,6 +130,25 @@ impl BlockAllocator {
 }
 
 /// The paged cache pool: per-sequence block tables over shared blocks.
+///
+/// The admit → grow → release lifecycle:
+///
+/// ```
+/// use transmla::kvcache::{CacheLayout, PagedKvCache};
+///
+/// // 2 slots over 8 four-token blocks of MLA-latent cache.
+/// let mut c = PagedKvCache::new(CacheLayout::Mla { r: 4, dr: 4 }, 1, 2, 4, 8).unwrap();
+/// // Admission reserves the sequence's bounded demand (10 tokens = 3
+/// // blocks) and materialises the 5-token prompt (2 blocks).
+/// c.admit_slot(0, 10, 5).unwrap();
+/// assert_eq!((c.blocks_in_use(), c.blocks_reserved()), (2, 1));
+/// // Decode growth draws on the reservation, so it cannot fail.
+/// c.grow(0, 9).unwrap();
+/// assert_eq!((c.blocks_in_use(), c.blocks_reserved()), (3, 0));
+/// // Completion returns every block (and any unused reservation).
+/// assert_eq!(c.release_slot(0).unwrap(), 3);
+/// assert_eq!(c.blocks_in_use(), 0);
+/// ```
 pub struct PagedKvCache {
     pub layout: CacheLayout,
     pub n_layers: usize,
@@ -134,6 +163,13 @@ pub struct PagedKvCache {
     tables: Vec<Vec<usize>>,
     /// Blocks reserved at admission but not yet in the table, per slot.
     reserved: Vec<usize>,
+    /// Prompt positions per slot backed by blocks mapped from the prefix
+    /// index at admission (always a multiple of `block_size`; the
+    /// sequence itself never writes below this watermark).
+    shared: Vec<usize>,
+    /// Cross-sequence prefix index; `None` when prefix caching is off.
+    /// The cache holds one `retain` per indexed block.
+    prefix: Option<PrefixIndex>,
 }
 
 impl PagedKvCache {
@@ -163,7 +199,30 @@ impl PagedKvCache {
             pool,
             tables: (0..n_slots).map(|_| Vec::new()).collect(),
             reserved: vec![0; n_slots],
+            shared: vec![0; n_slots],
+            prefix: None,
         })
+    }
+
+    /// Turn on cross-sequence prefix sharing (see the module docs).
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixIndex::new());
+        }
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Lifetime prefix-sharing counters, `None` when the index is off.
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(PrefixIndex::stats)
+    }
+
+    /// Prompt positions of `slot` backed by shared prefix blocks.
+    pub fn shared_tokens(&self, slot: usize) -> usize {
+        self.shared.get(slot).copied().unwrap_or(0)
     }
 
     pub fn n_slots(&self) -> usize {
@@ -181,6 +240,11 @@ impl PagedKvCache {
     /// Blocks promised to admitted sequences but not yet allocated.
     pub fn blocks_reserved(&self) -> usize {
         self.reserved.iter().sum()
+    }
+
+    /// Outstanding (not yet materialised) reservation of one slot.
+    pub fn reserved_of(&self, slot: usize) -> usize {
+        self.reserved.get(slot).copied().unwrap_or(0)
     }
 
     /// Blocks available for *new* admissions: free minus outstanding
@@ -214,28 +278,202 @@ impl PagedKvCache {
 
     /// Bind `slot` to a fresh sequence: reserve `reserve_tokens` worth of
     /// blocks (its bounded lifetime demand) and materialise the first
-    /// `initial_len` positions (the prompt, about to be spliced).
+    /// `initial_len` positions (the prompt, about to be spliced). No
+    /// prefix sharing — shorthand for [`PagedKvCache::admit_slot_shared`]
+    /// with an empty prompt.
     pub fn admit_slot(
         &mut self,
         slot: usize,
         reserve_tokens: usize,
         initial_len: usize,
     ) -> Result<()> {
+        self.admit_slot_shared(slot, reserve_tokens, initial_len, &[])
+            .map(|_| ())
+    }
+
+    /// Like [`PagedKvCache::admit_slot`], but first maps the longest
+    /// indexed prefix of `prompt` into the slot's table (retaining each
+    /// shared block) and reserves only the *unshared* remainder — a burst
+    /// of same-prefix sequences costs one copy of the prefix plus one
+    /// private tail each. Returns the number of shared token positions
+    /// (always a multiple of the block size).
+    ///
+    /// Sharing caps at `floor((prompt_len - 1) / block_size)` full
+    /// blocks, so at least one prompt position is always computed by the
+    /// backend (the sequence's first logits) and the sequence never
+    /// writes a shared block on the serving path — copy-on-write in
+    /// [`PagedKvCache::row_mut`] stays a defensive backstop. When the
+    /// unreserved pool is short, cached blocks only the index references
+    /// are LRU-evicted to make room.
+    pub fn admit_slot_shared(
+        &mut self,
+        slot: usize,
+        reserve_tokens: usize,
+        initial_len: usize,
+        prompt: &[i32],
+    ) -> Result<usize> {
         if slot >= self.tables.len() {
             bail!("slot out of range: {slot} >= {}", self.tables.len());
         }
         if !self.tables[slot].is_empty() || self.reserved[slot] != 0 {
             bail!("slot {slot} already admitted");
         }
-        let need = self.blocks_for(reserve_tokens.max(initial_len));
+        let total = self.blocks_for(reserve_tokens.max(initial_len));
+        // Cap sharing one block below the prompt (the backend must
+        // compute at least one position for the first logits) AND one
+        // below the bounded demand (so `need >= 1` even for degenerate
+        // reserve/prompt combinations a direct caller might pass).
+        let max_share = (prompt.len().saturating_sub(1) / self.block_size)
+            .min(total.saturating_sub(1));
+        let matched = match self.prefix.as_mut() {
+            Some(ix) if max_share > 0 => ix.lookup(prompt, self.block_size, max_share),
+            _ => Vec::new(),
+        };
+        // Retain the shared chain *before* any eviction below, so the
+        // blocks this admission depends on can never be its victims.
+        for &b in &matched {
+            self.alloc.retain(b)?;
+        }
+        let need = total - matched.len();
         if need > self.n_unreserved() {
+            let short = need - self.n_unreserved();
+            self.evict_for(short)?;
+        }
+        if need > self.n_unreserved() {
+            for &b in &matched {
+                self.alloc.release(b)?;
+            }
             bail!(
-                "out of cache blocks: slot {slot} needs {need}, {} unreserved",
+                "out of cache blocks: slot {slot} needs {need} beyond its {} \
+                 shared, {} unreserved",
+                matched.len(),
                 self.n_unreserved()
             );
         }
+        let shared_tokens = matched.len() * self.block_size;
+        if let Some(ix) = self.prefix.as_mut() {
+            ix.record_shared(matched.len(), shared_tokens);
+        }
+        self.tables[slot] = matched;
+        self.shared[slot] = shared_tokens;
         self.reserved[slot] = need;
-        self.grow(slot, initial_len)
+        self.grow(slot, initial_len)?;
+        Ok(shared_tokens)
+    }
+
+    /// The blocks a sharing admission of `prompt` would map right now —
+    /// the scheduler's non-mutating planning view (no stats, no LRU).
+    pub fn peek_shared(&self, prompt: &[i32]) -> Vec<usize> {
+        let max_share = prompt.len().saturating_sub(1) / self.block_size;
+        match &self.prefix {
+            Some(ix) if max_share > 0 => ix.peek(prompt, self.block_size, max_share),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Freshen the LRU stamp of `prompt`'s cached prefix chain (no
+    /// stats, no mapping). Called for every request of an admission wave
+    /// before any of them admits, so same-wave evictions prefer blocks
+    /// no planned admission is counting on.
+    pub fn touch_prefix(&mut self, prompt: &[i32]) {
+        let max_share = prompt.len().saturating_sub(1) / self.block_size;
+        if max_share > 0 {
+            if let Some(ix) = self.prefix.as_mut() {
+                ix.touch(prompt, self.block_size, max_share);
+            }
+        }
+    }
+
+    /// Cached blocks reclaimable right now: indexed, and referenced by
+    /// nothing but the index (refcount 1).
+    pub fn evictable_blocks(&self) -> Vec<usize> {
+        match &self.prefix {
+            Some(ix) => ix
+                .blocks()
+                .into_iter()
+                .filter(|&b| self.alloc.refcount_of(b) == 1)
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Evict up to `want` LRU cached blocks that only the index still
+    /// references, returning them to the free list. Returns how many
+    /// were reclaimed (possibly fewer than asked).
+    fn evict_for(&mut self, want: usize) -> Result<usize> {
+        let Some(ix) = self.prefix.as_ref() else {
+            return Ok(0);
+        };
+        let mut cands: Vec<(u64, usize)> = ix
+            .candidates()
+            .into_iter()
+            .filter(|&(b, _)| self.alloc.refcount_of(b) == 1)
+            .map(|(b, t)| (t, b))
+            .collect();
+        cands.sort_unstable();
+        let mut freed = 0;
+        for (_, b) in cands {
+            if freed >= want {
+                break;
+            }
+            self.prefix
+                .as_mut()
+                .expect("prefix index present")
+                .remove_block(b);
+            let went_free = self.alloc.release(b)?;
+            debug_assert!(went_free, "evicted block {b} had hidden references");
+            freed += 1;
+        }
+        Ok(freed)
+    }
+
+    /// Index `slot`'s fully-filled prompt blocks so later same-prefix
+    /// admissions can share them. Call once the prompt is entirely in
+    /// cache (post-splice, or when the final chunk lands). Only blocks
+    /// completely covered by prompt tokens are indexed — decode writes
+    /// always land beyond them. Returns how many blocks were newly
+    /// cached; a no-op (0) when the index is off.
+    pub fn register_prefix(&mut self, slot: usize, prompt: &[i32]) -> Result<usize> {
+        if self.prefix.is_none() {
+            return Ok(0);
+        }
+        if slot >= self.tables.len() {
+            bail!("slot out of range: {slot} >= {}", self.tables.len());
+        }
+        let full = prompt.len() / self.block_size;
+        if full == 0 {
+            return Ok(0);
+        }
+        if self.tables[slot].len() < full {
+            bail!(
+                "slot {slot} table ({} blocks) does not cover its {full} full \
+                 prompt blocks",
+                self.tables[slot].len()
+            );
+        }
+        let newly = self
+            .prefix
+            .as_mut()
+            .expect("prefix index present")
+            .insert_chain(prompt, self.block_size, &self.tables[slot][..full]);
+        for &b in &newly {
+            // The index's own reference: the block now outlives the slot.
+            self.alloc.retain(b)?;
+        }
+        Ok(newly.len())
+    }
+
+    /// Bytes that sharing is saving right now: every table reference to a
+    /// block beyond the first would be a private copy without sharing.
+    pub fn bytes_deduped(&self) -> usize {
+        let mut refs = vec![0usize; self.alloc.n_blocks()];
+        for t in &self.tables {
+            for &b in t {
+                refs[b] += 1;
+            }
+        }
+        let extra: usize = refs.iter().map(|&r| r.saturating_sub(1)).sum();
+        extra * self.block_size * self.bytes_per_token()
     }
 
     /// Ensure the slot's table covers `len` token positions, drawing new
@@ -272,11 +510,14 @@ impl PagedKvCache {
         let blocks = std::mem::take(&mut self.tables[slot]);
         let mut freed = 0;
         for b in blocks {
+            // Shared or index-cached blocks survive (refcount stays > 0);
+            // only the last holder actually frees.
             if self.alloc.release(b)? {
                 freed += 1;
             }
         }
         self.reserved[slot] = 0;
+        self.shared[slot] = 0;
         Ok(freed)
     }
 
@@ -316,6 +557,10 @@ impl PagedKvCache {
         Ok(&self.pool[buf].data[o..o + inner])
     }
 
+    /// Mutable row access, with **copy-on-write**: when the block holding
+    /// `pos` is also referenced by another table or the prefix index, the
+    /// slot first gets a private copy (all layers, both buffers), so the
+    /// write can never corrupt another reader's bytes.
     pub fn row_mut(
         &mut self,
         buf: usize,
@@ -323,15 +568,58 @@ impl PagedKvCache {
         layer: usize,
         pos: usize,
     ) -> Result<&mut [f32]> {
+        self.ensure_private(slot, pos)?;
         let inner = self.pool[buf].shape[3];
         let o = self.offset(buf, slot, layer, pos)?;
         Ok(&mut self.pool[buf].data[o..o + inner])
     }
 
+    /// Copy-on-write: if `slot`'s block holding `pos` has other holders
+    /// (refcount > 1), copy its full contents into a fresh block and
+    /// repoint the table entry. Draws on the unreserved pool (evicting
+    /// cached blocks if needed) so outstanding reservations stay intact.
+    fn ensure_private(&mut self, slot: usize, pos: usize) -> Result<()> {
+        let idx = pos / self.block_size;
+        let b = match self.tables.get(slot).and_then(|t| t.get(idx)) {
+            Some(&b) => b,
+            // Out-of-range slots/positions fall through to `offset`'s
+            // error on the actual access.
+            None => return Ok(()),
+        };
+        if self.alloc.refcount_of(b) <= 1 {
+            return Ok(());
+        }
+        if self.n_unreserved() == 0 {
+            self.evict_for(1)?;
+        }
+        if self.n_unreserved() == 0 {
+            bail!(
+                "block pool exhausted during copy-on-write of block {b} \
+                 (reservations hold the remaining free blocks)"
+            );
+        }
+        let nb = match self.alloc.alloc() {
+            Some(nb) => nb,
+            None => bail!("block pool exhausted during copy-on-write of block {b}"),
+        };
+        for buf in &mut self.pool {
+            let stride = self.n_layers * self.block_size * buf.shape[3];
+            buf.data.copy_within(b * stride..(b + 1) * stride, nb * stride);
+        }
+        // Drop this slot's reference to the shared block; it cannot free
+        // (other holders remain), and any index entry stays with it.
+        self.alloc.release(b)?;
+        self.tables[slot][idx] = nb;
+        Ok(())
+    }
+
     /// Splice prefill output (tensors `[L, Bp, T, inner...]`) row `src`
     /// into `slot`, copying only the first `len` positions — unlike the
     /// fixed pool there is no padded tail to fill. The slot must already
-    /// cover `len` positions (admit_slot/grow first).
+    /// cover `len` positions (admit_slot/grow first). Positions below the
+    /// slot's shared-prefix watermark are skipped: the mapped blocks
+    /// already hold exactly those rows (same tokens, same content), which
+    /// is the whole point of sharing them.
     pub fn splice_from(
         &mut self,
         prefill_bufs: &[Tensor],
@@ -344,6 +632,15 @@ impl PagedKvCache {
         }
         if len > 0 && !self.covers(slot, len - 1) {
             bail!("slot {slot} block table does not cover {len} positions");
+        }
+        let start = self.shared.get(slot).copied().unwrap_or(0).min(len);
+        // Defensive CoW pre-pass over every block this splice writes —
+        // the serving path never splices into shared blocks (the skip
+        // above), but a direct caller must not corrupt other readers.
+        let mut p = start;
+        while p < len {
+            self.ensure_private(slot, p)?;
+            p = (p / self.block_size + 1) * self.block_size;
         }
         for (i, theirs) in prefill_bufs.iter().enumerate() {
             if theirs.shape.len() < 3 || theirs.shape[0] != self.n_layers {
@@ -369,7 +666,7 @@ impl PagedKvCache {
                 bail!("splice wants {len} positions, prefill has {t}");
             }
             for l in 0..self.n_layers {
-                for pos in 0..len {
+                for pos in start..len {
                     let src_off = ((l * bp + src) * t + pos) * inner;
                     let dst_off = self.offset(i, slot, l, pos)?;
                     let src_row = &theirs.data[src_off..src_off + inner];
@@ -382,8 +679,9 @@ impl PagedKvCache {
     }
 
     /// Allocator consistency plus table/refcount agreement: every block
-    /// reference in some table is accounted for by exactly its refcount,
-    /// and outstanding reservations never exceed the free list.
+    /// reference in some table — plus the prefix index's one reference
+    /// per cached block — is accounted for by exactly its refcount, and
+    /// outstanding reservations never exceed the free list.
     pub fn check_invariants(&self) -> Result<()> {
         self.alloc.check_invariants()?;
         let mut refs = vec![0u32; self.alloc.n_blocks()];
@@ -395,10 +693,19 @@ impl PagedKvCache {
                 refs[b] += 1;
             }
         }
+        if let Some(ix) = &self.prefix {
+            ix.check()?;
+            for b in ix.blocks() {
+                if b >= refs.len() {
+                    bail!("prefix index references out-of-range block {b}");
+                }
+                refs[b] += 1;
+            }
+        }
         for (b, &r) in refs.iter().enumerate() {
             if r != self.alloc.refcount_of(b) {
                 bail!(
-                    "block {b} refcount {} != {r} table references",
+                    "block {b} refcount {} != {r} table+index references",
                     self.alloc.refcount_of(b)
                 );
             }
@@ -409,6 +716,14 @@ impl PagedKvCache {
                 self.blocks_reserved(),
                 self.alloc.n_free()
             );
+        }
+        for (slot, &s) in self.shared.iter().enumerate() {
+            if s % self.block_size != 0 {
+                bail!("slot {slot} shared watermark {s} is not block-aligned");
+            }
+            if s > self.tables[slot].len() * self.block_size {
+                bail!("slot {slot} shared watermark {s} exceeds its table");
+            }
         }
         Ok(())
     }
@@ -627,6 +942,185 @@ mod tests {
         let mut c = mla_cache(4, 16, 16);
         c.admit_slot(0, 20, 20).unwrap();
         assert_eq!(c.bytes_in_use(), 2 * 16 * c.bytes_per_token());
+    }
+
+    // -- prefix sharing + copy-on-write --------------------------------------
+
+    /// A cache with the prefix index on, slot 0 prefilled with `prompt`
+    /// via row_mut (the chunk path's write shape) and registered.
+    fn shared_setup(
+        slots: usize,
+        block_size: usize,
+        blocks: usize,
+        prompt: &[i32],
+    ) -> PagedKvCache {
+        let mut c = PagedKvCache::new(
+            CacheLayout::Mla { r: 2, dr: 2 },
+            2,
+            slots,
+            block_size,
+            blocks,
+        )
+        .unwrap();
+        c.enable_prefix_cache();
+        let shared = c
+            .admit_slot_shared(0, prompt.len() + 2, prompt.len(), prompt)
+            .unwrap();
+        assert_eq!(shared, 0, "empty index shares nothing");
+        for pos in 0..prompt.len() {
+            for l in 0..2 {
+                let v = (prompt[pos] * 100 + l as i32) as f32;
+                c.row_mut(0, 0, l, pos).unwrap().fill(v);
+                c.row_mut(1, 0, l, pos).unwrap().fill(-v);
+            }
+        }
+        c.register_prefix(0, prompt).unwrap();
+        c.check_invariants().unwrap();
+        c
+    }
+
+    #[test]
+    fn prefix_sharing_maps_cached_blocks_and_reserves_the_remainder() {
+        let prompt: Vec<i32> = (0..10).collect();
+        // block_size 4: prompt 10 -> 2 full blocks cacheable, sharing
+        // capped at floor(9/4) = 2 blocks = 8 tokens.
+        let mut c = shared_setup(3, 4, 12, &prompt);
+        assert_eq!(c.prefix_stats().unwrap().blocks_cached, 2);
+        let before = c.blocks_in_use();
+        let shared = c
+            .admit_slot_shared(1, prompt.len() + 2, 0, &prompt)
+            .unwrap();
+        assert_eq!(shared, 8, "two full blocks shared");
+        // Bounded demand 12 tokens = 3 blocks; only the unshared third is
+        // reserved, nothing new materialised yet.
+        assert_eq!(c.blocks_in_use(), before, "sharing allocates nothing");
+        assert_eq!(c.reserved_of(1), 1);
+        // The shared rows read back slot 0's bytes.
+        assert_eq!(c.row(0, 1, 0, 5).unwrap(), c.row(0, 0, 0, 5).unwrap());
+        let s = c.prefix_stats().unwrap();
+        assert_eq!((s.hits, s.blocks_shared, s.tokens_shared), (1, 2, 8));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_prefix_survives_the_writer_and_eviction_reclaims_it() {
+        let prompt: Vec<i32> = (0..10).collect();
+        let mut c = shared_setup(2, 4, 8, &prompt);
+        // The writer completes: its private tail frees, the 2 cached
+        // prefix blocks stay resident for future admissions.
+        c.release_slot(0).unwrap();
+        assert_eq!(c.blocks_in_use(), 2, "prefix blocks outlive the writer");
+        let shared = c
+            .admit_slot_shared(0, prompt.len() + 2, 0, &prompt)
+            .unwrap();
+        assert_eq!(shared, 8, "hit after the writer completed");
+        c.release_slot(0).unwrap();
+        // A big unsharable admission forces LRU eviction of the cache.
+        let other: Vec<i32> = (50..80).collect();
+        c.admit_slot_shared(1, 30, 0, &other).unwrap();
+        assert_eq!(c.reserved_of(1), 8, "whole pool reserved");
+        assert_eq!(c.prefix_stats().unwrap().blocks_cached, 0);
+        assert_eq!(c.prefix_stats().unwrap().evictions, 2);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_write_preserves_the_readers_bytes() {
+        let prompt: Vec<i32> = (0..10).collect();
+        let mut c = shared_setup(2, 4, 12, &prompt);
+        c.admit_slot_shared(1, prompt.len() + 2, 0, &prompt).unwrap();
+        let reader_row: Vec<f32> = c.row(0, 0, 0, 5).unwrap().to_vec();
+        // Slot 1 writes a shared position (never happens on the serving
+        // path; row_mut must copy-on-write).
+        c.row_mut(0, 1, 0, 5).unwrap().fill(777.0);
+        assert_eq!(
+            c.row(0, 0, 0, 5).unwrap(),
+            &reader_row[..],
+            "CoW must not touch the reader's block"
+        );
+        assert_eq!(c.row(0, 1, 0, 5).unwrap(), [777.0, 777.0]);
+        // Untouched positions of the copied block carried over.
+        assert_eq!(c.row(0, 1, 1, 4).unwrap(), c.row(0, 0, 1, 4).unwrap());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_of_a_sharing_sequence_never_frees_mapped_blocks() {
+        let prompt: Vec<i32> = (0..10).collect();
+        let mut c = shared_setup(2, 4, 12, &prompt);
+        c.admit_slot_shared(1, prompt.len() + 2, 0, &prompt).unwrap();
+        let row: Vec<f32> = c.row(0, 1, 0, 3).unwrap().to_vec();
+        // Releasing the original writer must leave slot 1's mapped
+        // blocks fully readable.
+        c.release_slot(0).unwrap();
+        assert_eq!(c.row(0, 1, 0, 3).unwrap(), &row[..]);
+        c.check_invariants().unwrap();
+        c.release_slot(1).unwrap();
+        // Now only the index holds the prefix blocks.
+        assert_eq!(c.blocks_in_use(), 2);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn props_cow_under_random_sharing_preserves_every_reader() {
+        check(
+            "cow_preserves_readers",
+            PropConfig { cases: 60, seed: 1213 },
+            |r: &mut Rng| {
+                let bs = 2 + r.below(4); // 2..=5
+                let plen = bs + 1 + r.below(3 * bs); // at least one full block
+                let writes: Vec<u64> = (0..12).map(|_| r.next_u64()).collect();
+                (bs, plen, writes)
+            },
+            |(bs, plen, writes)| {
+                let prompt: Vec<i32> = (0..*plen as i32).collect();
+                let mut c = PagedKvCache::new(
+                    CacheLayout::Mla { r: 2, dr: 2 },
+                    1,
+                    3,
+                    *bs,
+                    24,
+                )
+                .map_err(|e| e.to_string())?;
+                c.enable_prefix_cache();
+                c.admit_slot_shared(0, *plen + 2, *plen, &prompt)
+                    .map_err(|e| e.to_string())?;
+                for pos in 0..*plen {
+                    c.row_mut(0, 0, 0, pos)
+                        .map_err(|e| e.to_string())?
+                        .fill(pos as f32);
+                }
+                c.register_prefix(0, &prompt).map_err(|e| e.to_string())?;
+                let shared = c
+                    .admit_slot_shared(1, *plen + 2, 0, &prompt)
+                    .map_err(|e| e.to_string())?;
+                if shared != ((*plen - 1) / *bs) * *bs {
+                    return Err(format!("shared {shared} for plen {plen} bs {bs}"));
+                }
+                // Random writes through slot 1 at shared positions: slot
+                // 0 must keep reading its own bytes at every position.
+                for &w in writes {
+                    if shared == 0 {
+                        break;
+                    }
+                    let pos = (w as usize) % shared;
+                    c.row_mut(0, 1, 0, pos)
+                        .map_err(|e| e.to_string())?
+                        .fill(9000.0 + pos as f32);
+                    c.check_invariants().map_err(|e| e.to_string())?;
+                }
+                for pos in 0..*plen {
+                    let got = c.row(0, 0, 0, pos).map_err(|e| e.to_string())?;
+                    if got != [pos as f32, pos as f32] {
+                        return Err(format!("reader corrupted at pos {pos}: {got:?}"));
+                    }
+                }
+                // Both lifecycles unwind cleanly under sharing + CoW.
+                c.release_slot(0).map_err(|e| e.to_string())?;
+                c.release_slot(1).map_err(|e| e.to_string())?;
+                c.check_invariants().map_err(|e| e.to_string())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Cross-sequence prefix index: token-prefix hashes at block granularity
+//! mapped to filled block chains, so a new sequence whose prompt starts
+//! with an already-cached prefix maps those blocks into its own table
+//! (via `BlockAllocator::retain`) instead of recomputing and re-storing
+//! them.
+//!
+//! The index is **chained**: the entry for prefix block `k` records the
+//! chain hash of blocks `0..k` (its *parent*) plus block `k`'s own
+//! tokens, and a lookup walks level by level, verifying both at every
+//! step — so a match guarantees the whole token prefix agrees unless two
+//! *different* prefixes collide on a full 64-bit chain hash (the same
+//! per-block verification vLLM-style prefix caches rely on).
+//!
+//! Ownership: the index is *strong* — [`super::PagedKvCache`] holds one
+//! block reference (`retain`) for every indexed block, so cached prefix
+//! blocks outlive the sequence that filled them and a later same-prefix
+//! request hits even after the first one completed. Memory pressure is
+//! handled by LRU eviction of blocks only the index still references
+//! (refcount 1): see `PagedKvCache::evict_for`.
+//!
+//! The index itself never touches the allocator; it only records which
+//! blocks hold which prefixes and reports what to retain or evict — the
+//! cache stays the single owner of block lifecycle.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Seed of every hash chain (the empty prefix).
+const CHAIN_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// SplitMix64-style avalanche of `a` perturbed by `b` (the same shape the
+/// sim backend uses; duplicated to keep `kvcache` backend-independent).
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Chain hash of one more block of tokens on top of `parent`.
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = mix(parent, 0x50_F1_D0 ^ tokens.len() as u64);
+    for &t in tokens {
+        h = mix(h, t as i64 as u64);
+    }
+    h
+}
+
+/// One indexed prefix block.
+struct Entry {
+    /// Pool block holding this prefix block's cache rows.
+    block: usize,
+    /// Chain hash of the prefix before this block (CHAIN_SEED at level 0).
+    parent: u64,
+    /// The block's own tokens, verified on every lookup.
+    tokens: Vec<i32>,
+    /// LRU stamp (index-local logical clock).
+    last_used: u64,
+}
+
+/// Lifetime + occupancy counters for the server's `stats` command.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Admission-time prefix lookups.
+    pub lookups: u64,
+    /// Lookups that matched at least one block.
+    pub hits: u64,
+    /// Cumulative blocks mapped into tables via sharing.
+    pub blocks_shared: u64,
+    /// Cumulative prompt tokens covered by shared blocks.
+    pub tokens_shared: u64,
+    /// Cached blocks reclaimed under memory pressure.
+    pub evictions: u64,
+    /// Prefix blocks currently cached (index-referenced).
+    pub blocks_cached: usize,
+}
+
+/// The prefix index (see the module docs for the ownership contract).
+#[derive(Default)]
+pub struct PrefixIndex {
+    by_hash: HashMap<u64, Entry>,
+    /// block -> chain hash, for O(1) invalidation on eviction.
+    by_block: HashMap<usize, u64>,
+    tick: u64,
+    lookups: u64,
+    hits: u64,
+    blocks_shared: u64,
+    tokens_shared: u64,
+    evictions: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Number of blocks the index currently references.
+    pub fn n_cached(&self) -> usize {
+        self.by_block.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_block.is_empty()
+    }
+
+    pub fn contains_block(&self, block: usize) -> bool {
+        self.by_block.contains_key(&block)
+    }
+
+    /// All indexed blocks (the cache's extra reference per block).
+    pub fn blocks(&self) -> Vec<usize> {
+        self.by_block.keys().copied().collect()
+    }
+
+    /// `(block, last_used)` pairs, for the cache's LRU eviction scan.
+    pub fn candidates(&self) -> Vec<(usize, u64)> {
+        self.by_hash.values().map(|e| (e.block, e.last_used)).collect()
+    }
+
+    /// Walk the chain over `prompt`, at most `max_blocks` levels deep,
+    /// returning the matched blocks (longest verified prefix) and their
+    /// chain hashes.
+    fn walk(&self, prompt: &[i32], block_size: usize, max_blocks: usize) -> (Vec<usize>, Vec<u64>) {
+        let mut blocks = Vec::new();
+        let mut hashes = Vec::new();
+        let mut parent = CHAIN_SEED;
+        for k in 0..max_blocks.min(prompt.len() / block_size.max(1)) {
+            let toks = &prompt[k * block_size..(k + 1) * block_size];
+            let h = chain_hash(parent, toks);
+            match self.by_hash.get(&h) {
+                Some(e) if e.parent == parent && e.tokens == toks => {
+                    blocks.push(e.block);
+                    hashes.push(h);
+                    parent = h;
+                }
+                _ => break,
+            }
+        }
+        (blocks, hashes)
+    }
+
+    /// Non-mutating lookup (the scheduler's planning view): the blocks a
+    /// sharing admission of `prompt` would map, without touching stats or
+    /// LRU stamps.
+    pub fn peek(&self, prompt: &[i32], block_size: usize, max_blocks: usize) -> Vec<usize> {
+        self.walk(prompt, block_size, max_blocks).0
+    }
+
+    /// Admission-time lookup: like [`PrefixIndex::peek`] but counts the
+    /// lookup/hit and freshens the LRU stamp of every matched level.
+    pub fn lookup(&mut self, prompt: &[i32], block_size: usize, max_blocks: usize) -> Vec<usize> {
+        let (blocks, hashes) = self.walk(prompt, block_size, max_blocks);
+        self.lookups += 1;
+        if !blocks.is_empty() {
+            self.hits += 1;
+        }
+        self.tick += 1;
+        for h in &hashes {
+            if let Some(e) = self.by_hash.get_mut(h) {
+                e.last_used = self.tick;
+            }
+        }
+        blocks
+    }
+
+    /// Freshen the LRU stamps of `prompt`'s matched chain without
+    /// counting a lookup. The engine touches every request of an
+    /// admission wave before admitting any of them, so evictions
+    /// triggered by earlier admissions in the wave prefer victims no
+    /// planned admission depends on (the planner already excluded these
+    /// blocks from its eviction headroom).
+    pub fn touch(&mut self, prompt: &[i32], block_size: usize, max_blocks: usize) {
+        let (_, hashes) = self.walk(prompt, block_size, max_blocks);
+        self.tick += 1;
+        for h in &hashes {
+            if let Some(e) = self.by_hash.get_mut(h) {
+                e.last_used = self.tick;
+            }
+        }
+    }
+
+    /// Record a successful sharing admission (cumulative stats).
+    pub fn record_shared(&mut self, blocks: usize, tokens: usize) {
+        self.blocks_shared += blocks as u64;
+        self.tokens_shared += tokens as u64;
+    }
+
+    /// Index the chain of fully-filled prompt blocks `table[k]` holding
+    /// `prompt[k*bs..(k+1)*bs]`. Levels already cached are freshened and
+    /// skipped; the rest are inserted. Returns the newly indexed blocks —
+    /// the caller must `retain` each one (the index's reference).
+    pub fn insert_chain(
+        &mut self,
+        prompt: &[i32],
+        block_size: usize,
+        table: &[usize],
+    ) -> Vec<usize> {
+        let mut parent = CHAIN_SEED;
+        let mut newly = Vec::new();
+        self.tick += 1;
+        for (k, &block) in table.iter().enumerate() {
+            let toks = &prompt[k * block_size..(k + 1) * block_size];
+            let h = chain_hash(parent, toks);
+            // Probe with an immutable borrow first (inserting in the
+            // None arm of a `get_mut` match trips the borrow checker).
+            let cached = self
+                .by_hash
+                .get(&h)
+                .map(|e| e.parent == parent && e.tokens == toks);
+            match cached {
+                Some(true) => {
+                    // This prefix level is already cached (usually the
+                    // very blocks this sequence shared at admission).
+                    if let Some(e) = self.by_hash.get_mut(&h) {
+                        e.last_used = self.tick;
+                    }
+                }
+                Some(false) => break, // full 64-bit chain collision: stop
+                None => {
+                    if self.by_block.contains_key(&block) {
+                        // The block already caches a different prefix —
+                        // indexing it twice would corrupt invalidation.
+                        break;
+                    }
+                    self.by_hash.insert(
+                        h,
+                        Entry {
+                            block,
+                            parent,
+                            tokens: toks.to_vec(),
+                            last_used: self.tick,
+                        },
+                    );
+                    self.by_block.insert(block, h);
+                    newly.push(block);
+                }
+            }
+            parent = h;
+        }
+        newly
+    }
+
+    /// Drop the entry for `block` (eviction). Returns true if it was
+    /// indexed — the caller must then `release` the index's reference.
+    pub fn remove_block(&mut self, block: usize) -> bool {
+        match self.by_block.remove(&block) {
+            Some(h) => {
+                self.by_hash.remove(&h);
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            lookups: self.lookups,
+            hits: self.hits,
+            blocks_shared: self.blocks_shared,
+            tokens_shared: self.tokens_shared,
+            evictions: self.evictions,
+            blocks_cached: self.n_cached(),
+        }
+    }
+
+    /// Internal consistency: the two maps mirror each other exactly.
+    pub fn check(&self) -> Result<()> {
+        if self.by_hash.len() != self.by_block.len() {
+            bail!(
+                "prefix index maps disagree: {} hashes vs {} blocks",
+                self.by_hash.len(),
+                self.by_block.len()
+            );
+        }
+        for (h, e) in &self.by_hash {
+            match self.by_block.get(&e.block) {
+                Some(bh) if bh == h => {}
+                _ => bail!("prefix block {} not mapped back to its hash", e.block),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 7 % 251).collect()
+    }
+
+    #[test]
+    fn insert_then_lookup_matches_the_chain() {
+        let mut ix = PrefixIndex::new();
+        let p = prompt(20);
+        // Blocks 10 and 11 hold the two full 8-token prefix blocks.
+        let newly = ix.insert_chain(&p, 8, &[10, 11]);
+        assert_eq!(newly, vec![10, 11]);
+        assert_eq!(ix.n_cached(), 2);
+        ix.check().unwrap();
+        assert_eq!(ix.lookup(&p, 8, 2), vec![10, 11]);
+        // A shorter prompt only matches the levels it covers.
+        assert_eq!(ix.peek(&p[..9], 8, 1), vec![10]);
+        // A diverging prompt misses from the divergence point on.
+        let mut q = p.clone();
+        q[9] += 1; // inside block 1
+        assert_eq!(ix.peek(&q, 8, 2), vec![10]);
+        q[3] += 1; // inside block 0
+        assert!(ix.peek(&q, 8, 2).is_empty());
+        let s = ix.stats();
+        assert_eq!((s.lookups, s.hits), (1, 1));
+    }
+
+    #[test]
+    fn reinsert_freshens_instead_of_duplicating() {
+        let mut ix = PrefixIndex::new();
+        let p = prompt(16);
+        assert_eq!(ix.insert_chain(&p, 8, &[3, 4]).len(), 2);
+        // A second sequence with private copies of the same prefix: the
+        // cached levels win, nothing new is indexed.
+        assert!(ix.insert_chain(&p, 8, &[5, 6]).is_empty());
+        assert_eq!(ix.n_cached(), 2);
+        ix.check().unwrap();
+    }
+
+    #[test]
+    fn remove_block_invalidates_the_level() {
+        let mut ix = PrefixIndex::new();
+        let p = prompt(16);
+        ix.insert_chain(&p, 8, &[3, 4]);
+        assert!(ix.remove_block(3));
+        assert!(!ix.remove_block(3), "already removed");
+        // The child level survives but is unreachable (its parent is
+        // gone), so lookups stop at level 0.
+        assert!(ix.lookup(&p, 8, 2).is_empty());
+        assert_eq!(ix.n_cached(), 1);
+        assert_eq!(ix.stats().evictions, 1);
+        ix.check().unwrap();
+    }
+
+    #[test]
+    fn lru_stamps_order_the_eviction_candidates() {
+        let mut ix = PrefixIndex::new();
+        let a = prompt(8);
+        let b: Vec<i32> = prompt(8).iter().map(|t| t + 1).collect();
+        ix.insert_chain(&a, 8, &[0]);
+        ix.insert_chain(&b, 8, &[1]);
+        // Touch `a` last: block 1 becomes the LRU candidate.
+        ix.lookup(&a, 8, 1);
+        let mut cands = ix.candidates();
+        cands.sort_by_key(|&(_, t)| t);
+        assert_eq!(cands.first().map(|&(b, _)| b), Some(1));
+        assert_eq!(cands.last().map(|&(b, _)| b), Some(0));
+    }
+}

@@ -33,7 +33,14 @@
 //!   runtime. The [`backend::CacheStore`] seam lets the engine run over
 //!   either the fixed slot pool (what the artifacts bake in) or the
 //!   paged block pool (`SimBackend` drives both, completion-identically,
-//!   chunked or monolithic).
+//!   chunked or monolithic). With `--prefix-cache on`, the paged pool
+//!   additionally shares cached prompt-prefix blocks across sequences
+//!   (copy-on-write protected, LRU-evicted under pressure) — a burst of
+//!   same-prefix requests admits far beyond the unshared block budget,
+//!   bit-identically.
+//!
+//! A prose tour of the architecture lives in `docs/ARCHITECTURE.md`; the
+//! server wire protocol is specified in `docs/PROTOCOL.md`.
 //! * [`coordinator::scheduler`] — pluggable `SchedulePolicy` building a
 //!   per-iteration `StepPlan` over the three queues (waiting →
 //!   prefilling → decoding), selected via [`config::EngineConfig`]:
@@ -58,7 +65,7 @@
 //! |---------------|---------------------------------------------------------|
 //! | [`backend`]   | execution backends: `ExecBackend` (prefill / prefill_chunk / decode), `SimBackend`, `XlaBackend`, `ModelBundle` |
 //! | [`coordinator`] | engine (StepPlan executor), scheduler (StepPlan builder: admit-first / decode-first / hybrid / chunked), sequence manager (phase + watermark), sampling, request types |
-//! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with layout-aware byte accounting (GQA vs MLA) |
+//! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with cross-sequence prefix sharing (`PrefixIndex`: block-granular prefix hashes, copy-on-write, LRU eviction) and layout-aware byte accounting (GQA vs MLA) |
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
 //! | [`server`]    | TCP JSONL front-end with stats + in-band protocol errors |
 //! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |

@@ -50,6 +50,9 @@ COMMON FLAGS
   --block-size N    paged cache tokens per block (default 16)
   --cache-blocks N  paged pool size in blocks (default: the fixed pool's
                     worst-case byte budget, batch * ceil(capacity/block))
+  --prefix-cache M  on|off (default off): cross-sequence prefix sharing over
+                    the paged store — same-prefix prompts share cached
+                    blocks copy-on-write; requires --cache paged
 ";
 
 fn main() {
@@ -159,6 +162,17 @@ fn engine_cfg(args: &Args) -> Result<EngineConfig> {
             );
         }
     }
+    let prefix_cache = match args.str_flag("prefix-cache", "off") {
+        "on" => true,
+        "off" => false,
+        other => bail!("bad --prefix-cache `{other}` (on|off)"),
+    };
+    if prefix_cache && cache == CacheKind::Fixed {
+        bail!(
+            "--prefix-cache on requires --cache paged (the fixed pool has \
+             no blocks to share)"
+        );
+    }
     let mut policy = PolicyKind::parse(args.str_flag("policy", "admit-first"))?;
     if let Some(raw) = args.get("prefill-chunk") {
         let chunk = raw
@@ -182,6 +196,7 @@ fn engine_cfg(args: &Args) -> Result<EngineConfig> {
         policy,
         seed: args.usize_flag("seed", 0) as u64,
         cache,
+        prefix_cache,
         ..EngineConfig::default()
     })
 }

@@ -1,15 +1,20 @@
 //! TCP JSONL serving front-end.
 //!
-//! Protocol: one JSON object per line.
+//! Protocol (normative reference: `docs/PROTOCOL.md` at the repo root —
+//! the schema regression tests in `tests/integration_server.rs` assert
+//! the field lists documented there): one JSON object per line.
 //!   -> {"prompt": "...", "max_new": 32, "temperature": 0.7}
 //!   <- {"id": 1, "text": "...", "latency_s": 0.12, "ttft_s": 0.02,
 //!       "tpot_s": 0.005, "prompt_len": 9}
 //!   -> {"cmd": "stats"}    <- {"counters": {...}, "policy": "...",
+//!                              "cache": {..., "prefix": {...}},
 //!                              "decode_s": {"p50": ..., "p95": ..., "p99": ...}, ...}
 //!   -> {"cmd": "ping"}     <- {"pong": true}
 //!   -> {"cmd": "shutdown"} <- {"ok": true}
 //!
-//! Error paths answer in-band instead of dropping the line:
+//! Unknown fields on a request line are ignored (forward compatibility);
+//! unknown *commands* are errors. Error paths answer in-band instead of
+//! dropping the line:
 //!   bad JSON        <- {"error": "bad json: ..."}
 //!   unknown cmd     <- {"error": "unknown cmd `...`"}
 //!   missing prompt  <- {"error": "missing prompt"}
@@ -184,6 +189,25 @@ fn stats_json(engine: &Engine) -> Json {
     cache.set("blocks_total", Json::Num(cs.blocks_total as f64));
     cache.set("blocks_in_use", Json::Num(cs.blocks_in_use as f64));
     cache.set("blocks_reserved", Json::Num(cs.blocks_reserved as f64));
+    cache.set("bytes_deduped", Json::Num(cs.bytes_deduped as f64));
+    // Prefix-sharing counters ride along only when the prefix cache is
+    // on (paged store + --prefix-cache on) — see docs/PROTOCOL.md.
+    if let Some(ps) = cs.prefix {
+        let mut pj = Json::obj();
+        pj.set("lookups", Json::Num(ps.lookups as f64));
+        pj.set("hits", Json::Num(ps.hits as f64));
+        let rate = if ps.lookups > 0 {
+            ps.hits as f64 / ps.lookups as f64
+        } else {
+            0.0
+        };
+        pj.set("hit_rate", Json::Num(rate));
+        pj.set("blocks_shared", Json::Num(ps.blocks_shared as f64));
+        pj.set("tokens_shared", Json::Num(ps.tokens_shared as f64));
+        pj.set("blocks_cached", Json::Num(ps.blocks_cached as f64));
+        pj.set("evictions", Json::Num(ps.evictions as f64));
+        cache.set("prefix", pj);
+    }
     j.set("cache", cache);
     for name in m.sample_names() {
         if let Some(s) = m.summary(&name) {

@@ -456,6 +456,148 @@ fn paged_admits_more_short_sequences_under_the_same_byte_budget() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Prefix sharing: a burst of same-prefix requests admits strictly more
+// concurrent sequences than `--prefix-cache off` at an equal block budget,
+// with bit-identical completions — both layouts, chunked and monolithic.
+// ---------------------------------------------------------------------------
+
+/// Seed one request to populate the prefix cache, then fire a burst of 8
+/// identical-prompt requests. Returns (max concurrent sequences, first
+/// burst admission wave, completions sorted by id, final cache stats).
+fn prefix_burst(
+    mla: bool,
+    policy: PolicyKind,
+    prefix_on: bool,
+) -> (usize, usize, Vec<(u64, Vec<i32>)>, Engine) {
+    let capacity = 64usize;
+    let base = if mla { SimConfig::mla(8, 4) } else { SimConfig::gqa(8) };
+    let mut e = Engine::new(
+        SimBackend::new(SimConfig { capacity, prefill_seq: capacity, ..base }).unwrap(),
+        EngineConfig {
+            policy,
+            cache: CacheKind::Paged { block_size: 8, n_blocks: Some(16) },
+            prefix_cache: prefix_on,
+            ..Default::default()
+        },
+    );
+    // 17 tokens: two full 8-token blocks become cacheable prefix.
+    let prompt: Vec<i32> = (0..17).map(|i| (i * 13 + 7) % 251).collect();
+    e.submit(Request::new(100, prompt.clone(), 4));
+    e.run_to_completion().unwrap();
+    e.take_completions();
+    for i in 0..8 {
+        e.submit(Request::new(i, prompt.clone(), 4));
+    }
+    let mut max_active = 0;
+    while !e.is_idle() {
+        e.step().unwrap();
+        max_active = max_active.max(e.n_active());
+    }
+    e.slots_check().unwrap();
+    let wave = e
+        .admission_log()
+        .get(1)
+        .map(|(_, ids)| ids.len())
+        .unwrap_or(0);
+    let mut comps = e.take_completions();
+    comps.sort_by_key(|c| c.id);
+    let comps = comps.into_iter().map(|c| (c.id, c.tokens)).collect();
+    (max_active, wave, comps, e)
+}
+
+#[test]
+fn prefix_sharing_admits_more_same_prefix_sequences_bit_identically() {
+    // The acceptance scenario, over both cache layouts and both a
+    // monolithic and the chunked policy: each burst request's bounded
+    // demand is 3 blocks unshared but only 1 beyond the cached 2-block
+    // prefix, so a 16-block pool admits the whole burst of 8 (slot-capped)
+    // instead of 5 — and every completion matches the unshared run
+    // token-for-token.
+    for mla in [false, true] {
+        for policy in [
+            PolicyKind::AdmitFirst,
+            PolicyKind::Chunked { chunk_tokens: 8 },
+        ] {
+            let (off_active, off_wave, off_comps, _) =
+                prefix_burst(mla, policy, false);
+            let (on_active, on_wave, on_comps, e) = prefix_burst(mla, policy, true);
+            assert!(
+                on_active > off_active,
+                "{policy:?} mla={mla}: prefix cache must admit strictly more \
+                 concurrent sequences ({on_active} vs {off_active})"
+            );
+            assert_eq!(
+                on_active, 8,
+                "{policy:?} mla={mla}: sharing should reach the slot cap"
+            );
+            assert!(
+                on_wave > off_wave,
+                "{policy:?} mla={mla}: first burst wave {on_wave} vs {off_wave}"
+            );
+            assert_eq!(
+                on_comps, off_comps,
+                "{policy:?} mla={mla}: completions must be bit-identical to \
+                 the unshared run"
+            );
+            let cs = e.cache_stats();
+            let ps = cs.prefix.expect("prefix stats present when enabled");
+            assert!(ps.hits >= 8, "every burst request hits: {ps:?}");
+            assert!(
+                ps.tokens_shared >= 8 * 16,
+                "two full blocks shared per burst request: {ps:?}"
+            );
+            assert_eq!(cs.blocks_in_use, ps.blocks_cached, "only cache remains");
+            if matches!(policy, PolicyKind::Chunked { .. }) {
+                assert!(
+                    e.metrics.counter("prefix_tokens_skipped") >= 8 * 16,
+                    "chunked prefill must skip the shared prefix outright"
+                );
+            }
+            e.slots_check().unwrap();
+        }
+    }
+}
+
+#[test]
+fn prefix_cache_evicts_under_pressure_and_stays_correct() {
+    // Pool of 8 blocks: a seed caches 2 prefix blocks; a later request
+    // needing 7 blocks must evict cached blocks (LRU) rather than being
+    // refused — blocks-free admission accounts eviction headroom.
+    let capacity = 64usize;
+    let mut e = Engine::new(
+        SimBackend::new(SimConfig { capacity, prefill_seq: capacity, ..SimConfig::gqa(8) })
+            .unwrap(),
+        EngineConfig {
+            cache: CacheKind::Paged { block_size: 8, n_blocks: Some(8) },
+            prefix_cache: true,
+            ..Default::default()
+        },
+    );
+    e.submit(Request::new(0, (0..17).collect(), 4));
+    e.run_to_completion().unwrap();
+    assert_eq!(e.cache_stats().prefix.unwrap().blocks_cached, 2);
+    // 50-token prompt + 4 new -> bounded 53 tokens = 7 blocks > the 6
+    // unreserved; admission evicts from the cache to fit.
+    e.submit(Request::new(1, (100..150).collect(), 4));
+    e.run_to_completion().unwrap();
+    let comps = e.take_completions();
+    assert_eq!(comps.len(), 2);
+    assert!(comps.iter().all(|c| c.tokens.len() == 4));
+    let ps = e.cache_stats().prefix.unwrap();
+    assert!(ps.evictions >= 1, "eviction must have made room: {ps:?}");
+    e.slots_check().unwrap();
+}
+
+#[test]
+fn prefix_cache_on_fixed_store_is_a_construction_error() {
+    let r = Engine::try_new(
+        SimBackend::gqa(4),
+        EngineConfig { prefix_cache: true, ..Default::default() },
+    );
+    assert!(r.is_err(), "prefix cache requires the paged store");
+}
+
 #[test]
 fn all_policies_complete_a_bursty_workload() {
     for policy in [

@@ -1,6 +1,11 @@
 //! Integration: the TCP JSONL server protocol — happy path, error paths
 //! (bad JSON, unknown cmd, missing prompt), and the stats command —
 //! hermetically over `SimBackend` (no artifacts, no XLA runtime).
+//!
+//! The wire format asserted here is specified in `docs/PROTOCOL.md`; the
+//! schema regression tests (`stats_schema_matches_protocol_md`,
+//! `unknown_request_fields_are_ignored`) keep that document honest —
+//! adding or renaming a field means updating both.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -185,6 +190,107 @@ fn chunked_server_reports_pipeline_queues_and_chunk_metrics() {
         .get("chunk_tokens")
         .unwrap_or_else(|| panic!("stats missing `chunk_tokens`: {stats:?}"));
     assert!(chunk_tokens.get("p50").is_some());
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// The schema regression test referenced by docs/PROTOCOL.md: every
+/// documented completion / stats / cache / prefix field is present on a
+/// prefix-enabled paged server, including the prefix-sharing counters.
+#[test]
+fn stats_schema_matches_protocol_md() {
+    let addr = "127.0.0.1:18436";
+    let handle = std::thread::spawn(move || {
+        let mut e = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                cache: CacheKind::Paged { block_size: 8, n_blocks: None },
+                prefix_cache: true,
+                ..Default::default()
+            },
+        );
+        server::serve(&mut e, addr).unwrap();
+    });
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
+            if j.get("pong").is_some() {
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "server at {addr} never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Two same-prefix requests: the second shares the first's cached
+    // prefix blocks (requests are sequential, so the ordering is exact).
+    let prompt = "the shared prefix lives here";
+    let resp = server::client_request(addr, prompt, 4).unwrap();
+    // docs/PROTOCOL.md "Completion reply" field list.
+    for key in [
+        "id", "text", "prompt_len", "latency_s", "queue_s", "prefill_s",
+        "ttft_s", "tpot_s",
+    ] {
+        assert!(resp.get(key).is_some(), "completion missing `{key}`: {resp:?}");
+    }
+    server::client_request(addr, prompt, 4).unwrap();
+
+    let stats = server::client_stats(addr).unwrap();
+    // docs/PROTOCOL.md "Stats reply" top-level field list.
+    for key in [
+        "counters", "policy", "decode_tok_per_s", "uptime_s", "queued",
+        "prefilling", "decoding", "cache",
+    ] {
+        assert!(stats.get(key).is_some(), "stats missing `{key}`: {stats:?}");
+    }
+    let cache = stats.get("cache").unwrap();
+    // docs/PROTOCOL.md "cache object" field list.
+    for key in [
+        "kind", "bytes_total", "bytes_in_use", "bytes_worst_case",
+        "block_size", "blocks_total", "blocks_in_use", "blocks_reserved",
+        "bytes_deduped",
+    ] {
+        assert!(cache.get(key).is_some(), "cache missing `{key}`: {cache:?}");
+    }
+    // docs/PROTOCOL.md "prefix object" field list (present only when the
+    // prefix cache is enabled — which it is here).
+    let prefix = cache.get("prefix").expect("prefix object when enabled");
+    for key in [
+        "lookups", "hits", "hit_rate", "blocks_shared", "tokens_shared",
+        "blocks_cached", "evictions",
+    ] {
+        assert!(prefix.get(key).is_some(), "prefix missing `{key}`: {prefix:?}");
+    }
+    // And the second request actually hit the cached prefix.
+    assert!(prefix.get("hits").and_then(Json::as_usize).unwrap() >= 1);
+    let rate = prefix.get("hit_rate").and_then(Json::as_f64).unwrap();
+    assert!(rate > 0.0 && rate <= 1.0, "hit rate {rate} out of range");
+    assert!(
+        prefix.get("blocks_cached").and_then(Json::as_usize).unwrap() > 0,
+        "the prompt's full blocks stay cached"
+    );
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// docs/PROTOCOL.md: unknown fields on a request line are ignored
+/// (forward compatibility); only unknown *commands* are errors.
+#[test]
+fn unknown_request_fields_are_ignored() {
+    let addr = "127.0.0.1:18437";
+    let handle = start_server(addr, PolicyKind::AdmitFirst);
+
+    let resp = server::client_line(
+        addr,
+        "{\"prompt\":\"hi\",\"max_new\":2,\"stream\":true,\"n\":3}",
+    )
+    .unwrap();
+    assert!(
+        resp.get("text").is_some(),
+        "unknown request fields must be ignored, got {resp:?}"
+    );
 
     server::client_shutdown(addr).unwrap();
     handle.join().unwrap();
