@@ -181,6 +181,70 @@ impl CacheKind {
     }
 }
 
+/// Keys a `--model name=SPEC` override list may set — exactly the
+/// engine-shaping CLI flags, so one grammar serves both spellings.
+pub const MODEL_SPEC_KEYS: &[&str] = &[
+    "arch",
+    "layout", // alias for arch (the README SPEC spelling)
+    "rank",
+    "backend",
+    "policy",
+    "prefill-chunk",
+    "cache",
+    "block-size",
+    "cache-blocks",
+    "prefix-cache",
+    "batch",
+    "capacity",
+    "seed",
+    "ckpt",
+];
+
+/// One `--model name=SPEC` CLI entry: a named engine whose SPEC is a
+/// comma-separated `key=value` list reusing the existing engine flags,
+/// e.g. `mla=layout=mla,cache=paged,policy=chunked:8,prefix-cache=on`.
+/// A bare `--model name` (no `=`) inherits every setting from the
+/// top-level flags. Keys are validated here; values are parsed by the
+/// same code that parses the corresponding flag, so the two spellings
+/// can never drift.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Flag overrides in SPEC order (later wins on duplicates).
+    pub overrides: Vec<(String, String)>,
+}
+
+impl ModelSpec {
+    pub fn parse(s: &str) -> Result<ModelSpec> {
+        let (name, spec) = match s.split_once('=') {
+            Some((n, rest)) => (n, Some(rest)),
+            None => (s, None),
+        };
+        if name.is_empty() {
+            anyhow::bail!("--model needs a name (`--model name[=key=value,...]`)");
+        }
+        let mut overrides = Vec::new();
+        if let Some(spec) = spec {
+            for kv in spec.split(',') {
+                let (k, v) = kv.split_once('=').with_context(|| {
+                    format!("bad --model override `{kv}` (want key=value)")
+                })?;
+                if !MODEL_SPEC_KEYS.contains(&k) {
+                    anyhow::bail!(
+                        "unknown --model key `{k}` (valid: {})",
+                        MODEL_SPEC_KEYS.join(", ")
+                    );
+                }
+                if v.is_empty() {
+                    anyhow::bail!("empty value for --model key `{k}`");
+                }
+                overrides.push((k.to_string(), v.to_string()));
+            }
+        }
+        Ok(ModelSpec { name: name.to_string(), overrides })
+    }
+}
+
 /// Engine/serving settings.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -328,6 +392,35 @@ mod tests {
         assert!(CacheKind::parse("paged:x").is_err());
         assert!(CacheKind::parse("nope").is_err());
         assert_eq!(EngineConfig::default().cache, CacheKind::Fixed);
+    }
+
+    #[test]
+    fn model_spec_parses_the_cli_grammar() {
+        let m = ModelSpec::parse(
+            "mla=layout=mla,cache=paged,policy=chunked:8,prefix-cache=on",
+        )
+        .unwrap();
+        assert_eq!(m.name, "mla");
+        assert_eq!(
+            m.overrides,
+            vec![
+                ("layout".to_string(), "mla".to_string()),
+                ("cache".to_string(), "paged".to_string()),
+                ("policy".to_string(), "chunked:8".to_string()),
+                ("prefix-cache".to_string(), "on".to_string()),
+            ]
+        );
+        // A bare name inherits everything from the top-level flags.
+        let bare = ModelSpec::parse("gqa-base").unwrap();
+        assert_eq!(bare.name, "gqa-base");
+        assert!(bare.overrides.is_empty());
+        // Values may themselves contain `=`-free structure like `:`.
+        let r = ModelSpec::parse("m=policy=hybrid:3,rank=16").unwrap();
+        assert_eq!(r.overrides[1], ("rank".to_string(), "16".to_string()));
+        assert!(ModelSpec::parse("=cache=paged").is_err(), "empty name");
+        assert!(ModelSpec::parse("m=cache").is_err(), "key without value");
+        assert!(ModelSpec::parse("m=warp=9").is_err(), "unknown key");
+        assert!(ModelSpec::parse("m=cache=").is_err(), "empty value");
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub use crate::backend::Arch;
 
 /// Continuous-batching serving engine over one execution backend.
 pub struct Engine {
+    /// Registry name of this engine (`"default"` outside a multi-model
+    /// registry); stamped onto every [`Completion`] it produces.
+    name: String,
     backend: Box<dyn ExecBackend>,
     pub cache: CacheStore,
     seqs: SequenceManager,
@@ -84,6 +87,7 @@ impl Engine {
         let spec = backend.spec().clone();
         let cache = spec.new_cache_store(cfg.cache, cfg.prefix_cache)?;
         Ok(Engine {
+            name: "default".to_string(),
             backend,
             cache,
             seqs: SequenceManager::new(spec.batch, spec.capacity),
@@ -109,6 +113,18 @@ impl Engine {
 
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// Registry name of this engine (`"default"` unless renamed).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Rename the engine (the `EngineRegistry` does this at
+    /// registration); every completion produced afterwards carries the
+    /// new name in its `model` field.
+    pub fn set_name(&mut self, name: &str) {
+        self.name = name.to_string();
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -137,6 +153,23 @@ impl Engine {
 
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.seqs.n_active() == 0
+    }
+
+    /// Total pipeline depth — queued + prefilling + decoding — the load
+    /// signal `least-loaded` routing compares engines by.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.seqs.n_active()
+    }
+
+    /// Largest `max_new` this engine can actually serve for a prompt of
+    /// `prompt_tokens` (pre-clamp length): the cache room left after the
+    /// clamped prompt, plus the write-free final token. The server edge
+    /// clamps hostile `max_new` values to this before submitting, so a
+    /// request can never demand an unserveable reservation.
+    pub fn max_new_ceiling(&self, prompt_tokens: usize) -> usize {
+        let spec = self.backend.spec();
+        let plen = prompt_tokens.min(spec.max_prompt());
+        (spec.capacity.saturating_sub(plen) + 1).max(1)
     }
 
     /// Drain all finished requests accumulated since the last call.
@@ -608,7 +641,8 @@ impl Engine {
         if !self.seqs.is_done(slot) {
             return Ok(());
         }
-        let c = self.seqs.finish(slot, &mut self.cache)?;
+        let mut c = self.seqs.finish(slot, &mut self.cache)?;
+        c.model = self.name.clone();
         self.metrics.inc("completed", 1);
         self.metrics.observe("latency_s", c.latency_s);
         self.metrics.observe("queue_s", c.queue_s);
@@ -867,6 +901,24 @@ mod tests {
         let again = e.take_completions();
         assert_eq!(again.len(), 1);
         assert_eq!(again[0].id, 1);
+    }
+
+    #[test]
+    fn completions_carry_engine_name_and_effective_budget() {
+        let mut e = engine(3);
+        e.set_name("mla-paged");
+        let cap = e.spec().capacity;
+        // Over-asking clamps to the cache room (prompt 2 + write-free
+        // final token) and the completion echoes the enforced budget.
+        let comps = e.generate(vec![Request::from_text(0, "hi", 100_000)]).unwrap();
+        assert_eq!(comps[0].model, "mla-paged");
+        assert_eq!(comps[0].max_new, cap - 2 + 1);
+        assert_eq!(comps[0].tokens.len(), cap - 2 + 1);
+        assert_eq!(e.max_new_ceiling(2), cap - 2 + 1);
+        // An in-range budget echoes unchanged.
+        let comps = e.generate(vec![Request::from_text(1, "hi", 4)]).unwrap();
+        assert_eq!(comps[0].max_new, 4);
+        assert_eq!(comps[0].model, "mla-paged");
     }
 
     #[test]

@@ -23,7 +23,17 @@ impl Request {
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
+    /// Name of the engine that served this request (`"default"` outside
+    /// a multi-model registry). Stamped by the engine at completion so
+    /// multi-model servers can route replies and clients can verify
+    /// which model answered (protocol v2 `model` field).
+    pub model: String,
     pub prompt_len: usize,
+    /// Effective new-token budget: the submitted `max_new` clamped to
+    /// the engine's remaining cache capacity for this prompt — the bound
+    /// the completion rule actually enforced. Echoed on the wire so a
+    /// client that over-asked sees what was serveable.
+    pub max_new: usize,
     pub tokens: Vec<i32>,
     /// Wall-clock seconds from enqueue to completion.
     pub latency_s: f64,
@@ -61,7 +71,9 @@ mod tests {
         assert_eq!(r.prompt, vec![104, 105, 32, 116, 104, 101, 114, 101]);
         let c = Completion {
             id: 1,
+            model: "default".to_string(),
             prompt_len: 8,
+            max_new: 2,
             tokens: vec![111, 107],
             latency_s: 0.0,
             queue_s: 0.0,

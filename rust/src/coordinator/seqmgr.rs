@@ -345,9 +345,18 @@ impl SequenceManager {
         } else {
             0.0
         };
+        // The budget the completion rule enforced (`is_done`): requested
+        // max_new clamped to the cache room left after the prompt. The
+        // server echoes this so over-asking clients see the real bound.
+        let room = self.capacity.saturating_sub(seq.prompt_len) + 1;
+        let max_new = seq.req.max_new_tokens.min(room).max(1);
         Ok(Completion {
             id: seq.req.id,
+            // The engine stamps its registry name before handing the
+            // completion out; the manager does not know it.
+            model: String::new(),
             prompt_len: seq.req.prompt.len(),
+            max_new,
             tokens: seq.generated,
             latency_s,
             queue_s,

@@ -67,7 +67,7 @@
 //! | [`coordinator`] | engine (StepPlan executor), scheduler (StepPlan builder: admit-first / decode-first / hybrid / chunked), sequence manager (phase + watermark), sampling, request types |
 //! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with cross-sequence prefix sharing (`PrefixIndex`: block-granular prefix hashes, copy-on-write, LRU eviction) and layout-aware byte accounting (GQA vs MLA) |
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
-//! | [`server`]    | TCP JSONL front-end with stats + in-band protocol errors |
+//! | [`server`]    | TCP JSONL front-end (protocol v2): `EngineRegistry` hosting N named engines with routed requests (`default:<name>` / round-robin / least-loaded), a fair multi-engine stepper, per-engine stats, and in-band protocol errors |
 //! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |
 //! | [`config`]    | model/engine/policy/hardware configuration               |
 //! | [`convert`]   | TransMLA conversion toolchain (RoRoPE, FreqFold, BKV, PCA, Absorb) |

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{CacheKind, EngineConfig, PolicyKind};
+use transmla::config::{CacheKind, EngineConfig, ModelSpec, PolicyKind};
 use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
@@ -31,6 +31,7 @@ COMMANDS
   ppl        --arch gqa|mla --ckpt p.tnz [--rank R]
   generate   --arch gqa|mla --ckpt p.tnz [--rank R] --prompt TEXT [--max-new N]
   serve      --arch gqa|mla --ckpt p.tnz [--rank R] [--addr host:port]
+             [--model name[=SPEC]]... [--route R]   (multi-model serving)
   exp        fig2a|fig2b|fig3a|fig3b|table1|table4|table5|all
              [--out runs] [--config C] [--pretrain N] [--ft N] [--eval-batches N]
 
@@ -53,6 +54,21 @@ COMMON FLAGS
   --prefix-cache M  on|off (default off): cross-sequence prefix sharing over
                     the paged store — same-prefix prompts share cached
                     blocks copy-on-write; requires --cache paged
+
+MULTI-MODEL SERVING (serve only)
+  --model N[=SPEC]  register a named engine; SPEC is a comma-separated
+                    key=value list overriding the flags above for this
+                    engine (keys: arch/layout, rank, backend, policy,
+                    prefill-chunk, cache, block-size, cache-blocks,
+                    prefix-cache, batch, capacity, seed, ckpt), e.g.
+                    --model gqa-base=layout=gqa \\
+                    --model mla=layout=mla,cache=paged,policy=chunked:8
+                    Repeatable; unspecified keys inherit the bare flags.
+                    Without any --model, the bare flags become the
+                    implicit `default` model (v1 invocations unchanged).
+  --route R         routing for requests without a \"model\" field:
+                    default:<name>|round-robin|least-loaded
+                    (default: default:<first registered model>)
 ";
 
 fn main() {
@@ -66,6 +82,10 @@ struct Args {
     cmd: String,
     sub: Option<String>,
     flags: HashMap<String, String>,
+    /// Every `--flag value` occurrence in command-line order, so
+    /// repeatable flags (`--model`) keep all their values; `flags`
+    /// holds the last occurrence for single-valued lookups.
+    all_flags: Vec<(String, String)>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -73,13 +93,18 @@ fn parse_args() -> Result<Args> {
     let cmd = it.next().unwrap_or_else(|| "help".into());
     let mut sub = None;
     let mut flags = HashMap::new();
+    let mut all_flags = Vec::new();
     let mut pending_key: Option<String> = None;
+    let mut record = |flags: &mut HashMap<String, String>, k: String, v: String| {
+        flags.insert(k.clone(), v.clone());
+        all_flags.push((k, v));
+    };
     for a in it {
         if let Some(k) = pending_key.take() {
-            flags.insert(k, a);
+            record(&mut flags, k, a);
         } else if let Some(stripped) = a.strip_prefix("--") {
             if let Some((k, v)) = stripped.split_once('=') {
-                flags.insert(k.to_string(), v.to_string());
+                record(&mut flags, k.to_string(), v.to_string());
             } else {
                 pending_key = Some(stripped.to_string());
             }
@@ -90,14 +115,24 @@ fn parse_args() -> Result<Args> {
         }
     }
     if let Some(k) = pending_key {
-        flags.insert(k, "true".into()); // boolean flag
+        record(&mut flags, k, "true".into()); // boolean flag
     }
-    Ok(Args { cmd, sub, flags })
+    drop(record);
+    Ok(Args { cmd, sub, flags, all_flags })
 }
 
 impl Args {
     fn get(&self, k: &str) -> Option<&str> {
         self.flags.get(k).map(String::as_str)
+    }
+
+    /// All values of a repeatable flag, in command-line order.
+    fn get_all(&self, k: &str) -> Vec<&str> {
+        self.all_flags
+            .iter()
+            .filter(|(key, _)| key == k)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     fn usize_flag(&self, k: &str, default: usize) -> usize {
@@ -110,6 +145,50 @@ impl Args {
 
     fn has(&self, k: &str) -> bool {
         self.flags.contains_key(k)
+    }
+}
+
+/// Flag lookup for one engine build: per-model SPEC overrides first
+/// (last occurrence wins), then the top-level flags — so every `--model`
+/// engine inherits any setting its SPEC leaves out from the bare flags,
+/// and a legacy invocation is just the empty-override view.
+struct FlagView<'a> {
+    args: &'a Args,
+    overrides: &'a [(String, String)],
+}
+
+impl<'a> FlagView<'a> {
+    fn base(args: &'a Args) -> FlagView<'a> {
+        FlagView { args, overrides: &[] }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|(key, _)| key == k)
+            .map(|(_, v)| v.as_str())
+            .or_else(|| self.args.get(k))
+    }
+
+    /// Lookup under two spellings (`arch` vs the SPEC's `layout`),
+    /// overrides before base flags for both.
+    fn get_either(&self, k1: &str, k2: &str) -> Option<&str> {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|(key, _)| key == k1 || key == k2)
+            .map(|(_, v)| v.as_str())
+            .or_else(|| self.args.get(k1))
+            .or_else(|| self.args.get(k2))
+    }
+
+    fn usize_flag(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str_flag<'b>(&'b self, k: &str, default: &'b str) -> &'b str {
+        self.get(k).unwrap_or(default)
     }
 }
 
@@ -142,8 +221,8 @@ fn run() -> Result<()> {
     }
 }
 
-/// Engine settings from the common flags.
-fn engine_cfg(args: &Args) -> Result<EngineConfig> {
+/// Engine settings from the common flags (or a `--model` SPEC view).
+fn engine_cfg(args: &FlagView) -> Result<EngineConfig> {
     let mut cache = CacheKind::parse(args.str_flag("cache", "fixed"))?;
     if let CacheKind::Paged { ref mut block_size, ref mut n_blocks } = cache {
         if let Some(b) = args.get("block-size") {
@@ -202,7 +281,7 @@ fn engine_cfg(args: &Args) -> Result<EngineConfig> {
 }
 
 /// Build an engine for generate/serve: hermetic sim or artifact-backed.
-fn build_engine(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<Engine> {
+fn build_engine(art_dir: &Path, cfg_name: &str, args: &FlagView) -> Result<Engine> {
     let cfg = engine_cfg(args)?;
     match args.str_flag("backend", "xla") {
         "sim" => {
@@ -283,7 +362,7 @@ fn cmd_train(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_ckpt_or_init(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<Params> {
+fn load_ckpt_or_init(rt: &Runtime, cfg_name: &str, args: &FlagView) -> Result<Params> {
     match args.get("ckpt") {
         Some(p) if Path::new(p).exists() => Params::load(Path::new(p)),
         Some(p) => bail!("checkpoint {p} not found"),
@@ -310,7 +389,7 @@ fn cmd_convert(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
     let fold = args.usize_flag("fold", 1);
     let out = PathBuf::from(args.str_flag("out", "runs/mla.tnz"));
     let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
-    let gqa = load_ckpt_or_init(rt, cfg_name, args)?;
+    let gqa = load_ckpt_or_init(rt, cfg_name, &FlagView::base(args))?;
     let calib = make_calib(rt, cfg_name, &gqa)?;
     let opts = ConvertOptions {
         rank,
@@ -344,8 +423,9 @@ fn cmd_convert(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn parse_arch(args: &Args) -> Result<Arch> {
-    match args.str_flag("arch", "gqa") {
+fn parse_arch(args: &FlagView) -> Result<Arch> {
+    // `layout` is the `--model` SPEC spelling of `--arch`.
+    match args.get_either("arch", "layout").unwrap_or("gqa") {
         "gqa" => Ok(Arch::Gqa),
         "mla" => Ok(Arch::Mla { rank: args.usize_flag("rank", 32) }),
         other => bail!("unknown arch `{other}`"),
@@ -354,14 +434,14 @@ fn parse_arch(args: &Args) -> Result<Arch> {
 
 fn cmd_ppl(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
     let cfg = rt.manifest.configs.get(cfg_name).context("config")?.clone();
-    let params = load_ckpt_or_init(rt, cfg_name, args)?;
+    let params = load_ckpt_or_init(rt, cfg_name, &FlagView::base(args))?;
     let corpus = Corpus::synthetic(7, 2_000_000);
     let batches: Vec<_> = corpus
         .val_batches(8, cfg.max_seq)
         .into_iter()
         .take(4)
         .collect();
-    let name = match parse_arch(args)? {
+    let name = match parse_arch(&FlagView::base(args))? {
         Arch::Gqa => format!("{cfg_name}_gqa_prefill"),
         Arch::Mla { rank } => format!("{cfg_name}_mla_prefill_r{rank}"),
     };
@@ -372,7 +452,7 @@ fn cmd_ppl(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
-    let mut engine = build_engine(art_dir, cfg_name, args)?;
+    let mut engine = build_engine(art_dir, cfg_name, &FlagView::base(args))?;
     let prompt = args.str_flag("prompt", "the model ");
     let max_new = args.usize_flag("max-new", 64);
     let mut req = Request::from_text(0, prompt, max_new);
@@ -391,10 +471,38 @@ fn cmd_generate(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: build the engine registry from repeatable `--model name=SPEC`
+/// flags (each SPEC overrides the bare flags for that engine only), or —
+/// with no `--model` at all — the legacy single-model invocation, whose
+/// bare flags become the implicit `default` model. Requests without a
+/// `model` field follow `--route` (default: the first registered model).
 fn cmd_serve(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
-    let mut engine = build_engine(art_dir, cfg_name, args)?;
-    let addr = args.str_flag("addr", "127.0.0.1:7433");
-    server::serve(&mut engine, addr)
+    let addr = args.str_flag("addr", "127.0.0.1:7433").to_string();
+    let model_flags = args.get_all("model");
+    let mut registry = if model_flags.is_empty() {
+        server::EngineRegistry::single(build_engine(
+            art_dir,
+            cfg_name,
+            &FlagView::base(args),
+        )?)
+    } else {
+        let specs = model_flags
+            .iter()
+            .map(|m| ModelSpec::parse(m))
+            .collect::<Result<Vec<_>>>()?;
+        let mut reg = server::EngineRegistry::new(server::RoutePolicy::Default(
+            specs[0].name.clone(),
+        ));
+        for spec in &specs {
+            let view = FlagView { args, overrides: &spec.overrides };
+            reg.register(&spec.name, build_engine(art_dir, cfg_name, &view)?)?;
+        }
+        reg
+    };
+    if let Some(r) = args.get("route") {
+        registry.set_route(server::RoutePolicy::parse(r)?);
+    }
+    server::serve(&mut registry, &addr)
 }
 
 fn cmd_exp(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {

@@ -1,44 +1,73 @@
-//! TCP JSONL serving front-end.
+//! TCP JSONL serving front-end: one server, N named engines.
 //!
-//! Protocol (normative reference: `docs/PROTOCOL.md` at the repo root —
-//! the schema regression tests in `tests/integration_server.rs` assert
-//! the field lists documented there): one JSON object per line.
-//!   -> {"prompt": "...", "max_new": 32, "temperature": 0.7}
-//!   <- {"id": 1, "text": "...", "latency_s": 0.12, "ttft_s": 0.02,
-//!       "tpot_s": 0.005, "prompt_len": 9}
-//!   -> {"cmd": "stats"}    <- {"counters": {...}, "policy": "...",
-//!                              "cache": {..., "prefix": {...}},
-//!                              "decode_s": {"p50": ..., "p95": ..., "p99": ...}, ...}
+//! Protocol **v2** (normative reference: `docs/PROTOCOL.md` at the repo
+//! root — the schema regression tests in `tests/integration_server.rs`
+//! assert the field lists documented there): one JSON object per line.
+//!   -> {"prompt": "...", "max_new": 32, "temperature": 0.7,
+//!       "model": "mla"}                          // model optional
+//!   <- {"id": 1, "model": "mla", "text": "...", "max_new": 32,
+//!       "latency_s": 0.12, "ttft_s": 0.02, "tpot_s": 0.005,
+//!       "prompt_len": 9, ...}
+//!   -> {"cmd": "models"}   <- {"models": [{"name": ..., "arch": ...,
+//!                              ...}], "routing": "default:mla"}
+//!   -> {"cmd": "stats"}    <- {"engines": {"<name>": <per-engine stats,
+//!                              shape unchanged from v1>},
+//!                              "server": {"routing": ..., ...}}
 //!   -> {"cmd": "ping"}     <- {"pong": true}
 //!   -> {"cmd": "shutdown"} <- {"ok": true}
+//!
+//! The server hosts an [`EngineRegistry`]: requests carrying a `model`
+//! field go to that engine (an unknown name is an in-band error), the
+//! rest follow the registry's [`RoutePolicy`] (`default:<name>` /
+//! `round-robin` / `least-loaded`). A legacy single-model invocation is
+//! just a one-engine registry named `default`, so every v1 client line
+//! keeps working unchanged.
 //!
 //! Unknown fields on a request line are ignored (forward compatibility);
 //! unknown *commands* are errors. Error paths answer in-band instead of
 //! dropping the line:
-//!   bad JSON        <- {"error": "bad json: ..."}
-//!   unknown cmd     <- {"error": "unknown cmd `...`"}
-//!   missing prompt  <- {"error": "missing prompt"}
+//!   bad JSON         <- {"error": "bad json: ..."}
+//!   unknown cmd      <- {"error": "unknown cmd `...`"}
+//!   missing prompt   <- {"error": "missing prompt"}
+//!   bad temperature  <- {"error": "bad temperature"}   // negative/NaN/inf
+//!   bad model        <- {"error": "bad model"} / {"error": "unknown model `...`"}
 //!
-//! The engine runs on the caller's thread (the XLA client is not `Send`);
-//! connection handlers exchange plain data with it through a shared
-//! queue, so acceptor threads never touch backend state. Completions are
-//! drained from the engine every loop iteration (`take_completions`), so
-//! long-running servers hold no unbounded history.
+//! The engines run on the caller's thread (the XLA client is not `Send`);
+//! connection handlers exchange plain data with them through a shared
+//! queue, so acceptor threads never touch backend state. Every loop
+//! iteration steps each non-idle engine once (the fair multi-engine
+//! sweep — one model's long prefill never starves another's decodes) and
+//! drains completions, delivering each through a per-request reply
+//! channel looked up by id in O(1). A disconnected client's reply send
+//! fails silently and its pending entry is removed with the completion,
+//! so abandoned requests cannot wedge the loop or leak.
 
+mod registry;
+
+pub use registry::{EngineRegistry, RoutePolicy};
+
+use crate::backend::Arch;
 use crate::coordinator::{Engine, Request};
 use crate::json::Json;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 enum Incoming {
-    /// A generation request awaiting a completion reply.
-    Req { req: Request, reply: Sender<Json> },
+    /// A generation request awaiting a completion reply. `model` is the
+    /// request's explicit engine choice (`None` follows the routing
+    /// policy); routing happens on the engine thread, where the live
+    /// load depths are.
+    Req { req: Request, model: Option<String>, reply: Sender<Json> },
     /// A stats snapshot request (answered by the engine loop).
     Stats { reply: Sender<Json> },
+    /// A model-listing request (answered by the engine loop).
+    Models { reply: Sender<Json> },
 }
 
 /// Shared state between acceptor threads and the engine loop.
@@ -100,13 +129,14 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
                 writeln!(writer, "{{\"pong\":true}}")?;
                 continue;
             }
-            Some("stats") => {
+            Some(cmd @ ("stats" | "models")) => {
                 let (tx, rx) = channel();
-                state
-                    .incoming
-                    .lock()
-                    .unwrap()
-                    .push(Incoming::Stats { reply: tx });
+                let inc = if cmd == "stats" {
+                    Incoming::Stats { reply: tx }
+                } else {
+                    Incoming::Models { reply: tx }
+                };
+                state.incoming.lock().unwrap().push(inc);
                 match rx.recv() {
                     Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
                     Err(_) => break,
@@ -130,15 +160,38 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
                 continue;
             }
         };
+        // Sampling params are validated in-band at the edge: a negative,
+        // NaN, infinite, or non-numeric temperature never reaches an
+        // engine (JSON cannot encode NaN, but `1e999` overflows to inf).
+        // The finiteness check runs on the f32 the engine will actually
+        // use — a finite f64 like 1e300 saturates to inf in the cast.
+        let temperature = match msg.get("temperature") {
+            None => 0.0,
+            Some(t) => match t.as_f64() {
+                Some(v) if v >= 0.0 && (v as f32).is_finite() => v as f32,
+                _ => {
+                    writeln!(writer, "{}", error_json("bad temperature").to_string())?;
+                    continue;
+                }
+            },
+        };
+        // An explicit model choice must be a string; the engine loop
+        // checks it against the registry (unknown names answer in-band).
+        let model = match msg.get("model") {
+            None => None,
+            Some(m) => match m.as_str() {
+                Some(name) => Some(name.to_string()),
+                None => {
+                    writeln!(writer, "{}", error_json("bad model").to_string())?;
+                    continue;
+                }
+            },
+        };
         let max_new = msg
             .get("max_new")
             .and_then(Json::as_usize)
             .unwrap_or(32)
             .max(1);
-        let temperature = msg
-            .get("temperature")
-            .and_then(Json::as_f64)
-            .unwrap_or(0.0) as f32;
         let id = state.next_id.fetch_add(1, Ordering::SeqCst);
         let mut req = Request::from_text(id, &prompt, max_new);
         req.temperature = temperature;
@@ -147,7 +200,7 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
             .incoming
             .lock()
             .unwrap()
-            .push(Incoming::Req { req, reply: tx });
+            .push(Incoming::Req { req, model, reply: tx });
         // Block this connection until the engine answers.
         match rx.recv() {
             Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
@@ -157,10 +210,13 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
     Ok(())
 }
 
-/// Stats snapshot: counters, throughput, and p50/p95/p99 latency
-/// summaries for every recorded series (decode_s, prefill_s, latency_s,
-/// queue_s, ttft_s, tpot_s, ...).
-fn stats_json(engine: &Engine) -> Json {
+/// Per-engine stats snapshot: counters, throughput, and p50/p95/p99
+/// latency summaries for every recorded series (decode_s, prefill_s,
+/// latency_s, queue_s, ttft_s, tpot_s, ...). This object's shape is the
+/// v1 `stats` reply unchanged — v2 nests one per engine under
+/// `engines.<name>`, so existing dashboards re-point instead of
+/// re-parse.
+fn engine_stats_json(engine: &Engine) -> Json {
     let m = &engine.metrics;
     let mut j = Json::obj();
     let mut counters = Json::obj();
@@ -224,11 +280,68 @@ fn stats_json(engine: &Engine) -> Json {
     j
 }
 
+/// v2 stats: one v1-shaped object per engine under `engines`, plus a
+/// `server` object for registry-level facts.
+fn stats_json(registry: &EngineRegistry, pending: usize, started: Instant) -> Json {
+    let mut j = Json::obj();
+    let mut engines = Json::obj();
+    for e in registry.engines() {
+        engines.set(e.name(), engine_stats_json(e));
+    }
+    j.set("engines", engines);
+    let mut srv = Json::obj();
+    srv.set("models", Json::Num(registry.len() as f64));
+    srv.set("routing", Json::Str(registry.route_policy().name()));
+    srv.set("pending", Json::Num(pending as f64));
+    srv.set("uptime_s", Json::Num(started.elapsed().as_secs_f64()));
+    j.set("server", srv);
+    j
+}
+
+/// `{"cmd":"models"}`: every hosted engine with its serving spec, plus
+/// the routing policy. `default` marks the engine unrouted requests go
+/// to under a `default:<name>` policy.
+fn models_json(registry: &EngineRegistry) -> Json {
+    let default = match registry.route_policy() {
+        RoutePolicy::Default(name) => Some(name.clone()),
+        _ => None,
+    };
+    let mut entries = Vec::new();
+    for e in registry.engines() {
+        let spec = e.spec();
+        let mut m = Json::obj();
+        m.set("name", Json::Str(e.name().to_string()));
+        m.set("backend", Json::Str(spec.name.clone()));
+        match spec.arch {
+            Arch::Gqa => {
+                m.set("arch", Json::Str("gqa".to_string()));
+            }
+            Arch::Mla { rank } => {
+                m.set("arch", Json::Str("mla".to_string()));
+                m.set("rank", Json::Num(rank as f64));
+            }
+        }
+        m.set("policy", Json::Str(e.policy_name().to_string()));
+        m.set("cache", Json::Str(e.cache.kind_name().to_string()));
+        m.set("batch", Json::Num(spec.batch as f64));
+        m.set("capacity", Json::Num(spec.capacity as f64));
+        m.set("max_prompt", Json::Num(spec.max_prompt() as f64));
+        m.set("default", Json::Bool(default.as_deref() == Some(e.name())));
+        entries.push(m);
+    }
+    let mut j = Json::obj();
+    j.set("models", Json::Arr(entries));
+    j.set("routing", Json::Str(registry.route_policy().name()));
+    j
+}
+
 fn completion_json(c: &crate::coordinator::Completion) -> Json {
     let mut j = Json::obj();
     j.set("id", Json::Num(c.id as f64));
+    j.set("model", Json::Str(c.model.clone()));
     j.set("text", Json::Str(c.text()));
     j.set("prompt_len", Json::Num(c.prompt_len as f64));
+    j.set("max_new", Json::Num(c.max_new as f64));
     j.set("latency_s", Json::Num(c.latency_s));
     j.set("queue_s", Json::Num(c.queue_s));
     j.set("prefill_s", Json::Num(c.prefill_s));
@@ -237,20 +350,27 @@ fn completion_json(c: &crate::coordinator::Completion) -> Json {
     j
 }
 
-/// Run the serving loop: accepts connections on `addr`, feeds the engine,
-/// replies per request. Returns once a `shutdown` command arrives and all
-/// in-flight work is drained.
-pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
+/// Run the serving loop over a registry of named engines: accepts
+/// connections on `addr`, routes each request to an engine (explicit
+/// `model` field, else the registry's [`RoutePolicy`]), steps every
+/// non-idle engine each iteration, and replies per request. Returns once
+/// a `shutdown` command arrives and all in-flight work is drained.
+pub fn serve(registry: &mut EngineRegistry, addr: &str) -> Result<()> {
+    registry.validate()?;
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("bind {addr}"))?;
     listener.set_nonblocking(true)?;
     eprintln!(
-        "[server] listening on {addr} (backend `{}`, policy `{}`)",
-        engine.spec().name,
-        engine.policy_name()
+        "[server] listening on {addr} ({} model(s): {}; routing `{}`)",
+        registry.len(),
+        registry.names().join(", "),
+        registry.route_policy().name()
     );
+    let started = Instant::now();
     let state = ServerState::new();
-    let mut pending: Vec<(u64, Sender<Json>)> = Vec::new();
+    // Reply channels by request id — O(1) completion delivery (the old
+    // Vec scan was O(pending) per completion).
+    let mut pending: HashMap<u64, Sender<Json>> = HashMap::new();
 
     loop {
         // Accept any waiting connections; each gets its own thread.
@@ -266,21 +386,41 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
                 Err(e) => return Err(e.into()),
             }
         }
-        // Drain new work into the engine; answer stats immediately.
+        // Drain new work into the engines; answer stats/models
+        // immediately. Routing runs here — on the engine thread — so
+        // `least-loaded` sees live depths, and unknown models answer
+        // in-band without ever touching an engine.
         for inc in state.incoming.lock().unwrap().drain(..) {
             match inc {
-                Incoming::Req { req, reply } => {
-                    pending.push((req.id, reply));
-                    engine.submit(req);
+                Incoming::Req { mut req, model, reply } => {
+                    match registry.route(model.as_deref()) {
+                        Ok(idx) => {
+                            let engine = registry.engine_at_mut(idx);
+                            // Server-edge clamp: a hostile max_new cannot
+                            // demand more than the engine's remaining
+                            // capacity for this prompt. The completion
+                            // echoes the effective budget.
+                            let ceiling = engine.max_new_ceiling(req.prompt.len());
+                            req.max_new_tokens = req.max_new_tokens.min(ceiling);
+                            pending.insert(req.id, reply);
+                            engine.submit(req);
+                        }
+                        Err(e) => {
+                            let _ = reply.send(error_json(&format!("{e}")));
+                        }
+                    }
                 }
                 Incoming::Stats { reply } => {
-                    let _ = reply.send(stats_json(engine));
+                    let _ = reply.send(stats_json(registry, pending.len(), started));
+                }
+                Incoming::Models { reply } => {
+                    let _ = reply.send(models_json(registry));
                 }
             }
         }
-        // Advance the engine.
-        if !engine.is_idle() {
-            engine.step()?;
+        // Advance every non-idle engine one iteration (the fair sweep).
+        if !registry.is_idle() {
+            registry.step_non_idle()?;
         } else if state.is_shutdown() && pending.is_empty() {
             eprintln!("[server] shutdown");
             return Ok(());
@@ -288,10 +428,11 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
         // Deliver completions (drained every iteration so the history
-        // cannot grow without bound in server mode).
-        for c in engine.take_completions() {
-            if let Some(idx) = pending.iter().position(|(id, _)| *id == c.id) {
-                let (_, tx) = pending.swap_remove(idx);
+        // cannot grow without bound in server mode). A send to a
+        // disconnected client fails silently; the pending entry is gone
+        // either way, so abandoned requests cannot leak.
+        for c in registry.take_completions() {
+            if let Some(tx) = pending.remove(&c.id) {
                 let _ = tx.send(completion_json(&c));
             }
         }
@@ -300,9 +441,22 @@ pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
 
 /// Minimal client helper (used by tests and examples).
 pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<Json> {
+    client_request_model(addr, prompt, max_new, None)
+}
+
+/// Like [`client_request`], targeting a named model (protocol v2).
+pub fn client_request_model(
+    addr: &str,
+    prompt: &str,
+    max_new: usize,
+    model: Option<&str>,
+) -> Result<Json> {
     let mut msg = Json::obj();
     msg.set("prompt", Json::Str(prompt.into()));
     msg.set("max_new", Json::Num(max_new as f64));
+    if let Some(m) = model {
+        msg.set("model", Json::Str(m.to_string()));
+    }
     client_line(addr, &msg.to_string())
 }
 
@@ -320,6 +474,11 @@ pub fn client_line(addr: &str, line: &str) -> Result<Json> {
 /// Fetch the stats snapshot.
 pub fn client_stats(addr: &str) -> Result<Json> {
     client_line(addr, "{\"cmd\":\"stats\"}")
+}
+
+/// Fetch the hosted-model listing.
+pub fn client_models(addr: &str) -> Result<Json> {
+    client_line(addr, "{\"cmd\":\"models\"}")
 }
 
 /// Send the shutdown command.

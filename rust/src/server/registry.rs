@@ -1,0 +1,340 @@
+//! Multi-model serving: a named collection of engines behind one
+//! endpoint, with per-request routing and a fair stepper.
+//!
+//! TransMLA's whole pitch is *migration*: a GQA checkpoint and its
+//! MLA-converted twin coexist, and operators A/B them behind one server.
+//! The [`EngineRegistry`] hosts N named [`Engine`]s (each with its own
+//! backend / cache store / policy config) and a [`RoutePolicy`] picks
+//! the engine for requests that do not name a model themselves:
+//!
+//!   * `default:<name>` — everything unrouted goes to one engine (the
+//!     single-model server's behaviour, and what a legacy invocation
+//!     gets: its engine is registered as `default`);
+//!   * `round-robin` — unrouted requests rotate through the engines in
+//!     registration order;
+//!   * `least-loaded` — unrouted requests go to the engine with the
+//!     smallest pipeline depth (queued + prefilling + decoding;
+//!     ties break toward registration order).
+//!
+//! The serving loop calls [`EngineRegistry::step_non_idle`] every
+//! iteration: every non-idle engine advances one [`Engine::step`], so
+//! one model's long prefill never starves another model's decodes — the
+//! StepPlan contract bounds stalls *within* an engine, the registry
+//! bounds them *across* engines.
+
+use crate::coordinator::{Completion, Engine};
+use anyhow::{bail, Result};
+
+/// How requests without an explicit `model` field pick an engine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Route everything unnamed to this engine.
+    Default(String),
+    /// Rotate through engines in registration order.
+    RoundRobin,
+    /// Pick the engine with the smallest queued+prefilling+decoding
+    /// depth (ties break toward registration order).
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    /// Parse `default:<name>` / `round-robin` / `least-loaded`.
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s {
+            "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "least-loaded" => Ok(RoutePolicy::LeastLoaded),
+            other => match other.strip_prefix("default:") {
+                Some(name) if !name.is_empty() => {
+                    Ok(RoutePolicy::Default(name.to_string()))
+                }
+                _ => bail!(
+                    "unknown route policy `{other}` \
+                     (default:<model>|round-robin|least-loaded)"
+                ),
+            },
+        }
+    }
+
+    /// Wire / stats spelling (round-trips through [`RoutePolicy::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            RoutePolicy::Default(m) => format!("default:{m}"),
+            RoutePolicy::RoundRobin => "round-robin".to_string(),
+            RoutePolicy::LeastLoaded => "least-loaded".to_string(),
+        }
+    }
+}
+
+/// N named engines behind one serving endpoint (see the module docs).
+pub struct EngineRegistry {
+    engines: Vec<Engine>,
+    route: RoutePolicy,
+    /// Next engine index for `round-robin` routing.
+    rr_next: usize,
+}
+
+impl EngineRegistry {
+    /// An empty registry; [`EngineRegistry::register`] engines, then
+    /// [`EngineRegistry::validate`] before serving.
+    pub fn new(route: RoutePolicy) -> EngineRegistry {
+        EngineRegistry { engines: Vec::new(), route, rr_next: 0 }
+    }
+
+    /// The legacy single-model server: one engine named `default`,
+    /// routed `default:default` — every v1 invocation maps onto this.
+    pub fn single(engine: Engine) -> EngineRegistry {
+        let mut reg = EngineRegistry::new(RoutePolicy::Default("default".to_string()));
+        reg.register("default", engine).expect("fresh registry accepts one engine");
+        reg
+    }
+
+    /// Add a named engine. Names must be unique and non-empty; the
+    /// engine is renamed to `name` so its completions carry it.
+    pub fn register(&mut self, name: &str, mut engine: Engine) -> Result<()> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        if self.engines.iter().any(|e| e.name() == name) {
+            bail!("duplicate model name `{name}`");
+        }
+        engine.set_name(name);
+        self.engines.push(engine);
+        Ok(())
+    }
+
+    /// Replace the routing policy (validated on the next
+    /// [`EngineRegistry::validate`]).
+    pub fn set_route(&mut self, route: RoutePolicy) {
+        self.route = route;
+    }
+
+    pub fn route_policy(&self) -> &RoutePolicy {
+        &self.route
+    }
+
+    /// Serving-time sanity: at least one engine, and a `default:<name>`
+    /// route must name a registered engine.
+    pub fn validate(&self) -> Result<()> {
+        if self.engines.is_empty() {
+            bail!("registry has no engines (register at least one model)");
+        }
+        if let RoutePolicy::Default(name) = &self.route {
+            if self.get(name).is_none() {
+                bail!(
+                    "route policy `default:{name}` names no registered model \
+                     (have: {})",
+                    self.names().join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.engines.iter().map(|e| e.name().to_string()).collect()
+    }
+
+    pub fn engines(&self) -> &[Engine] {
+        &self.engines
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Engine> {
+        self.engines.iter().find(|e| e.name() == name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Engine> {
+        self.engines.iter_mut().find(|e| e.name() == name)
+    }
+
+    /// Pick the engine for a request: an explicit model name wins (an
+    /// unknown one is an in-band error), otherwise the routing policy
+    /// decides. Returns the engine index so the caller can borrow it
+    /// mutably afterwards.
+    pub fn route(&mut self, model: Option<&str>) -> Result<usize> {
+        if self.engines.is_empty() {
+            bail!("registry has no engines");
+        }
+        if let Some(name) = model {
+            return match self.engines.iter().position(|e| e.name() == name) {
+                Some(i) => Ok(i),
+                None => bail!(
+                    "unknown model `{name}` (have: {})",
+                    self.names().join(", ")
+                ),
+            };
+        }
+        match &self.route {
+            RoutePolicy::Default(name) => {
+                let name = name.clone();
+                self.route(Some(&name))
+            }
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % self.engines.len();
+                self.rr_next = (self.rr_next + 1) % self.engines.len();
+                Ok(i)
+            }
+            RoutePolicy::LeastLoaded => Ok(self
+                .engines
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.load())
+                .map(|(i, _)| i)
+                .expect("non-empty registry")),
+        }
+    }
+
+    pub fn engine_at_mut(&mut self, idx: usize) -> &mut Engine {
+        &mut self.engines[idx]
+    }
+
+    /// All engines drained of work?
+    pub fn is_idle(&self) -> bool {
+        self.engines.iter().all(Engine::is_idle)
+    }
+
+    /// The fair multi-engine stepper: advance every non-idle engine one
+    /// iteration. Within an engine the StepPlan contract bounds a decode
+    /// stall to one prefill chunk; across engines this round-robin sweep
+    /// bounds it to one iteration of each co-hosted model — a long
+    /// prefill on one model cannot starve another model's decodes.
+    /// Returns how many engines stepped.
+    pub fn step_non_idle(&mut self) -> Result<usize> {
+        let mut stepped = 0;
+        for e in &mut self.engines {
+            if !e.is_idle() {
+                e.step()?;
+                stepped += 1;
+            }
+        }
+        Ok(stepped)
+    }
+
+    /// Drain finished requests from every engine (each completion's
+    /// `model` field says which engine produced it).
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for e in &mut self.engines {
+            out.extend(e.take_completions());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+    use crate::config::EngineConfig;
+    use crate::coordinator::Request;
+
+    fn engine() -> Engine {
+        Engine::new(SimBackend::gqa(4), EngineConfig::default())
+    }
+
+    fn two_model_registry(route: RoutePolicy) -> EngineRegistry {
+        let mut reg = EngineRegistry::new(route);
+        reg.register("gqa-base", engine()).unwrap();
+        reg.register(
+            "mla",
+            Engine::new(SimBackend::mla(4, 8), EngineConfig::default()),
+        )
+        .unwrap();
+        reg
+    }
+
+    #[test]
+    fn route_policy_parses_and_round_trips() {
+        for s in ["default:mla", "round-robin", "least-loaded"] {
+            assert_eq!(RoutePolicy::parse(s).unwrap().name(), s);
+        }
+        assert!(RoutePolicy::parse("default:").is_err());
+        assert!(RoutePolicy::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn registration_rejects_duplicates_and_empty_names() {
+        let mut reg = EngineRegistry::new(RoutePolicy::RoundRobin);
+        reg.register("a", engine()).unwrap();
+        assert!(reg.register("a", engine()).is_err(), "duplicate name");
+        assert!(reg.register("", engine()).is_err(), "empty name");
+        assert_eq!(reg.names(), vec!["a"]);
+        assert_eq!(reg.get("a").unwrap().name(), "a");
+    }
+
+    #[test]
+    fn validate_catches_empty_and_dangling_default() {
+        assert!(EngineRegistry::new(RoutePolicy::RoundRobin).validate().is_err());
+        let mut reg = EngineRegistry::new(RoutePolicy::Default("missing".to_string()));
+        reg.register("present", engine()).unwrap();
+        assert!(reg.validate().is_err(), "default must name a registered model");
+        reg.set_route(RoutePolicy::Default("present".to_string()));
+        reg.validate().unwrap();
+    }
+
+    #[test]
+    fn explicit_model_routing_beats_the_policy() {
+        let mut reg = two_model_registry(RoutePolicy::Default("gqa-base".to_string()));
+        let i = reg.route(Some("mla")).unwrap();
+        assert_eq!(reg.engine_at_mut(i).name(), "mla");
+        assert!(reg.route(Some("nope")).is_err(), "unknown model is an error");
+        let i = reg.route(None).unwrap();
+        assert_eq!(reg.engine_at_mut(i).name(), "gqa-base");
+    }
+
+    #[test]
+    fn round_robin_rotates_in_registration_order() {
+        let mut reg = two_model_registry(RoutePolicy::RoundRobin);
+        let picks: Vec<String> = (0..4)
+            .map(|_| {
+                let i = reg.route(None).unwrap();
+                reg.engine_at_mut(i).name().to_string()
+            })
+            .collect();
+        assert_eq!(picks, vec!["gqa-base", "mla", "gqa-base", "mla"]);
+    }
+
+    #[test]
+    fn least_loaded_follows_pipeline_depth() {
+        let mut reg = two_model_registry(RoutePolicy::LeastLoaded);
+        // Equal (zero) load ties toward registration order.
+        let i = reg.route(None).unwrap();
+        assert_eq!(reg.engine_at_mut(i).name(), "gqa-base");
+        // Loading gqa-base tips the next unrouted request to mla.
+        reg.get_mut("gqa-base")
+            .unwrap()
+            .submit(Request::from_text(1, "queued work", 4));
+        let i = reg.route(None).unwrap();
+        assert_eq!(reg.engine_at_mut(i).name(), "mla");
+    }
+
+    #[test]
+    fn fair_stepper_advances_every_non_idle_engine() {
+        let mut reg = two_model_registry(RoutePolicy::RoundRobin);
+        reg.get_mut("gqa-base")
+            .unwrap()
+            .submit(Request::from_text(1, "one", 2));
+        reg.get_mut("mla")
+            .unwrap()
+            .submit(Request::from_text(2, "two", 2));
+        assert!(!reg.is_idle());
+        assert_eq!(reg.step_non_idle().unwrap(), 2, "both engines step");
+        while !reg.is_idle() {
+            reg.step_non_idle().unwrap();
+        }
+        let mut comps = reg.take_completions();
+        comps.sort_by_key(|c| c.id);
+        assert_eq!(comps.len(), 2);
+        assert_eq!(comps[0].model, "gqa-base");
+        assert_eq!(comps[1].model, "mla");
+        assert_eq!(reg.step_non_idle().unwrap(), 0, "idle engines are skipped");
+    }
+}

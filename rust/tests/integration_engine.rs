@@ -618,3 +618,72 @@ fn all_policies_complete_a_bursty_workload() {
         e.slots_check().unwrap();
     }
 }
+
+/// Registry-level fairness: two co-hosted engines both make progress
+/// every sweep — a long chunked prefill on one model cannot starve the
+/// other model's short decodes — and each engine's completions are
+/// bit-identical to running it alone.
+#[test]
+fn registry_steps_engines_fairly_and_preserves_per_engine_results() {
+    use transmla::server::{EngineRegistry, RoutePolicy};
+
+    let long_prompt = "x".repeat(60);
+    let build_long = || {
+        Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                policy: PolicyKind::Chunked { chunk_tokens: 4 },
+                ..Default::default()
+            },
+        )
+    };
+    let build_short = || Engine::new(SimBackend::mla(4, 8), EngineConfig::default());
+    let long_reqs = || vec![Request::from_text(0, &long_prompt, 4)]; // 15 prefill chunks
+    let short_reqs = || {
+        (0..3)
+            .map(|i| Request::from_text(10 + i, "quick", 2))
+            .collect::<Vec<_>>()
+    };
+
+    let mut reg = EngineRegistry::new(RoutePolicy::RoundRobin);
+    reg.register("slow-prefill", build_long()).unwrap();
+    reg.register("fast-decode", build_short()).unwrap();
+    reg.validate().unwrap();
+    for r in long_reqs() {
+        reg.get_mut("slow-prefill").unwrap().submit(r);
+    }
+    for r in short_reqs() {
+        reg.get_mut("fast-decode").unwrap().submit(r);
+    }
+
+    // The fair sweep: while the long prompt is still chunking through
+    // prefill, the other engine must finish its whole workload — its
+    // decodes are never starved by the co-hosted model.
+    let mut fast_done_while_slow_prefilling = false;
+    while !reg.is_idle() {
+        reg.step_non_idle().unwrap();
+        if reg.get("fast-decode").unwrap().is_idle()
+            && !reg.get("slow-prefill").unwrap().is_idle()
+        {
+            fast_done_while_slow_prefilling = true;
+        }
+    }
+    assert!(
+        fast_done_while_slow_prefilling,
+        "co-hosted engine was starved by the other model's long prefill"
+    );
+
+    let mut served = reg.take_completions();
+    served.sort_by_key(|c| c.id);
+    assert_eq!(served.len(), 4);
+    assert!(served.iter().all(|c| !c.model.is_empty()));
+
+    // Bit-parity with solo runs of the same engines and requests.
+    let solo_long = build_long().generate(long_reqs()).unwrap();
+    let solo_short = build_short().generate(short_reqs()).unwrap();
+    let solo: Vec<_> = solo_long.into_iter().chain(solo_short).collect();
+    for (s, r) in served.iter().zip(solo.iter()) {
+        assert_eq!(s.id, r.id);
+        assert_eq!(s.tokens, r.tokens, "registry run diverged for id {}", s.id);
+    }
+}

@@ -1,11 +1,16 @@
-//! Integration: the TCP JSONL server protocol — happy path, error paths
-//! (bad JSON, unknown cmd, missing prompt), and the stats command —
-//! hermetically over `SimBackend` (no artifacts, no XLA runtime).
+//! Integration: the TCP JSONL server protocol v2 — multi-model routing,
+//! the happy path, error paths (bad JSON, unknown cmd, missing prompt,
+//! bad temperature, unknown model), the nested stats shape, and the
+//! `models` command — hermetically over `SimBackend` (no artifacts, no
+//! XLA runtime).
 //!
 //! The wire format asserted here is specified in `docs/PROTOCOL.md`; the
 //! schema regression tests (`stats_schema_matches_protocol_md`,
-//! `unknown_request_fields_are_ignored`) keep that document honest —
-//! adding or renaming a field means updating both.
+//! `models_cmd_schema_matches_protocol_md`,
+//! `unknown_request_fields_are_ignored`,
+//! `v1_client_line_works_against_a_legacy_single_model_server`) keep
+//! that document honest — adding or renaming a field means updating
+//! both.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -13,24 +18,16 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 use transmla::backend::SimBackend;
 use transmla::config::{CacheKind, EngineConfig, PolicyKind};
-use transmla::coordinator::Engine;
+use transmla::coordinator::{Engine, Request};
 use transmla::json::Json;
-use transmla::server;
+use transmla::server::{self, EngineRegistry, RoutePolicy};
 
-fn start_server(addr: &'static str, policy: PolicyKind) -> JoinHandle<()> {
-    let handle = std::thread::spawn(move || {
-        let mut e = Engine::new(
-            SimBackend::gqa(4),
-            EngineConfig { policy, ..Default::default() },
-        );
-        server::serve(&mut e, addr).unwrap();
-    });
-    // Wait until the listener answers pings.
+fn wait_for_ping(addr: &str) {
     let deadline = Instant::now() + Duration::from_secs(5);
     loop {
         if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
             if j.get("pong").is_some() {
-                return handle;
+                return;
             }
         }
         assert!(Instant::now() < deadline, "server at {addr} never came up");
@@ -38,11 +35,54 @@ fn start_server(addr: &'static str, policy: PolicyKind) -> JoinHandle<()> {
     }
 }
 
+/// Legacy single-model server: one engine registered as `default`.
+fn start_server(addr: &'static str, policy: PolicyKind) -> JoinHandle<()> {
+    let handle = std::thread::spawn(move || {
+        let e = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig { policy, ..Default::default() },
+        );
+        let mut reg = EngineRegistry::single(e);
+        server::serve(&mut reg, addr).unwrap();
+    });
+    wait_for_ping(addr);
+    handle
+}
+
+/// Two-model server: a GQA engine and an MLA engine side by side.
+fn start_multi_server(addr: &'static str, route: RoutePolicy) -> JoinHandle<()> {
+    let handle = std::thread::spawn(move || {
+        let mut reg = EngineRegistry::new(route);
+        reg.register(
+            "gqa-base",
+            Engine::new(SimBackend::gqa(4), EngineConfig::default()),
+        )
+        .unwrap();
+        reg.register(
+            "mla",
+            Engine::new(SimBackend::mla(4, 8), EngineConfig::default()),
+        )
+        .unwrap();
+        server::serve(&mut reg, addr).unwrap();
+    });
+    wait_for_ping(addr);
+    handle
+}
+
 fn err_text(j: &Json) -> String {
     j.get("error")
         .and_then(Json::as_str)
         .unwrap_or_else(|| panic!("expected an error reply, got {j:?}"))
         .to_string()
+}
+
+/// Per-engine stats object (v1 shape) for `name` out of a v2 snapshot.
+fn engine_stats<'a>(stats: &'a Json, name: &str) -> &'a Json {
+    stats
+        .get("engines")
+        .unwrap_or_else(|| panic!("stats missing `engines`: {stats:?}"))
+        .get(name)
+        .unwrap_or_else(|| panic!("stats missing engine `{name}`: {stats:?}"))
 }
 
 #[test]
@@ -53,33 +93,66 @@ fn request_stats_shutdown_roundtrip() {
     let resp = server::client_request(addr, "hello server", 4).unwrap();
     assert!(resp.get("text").is_some(), "{resp:?}");
     assert_eq!(resp.get("prompt_len").and_then(Json::as_usize), Some(12));
+    assert_eq!(resp.get("model").and_then(Json::as_str), Some("default"));
+    assert_eq!(resp.get("max_new").and_then(Json::as_usize), Some(4));
     assert!(resp.get("latency_s").is_some());
     assert!(resp.get("ttft_s").is_some());
     assert!(resp.get("tpot_s").is_some());
 
     let stats = server::client_stats(addr).unwrap();
-    assert_eq!(
-        stats.get("policy").and_then(Json::as_str),
-        Some("admit-first")
-    );
-    let counters = stats.get("counters").expect("counters object");
+    let eng = engine_stats(&stats, "default");
+    assert_eq!(eng.get("policy").and_then(Json::as_str), Some("admit-first"));
+    let counters = eng.get("counters").expect("counters object");
     assert_eq!(counters.get("completed").and_then(Json::as_usize), Some(1));
     assert_eq!(counters.get("requests").and_then(Json::as_usize), Some(1));
     // Percentile summaries are present for the latency series.
     for series in ["decode_s", "prefill_s", "latency_s", "queue_s"] {
-        let s = stats
+        let s = eng
             .get(series)
-            .unwrap_or_else(|| panic!("stats missing `{series}`: {stats:?}"));
+            .unwrap_or_else(|| panic!("stats missing `{series}`: {eng:?}"));
         for key in ["p50", "p95", "p99", "mean", "n"] {
             assert!(s.get(key).is_some(), "`{series}` missing `{key}`");
         }
     }
     // Cache memory accounting rides along in every stats snapshot.
-    let cache = stats.get("cache").expect("cache accounting object");
+    let cache = eng.get("cache").expect("cache accounting object");
     assert_eq!(cache.get("kind").and_then(Json::as_str), Some("fixed"));
     let total = cache.get("bytes_total").and_then(Json::as_usize).unwrap();
     let in_use = cache.get("bytes_in_use").and_then(Json::as_usize).unwrap();
     assert!(total > 0 && in_use == total, "fixed pool is fully committed");
+    // Registry-level facts live in the `server` object.
+    let srv = stats.get("server").expect("server object");
+    assert_eq!(srv.get("models").and_then(Json::as_usize), Some(1));
+    assert_eq!(
+        srv.get("routing").and_then(Json::as_str),
+        Some("default:default")
+    );
+    assert_eq!(srv.get("pending").and_then(Json::as_usize), Some(0));
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// Backward compatibility: a v1 client line (no `model` field) against a
+/// legacy single-model invocation gets a completion whose v1 fields are
+/// all present with their v1 meanings (`id`, `text`, `prompt_len`,
+/// `latency_s`, `queue_s`, `prefill_s`, `ttft_s`, `tpot_s`); v2 only
+/// *adds* `model` and `max_new`.
+#[test]
+fn v1_client_line_works_against_a_legacy_single_model_server() {
+    let addr = "127.0.0.1:18438";
+    let handle = start_server(addr, PolicyKind::AdmitFirst);
+
+    let resp = server::client_line(addr, "{\"prompt\":\"v1 client\",\"max_new\":3}").unwrap();
+    for key in [
+        "id", "text", "prompt_len", "latency_s", "queue_s", "prefill_s",
+        "ttft_s", "tpot_s",
+    ] {
+        assert!(resp.get(key).is_some(), "v1 completion field `{key}`: {resp:?}");
+    }
+    assert_eq!(resp.get("prompt_len").and_then(Json::as_usize), Some(9));
+    assert_eq!(resp.get("model").and_then(Json::as_str), Some("default"));
+    assert_eq!(resp.get("max_new").and_then(Json::as_usize), Some(3));
 
     server::client_shutdown(addr).unwrap();
     handle.join().unwrap();
@@ -89,31 +162,25 @@ fn request_stats_shutdown_roundtrip() {
 fn paged_server_reports_block_accounting() {
     let addr = "127.0.0.1:18434";
     let handle = std::thread::spawn(move || {
-        let mut e = Engine::new(
+        let e = Engine::new(
             SimBackend::gqa(4),
             EngineConfig {
                 cache: CacheKind::Paged { block_size: 16, n_blocks: None },
                 ..Default::default()
             },
         );
-        server::serve(&mut e, addr).unwrap();
+        let mut reg = EngineRegistry::single(e);
+        server::serve(&mut reg, addr).unwrap();
     });
-    let deadline = Instant::now() + Duration::from_secs(5);
-    loop {
-        if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
-            if j.get("pong").is_some() {
-                break;
-            }
-        }
-        assert!(Instant::now() < deadline, "server at {addr} never came up");
-        std::thread::sleep(Duration::from_millis(20));
-    }
+    wait_for_ping(addr);
 
     let resp = server::client_request(addr, "page me", 4).unwrap();
     assert!(resp.get("text").is_some(), "{resp:?}");
 
     let stats = server::client_stats(addr).unwrap();
-    let cache = stats.get("cache").expect("cache accounting object");
+    let cache = engine_stats(&stats, "default")
+        .get("cache")
+        .expect("cache accounting object");
     assert_eq!(cache.get("kind").and_then(Json::as_str), Some("paged"));
     assert!(cache.get("blocks_total").and_then(Json::as_usize).unwrap() > 0);
     // All requests completed, so every block is back on the free list;
@@ -144,6 +211,32 @@ fn protocol_error_paths_answer_in_band() {
     let empty = server::client_line(addr, "{\"prompt\": \"\"}").unwrap();
     assert!(err_text(&empty).contains("missing prompt"), "{empty:?}");
 
+    // Sampling params are validated in-band: a negative, overflowing
+    // (1e999 -> inf), or non-numeric temperature never reaches an engine.
+    for line in [
+        "{\"prompt\":\"x\",\"temperature\":-0.5}",
+        "{\"prompt\":\"x\",\"temperature\":1e999}",
+        // Finite as f64 but saturates to inf in the engine's f32.
+        "{\"prompt\":\"x\",\"temperature\":1e300}",
+        "{\"prompt\":\"x\",\"temperature\":\"hot\"}",
+    ] {
+        let bad_t = server::client_line(addr, line).unwrap();
+        assert!(err_text(&bad_t).contains("bad temperature"), "{line} -> {bad_t:?}");
+    }
+    // A valid in-range temperature still serves.
+    let ok_t = server::client_line(
+        addr,
+        "{\"prompt\":\"warm\",\"max_new\":2,\"temperature\":0.7}",
+    )
+    .unwrap();
+    assert!(ok_t.get("text").is_some(), "{ok_t:?}");
+
+    // Model routing errors are in-band too.
+    let bad_m = server::client_line(addr, "{\"prompt\":\"x\",\"model\":7}").unwrap();
+    assert!(err_text(&bad_m).contains("bad model"), "{bad_m:?}");
+    let unknown_m = server::client_line(addr, "{\"prompt\":\"x\",\"model\":\"nope\"}").unwrap();
+    assert!(err_text(&unknown_m).contains("unknown model"), "{unknown_m:?}");
+
     // The connection survives an error line: errors are answered in-band,
     // then a valid request on the same socket still works.
     let mut stream = TcpStream::connect(addr).unwrap();
@@ -162,6 +255,28 @@ fn protocol_error_paths_answer_in_band() {
     handle.join().unwrap();
 }
 
+/// The server edge clamps `max_new` to the engine's remaining capacity
+/// for the prompt (a hostile request cannot demand an unserveable
+/// reservation) and echoes the effective value on the completion.
+#[test]
+fn max_new_is_clamped_to_capacity_and_echoed() {
+    let addr = "127.0.0.1:18439";
+    let handle = start_server(addr, PolicyKind::AdmitFirst);
+
+    // SimBackend::gqa capacity is 64; a 10-byte prompt leaves room for
+    // 64 - 10 + 1 = 55 tokens (the final one is write-free).
+    let resp = server::client_request(addr, "ten bytes.", 1_000_000).unwrap();
+    assert_eq!(resp.get("max_new").and_then(Json::as_usize), Some(55), "{resp:?}");
+    assert!(resp.get("text").is_some(), "the clamped request still serves");
+
+    // An in-range ask is untouched.
+    let resp = server::client_request(addr, "ten bytes.", 7).unwrap();
+    assert_eq!(resp.get("max_new").and_then(Json::as_usize), Some(7));
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
 #[test]
 fn chunked_server_reports_pipeline_queues_and_chunk_metrics() {
     let addr = "127.0.0.1:18435";
@@ -174,21 +289,22 @@ fn chunked_server_reports_pipeline_queues_and_chunk_metrics() {
     assert!(resp.get("prefill_s").is_some());
 
     let stats = server::client_stats(addr).unwrap();
-    assert_eq!(stats.get("policy").and_then(Json::as_str), Some("chunked"));
+    let eng = engine_stats(&stats, "default");
+    assert_eq!(eng.get("policy").and_then(Json::as_str), Some("chunked"));
     // Queue depths of the StepPlan pipeline (drained by now, but present).
     for depth in ["queued", "prefilling", "decoding"] {
         assert_eq!(
-            stats.get(depth).and_then(Json::as_usize),
+            eng.get(depth).and_then(Json::as_usize),
             Some(0),
-            "stats missing/nonzero `{depth}`: {stats:?}"
+            "stats missing/nonzero `{depth}`: {eng:?}"
         );
     }
     // Chunk metrics: a 29-char prompt at chunk 4 takes several chunks.
-    let counters = stats.get("counters").expect("counters");
+    let counters = eng.get("counters").expect("counters");
     assert!(counters.get("prefill_chunks").and_then(Json::as_usize).unwrap() >= 8);
-    let chunk_tokens = stats
+    let chunk_tokens = eng
         .get("chunk_tokens")
-        .unwrap_or_else(|| panic!("stats missing `chunk_tokens`: {stats:?}"));
+        .unwrap_or_else(|| panic!("stats missing `chunk_tokens`: {eng:?}"));
     assert!(chunk_tokens.get("p50").is_some());
 
     server::client_shutdown(addr).unwrap();
@@ -197,12 +313,13 @@ fn chunked_server_reports_pipeline_queues_and_chunk_metrics() {
 
 /// The schema regression test referenced by docs/PROTOCOL.md: every
 /// documented completion / stats / cache / prefix field is present on a
-/// prefix-enabled paged server, including the prefix-sharing counters.
+/// prefix-enabled paged server, including the v2 nesting (`engines` /
+/// `server`) and the prefix-sharing counters.
 #[test]
 fn stats_schema_matches_protocol_md() {
     let addr = "127.0.0.1:18436";
     let handle = std::thread::spawn(move || {
-        let mut e = Engine::new(
+        let e = Engine::new(
             SimBackend::gqa(4),
             EngineConfig {
                 cache: CacheKind::Paged { block_size: 8, n_blocks: None },
@@ -210,41 +327,44 @@ fn stats_schema_matches_protocol_md() {
                 ..Default::default()
             },
         );
-        server::serve(&mut e, addr).unwrap();
+        let mut reg = EngineRegistry::single(e);
+        server::serve(&mut reg, addr).unwrap();
     });
-    let deadline = Instant::now() + Duration::from_secs(5);
-    loop {
-        if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
-            if j.get("pong").is_some() {
-                break;
-            }
-        }
-        assert!(Instant::now() < deadline, "server at {addr} never came up");
-        std::thread::sleep(Duration::from_millis(20));
-    }
+    wait_for_ping(addr);
 
     // Two same-prefix requests: the second shares the first's cached
     // prefix blocks (requests are sequential, so the ordering is exact).
     let prompt = "the shared prefix lives here";
     let resp = server::client_request(addr, prompt, 4).unwrap();
-    // docs/PROTOCOL.md "Completion reply" field list.
+    // docs/PROTOCOL.md "Completion reply" field list (v2 = v1 + model +
+    // max_new).
     for key in [
-        "id", "text", "prompt_len", "latency_s", "queue_s", "prefill_s",
-        "ttft_s", "tpot_s",
+        "id", "model", "text", "prompt_len", "max_new", "latency_s",
+        "queue_s", "prefill_s", "ttft_s", "tpot_s",
     ] {
         assert!(resp.get(key).is_some(), "completion missing `{key}`: {resp:?}");
     }
     server::client_request(addr, prompt, 4).unwrap();
 
     let stats = server::client_stats(addr).unwrap();
-    // docs/PROTOCOL.md "Stats reply" top-level field list.
+    // docs/PROTOCOL.md "Stats reply" v2 top level: engines + server.
+    for key in ["engines", "server"] {
+        assert!(stats.get(key).is_some(), "stats missing `{key}`: {stats:?}");
+    }
+    let srv = stats.get("server").unwrap();
+    for key in ["models", "routing", "pending", "uptime_s"] {
+        assert!(srv.get(key).is_some(), "server missing `{key}`: {srv:?}");
+    }
+    // docs/PROTOCOL.md per-engine field list (the v1 stats shape,
+    // unchanged — dashboards re-point to `engines.<name>`).
+    let eng = engine_stats(&stats, "default");
     for key in [
         "counters", "policy", "decode_tok_per_s", "uptime_s", "queued",
         "prefilling", "decoding", "cache",
     ] {
-        assert!(stats.get(key).is_some(), "stats missing `{key}`: {stats:?}");
+        assert!(eng.get(key).is_some(), "stats missing `{key}`: {eng:?}");
     }
-    let cache = stats.get("cache").unwrap();
+    let cache = eng.get("cache").unwrap();
     // docs/PROTOCOL.md "cache object" field list.
     for key in [
         "kind", "bytes_total", "bytes_in_use", "bytes_worst_case",
@@ -270,6 +390,40 @@ fn stats_schema_matches_protocol_md() {
         prefix.get("blocks_cached").and_then(Json::as_usize).unwrap() > 0,
         "the prompt's full blocks stay cached"
     );
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// docs/PROTOCOL.md "models" command: every hosted engine with its spec.
+#[test]
+fn models_cmd_schema_matches_protocol_md() {
+    let addr = "127.0.0.1:18440";
+    let handle = start_multi_server(addr, RoutePolicy::Default("gqa-base".to_string()));
+
+    let resp = server::client_models(addr).unwrap();
+    assert_eq!(
+        resp.get("routing").and_then(Json::as_str),
+        Some("default:gqa-base")
+    );
+    let models = resp.get("models").and_then(Json::as_arr).expect("models array");
+    assert_eq!(models.len(), 2);
+    for m in models {
+        for key in [
+            "name", "backend", "arch", "policy", "cache", "batch", "capacity",
+            "max_prompt", "default",
+        ] {
+            assert!(m.get(key).is_some(), "model entry missing `{key}`: {m:?}");
+        }
+    }
+    // Registration order is preserved; the default flag follows routing.
+    assert_eq!(models[0].get("name").and_then(Json::as_str), Some("gqa-base"));
+    assert_eq!(models[0].get("arch").and_then(Json::as_str), Some("gqa"));
+    assert_eq!(models[0].get("default"), Some(&Json::Bool(true)));
+    assert_eq!(models[1].get("name").and_then(Json::as_str), Some("mla"));
+    assert_eq!(models[1].get("arch").and_then(Json::as_str), Some("mla"));
+    assert_eq!(models[1].get("rank").and_then(Json::as_usize), Some(8));
+    assert_eq!(models[1].get("default"), Some(&Json::Bool(false)));
 
     server::client_shutdown(addr).unwrap();
     handle.join().unwrap();
@@ -316,9 +470,204 @@ fn concurrent_clients_all_complete() {
     }
 
     let stats = server::client_stats(addr).unwrap();
-    let counters = stats.get("counters").expect("counters");
+    let counters = engine_stats(&stats, "default").get("counters").expect("counters");
     assert_eq!(counters.get("completed").and_then(Json::as_usize), Some(6));
 
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// The acceptance test for multi-model serving: one server hosting a GQA
+/// engine and an MLA engine serves an interleaved concurrent burst.
+/// Every reply's `model` matches its request's routing (id/model pairs
+/// never cross), per-engine stats depths are disjoint and correct, and
+/// each engine's completions are bit-identical to a single-engine run of
+/// the same requests.
+#[test]
+fn multi_model_burst_routes_correctly_and_matches_single_engine_runs() {
+    let addr = "127.0.0.1:18441";
+    let handle = start_multi_server(addr, RoutePolicy::Default("gqa-base".to_string()));
+
+    let prompts = [
+        "alpha prompt one",
+        "bravo prompt two!",
+        "charlie prompt three",
+        "delta prompt four??",
+    ];
+    let max_new = 6;
+
+    // Interleaved concurrent burst: every prompt goes to BOTH models at
+    // once, so both engines batch-serve while the other is busy.
+    let mut clients = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        for model in ["gqa-base", "mla"] {
+            let prompt = prompt.to_string();
+            clients.push(std::thread::spawn(move || {
+                let resp = server::client_request_model(
+                    addr,
+                    &prompt,
+                    max_new + i % 2, // uneven budgets interleave completion order
+                    Some(model),
+                )
+                .unwrap();
+                (model, prompt, resp)
+            }));
+        }
+    }
+    let mut by_model: Vec<(String, String)> = Vec::new();
+    for c in clients {
+        let (model, prompt, resp) = c.join().unwrap();
+        // The reply's model always matches the request's routing.
+        assert_eq!(
+            resp.get("model").and_then(Json::as_str),
+            Some(model),
+            "reply crossed models: {resp:?}"
+        );
+        let text = resp.get("text").and_then(Json::as_str).unwrap().to_string();
+        by_model.push((format!("{model}:{prompt}"), text));
+    }
+
+    // Bit-identical to single-engine runs of the same requests: the sim
+    // model is deterministic and greedy decoding ignores the RNG, so a
+    // fresh solo engine reproduces each text exactly.
+    for (arch, model) in [("gqa", "gqa-base"), ("mla", "mla")] {
+        let mut solo = match arch {
+            "gqa" => Engine::new(SimBackend::gqa(4), EngineConfig::default()),
+            _ => Engine::new(SimBackend::mla(4, 8), EngineConfig::default()),
+        };
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request::from_text(i as u64, p, max_new + i % 2))
+            .collect();
+        let comps = solo.generate(reqs).unwrap();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let served = by_model
+                .iter()
+                .find(|(k, _)| k == &format!("{model}:{prompt}"))
+                .map(|(_, t)| t.clone())
+                .unwrap_or_else(|| panic!("no reply for {model}:{prompt}"));
+            assert_eq!(
+                served,
+                comps[i].text(),
+                "{model} completion for `{prompt}` differs from a solo run"
+            );
+        }
+    }
+
+    // Per-engine stats are disjoint and correct: each engine saw exactly
+    // its own four requests, and the pipelines drained.
+    let stats = server::client_stats(addr).unwrap();
+    for name in ["gqa-base", "mla"] {
+        let eng = engine_stats(&stats, name);
+        let counters = eng.get("counters").expect("counters");
+        assert_eq!(
+            counters.get("requests").and_then(Json::as_usize),
+            Some(prompts.len()),
+            "{name} requests"
+        );
+        assert_eq!(
+            counters.get("completed").and_then(Json::as_usize),
+            Some(prompts.len()),
+            "{name} completed"
+        );
+        for depth in ["queued", "prefilling", "decoding"] {
+            assert_eq!(eng.get(depth).and_then(Json::as_usize), Some(0), "{name} {depth}");
+        }
+    }
+    assert_eq!(
+        stats
+            .get("server")
+            .and_then(|s| s.get("pending"))
+            .and_then(Json::as_usize),
+        Some(0)
+    );
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// Requests without a `model` field follow the registry's routing
+/// policy: `default:<name>` pins them, `round-robin` rotates through
+/// the engines in registration order.
+#[test]
+fn unrouted_requests_follow_the_routing_policy() {
+    // default:<name> pins unrouted requests to that engine.
+    let addr = "127.0.0.1:18442";
+    let handle = start_multi_server(addr, RoutePolicy::Default("mla".to_string()));
+    let resp = server::client_request(addr, "no model field", 3).unwrap();
+    assert_eq!(resp.get("model").and_then(Json::as_str), Some("mla"), "{resp:?}");
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+
+    // round-robin alternates (requests sent sequentially, so the
+    // rotation order is deterministic).
+    let addr = "127.0.0.1:18443";
+    let handle = start_multi_server(addr, RoutePolicy::RoundRobin);
+    let picks: Vec<String> = (0..4)
+        .map(|_| {
+            server::client_request(addr, "rotate me", 2)
+                .unwrap()
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert_eq!(picks, vec!["gqa-base", "mla", "gqa-base", "mla"]);
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// A client that disconnects mid-request must not wedge the engine loop
+/// or leak its pending reply entry: the completion's send fails
+/// silently, the entry is removed, and the server keeps serving.
+#[test]
+fn client_disconnect_mid_request_does_not_wedge_or_leak() {
+    let addr = "127.0.0.1:18444";
+    let handle = start_server(addr, PolicyKind::AdmitFirst);
+
+    // Send a request and slam the connection before the reply arrives.
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        writeln!(stream, "{{\"prompt\":\"abandon me\",\"max_new\":2}}").unwrap();
+        stream.flush().unwrap();
+        // Drop without reading: the reply channel's receiver dies with
+        // the handler thread.
+    }
+
+    // The loop still serves: a well-behaved request completes normally.
+    let resp = server::client_request(addr, "still serving", 8).unwrap();
+    assert!(resp.get("text").is_some(), "{resp:?}");
+
+    // Both requests complete (the abandoned one's delivery just fails
+    // silently) and no pending entry is left behind. Poll briefly: the
+    // abandoned request races the well-behaved one.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = server::client_stats(addr).unwrap();
+        let completed = engine_stats(&stats, "default")
+            .get("counters")
+            .and_then(|c| c.get("completed"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        let pending = stats
+            .get("server")
+            .and_then(|s| s.get("pending"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        if completed == 2 && pending == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "abandoned request wedged or leaked: completed {completed}, \
+             pending {pending}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Shutdown still drains cleanly — the loop is not wedged.
     server::client_shutdown(addr).unwrap();
     handle.join().unwrap();
 }
