@@ -2,12 +2,17 @@
 //!
 //! Two tiers:
 //!   * **hermetic** (always runs): the full engine loop over `SimBackend`
-//!     for each scheduling policy and both cache layouts — measures the
-//!     L3 overhead (scheduling, slot lifecycle, splicing, sampling) with
-//!     no artifacts required;
+//!     for each scheduling policy and both cache layouts, the threaded
+//!     worker mode vs the single-threaded sweep over TCP, and the
+//!     dual-stream prefill/decode overlap on vs off — measures the L3
+//!     overhead (scheduling, slot lifecycle, splicing, sampling,
+//!     threading) with no artifacts required;
 //!   * **artifact-backed** (when `make artifacts` + a real `xla` runtime
 //!     are present): GQA vs absorbed-MLA — the measured-CPU counterpart
 //!     of the paper's Figure 4 / Table 4.
+//!
+//! The hermetic results are persisted to `BENCH_serving.json` at the
+//! repo root (commit it to record a perf trajectory point).
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -15,13 +20,14 @@ mod harness;
 use harness::Bench;
 use std::path::Path;
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{EngineConfig, PolicyKind};
+use transmla::config::{CacheKind, EngineConfig, PolicyKind};
 use transmla::convert::{convert_model, Calib, ConvertOptions};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
 use transmla::corpus::Corpus;
 use transmla::model::init_gqa;
 use transmla::runtime::Runtime;
+use transmla::server::{self, EngineRegistry, RoutePolicy, ServeOpts};
 use transmla::tensor::Tensor;
 use transmla::util::Rng;
 
@@ -39,6 +45,86 @@ fn sim_workload(b: &Bench, policy: PolicyKind, label: &str) {
         engine.run_to_completion().unwrap();
     });
     let toks = n_req as f64 * 24.0;
+    b.report(&format!("sim_engine_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
+}
+
+/// One full serve cycle over loopback TCP: start a two-model server
+/// with `workers` engine threads, fire a concurrent burst, shut down.
+/// The step-rate comparison `workers: 0` (single-threaded sweep) vs
+/// `workers: 2` (one thread per engine) is the tentpole measurement.
+fn serving_workload(b: &Bench, addr: &'static str, workers: usize, label: &str) {
+    let n_req = if b.quick { 8 } else { 24 };
+    let max_new = 16usize;
+    let mean = b.run(&format!("serve_{label}_{n_req}req"), || {
+        let handle = std::thread::spawn(move || {
+            let mut reg = EngineRegistry::new(RoutePolicy::RoundRobin);
+            for name in ["a", "b"] {
+                reg.register(
+                    name,
+                    Engine::new(
+                        SimBackend::new(SimConfig {
+                            capacity: 128,
+                            prefill_seq: 128,
+                            ..SimConfig::gqa(8)
+                        })
+                        .unwrap(),
+                        EngineConfig::default(),
+                    ),
+                )
+                .unwrap();
+            }
+            server::serve_with(&mut reg, addr, ServeOpts { workers }).unwrap();
+        });
+        // Wait for the listener, then hammer it.
+        loop {
+            if server::client_line(addr, "{\"cmd\":\"ping\"}").is_ok() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let clients: Vec<_> = (0..n_req)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    server::client_request(addr, "threaded serving workload", max_new)
+                        .unwrap();
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        server::client_shutdown(addr).unwrap();
+        handle.join().unwrap();
+    });
+    let toks = (n_req * max_new) as f64;
+    b.report(&format!("serve_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
+}
+
+/// Chunked prefill with the decode batch on a second stream, vs the
+/// serial schedule — same completions (bit-identical by construction),
+/// different wall clock.
+fn overlap_workload(b: &Bench, overlap: bool, label: &str) {
+    let n_req = if b.quick { 12 } else { 48 };
+    let max_new = 12usize;
+    let prompt = "a long enough prompt that chunked prefill spans several engine \
+                  iterations while the active batch keeps decoding";
+    let mean = b.run(&format!("sim_engine_{label}_{n_req}req"), || {
+        let mut engine = Engine::new(
+            SimBackend::new(SimConfig { capacity: 256, prefill_seq: 256, ..SimConfig::gqa(8) })
+                .unwrap(),
+            EngineConfig {
+                policy: PolicyKind::Chunked { chunk_tokens: 16 },
+                cache: CacheKind::Paged { block_size: 16, n_blocks: None },
+                overlap,
+                ..Default::default()
+            },
+        );
+        for i in 0..n_req {
+            engine.submit(Request::from_text(i as u64, prompt, max_new));
+        }
+        engine.run_to_completion().unwrap();
+    });
+    let toks = (n_req * max_new) as f64;
     b.report(&format!("sim_engine_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
 }
 
@@ -68,6 +154,23 @@ fn main() {
             engine.run_to_completion().unwrap();
         });
     }
+
+    // Threaded workers vs the single-threaded sweep, over real loopback
+    // TCP (fixed ports; the listening socket never enters TIME_WAIT, so
+    // back-to-back iterations rebind cleanly).
+    serving_workload(&b, "127.0.0.1:18470", 0, "sweep");
+    serving_workload(&b, "127.0.0.1:18471", 2, "workers2");
+
+    // Dual-stream prefill/decode overlap on vs off (chunked policy).
+    overlap_workload(&b, false, "chunked_serial");
+    overlap_workload(&b, true, "chunked_overlap");
+
+    // Persist the hermetic tier as the serving perf trajectory (the
+    // artifact tier below is environment-dependent, so it stays out).
+    b.write_json(
+        "serving",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"),
+    );
 
     // -- artifact tier: the paper's Figure 4 / Table 4 measurement -------
     let rt = match Runtime::new(Path::new("artifacts")) {

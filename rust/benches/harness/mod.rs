@@ -1,12 +1,26 @@
 //! Shared bench harness (offline stand-in for criterion): warmup +
 //! timed iterations + mean/p50/min reporting, with a `--quick` mode used
-//! by `cargo bench` in CI-ish runs.
+//! by `cargo bench` in CI-ish runs. Every measurement is also collected
+//! so a bench can persist its run as a JSON trajectory file (see
+//! [`Bench::write_json`]) — `BENCH_serving.json` at the repo root is the
+//! first such trajectory.
 
+use std::cell::RefCell;
 use std::time::Instant;
+use transmla::json::Json;
+
+#[allow(dead_code)]
+enum Entry {
+    /// A timed workload: name + mean/p50/min seconds over n iterations.
+    Timing { name: String, mean_s: f64, p50_s: f64, min_s: f64, n: usize },
+    /// A derived metric (throughput, speedup, ...).
+    Metric { name: String, value: f64, unit: String },
+}
 
 #[allow(dead_code)]
 pub struct Bench {
     pub quick: bool,
+    results: RefCell<Vec<Entry>>,
 }
 
 impl Default for Bench {
@@ -20,7 +34,7 @@ impl Bench {
     pub fn new() -> Self {
         let quick = std::env::args().any(|a| a == "--quick")
             || std::env::var("BENCH_QUICK").is_ok();
-        Bench { quick }
+        Bench { quick, results: RefCell::new(Vec::new()) }
     }
 
     /// Run `f` with warmup and report. Returns mean seconds.
@@ -45,11 +59,62 @@ impl Bench {
             samples[0] * 1e3,
             samples.len()
         );
+        self.results.borrow_mut().push(Entry::Timing {
+            name: name.to_string(),
+            mean_s: mean,
+            p50_s: p50,
+            min_s: samples[0],
+            n: samples.len(),
+        });
         mean
     }
 
     /// Report a derived throughput metric.
     pub fn report(&self, name: &str, value: f64, unit: &str) {
         println!("bench {name:<44} {value:>12.2} {unit}");
+        self.results.borrow_mut().push(Entry::Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Persist everything measured so far as a JSON trajectory file:
+    /// `{"bench": <name>, "quick": bool, "results": [...]}` where each
+    /// result is either a timing (`mean_s`/`p50_s`/`min_s`/`n`) or a
+    /// derived metric (`value`/`unit`). Overwrites `path`; commit the
+    /// file to record a perf trajectory point.
+    pub fn write_json(&self, bench: &str, path: &str) {
+        let mut j = Json::obj();
+        j.set("bench", Json::Str(bench.to_string()));
+        j.set("quick", Json::Bool(self.quick));
+        let results = self
+            .results
+            .borrow()
+            .iter()
+            .map(|e| {
+                let mut r = Json::obj();
+                match e {
+                    Entry::Timing { name, mean_s, p50_s, min_s, n } => {
+                        r.set("name", Json::Str(name.clone()));
+                        r.set("mean_s", Json::Num(*mean_s));
+                        r.set("p50_s", Json::Num(*p50_s));
+                        r.set("min_s", Json::Num(*min_s));
+                        r.set("n", Json::Num(*n as f64));
+                    }
+                    Entry::Metric { name, value, unit } => {
+                        r.set("name", Json::Str(name.clone()));
+                        r.set("value", Json::Num(*value));
+                        r.set("unit", Json::Str(unit.clone()));
+                    }
+                }
+                r
+            })
+            .collect();
+        j.set("results", Json::Arr(results));
+        match std::fs::write(path, j.to_string() + "\n") {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
     }
 }

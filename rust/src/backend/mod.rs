@@ -280,8 +280,39 @@ pub struct PrefillOut {
 }
 
 /// A model execution backend (prefill + decode over an opaque cache).
-pub trait ExecBackend {
+///
+/// `Send` because engines run on worker threads in `--workers` mode.
+/// The vendored `xla` stub's handle types are field-less (auto-`Send`);
+/// real PJRT bindings are Rc-backed and would need a `Send` wrapper (or
+/// a per-thread client) before `XlaBackend` engines could leave the
+/// spawning thread — the stub keeps the bound honest at compile time
+/// without claiming the real runtime is thread-safe.
+pub trait ExecBackend: Send {
     fn spec(&self) -> &BackendSpec;
+
+    /// Opt-in to dual-stream execution: may the engine run ONE
+    /// `prefill_chunk` call and ONE `decode` call on this backend
+    /// *concurrently* (two threads, same backend, same cache store)?
+    ///
+    /// Returning `true` promises, for the duration of such a pair:
+    ///   * both entry points are interiorly immutable — they never
+    ///     mutate backend state, even though the trait takes `&mut self`
+    ///     (the receiver is `&mut` only for XLA's buffer-donation ABI);
+    ///   * each call reads and writes ONLY the cache rows of the slots
+    ///     named in its arguments (`slot` for `prefill_chunk`; the
+    ///     `active` slots for `decode`), so calls over disjoint slot
+    ///     sets touch disjoint memory.
+    ///
+    /// The engine pairs this with the cache-side invariant (no
+    /// allocator/table mutation during the streams — see
+    /// `Engine::overlapped_chunk_decode_step`) to build the aliased
+    /// `&mut` seam. Default `false`: overlap is gated off unless a
+    /// backend explicitly signs the contract. `XlaBackend` stays `false`
+    /// — its decode artifact writes pos-0 rows for *inactive* slots
+    /// (fixed AOT ABI), which would race the prefill stream.
+    fn supports_overlap(&self) -> bool {
+        false
+    }
 
     /// Run batched prefill over `rows` prompts packed row-major into a
     /// `rows * prefill_seq` token matrix (`rows <= prefill_batch`;

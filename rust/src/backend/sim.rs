@@ -213,6 +213,15 @@ impl ExecBackend for SimBackend {
         &self.spec
     }
 
+    /// The sim signs the dual-stream contract: every internal method is
+    /// `&self` (the `&mut` receivers below exist only for the XLA ABI),
+    /// `prefill_chunk` touches only `slot`'s cache rows, and `decode`
+    /// skips inactive slots entirely — so a concurrent chunk/decode pair
+    /// over disjoint slot sets reads and writes disjoint memory.
+    fn supports_overlap(&self) -> bool {
+        true
+    }
+
     fn prefill(&mut self, tokens: &[i32], rows: usize) -> Result<PrefillOut> {
         let (bp, t, v) = (self.spec.prefill_batch, self.spec.prefill_seq, self.spec.vocab);
         if rows == 0 || rows > bp {

@@ -198,6 +198,8 @@ pub const MODEL_SPEC_KEYS: &[&str] = &[
     "capacity",
     "seed",
     "ckpt",
+    "weight",
+    "overlap",
 ];
 
 /// One `--model name=SPEC` CLI entry: a named engine whose SPEC is a
@@ -264,6 +266,16 @@ pub struct EngineConfig {
     /// copy-on-write instead of each holding a private copy. Requires
     /// `CacheKind::Paged`; rejected at engine construction otherwise.
     pub prefix_cache: bool,
+    /// Fair-share weight in the multi-engine sweep (`weight=K` in a
+    /// `--model` SPEC): a weight-K engine gets K step opportunities per
+    /// sweep / worker iteration. Clamped to >= 1 at use sites.
+    pub weight: usize,
+    /// Dual-stream execution (`--overlap on` / `overlap=on`): run the
+    /// prefill chunk and the decode batch of one iteration concurrently
+    /// when the backend signs the contract
+    /// (`ExecBackend::supports_overlap`). Off by default; completions
+    /// are bit-identical either way.
+    pub overlap: bool,
 }
 
 impl Default for EngineConfig {
@@ -276,6 +288,8 @@ impl Default for EngineConfig {
             policy: PolicyKind::AdmitFirst,
             cache: CacheKind::Fixed,
             prefix_cache: false,
+            weight: 1,
+            overlap: false,
         }
     }
 }
@@ -421,6 +435,15 @@ mod tests {
         assert!(ModelSpec::parse("m=cache").is_err(), "key without value");
         assert!(ModelSpec::parse("m=warp=9").is_err(), "unknown key");
         assert!(ModelSpec::parse("m=cache=").is_err(), "empty value");
+        // PR 6 keys: weighted fair shares + dual-stream overlap.
+        let w = ModelSpec::parse("heavy=weight=2,overlap=on").unwrap();
+        assert_eq!(
+            w.overrides,
+            vec![
+                ("weight".to_string(), "2".to_string()),
+                ("overlap".to_string(), "on".to_string()),
+            ]
+        );
     }
 
     #[test]

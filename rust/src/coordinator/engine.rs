@@ -31,6 +31,7 @@ use crate::coordinator::scheduler::{self, PrefillWork, SchedView, SchedulePolicy
 use crate::coordinator::seqmgr::{bounded_cache_tokens, SeqPhase, SequenceManager};
 use crate::kvcache::PrefixStats;
 use crate::metrics::Metrics;
+use crate::tensor::Tensor;
 use crate::util::{Rng, Timer};
 use anyhow::{bail, Context, Result};
 use std::collections::{HashSet, VecDeque};
@@ -68,6 +69,50 @@ pub struct Engine {
 
 /// Most recent admissions kept for inspection (`Engine::admission_log`).
 const ADMISSION_LOG_CAP: usize = 64;
+
+/// The dual-stream aliasing seam: a raw pointer that may cross a scoped
+/// thread boundary. Used ONLY by [`Engine::overlapped_chunk_decode_step`]
+/// to hand the prefill stream its own view of the backend and cache
+/// store while the decode stream runs on the spawning thread.
+///
+/// Safety contract (documented invariant, enforced by construction and
+/// by the overlap property tests):
+///   * the backend signed [`ExecBackend::supports_overlap`] — both entry
+///     points are interiorly immutable and touch only the cache rows of
+///     the slots named in their arguments;
+///   * the two streams' slot sets are disjoint (prefilling vs decoding
+///     slots — a slot is in exactly one phase);
+///   * every block/row either stream writes was materialised *before*
+///     the streams launched (`grow` calls on the coordinating thread),
+///     and no allocator, block-table, or prefix-index mutation happens
+///     while they run: growth is pre-done, copy-on-write cannot trigger
+///     (freshly grown blocks have refcount 1), and `register_prefix` /
+///     completion release are deferred to after the join.
+/// Under that contract the two `&mut` reborrows never touch the same
+/// memory, so no data race exists despite the aliased pointers.
+struct PtrSend<T: ?Sized>(*mut T);
+
+// SAFETY: see the struct docs — the pointer is only dereferenced under
+// the disjoint-rows contract above.
+unsafe impl<T: ?Sized> Send for PtrSend<T> {}
+
+/// One planned chunk of the overlapped step's prefill stream: the exact
+/// arguments `prefill_chunk_step` would have passed, precomputed so the
+/// stream runs no queue/watermark logic (pure backend calls).
+struct ChunkJob {
+    slot: usize,
+    /// Prompt positions already in cache before this chunk.
+    done: usize,
+    /// Watermark after this chunk.
+    end: usize,
+    /// `prompt_len.max(1)` — the chunk finishes the prompt iff
+    /// `end >= target`.
+    target: usize,
+    /// Clamped prompt length (0 for the empty-prompt pad step).
+    plen: usize,
+    /// Prompt prefix `[..end]` (the pad token for an empty prompt).
+    prefix: Vec<i32>,
+}
 
 impl Engine {
     /// Build over any backend (the hermetic path: `Engine::new(SimBackend::gqa(8), cfg)`).
@@ -159,6 +204,13 @@ impl Engine {
     /// signal `least-loaded` routing compares engines by.
     pub fn load(&self) -> usize {
         self.queue.len() + self.seqs.n_active()
+    }
+
+    /// Fair-share weight in the multi-engine sweep (`weight=K` in a
+    /// `--model` SPEC): a weight-K engine gets K step opportunities per
+    /// sweep / worker iteration. Always >= 1.
+    pub fn weight(&self) -> usize {
+        self.cfg.weight.max(1)
     }
 
     /// Largest `max_new` this engine can actually serve for a prompt of
@@ -296,6 +348,7 @@ impl Engine {
             }
             return Ok(plan);
         }
+        let mut decoded = false;
         match plan.prefill {
             // The degenerate pre-StepPlan path: admission and full
             // prefill fused into one batched call.
@@ -308,7 +361,22 @@ impl Engine {
                 if plan.admit > 0 {
                     self.admit_prefilling(plan.admit)?;
                 }
-                self.prefill_chunk_step(max_tokens)?;
+                // Dual-stream execution: when both streams have work and
+                // the backend signs the contract, run this iteration's
+                // prefill chunk(s) and decode batch concurrently.
+                // Completions are bit-identical either way (the overlap
+                // parity tests assert it).
+                if self.cfg.overlap
+                    && plan.decode
+                    && self.backend.supports_overlap()
+                    && !self.prefillq.is_empty()
+                    && self.seqs.n_decoding() > 0
+                {
+                    self.overlapped_chunk_decode_step(max_tokens)?;
+                    decoded = true;
+                } else {
+                    self.prefill_chunk_step(max_tokens)?;
+                }
             }
             PrefillWork::None => {
                 if plan.admit > 0 {
@@ -320,7 +388,7 @@ impl Engine {
                 }
             }
         }
-        if plan.decode {
+        if plan.decode && !decoded {
             self.decode_step()?;
         }
         Ok(plan)
@@ -595,6 +663,198 @@ impl Engine {
                 self.seqs.finish_prefill(slot, tok, Instant::now())?;
                 self.maybe_complete(slot)?;
             }
+        }
+        Ok(())
+    }
+
+    // -- dual-stream overlap -------------------------------------------------
+
+    /// One iteration's prefill chunk(s) and decode batch, executed
+    /// concurrently on two streams — the perf path behind `--overlap on`.
+    /// Serial-equivalent by construction: completions (and every rng
+    /// draw) are bit-identical to `prefill_chunk_step` + `decode_step`.
+    ///
+    /// Shape of the step:
+    ///   1. **Plan** (coordinating thread): precompute the exact chunk
+    ///      schedule `prefill_chunk_step` would run (pure queue/watermark
+    ///      math), materialise every block either stream writes (`grow`
+    ///      is reservation-backed, so ordering cannot change success),
+    ///      and snapshot the decode batch's inputs.
+    ///   2. **Streams** (scoped threads over the [`PtrSend`] seam): the
+    ///      prefill stream runs the scheduled `prefill_chunk` calls in
+    ///      order; the decode stream runs one `decode` over the slots
+    ///      that were already decoding. Disjoint slot sets ⇒ disjoint
+    ///      cache rows ⇒ no race (see [`PtrSend`] for the full invariant).
+    ///   3. **Join + bookkeeping** (coordinating thread, serial order):
+    ///      record watermarks, register prefixes, sample first tokens
+    ///      (prefill-queue FIFO — the same rng order as serial), then a
+    ///      catch-up `decode` for sequences whose prompt finished *this*
+    ///      iteration (serially they would join the very next decode
+    ///      call), and finally sample decode tokens ascending over the
+    ///      union — again the serial draw order.
+    fn overlapped_chunk_decode_step(&mut self, budget: usize) -> Result<()> {
+        // 1. Plan: mirror prefill_chunk_step's loop without model calls.
+        // Only the last job can be partial (a non-finishing chunk always
+        // exhausts the budget), so each slot appears at most once.
+        let mut jobs: Vec<ChunkJob> = Vec::new();
+        let mut left = budget.max(1);
+        let mut qi = 0usize;
+        while left > 0 && qi < self.prefillq.len() {
+            let slot = self.prefillq[qi];
+            let seq = self.seqs.seq(slot).context("prefilling slot has state")?;
+            let (done, plen) = match seq.phase {
+                SeqPhase::Prefilling { done } => (done, seq.prompt_len),
+                SeqPhase::Decoding => {
+                    bail!("decoding slot {slot} on the prefill queue")
+                }
+            };
+            let target = plen.max(1);
+            let end = target.min(done.saturating_add(left));
+            let prefix: Vec<i32> = if plen == 0 {
+                vec![0]
+            } else {
+                seq.req.prompt[..end].to_vec()
+            };
+            left = left.saturating_sub(end - done);
+            if end >= target {
+                qi += 1;
+            }
+            jobs.push(ChunkJob { slot, done, end, target, plen, prefix });
+        }
+        // Materialise every row either stream writes while we still hold
+        // the only &mut: chunk blocks in schedule order, then the decode
+        // batch's next positions. After this point the streams run over
+        // frozen allocator/table state (the PtrSend invariant).
+        for j in &jobs {
+            self.cache.grow(j.slot, j.end)?;
+        }
+        self.seqs.grow_for_decode(&mut self.cache)?;
+        if let CacheStore::Paged(p) = &self.cache {
+            self.metrics.observe("blocks_in_use", p.blocks_in_use() as f64);
+        }
+        let (token, pos, active) = self.seqs.decode_io();
+        // The decode stream covers exactly the slots decoding *before*
+        // this iteration's chunks land; sequences finishing prefill now
+        // get a catch-up decode after the join.
+        let old_active = active.clone();
+
+        // 2. Streams.
+        let backend_raw: *mut dyn ExecBackend = &mut *self.backend;
+        let cache_raw: *mut CacheStore = &mut self.cache;
+        let seam_backend = PtrSend(backend_raw);
+        let seam_cache = PtrSend(cache_raw);
+        let jobs_ref = &jobs;
+        let timer = Timer::start();
+        let (chunk_res, decode_res) = std::thread::scope(|s| {
+            let prefill_stream = s.spawn(move || -> Result<Vec<(Tensor, f64)>> {
+                // SAFETY: PtrSend contract — supports_overlap() backend,
+                // prefilling slots only, rows pre-grown, no allocator or
+                // table mutation until the join.
+                let backend = unsafe { &mut *seam_backend.0 };
+                let cache = unsafe { &mut *seam_cache.0 };
+                let mut outs = Vec::with_capacity(jobs_ref.len());
+                for j in jobs_ref {
+                    let t = Timer::start();
+                    let logits = backend.prefill_chunk(&j.prefix, j.slot, j.done, cache)?;
+                    outs.push((logits, t.elapsed_s()));
+                }
+                Ok(outs)
+            });
+            // Decode stream on the coordinating thread (no extra spawn).
+            // SAFETY: the other half of the same seam — decoding slots
+            // only, disjoint from every job's slot.
+            let t = Timer::start();
+            let decode_res = unsafe {
+                let backend = &mut *backend_raw;
+                let cache = &mut *cache_raw;
+                backend
+                    .decode(&token, &pos, &active, cache)
+                    .map(|l| (l, t.elapsed_s()))
+            };
+            let chunk_res = prefill_stream
+                .join()
+                .unwrap_or_else(|p| std::panic::resume_unwind(p));
+            (chunk_res, decode_res)
+        });
+        self.metrics.observe("overlap_s", timer.elapsed_s());
+        self.metrics.inc("overlap_steps", 1);
+        let chunk_outs = chunk_res?;
+        let (decode_logits, decode_s) = decode_res?;
+        self.metrics.observe("decode_s", decode_s);
+
+        // 3a. Prefill bookkeeping, in schedule (= serial FIFO) order.
+        for (j, (logits, chunk_s)) in jobs.iter().zip(&chunk_outs) {
+            self.metrics.observe("chunk_s", *chunk_s);
+            let processed = j.end - j.done;
+            self.metrics.inc("prefill_chunks", 1);
+            self.metrics.inc("prefill_tokens", processed as u64);
+            self.metrics.observe("chunk_tokens", processed as f64);
+            self.seqs.record_prefill(j.slot, j.end)?;
+            if j.end >= j.target {
+                let front = self.prefillq.pop_front();
+                debug_assert_eq!(front, Some(j.slot), "schedule tracks the queue");
+                if j.plen > 0 {
+                    self.cache.register_prefix(j.slot, &j.prefix)?;
+                }
+                let temp = {
+                    let seq = self.seqs.seq(j.slot).context("prefilled slot has state")?;
+                    self.effective_temp(&seq.req)
+                };
+                let tok = sampling::sample(&logits.data, temp, &mut self.rng);
+                self.seqs.finish_prefill(j.slot, tok, Instant::now())?;
+                self.maybe_complete(j.slot)?;
+            }
+        }
+
+        // 3b. Catch-up decode for sequences that finished prefill above:
+        // serially they were already `Decoding` when the iteration's one
+        // decode call ran. Slot-isolated backends (the supports_overlap
+        // contract) make the split call bit-identical per slot.
+        let new_slots: Vec<usize> = self
+            .seqs
+            .decoding_slots()
+            .into_iter()
+            .filter(|&s| !old_active[s])
+            .collect();
+        let catchup_logits = if new_slots.is_empty() {
+            None
+        } else {
+            self.seqs.grow_for_decode(&mut self.cache)?;
+            let (token, pos, mut active) = self.seqs.decode_io();
+            for (s, a) in active.iter_mut().enumerate() {
+                if old_active[s] {
+                    *a = false;
+                }
+            }
+            let t = Timer::start();
+            let l = self.backend.decode(&token, &pos, &active, &mut self.cache)?;
+            self.metrics.observe("decode_s", t.elapsed_s());
+            Some(l)
+        };
+
+        // 3c. Sample decode tokens ascending over the union — serial's
+        // draw order. Old slots read the concurrent stream's logits, new
+        // slots the catch-up call's.
+        let vocab = self.backend.spec().vocab;
+        let decoding = self.seqs.decoding_slots();
+        self.metrics.inc("decode_tokens", decoding.len() as u64);
+        self.metrics.inc("decode_steps", 1);
+        for slot in decoding {
+            let temp = {
+                let seq = self.seqs.seq(slot).expect("decoding slot has state");
+                self.effective_temp(&seq.req)
+            };
+            let row = if old_active[slot] {
+                &decode_logits.data[slot * vocab..(slot + 1) * vocab]
+            } else {
+                let l = catchup_logits
+                    .as_ref()
+                    .context("newly decoding slot has catch-up logits")?;
+                &l.data[slot * vocab..(slot + 1) * vocab]
+            };
+            let tok = sampling::sample(row, temp, &mut self.rng);
+            self.seqs.push_token(slot, tok)?;
+            self.maybe_complete(slot)?;
         }
         Ok(())
     }
@@ -919,6 +1179,87 @@ mod tests {
         let comps = e.generate(vec![Request::from_text(1, "hi", 4)]).unwrap();
         assert_eq!(comps[0].max_new, 4);
         assert_eq!(comps[0].model, "mla-paged");
+    }
+
+    #[test]
+    fn engine_is_send() {
+        // Worker mode moves whole engines onto threads; the bound must
+        // hold for the boxed backend + policy + cache store stack.
+        fn assert_send<T: Send>() {}
+        assert_send::<Engine>();
+    }
+
+    #[test]
+    fn overlapped_step_matches_serial_bit_exactly() {
+        // The core dual-stream claim, at unit scope: same requests, same
+        // seed, overlap on vs off → identical token streams AND identical
+        // rng draw order (temperature > 0 makes any divergence visible).
+        for mla in [false, true] {
+            for cache in [
+                CacheKind::Fixed,
+                CacheKind::Paged { block_size: 8, n_blocks: None },
+            ] {
+                let build = |overlap: bool| {
+                    let cfg = EngineConfig {
+                        policy: PolicyKind::Chunked { chunk_tokens: 3 },
+                        cache,
+                        temperature: 0.7,
+                        seed: 42,
+                        overlap,
+                        ..Default::default()
+                    };
+                    if mla {
+                        Engine::new(SimBackend::mla(4, 8), cfg)
+                    } else {
+                        Engine::new(SimBackend::gqa(4), cfg)
+                    }
+                };
+                let reqs = || {
+                    vec![
+                        Request::from_text(0, "a long prompt that takes many chunks", 6),
+                        Request::from_text(1, "short", 5),
+                        Request::from_text(2, "medium length one", 4),
+                        Request::new(3, vec![], 3),
+                    ]
+                };
+                let mut serial = build(false);
+                let mut overlapped = build(true);
+                let a = serial.generate(reqs()).unwrap();
+                let b = overlapped.generate(reqs()).unwrap();
+                assert!(
+                    overlapped.metrics.counter("overlap_steps") > 0,
+                    "overlap path must actually run (mla={mla}, {cache:?})"
+                );
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id);
+                    assert_eq!(x.tokens, y.tokens, "mla={mla}, {cache:?}");
+                    assert_eq!(x.max_new, y.max_new);
+                }
+                overlapped.slots_check().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_gates_off_without_decode_work() {
+        // A lone request never has both streams live: the engine must
+        // fall back to the serial path and still finish.
+        let mut e = Engine::new(
+            SimBackend::gqa(2),
+            EngineConfig {
+                policy: PolicyKind::Chunked { chunk_tokens: 2 },
+                overlap: true,
+                ..Default::default()
+            },
+        );
+        let comps = e.generate(vec![Request::from_text(0, "solo", 3)]).unwrap();
+        assert_eq!(comps[0].tokens.len(), 3);
+        assert_eq!(
+            e.metrics.counter("overlap_steps"),
+            0,
+            "one sequence cannot overlap with itself"
+        );
     }
 
     #[test]

@@ -117,7 +117,9 @@ impl SchedView {
     }
 }
 
-pub trait SchedulePolicy {
+/// `Send` because the policy travels with its engine onto a worker
+/// thread in `--workers` mode; all shipped policies are plain data.
+pub trait SchedulePolicy: Send {
     fn name(&self) -> &'static str;
 
     /// Build the next iteration's plan. Contract (anti-starvation):

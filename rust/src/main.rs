@@ -31,7 +31,8 @@ COMMANDS
   ppl        --arch gqa|mla --ckpt p.tnz [--rank R]
   generate   --arch gqa|mla --ckpt p.tnz [--rank R] --prompt TEXT [--max-new N]
   serve      --arch gqa|mla --ckpt p.tnz [--rank R] [--addr host:port]
-             [--model name[=SPEC]]... [--route R]   (multi-model serving)
+             [--model name[=SPEC]]... [--route R] [--workers N]
+             (multi-model serving; see MULTI-MODEL SERVING below)
   exp        fig2a|fig2b|fig3a|fig3b|table1|table4|table5|all
              [--out runs] [--config C] [--pretrain N] [--ft N] [--eval-batches N]
 
@@ -54,13 +55,19 @@ COMMON FLAGS
   --prefix-cache M  on|off (default off): cross-sequence prefix sharing over
                     the paged store — same-prefix prompts share cached
                     blocks copy-on-write; requires --cache paged
+  --overlap M       on|off (default off): inside one chunked-policy engine
+                    iteration, run the prefill chunk and the decode batch
+                    on two concurrent streams (needs --policy chunked and
+                    a backend that supports overlap, i.e. sim); completions
+                    stay bit-identical to the serial schedule
 
 MULTI-MODEL SERVING (serve only)
   --model N[=SPEC]  register a named engine; SPEC is a comma-separated
                     key=value list overriding the flags above for this
                     engine (keys: arch/layout, rank, backend, policy,
                     prefill-chunk, cache, block-size, cache-blocks,
-                    prefix-cache, batch, capacity, seed, ckpt), e.g.
+                    prefix-cache, batch, capacity, seed, ckpt, weight,
+                    overlap), e.g.
                     --model gqa-base=layout=gqa \\
                     --model mla=layout=mla,cache=paged,policy=chunked:8
                     Repeatable; unspecified keys inherit the bare flags.
@@ -69,6 +76,14 @@ MULTI-MODEL SERVING (serve only)
   --route R         routing for requests without a \"model\" field:
                     default:<name>|round-robin|least-loaded
                     (default: default:<first registered model>)
+  --workers N       engine worker threads (default 0 = single-threaded
+                    sweep on the serving thread). N >= 1 spawns
+                    min(N, #models) workers, each owning a share of the
+                    engines behind a channel mailbox; completions are
+                    bit-identical to --workers 0
+  weight=K          (SPEC key, default 1) fair-share weight: a weight-K
+                    engine gets K step opportunities per sweep, in both
+                    the single-threaded and worker modes
 ";
 
 fn main() {
@@ -271,11 +286,32 @@ fn engine_cfg(args: &FlagView) -> Result<EngineConfig> {
             ),
         }
     }
+    let weight = match args.get("weight") {
+        None => 1,
+        Some(w) => w
+            .parse::<usize>()
+            .ok()
+            .filter(|&k| k >= 1)
+            .with_context(|| format!("bad weight `{w}` (integer >= 1)"))?,
+    };
+    let overlap = match args.str_flag("overlap", "off") {
+        "on" => true,
+        "off" => false,
+        other => bail!("bad --overlap `{other}` (on|off)"),
+    };
+    if overlap && !matches!(policy, PolicyKind::Chunked { .. }) {
+        bail!(
+            "--overlap on requires --policy chunked (only the chunked \
+             policy has a prefill stream to run beside the decode)"
+        );
+    }
     Ok(EngineConfig {
         policy,
         seed: args.usize_flag("seed", 0) as u64,
         cache,
         prefix_cache,
+        weight,
+        overlap,
         ..EngineConfig::default()
     })
 }
@@ -502,7 +538,14 @@ fn cmd_serve(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
     if let Some(r) = args.get("route") {
         registry.set_route(server::RoutePolicy::parse(r)?);
     }
-    server::serve(&mut registry, &addr)
+    let workers = match args.get("workers") {
+        None => 0,
+        Some(w) => w
+            .parse::<usize>()
+            .ok()
+            .with_context(|| format!("bad --workers `{w}` (integer >= 0)"))?,
+    };
+    server::serve_with(&mut registry, &addr, server::ServeOpts { workers })
 }
 
 fn cmd_exp(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {

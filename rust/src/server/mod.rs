@@ -32,68 +32,113 @@
 //!   bad temperature  <- {"error": "bad temperature"}   // negative/NaN/inf
 //!   bad model        <- {"error": "bad model"} / {"error": "unknown model `...`"}
 //!
-//! The engines run on the caller's thread (the XLA client is not `Send`);
-//! connection handlers exchange plain data with them through a shared
-//! queue, so acceptor threads never touch backend state. Every loop
-//! iteration steps each non-idle engine once (the fair multi-engine
-//! sweep — one model's long prefill never starves another's decodes) and
-//! drains completions, delivering each through a per-request reply
-//! channel looked up by id in O(1). A disconnected client's reply send
-//! fails silently and its pending entry is removed with the completion,
-//! so abandoned requests cannot wedge the loop or leak.
+//! # Threading model (see `docs/ARCHITECTURE.md` for the full picture)
+//!
+//! A dedicated **acceptor** thread blocks on the listener and spawns one
+//! handler thread per connection. Handlers never touch engine state:
+//! every parsed line becomes an [`Event`] on ONE merged mpsc channel the
+//! serving loop blocks on — an idle server burns no CPU, and a new
+//! request is picked up the moment it arrives (no sleep polling).
+//!
+//! Two serving loops sit behind that channel, selected by
+//! [`ServeOpts::workers`]:
+//!
+//!   * `workers == 0` — the single-threaded **sweep**: engines step on
+//!     the serving thread via [`EngineRegistry::step_non_idle`]. This is
+//!     the bit-parity fallback the integration tests pin the threaded
+//!     mode against.
+//!   * `workers >= 1` — **worker mode**: `min(workers, engines)` worker
+//!     threads each own a round-robin share of the engines behind an
+//!     mpsc mailbox. The serving thread routes requests to the owning
+//!     worker's mailbox (static name/spec snapshots plus shared atomic
+//!     load counters — `least-loaded` becomes approximate by one
+//!     in-flight iteration), workers run the weighted step sweep over
+//!     their engines and send [`Completion`]s back over the merged
+//!     channel. Shutdown forwards to every mailbox; workers drain their
+//!     in-flight sequences, flush, and exit — no wedge, no pending leak
+//!     (the serving loop stops routing once shutdown is sent, and it is
+//!     each mailbox's only sender, so a drained mailbox stays drained).
+//!
+//! A disconnected client's reply send fails silently and its pending
+//! entry is removed with the completion, so abandoned requests cannot
+//! wedge either loop or leak.
 
 mod registry;
 
 pub use registry::{EngineRegistry, RoutePolicy};
 
 use crate::backend::Arch;
-use crate::coordinator::{Engine, Request};
+use crate::coordinator::{Completion, Engine, Request};
 use crate::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Serving options beyond the bind address.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOpts {
+    /// Engine worker threads (`--workers N`): `0` runs the
+    /// single-threaded registry sweep on the serving thread; `N >= 1`
+    /// spawns `min(N, engines)` workers, each owning a round-robin
+    /// share of the engines behind an mpsc mailbox. Completions are
+    /// bit-identical across modes.
+    pub workers: usize,
+}
 
 enum Incoming {
     /// A generation request awaiting a completion reply. `model` is the
     /// request's explicit engine choice (`None` follows the routing
-    /// policy); routing happens on the engine thread, where the live
-    /// load depths are.
+    /// policy); routing happens on the serving thread, where the load
+    /// depths are.
     Req { req: Request, model: Option<String>, reply: Sender<Json> },
-    /// A stats snapshot request (answered by the engine loop).
+    /// A stats snapshot request (answered by the serving loop).
     Stats { reply: Sender<Json> },
-    /// A model-listing request (answered by the engine loop).
+    /// A model-listing request (answered by the serving loop).
     Models { reply: Sender<Json> },
 }
 
-/// Shared state between acceptor threads and the engine loop.
+/// Everything the serving loop can wake on, merged into ONE channel so
+/// the idle path is a single blocking `recv` (std mpsc has no `select`).
+enum Event {
+    /// A parsed line from a connection handler.
+    Conn(Incoming),
+    /// A finished request flushed by a worker (worker mode only).
+    Done(Completion),
+    /// A worker drained its engines and exited (worker mode only; sent
+    /// after that worker's last `Done`, so per-sender FIFO ordering
+    /// guarantees no completion is still in flight behind it).
+    WorkerStopped,
+    /// A worker hit a fatal engine error (it stops right after).
+    WorkerFailed(String),
+    /// Wake a blocked `recv` to re-check control flags (sent on
+    /// shutdown).
+    Wake,
+}
+
+/// Shared state between connection handlers and the serving loop.
 #[derive(Clone)]
-pub struct ServerState {
-    incoming: Arc<Mutex<Vec<Incoming>>>,
+struct ServerState {
+    events: Sender<Event>,
     next_id: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
 }
 
-impl Default for ServerState {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl ServerState {
-    pub fn new() -> Self {
+    fn new(events: Sender<Event>) -> Self {
         ServerState {
-            incoming: Arc::new(Mutex::new(Vec::new())),
+            events,
             next_id: Arc::new(AtomicU64::new(1)),
             shutdown: Arc::new(AtomicBool::new(false)),
         }
     }
 
-    pub fn is_shutdown(&self) -> bool {
+    fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }
 }
@@ -122,6 +167,9 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
         match msg.get("cmd").and_then(Json::as_str) {
             Some("shutdown") => {
                 state.shutdown.store(true, Ordering::SeqCst);
+                // A blocked serving loop only notices flags when an
+                // event arrives.
+                let _ = state.events.send(Event::Wake);
                 writeln!(writer, "{{\"ok\":true}}")?;
                 return Ok(());
             }
@@ -136,7 +184,9 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
                 } else {
                     Incoming::Models { reply: tx }
                 };
-                state.incoming.lock().unwrap().push(inc);
+                if state.events.send(Event::Conn(inc)).is_err() {
+                    break; // serving loop gone
+                }
                 match rx.recv() {
                     Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
                     Err(_) => break,
@@ -175,7 +225,7 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
                 }
             },
         };
-        // An explicit model choice must be a string; the engine loop
+        // An explicit model choice must be a string; the serving loop
         // checks it against the registry (unknown names answer in-band).
         let model = match msg.get("model") {
             None => None,
@@ -196,11 +246,13 @@ fn handle_conn(stream: TcpStream, state: ServerState) -> Result<()> {
         let mut req = Request::from_text(id, &prompt, max_new);
         req.temperature = temperature;
         let (tx, rx) = channel();
-        state
-            .incoming
-            .lock()
-            .unwrap()
-            .push(Incoming::Req { req, model, reply: tx });
+        if state
+            .events
+            .send(Event::Conn(Incoming::Req { req, model, reply: tx }))
+            .is_err()
+        {
+            break;
+        }
         // Block this connection until the engine answers.
         match rx.recv() {
             Ok(resp) => writeln!(writer, "{}", resp.to_string())?,
@@ -289,13 +341,21 @@ fn stats_json(registry: &EngineRegistry, pending: usize, started: Instant) -> Js
         engines.set(e.name(), engine_stats_json(e));
     }
     j.set("engines", engines);
+    j.set(
+        "server",
+        server_json(registry.len(), &registry.route_policy().name(), pending, started),
+    );
+    j
+}
+
+/// The `server` object of a stats reply.
+fn server_json(models: usize, routing: &str, pending: usize, started: Instant) -> Json {
     let mut srv = Json::obj();
-    srv.set("models", Json::Num(registry.len() as f64));
-    srv.set("routing", Json::Str(registry.route_policy().name()));
+    srv.set("models", Json::Num(models as f64));
+    srv.set("routing", Json::Str(routing.to_string()));
     srv.set("pending", Json::Num(pending as f64));
     srv.set("uptime_s", Json::Num(started.elapsed().as_secs_f64()));
-    j.set("server", srv);
-    j
+    srv
 }
 
 /// `{"cmd":"models"}`: every hosted engine with its serving spec, plus
@@ -335,7 +395,7 @@ fn models_json(registry: &EngineRegistry) -> Json {
     j
 }
 
-fn completion_json(c: &crate::coordinator::Completion) -> Json {
+fn completion_json(c: &Completion) -> Json {
     let mut j = Json::obj();
     j.set("id", Json::Num(c.id as f64));
     j.set("model", Json::Str(c.model.clone()));
@@ -350,93 +410,494 @@ fn completion_json(c: &crate::coordinator::Completion) -> Json {
     j
 }
 
-/// Run the serving loop over a registry of named engines: accepts
-/// connections on `addr`, routes each request to an engine (explicit
-/// `model` field, else the registry's [`RoutePolicy`]), steps every
-/// non-idle engine each iteration, and replies per request. Returns once
-/// a `shutdown` command arrives and all in-flight work is drained.
+/// Run the serving loop over a registry of named engines with default
+/// options (single-threaded sweep): accepts connections on `addr`,
+/// routes each request to an engine (explicit `model` field, else the
+/// registry's [`RoutePolicy`]), and replies per request. Returns once a
+/// `shutdown` command arrives and all in-flight work is drained.
 pub fn serve(registry: &mut EngineRegistry, addr: &str) -> Result<()> {
+    serve_with(registry, addr, ServeOpts::default())
+}
+
+/// [`serve`] with explicit [`ServeOpts`] (worker threads etc.).
+pub fn serve_with(registry: &mut EngineRegistry, addr: &str, opts: ServeOpts) -> Result<()> {
     registry.validate()?;
-    let listener = TcpListener::bind(addr)
-        .with_context(|| format!("bind {addr}"))?;
-    listener.set_nonblocking(true)?;
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
     eprintln!(
-        "[server] listening on {addr} ({} model(s): {}; routing `{}`)",
+        "[server] listening on {addr} ({} model(s): {}; routing `{}`; workers {})",
         registry.len(),
         registry.names().join(", "),
-        registry.route_policy().name()
+        registry.route_policy().name(),
+        opts.workers
     );
     let started = Instant::now();
-    let state = ServerState::new();
-    // Reply channels by request id — O(1) completion delivery (the old
-    // Vec scan was O(pending) per completion).
-    let mut pending: HashMap<u64, Sender<Json>> = HashMap::new();
+    let (events_tx, events_rx) = channel();
+    let state = ServerState::new(events_tx);
 
-    loop {
-        // Accept any waiting connections; each gets its own thread.
-        loop {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    let st = state.clone();
-                    std::thread::spawn(move || {
-                        let _ = handle_conn(stream, st);
-                    });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) => return Err(e.into()),
-            }
-        }
-        // Drain new work into the engines; answer stats/models
-        // immediately. Routing runs here — on the engine thread — so
-        // `least-loaded` sees live depths, and unknown models answer
-        // in-band without ever touching an engine.
-        for inc in state.incoming.lock().unwrap().drain(..) {
-            match inc {
-                Incoming::Req { mut req, model, reply } => {
-                    match registry.route(model.as_deref()) {
-                        Ok(idx) => {
-                            let engine = registry.engine_at_mut(idx);
-                            // Server-edge clamp: a hostile max_new cannot
-                            // demand more than the engine's remaining
-                            // capacity for this prompt. The completion
-                            // echoes the effective budget.
-                            let ceiling = engine.max_new_ceiling(req.prompt.len());
-                            req.max_new_tokens = req.max_new_tokens.min(ceiling);
-                            pending.insert(req.id, reply);
-                            engine.submit(req);
-                        }
-                        Err(e) => {
-                            let _ = reply.send(error_json(&format!("{e}")));
-                        }
+    // The acceptor owns the listener and blocks on it; each connection
+    // gets its own handler thread. The serving loop never touches
+    // sockets, so it can block on the event channel instead of polling.
+    let acceptor = {
+        let st = state.clone();
+        std::thread::Builder::new()
+            .name("acceptor".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if st.is_shutdown() {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let st = st.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, st);
+                        });
                     }
                 }
-                Incoming::Stats { reply } => {
-                    let _ = reply.send(stats_json(registry, pending.len(), started));
-                }
-                Incoming::Models { reply } => {
-                    let _ = reply.send(models_json(registry));
-                }
+            })
+            .context("spawn acceptor")?
+    };
+
+    let result = if opts.workers == 0 {
+        serve_sweep(registry, &state, &events_rx, started)
+    } else {
+        serve_workers(registry, &state, &events_rx, started, opts.workers)
+    };
+
+    // Retire the acceptor on every exit path: set the flag, then
+    // self-connect to pop its blocking accept.
+    state.shutdown.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(local);
+    let _ = acceptor.join();
+    if result.is_ok() {
+        eprintln!("[server] shutdown");
+    }
+    result
+}
+
+/// The single-threaded serving loop: engines step on this thread via
+/// the weighted registry sweep. Idle means blocked on the event channel
+/// — zero CPU until a line arrives.
+fn serve_sweep(
+    registry: &mut EngineRegistry,
+    state: &ServerState,
+    events: &Receiver<Event>,
+    started: Instant,
+) -> Result<()> {
+    // Reply channels by request id — O(1) completion delivery.
+    let mut pending: HashMap<u64, Sender<Json>> = HashMap::new();
+    loop {
+        if registry.is_idle() {
+            if state.is_shutdown() && pending.is_empty() {
+                return Ok(());
+            }
+            // Nothing to step: block until the next event. Shutdown
+            // sends a Wake, so this cannot wedge.
+            match events.recv() {
+                Ok(ev) => sweep_event(ev, registry, &mut pending, started),
+                Err(_) => return Ok(()),
             }
         }
-        // Advance every non-idle engine one iteration (the fair sweep).
+        // Busy (or just woken): drain whatever queued without blocking,
+        // advance every non-idle engine, deliver completions.
+        while let Ok(ev) = events.try_recv() {
+            sweep_event(ev, registry, &mut pending, started);
+        }
         if !registry.is_idle() {
             registry.step_non_idle()?;
-        } else if state.is_shutdown() && pending.is_empty() {
-            eprintln!("[server] shutdown");
-            return Ok(());
-        } else {
-            std::thread::sleep(std::time::Duration::from_millis(2));
         }
-        // Deliver completions (drained every iteration so the history
-        // cannot grow without bound in server mode). A send to a
-        // disconnected client fails silently; the pending entry is gone
-        // either way, so abandoned requests cannot leak.
         for c in registry.take_completions() {
             if let Some(tx) = pending.remove(&c.id) {
                 let _ = tx.send(completion_json(&c));
             }
         }
     }
+}
+
+fn sweep_event(
+    ev: Event,
+    registry: &mut EngineRegistry,
+    pending: &mut HashMap<u64, Sender<Json>>,
+    started: Instant,
+) {
+    match ev {
+        Event::Conn(Incoming::Req { mut req, model, reply }) => {
+            match registry.route(model.as_deref()) {
+                Ok(idx) => {
+                    let engine = registry.engine_at_mut(idx);
+                    // Server-edge clamp: a hostile max_new cannot demand
+                    // more than the engine's remaining capacity for this
+                    // prompt. The completion echoes the effective budget.
+                    let ceiling = engine.max_new_ceiling(req.prompt.len());
+                    req.max_new_tokens = req.max_new_tokens.min(ceiling);
+                    pending.insert(req.id, reply);
+                    engine.submit(req);
+                }
+                Err(e) => {
+                    let _ = reply.send(error_json(&format!("{e}")));
+                }
+            }
+        }
+        Event::Conn(Incoming::Stats { reply }) => {
+            let _ = reply.send(stats_json(registry, pending.len(), started));
+        }
+        Event::Conn(Incoming::Models { reply }) => {
+            let _ = reply.send(models_json(registry));
+        }
+        // Worker-mode events never fire in sweep mode; Wake just pops
+        // the blocking recv so flags get re-checked.
+        Event::Done(_) | Event::WorkerStopped | Event::WorkerFailed(_) | Event::Wake => {}
+    }
+}
+
+/// One message into a worker's mailbox. The serving thread is the only
+/// sender, so per-sender FIFO ordering means nothing can arrive behind
+/// a `Shutdown` except `Stats` probes — a drained mailbox after the
+/// shutdown marker stays free of submits.
+enum WorkerMsg {
+    /// Route `req` to the worker's `local`-th engine.
+    Submit { local: usize, req: Request },
+    /// Snapshot stats for every owned engine (name, v1-shaped object).
+    Stats { reply: Sender<Vec<(String, Json)>> },
+    /// Finish in-flight work, flush, and exit.
+    Shutdown,
+}
+
+struct WorkerHandle {
+    mailbox: Sender<WorkerMsg>,
+    handle: JoinHandle<Vec<Engine>>,
+    /// Registry indices of the owned engines, in the worker's local
+    /// order (for reattaching after the join).
+    owns: Vec<usize>,
+}
+
+/// A worker thread's life: block on the mailbox while idle, otherwise
+/// drain it, run the weighted step sweep over the owned engines, flush
+/// completions, and publish authoritative load depths. Exits once
+/// shutdown has been seen (or the serving loop is gone) and every owned
+/// engine is drained. Returns the engines for reattachment.
+fn worker_loop(
+    wid: usize,
+    mut engines: Vec<Engine>,
+    loads: Vec<Arc<AtomicUsize>>,
+    mailbox: Receiver<WorkerMsg>,
+    events: Sender<Event>,
+) -> Vec<Engine> {
+    let mut shutdown = false;
+    let mut disconnected = false;
+    loop {
+        if engines.iter().all(Engine::is_idle) && !shutdown && !disconnected {
+            // Idle: block for work — an idle worker burns no CPU.
+            match mailbox.recv() {
+                Ok(m) => apply_worker_msg(m, &mut engines, &mut shutdown),
+                Err(_) => disconnected = true,
+            }
+        }
+        loop {
+            match mailbox.try_recv() {
+                Ok(m) => apply_worker_msg(m, &mut engines, &mut shutdown),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if (shutdown || disconnected) && engines.iter().all(Engine::is_idle) {
+            break;
+        }
+        // The same weighted fair sweep the single-threaded mode runs,
+        // over this worker's share of the engines.
+        for e in engines.iter_mut() {
+            for _ in 0..e.weight() {
+                if e.is_idle() {
+                    break;
+                }
+                if let Err(err) = e.step() {
+                    let _ = events.send(Event::WorkerFailed(format!(
+                        "worker {wid}: engine `{}`: {err:#}",
+                        e.name()
+                    )));
+                    let _ = events.send(Event::WorkerStopped);
+                    return engines;
+                }
+            }
+        }
+        for (i, e) in engines.iter_mut().enumerate() {
+            for c in e.take_completions() {
+                let _ = events.send(Event::Done(c));
+            }
+            loads[i].store(e.load(), Ordering::Relaxed);
+        }
+    }
+    for (i, e) in engines.iter().enumerate() {
+        loads[i].store(e.load(), Ordering::Relaxed);
+    }
+    let _ = events.send(Event::WorkerStopped);
+    engines
+}
+
+fn apply_worker_msg(m: WorkerMsg, engines: &mut [Engine], shutdown: &mut bool) {
+    match m {
+        WorkerMsg::Submit { local, req } => engines[local].submit(req),
+        WorkerMsg::Stats { reply } => {
+            let stats = engines
+                .iter()
+                .map(|e| (e.name().to_string(), engine_stats_json(e)))
+                .collect();
+            let _ = reply.send(stats);
+        }
+        WorkerMsg::Shutdown => *shutdown = true,
+    }
+}
+
+/// Routing on the serving thread while the engines live on workers:
+/// the registry's [`RoutePolicy`] semantics over static name snapshots
+/// and shared load counters. `least-loaded` reads worker-published
+/// depths plus optimistic submit bumps, so it can trail the truth by
+/// one in-flight iteration — approximate by design.
+fn route_static(
+    names: &[String],
+    route: &RoutePolicy,
+    rr_next: &mut usize,
+    loads: &[Arc<AtomicUsize>],
+    model: Option<&str>,
+) -> Result<usize> {
+    let by_name = |name: &str| -> Result<usize> {
+        names.iter().position(|n| n == name).with_context(|| {
+            format!("unknown model `{name}` (have: {})", names.join(", "))
+        })
+    };
+    if let Some(name) = model {
+        return by_name(name);
+    }
+    match route {
+        RoutePolicy::Default(name) => by_name(name),
+        RoutePolicy::RoundRobin => {
+            let i = *rr_next % names.len();
+            *rr_next = (*rr_next + 1) % names.len();
+            Ok(i)
+        }
+        RoutePolicy::LeastLoaded => Ok(loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .expect("non-empty registry")),
+    }
+}
+
+/// Worker-mode stats: fan the probe out to every live worker's mailbox,
+/// then assemble the replies in registry order. Workers answer from
+/// their own threads (next mailbox drain — immediate when idle); a
+/// worker that already exited is skipped.
+fn worker_stats_json(
+    handles: &[WorkerHandle],
+    names: &[String],
+    routing: &str,
+    pending: usize,
+    started: Instant,
+) -> Json {
+    let mut collected: HashMap<String, Json> = HashMap::new();
+    for h in handles {
+        let (tx, rx) = channel();
+        if h.mailbox.send(WorkerMsg::Stats { reply: tx }).is_ok() {
+            if let Ok(stats) = rx.recv() {
+                for (name, s) in stats {
+                    collected.insert(name, s);
+                }
+            }
+        }
+    }
+    let mut j = Json::obj();
+    let mut engines = Json::obj();
+    for name in names {
+        if let Some(s) = collected.remove(name) {
+            engines.set(name, s);
+        }
+    }
+    j.set("engines", engines);
+    j.set("server", server_json(names.len(), routing, pending, started));
+    j
+}
+
+/// The worker-mode serving loop (`--workers N`): engines are detached
+/// onto `min(N, engines)` worker threads; this thread only routes,
+/// clamps, tracks pending replies, and answers control commands.
+fn serve_workers(
+    registry: &mut EngineRegistry,
+    state: &ServerState,
+    events: &Receiver<Event>,
+    started: Instant,
+    workers: usize,
+) -> Result<()> {
+    let n = registry.len();
+    let w = workers.min(n).max(1);
+    // Static snapshots, taken while the engines are still attached:
+    // routing metadata, the (fully static) models reply, and each
+    // engine's capacity/max-prompt pair for the server-edge clamp.
+    let names = registry.names();
+    let route = registry.route_policy().clone();
+    let routing_name = route.name();
+    let models_reply = models_json(registry);
+    let clamp: Vec<(usize, usize)> = registry
+        .engines()
+        .iter()
+        .map(|e| {
+            let s = e.spec();
+            (s.capacity, s.max_prompt())
+        })
+        .collect();
+    let loads: Vec<Arc<AtomicUsize>> = (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+
+    // Distribute the engines round-robin by registry index and launch
+    // the workers.
+    let mut assignment: Vec<(usize, usize)> = vec![(0, 0); n]; // engine -> (worker, local)
+    let mut per_worker: Vec<Vec<(usize, Engine)>> = (0..w).map(|_| Vec::new()).collect();
+    for (i, e) in registry.take_engines().into_iter().enumerate() {
+        let wid = i % w;
+        assignment[i] = (wid, per_worker[wid].len());
+        per_worker[wid].push((i, e));
+    }
+    let mut handles: Vec<WorkerHandle> = Vec::with_capacity(w);
+    for (wid, owned) in per_worker.into_iter().enumerate() {
+        let owns: Vec<usize> = owned.iter().map(|(i, _)| *i).collect();
+        let engs: Vec<Engine> = owned.into_iter().map(|(_, e)| e).collect();
+        let wloads: Vec<Arc<AtomicUsize>> = owns.iter().map(|&i| loads[i].clone()).collect();
+        let (tx, rx) = channel();
+        let ev = state.events.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("engine-worker-{wid}"))
+            .spawn(move || worker_loop(wid, engs, wloads, rx, ev))
+            .context("spawn engine worker")?;
+        handles.push(WorkerHandle { mailbox: tx, handle, owns });
+    }
+
+    let mut pending: HashMap<u64, Sender<Json>> = HashMap::new();
+    let mut rr_next = 0usize;
+    let mut shutdown_sent = false;
+    let mut stopped = 0usize;
+    let mut failed: Option<String> = None;
+
+    loop {
+        // Block for the next event — the serving thread is fully
+        // event-driven in worker mode — then drain without blocking.
+        let first = match events.recv() {
+            Ok(ev) => ev,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        while let Ok(ev) = events.try_recv() {
+            batch.push(ev);
+        }
+        for ev in batch {
+            match ev {
+                Event::Conn(Incoming::Req { mut req, model, reply }) => {
+                    if shutdown_sent {
+                        // Routing past the shutdown marker could land a
+                        // submit behind a worker's drain-and-exit check;
+                        // answer in-band instead.
+                        let _ = reply.send(error_json("server is shutting down"));
+                        continue;
+                    }
+                    match route_static(&names, &route, &mut rr_next, &loads, model.as_deref()) {
+                        Ok(idx) => {
+                            let (cap, maxp) = clamp[idx];
+                            let plen = req.prompt.len().min(maxp);
+                            // Same clamp as Engine::max_new_ceiling.
+                            let ceiling = (cap.saturating_sub(plen) + 1).max(1);
+                            req.max_new_tokens = req.max_new_tokens.min(ceiling);
+                            let id = req.id;
+                            let (wid, local) = assignment[idx];
+                            pending.insert(id, reply);
+                            loads[idx].fetch_add(1, Ordering::Relaxed);
+                            if handles[wid]
+                                .mailbox
+                                .send(WorkerMsg::Submit { local, req })
+                                .is_err()
+                            {
+                                if let Some(tx) = pending.remove(&id) {
+                                    let _ =
+                                        tx.send(error_json("server is shutting down"));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            let _ = reply.send(error_json(&format!("{e}")));
+                        }
+                    }
+                }
+                Event::Conn(Incoming::Stats { reply }) => {
+                    let _ = reply.send(worker_stats_json(
+                        &handles,
+                        &names,
+                        &routing_name,
+                        pending.len(),
+                        started,
+                    ));
+                }
+                Event::Conn(Incoming::Models { reply }) => {
+                    let _ = reply.send(models_reply.clone());
+                }
+                Event::Done(c) => {
+                    if let Some(tx) = pending.remove(&c.id) {
+                        let _ = tx.send(completion_json(&c));
+                    }
+                }
+                Event::WorkerStopped => stopped += 1,
+                Event::WorkerFailed(msg) => {
+                    if failed.is_none() {
+                        failed = Some(msg);
+                    }
+                    // A dead engine cannot drain; stop the rest too.
+                    state.shutdown.store(true, Ordering::SeqCst);
+                }
+                Event::Wake => {}
+            }
+        }
+        if state.is_shutdown() && !shutdown_sent {
+            for h in &handles {
+                let _ = h.mailbox.send(WorkerMsg::Shutdown);
+            }
+            shutdown_sent = true;
+        }
+        // Workers flush every completion before announcing their stop
+        // (per-sender FIFO), so once all have stopped and pending is
+        // empty nothing is in flight. A failed worker's requests can
+        // never complete — don't wait on them.
+        if shutdown_sent && stopped == handles.len() && (pending.is_empty() || failed.is_some())
+        {
+            break;
+        }
+    }
+
+    // Fail whatever can no longer complete, then reattach the engines
+    // in registry order.
+    for (_, tx) in pending.drain() {
+        let _ = tx.send(error_json("server is shutting down"));
+    }
+    let mut slots: Vec<Option<Engine>> = (0..n).map(|_| None).collect();
+    for h in handles {
+        let owns = h.owns;
+        match h.handle.join() {
+            Ok(engines) => {
+                for (i, e) in owns.into_iter().zip(engines) {
+                    slots[i] = Some(e);
+                }
+            }
+            Err(_) => bail!("engine worker panicked"),
+        }
+    }
+    registry.put_engines(
+        slots
+            .into_iter()
+            .map(|s| s.expect("every worker returned its engines"))
+            .collect(),
+    );
+    if let Some(msg) = failed {
+        bail!("engine worker failed: {msg}");
+    }
+    Ok(())
 }
 
 /// Minimal client helper (used by tests and examples).

@@ -196,21 +196,40 @@ impl EngineRegistry {
         &mut self.engines[idx]
     }
 
+    /// Detach every engine for worker-mode serving (`serve_with`,
+    /// `workers >= 1`): the registry keeps only routing metadata while
+    /// the engines live on worker threads. Reattach the same engines in
+    /// the same order with [`EngineRegistry::put_engines`] once the
+    /// workers join.
+    pub(crate) fn take_engines(&mut self) -> Vec<Engine> {
+        std::mem::take(&mut self.engines)
+    }
+
+    pub(crate) fn put_engines(&mut self, engines: Vec<Engine>) {
+        self.engines = engines;
+    }
+
     /// All engines drained of work?
     pub fn is_idle(&self) -> bool {
         self.engines.iter().all(Engine::is_idle)
     }
 
-    /// The fair multi-engine stepper: advance every non-idle engine one
-    /// iteration. Within an engine the StepPlan contract bounds a decode
-    /// stall to one prefill chunk; across engines this round-robin sweep
-    /// bounds it to one iteration of each co-hosted model — a long
-    /// prefill on one model cannot starve another model's decodes.
-    /// Returns how many engines stepped.
+    /// The fair multi-engine stepper: advance every non-idle engine up
+    /// to its fair-share weight of iterations (`weight=K` in a `--model`
+    /// SPEC — a weight-2 engine gets two step opportunities per sweep;
+    /// idling mid-sweep forfeits the rest). Within an engine the
+    /// StepPlan contract bounds a decode stall to one prefill chunk;
+    /// across engines this weighted round-robin sweep bounds it to one
+    /// sweep of the co-hosted models — a long prefill on one model
+    /// cannot starve another model's decodes. Returns total iterations
+    /// stepped.
     pub fn step_non_idle(&mut self) -> Result<usize> {
         let mut stepped = 0;
         for e in &mut self.engines {
-            if !e.is_idle() {
+            for _ in 0..e.weight() {
+                if e.is_idle() {
+                    break;
+                }
                 e.step()?;
                 stepped += 1;
             }
@@ -314,6 +333,35 @@ mod tests {
             .submit(Request::from_text(1, "queued work", 4));
         let i = reg.route(None).unwrap();
         assert_eq!(reg.engine_at_mut(i).name(), "mla");
+    }
+
+    #[test]
+    fn weighted_sweep_gives_extra_step_opportunities() {
+        let mut reg = EngineRegistry::new(RoutePolicy::RoundRobin);
+        reg.register("light", engine()).unwrap();
+        reg.register(
+            "heavy",
+            Engine::new(
+                SimBackend::gqa(4),
+                EngineConfig { weight: 3, ..Default::default() },
+            ),
+        )
+        .unwrap();
+        reg.get_mut("light")
+            .unwrap()
+            .submit(Request::from_text(1, "one", 8));
+        reg.get_mut("heavy")
+            .unwrap()
+            .submit(Request::from_text(2, "two", 8));
+        // One sweep: the weight-1 engine steps once, the weight-3 engine
+        // up to three times (both have plenty of decode work queued).
+        assert_eq!(reg.step_non_idle().unwrap(), 4);
+        while !reg.is_idle() {
+            reg.step_non_idle().unwrap();
+        }
+        assert_eq!(reg.take_completions().len(), 2);
+        // An idle engine forfeits its weight entirely.
+        assert_eq!(reg.step_non_idle().unwrap(), 0);
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Integration: threaded engine workers (`ServeOpts { workers: N }`).
+//!
+//! The acceptance bar for PR 6's tentpole: completions must be
+//! bit-identical between the worker mode and the single-threaded sweep
+//! fallback (`workers: 0`) across scheduling policies × cache stores ×
+//! layouts; shutdown must drain in-flight work without wedging or
+//! leaking pending replies; and a randomized interleaved burst across
+//! three models must survive the threading. Everything runs hermetically
+//! over `SimBackend` — greedy decoding (temperature 0, the default) is
+//! pure argmax with no RNG consumption, so per-request outputs are a
+//! function of (prompt, model) alone and cannot depend on how requests
+//! interleave across threads. (Temperature > 0 parity is pinned at the
+//! engine level in `coordinator::engine`'s overlap tests, where
+//! submission order is controlled.)
+
+use std::collections::BTreeMap;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+use transmla::backend::SimBackend;
+use transmla::config::{CacheKind, EngineConfig, PolicyKind};
+use transmla::coordinator::{Engine, Request};
+use transmla::json::Json;
+use transmla::server::{self, EngineRegistry, RoutePolicy, ServeOpts};
+
+fn wait_for_ping(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Ok(j) = server::client_line(addr, "{\"cmd\":\"ping\"}") {
+            if j.get("pong").is_some() {
+                return;
+            }
+        }
+        assert!(Instant::now() < deadline, "server at {addr} never came up");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// One GQA + one MLA engine sharing `cfg`, behind `workers` threads.
+fn start_two_model_server(
+    addr: &'static str,
+    cfg: EngineConfig,
+    workers: usize,
+) -> JoinHandle<()> {
+    let handle = std::thread::spawn(move || {
+        let mut reg = EngineRegistry::new(RoutePolicy::Default("gqa-base".to_string()));
+        reg.register("gqa-base", Engine::new(SimBackend::gqa(4), cfg.clone()))
+            .unwrap();
+        reg.register("mla", Engine::new(SimBackend::mla(4, 8), cfg))
+            .unwrap();
+        server::serve_with(&mut reg, addr, ServeOpts { workers }).unwrap();
+    });
+    wait_for_ping(addr);
+    handle
+}
+
+/// Fire `prompts` at both models concurrently and collect
+/// `model:prompt -> (text, max_new)`; then shut the server down.
+fn burst(
+    addr: &'static str,
+    handle: JoinHandle<()>,
+    prompts: &[&'static str],
+) -> BTreeMap<String, (String, usize)> {
+    let mut clients = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        for model in ["gqa-base", "mla"] {
+            let prompt = *prompt;
+            clients.push(std::thread::spawn(move || {
+                let resp = server::client_request_model(
+                    addr,
+                    prompt,
+                    4 + i % 3, // uneven budgets interleave completion order
+                    Some(model),
+                )
+                .unwrap();
+                (format!("{model}:{prompt}"), resp)
+            }));
+        }
+    }
+    let mut out = BTreeMap::new();
+    for c in clients {
+        let (key, resp) = c.join().unwrap();
+        let text = resp
+            .get("text")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("no text for {key}: {resp:?}"))
+            .to_string();
+        let max_new = resp.get("max_new").and_then(Json::as_usize).unwrap();
+        out.insert(key, (text, max_new));
+    }
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+    out
+}
+
+/// The tentpole acceptance test: completions are bit-identical between
+/// `--workers N` and the single-threaded sweep across
+/// {admit-first, chunked:3} × {fixed, paged+prefix} × {GQA, MLA}
+/// (both layouts serve side by side in every combination).
+#[test]
+fn threaded_completions_match_sweep_across_policies_and_caches() {
+    let prompts: &[&'static str] = &[
+        "alpha parity prompt",
+        "bravo!",
+        "charlie parity prompt three",
+        "delta",
+    ];
+    // (sweep addr, worker addr) per combination — unique ports because
+    // the test binary runs tests in parallel.
+    let combos: &[(PolicyKind, bool, &'static str, &'static str)] = &[
+        (PolicyKind::AdmitFirst, false, "127.0.0.1:18450", "127.0.0.1:18451"),
+        (PolicyKind::AdmitFirst, true, "127.0.0.1:18452", "127.0.0.1:18453"),
+        (
+            PolicyKind::Chunked { chunk_tokens: 3 },
+            false,
+            "127.0.0.1:18454",
+            "127.0.0.1:18455",
+        ),
+        (
+            PolicyKind::Chunked { chunk_tokens: 3 },
+            true,
+            "127.0.0.1:18456",
+            "127.0.0.1:18457",
+        ),
+    ];
+    for &(policy, paged, sweep_addr, worker_addr) in combos {
+        let cfg = EngineConfig {
+            policy,
+            cache: if paged {
+                CacheKind::Paged { block_size: 8, n_blocks: None }
+            } else {
+                CacheKind::Fixed
+            },
+            prefix_cache: paged,
+            ..Default::default()
+        };
+        let sweep = burst(
+            sweep_addr,
+            start_two_model_server(sweep_addr, cfg.clone(), 0),
+            prompts,
+        );
+        let threaded = burst(
+            worker_addr,
+            start_two_model_server(worker_addr, cfg, 2),
+            prompts,
+        );
+        assert_eq!(
+            sweep, threaded,
+            "completions diverged between sweep and workers \
+             (policy {policy:?}, paged {paged})"
+        );
+        // And both match a fresh solo engine (greedy = order-independent).
+        for (i, prompt) in prompts.iter().enumerate() {
+            for (model, mk) in [
+                ("gqa-base", SimBackend::gqa as fn(usize) -> SimBackend),
+                ("mla", |b| SimBackend::mla(b, 8)),
+            ] {
+                let mut solo = Engine::new(
+                    mk(4),
+                    EngineConfig { policy, ..Default::default() },
+                );
+                let comps = solo
+                    .generate(vec![Request::from_text(0, prompt, 4 + i % 3)])
+                    .unwrap();
+                assert_eq!(
+                    threaded[&format!("{model}:{prompt}")].0,
+                    comps[0].text(),
+                    "{model} `{prompt}` differs from a solo run"
+                );
+            }
+        }
+    }
+}
+
+/// Shutdown with work in flight: every already-submitted request is
+/// drained to a real completion (workers finish their sequences before
+/// exiting), nothing wedges, and `serve_with` returns cleanly. Requests
+/// arriving after shutdown get an in-band error rather than silence.
+#[test]
+fn worker_shutdown_drains_in_flight_requests() {
+    let addr = "127.0.0.1:18458";
+    let handle = start_two_model_server(
+        addr,
+        EngineConfig { policy: PolicyKind::Chunked { chunk_tokens: 2 }, ..Default::default() },
+        2,
+    );
+
+    // Long-ish generations so shutdown lands while they are in flight.
+    let clients: Vec<JoinHandle<Json>> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let model = if i % 2 == 0 { "gqa-base" } else { "mla" };
+                server::client_request_model(
+                    addr,
+                    "a prompt that takes a while to prefill and decode",
+                    12,
+                    Some(model),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+
+    // Let the requests reach the engines, then pull the plug.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = server::client_stats(addr).unwrap();
+        let requests: usize = ["gqa-base", "mla"]
+            .iter()
+            .filter_map(|n| {
+                stats
+                    .get("engines")?
+                    .get(n)?
+                    .get("counters")?
+                    .get("requests")?
+                    .as_usize()
+            })
+            .sum();
+        if requests == 6 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "requests never reached the engines");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server::client_shutdown(addr).unwrap();
+
+    // Every in-flight request still gets its completion — the workers
+    // drain before exiting (no wedge, no pending leak, no error reply).
+    for c in clients {
+        let resp = c.join().unwrap();
+        assert!(
+            resp.get("text").is_some(),
+            "in-flight request dropped at shutdown: {resp:?}"
+        );
+        assert_eq!(resp.get("max_new").and_then(Json::as_usize), Some(12));
+    }
+    // serve_with returned Ok — the engines were reattached and no worker
+    // wedged or leaked.
+    handle.join().unwrap();
+}
+
+/// Stress: three models with different policies/caches behind two
+/// workers (one worker owns two engines), hammered by a deterministic
+/// pseudo-random interleaving of concurrent requests. Every reply must
+/// match a fresh solo-engine run of that single request (greedy decoding
+/// is order-independent), routing must never cross models, and the
+/// engines must drain completely.
+#[test]
+fn randomized_three_model_stress_under_workers() {
+    let addr = "127.0.0.1:18459";
+    let handle = std::thread::spawn(move || {
+        let mut reg = EngineRegistry::new(RoutePolicy::RoundRobin);
+        reg.register("plain", Engine::new(SimBackend::gqa(4), EngineConfig::default()))
+            .unwrap();
+        reg.register(
+            "chunky",
+            Engine::new(
+                SimBackend::gqa(4),
+                EngineConfig {
+                    policy: PolicyKind::Chunked { chunk_tokens: 3 },
+                    cache: CacheKind::Paged { block_size: 8, n_blocks: None },
+                    prefix_cache: true,
+                    weight: 2,
+                    ..Default::default()
+                },
+            ),
+        )
+        .unwrap();
+        reg.register("mla", Engine::new(SimBackend::mla(4, 8), EngineConfig::default()))
+            .unwrap();
+        server::serve_with(&mut reg, addr, ServeOpts { workers: 2 }).unwrap();
+    });
+    wait_for_ping(addr);
+
+    // Deterministic LCG so the "random" schedule is reproducible.
+    let mut state = 0x2545F4914F6CDD1Du64;
+    let mut rand = move |n: usize| {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((state >> 33) as usize) % n
+    };
+    let prompts = [
+        "shared prefix stress prompt variant one",
+        "shared prefix stress prompt variant two",
+        "a different short one",
+        "x",
+    ];
+    let models = ["plain", "chunky", "mla"];
+    let mut clients = Vec::new();
+    for _ in 0..24 {
+        let model = models[rand(3)];
+        let prompt = prompts[rand(prompts.len())];
+        let max_new = 1 + rand(6);
+        clients.push(std::thread::spawn(move || {
+            let resp =
+                server::client_request_model(addr, prompt, max_new, Some(model)).unwrap();
+            (model, prompt, max_new, resp)
+        }));
+    }
+
+    let mut per_model = BTreeMap::new();
+    for c in clients {
+        let (model, prompt, max_new, resp) = c.join().unwrap();
+        assert_eq!(
+            resp.get("model").and_then(Json::as_str),
+            Some(model),
+            "reply crossed models: {resp:?}"
+        );
+        let text = resp.get("text").and_then(Json::as_str).unwrap().to_string();
+        // Greedy decoding is a pure function of (prompt, model): a fresh
+        // solo engine must reproduce the served text exactly, regardless
+        // of how the threaded server batched and interleaved.
+        let mut solo = match model {
+            "mla" => Engine::new(SimBackend::mla(4, 8), EngineConfig::default()),
+            _ => Engine::new(SimBackend::gqa(4), EngineConfig::default()),
+        };
+        let comps = solo
+            .generate(vec![Request::from_text(0, prompt, max_new)])
+            .unwrap();
+        assert_eq!(text, comps[0].text(), "{model} `{prompt}` (max_new {max_new})");
+        *per_model.entry(model).or_insert(0usize) += 1;
+    }
+
+    // Control commands work mid-mode: the worker-mode stats fan-out
+    // assembles every engine, counters add up, and everything drained.
+    let stats = server::client_stats(addr).unwrap();
+    let mut completed = 0usize;
+    for (model, served) in &per_model {
+        let eng = stats
+            .get("engines")
+            .and_then(|e| e.get(model))
+            .unwrap_or_else(|| panic!("stats missing engine `{model}`: {stats:?}"));
+        let c = eng
+            .get("counters")
+            .and_then(|c| c.get("completed"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert_eq!(c, *served, "{model} completed");
+        completed += c;
+        for depth in ["queued", "prefilling", "decoding"] {
+            assert_eq!(eng.get(depth).and_then(Json::as_usize), Some(0), "{model} {depth}");
+        }
+    }
+    assert_eq!(completed, 24);
+    assert_eq!(
+        stats
+            .get("server")
+            .and_then(|s| s.get("pending"))
+            .and_then(Json::as_usize),
+        Some(0)
+    );
+    let m = server::client_models(addr).unwrap();
+    assert_eq!(m.get("models").and_then(Json::as_arr).unwrap().len(), 3);
+    assert_eq!(m.get("routing").and_then(Json::as_str), Some("round-robin"));
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// `workers` larger than the engine count is clamped (one worker per
+/// engine) and still serves + shuts down cleanly.
+#[test]
+fn more_workers_than_engines_is_clamped_and_serves() {
+    let addr = "127.0.0.1:18460";
+    let handle = start_two_model_server(addr, EngineConfig::default(), 8);
+    let resp = server::client_request_model(addr, "clamped workers", 3, Some("mla")).unwrap();
+    assert_eq!(resp.get("model").and_then(Json::as_str), Some("mla"));
+    assert!(resp.get("text").is_some(), "{resp:?}");
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
