@@ -100,6 +100,53 @@ fn serving_workload(b: &Bench, addr: &'static str, workers: usize, label: &str) 
     b.report(&format!("serve_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
 }
 
+/// Speculative decoding off vs on: a same-seed sim draft agrees with
+/// the target on every greedy token, so this bounds the best case —
+/// emitted tokens per target verify step approaches K while the output
+/// stays bit-identical to serial decode.
+fn speculative_workload(b: &Bench, k: Option<usize>, label: &str) {
+    let n_req = if b.quick { 16 } else { 64 };
+    let max_new = 24usize;
+    let mut tokens_per_step = 0.0f64;
+    let mean = b.run(&format!("sim_engine_{label}_{n_req}req"), || {
+        let policy = match k {
+            Some(k) => PolicyKind::Speculative { k },
+            None => PolicyKind::AdmitFirst,
+        };
+        let mut engine = Engine::new(
+            SimBackend::new(SimConfig { capacity: 128, prefill_seq: 128, ..SimConfig::gqa(8) })
+                .unwrap(),
+            EngineConfig { policy, ..Default::default() },
+        );
+        if k.is_some() {
+            engine
+                .set_draft(Box::new(
+                    SimBackend::new(SimConfig {
+                        capacity: 128,
+                        prefill_seq: 128,
+                        ..SimConfig::mla(8, 2)
+                    })
+                    .unwrap(),
+                ))
+                .unwrap();
+        }
+        for i in 0..n_req {
+            engine.submit(Request::from_text(
+                i as u64,
+                "the draft proposes and the target verifies in one call",
+                max_new,
+            ));
+        }
+        engine.run_to_completion().unwrap();
+        tokens_per_step = engine.spec_stats().tokens_per_step;
+    });
+    let toks = (n_req * max_new) as f64;
+    b.report(&format!("sim_engine_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
+    if k.is_some() {
+        b.report(&format!("sim_engine_{label}_tok_per_step"), tokens_per_step, "tok/step");
+    }
+}
+
 /// Chunked prefill with the decode batch on a second stream, vs the
 /// serial schedule — same completions (bit-identical by construction),
 /// different wall clock.
@@ -164,6 +211,12 @@ fn main() {
     // Dual-stream prefill/decode overlap on vs off (chunked policy).
     overlap_workload(&b, false, "chunked_serial");
     overlap_workload(&b, true, "chunked_overlap");
+
+    // Speculative decoding off vs on at k in {2, 4} (same-seed draft:
+    // the perfect-agreement upper bound on tokens per verify step).
+    speculative_workload(&b, None, "spec_off");
+    speculative_workload(&b, Some(2), "spec_k2");
+    speculative_workload(&b, Some(4), "spec_k4");
 
     // Persist the hermetic tier as the serving perf trajectory (the
     // artifact tier below is environment-dependent, so it stays out).

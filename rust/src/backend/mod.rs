@@ -231,6 +231,20 @@ impl CacheStore {
         }
     }
 
+    /// Retract `slot`'s cache coverage to at most `len` token positions
+    /// — the speculative-decode rollback seam. Paged: tail blocks past
+    /// the new end are released back to the allocator, refcount-correct
+    /// under prefix sharing (see [`PagedKvCache::truncate`]). Fixed: a
+    /// no-op — the slot row stays reserved and correctness comes from
+    /// position masking; the retracted rows are simply overwritten by
+    /// the next decode step at the same positions.
+    pub fn truncate(&mut self, slot: usize, len: usize) -> Result<()> {
+        match self {
+            CacheStore::Fixed(_) => Ok(()),
+            CacheStore::Paged(p) => p.truncate(slot, len),
+        }
+    }
+
     /// Return `slot`'s memory to the pool. Paged: blocks go back to the
     /// free list. Fixed: a no-op — the slot row stays reserved by
     /// construction and correctness comes from position masking, so
@@ -358,4 +372,44 @@ pub trait ExecBackend: Send {
         active: &[bool],
         cache: &mut CacheStore,
     ) -> Result<Tensor>;
+
+    /// Opt-in to batched multi-token verification: can this backend
+    /// score k candidate tokens per slot in one [`ExecBackend::verify`]
+    /// call? Default `false` — the engine then stays on the serial
+    /// one-token decode path, the same opt-in pattern as
+    /// [`ExecBackend::supports_overlap`]. `XlaBackend` stays `false`:
+    /// its decode artifact is AOT-compiled for exactly one position per
+    /// slot per call.
+    fn supports_verify(&self) -> bool {
+        false
+    }
+
+    /// Score up to `k` candidate tokens per slot in one call — the
+    /// target-model half of speculative decoding. `tokens` is a
+    /// row-major `[batch, k]` matrix; for slot `s`, `counts[s]` (0 for
+    /// slots sitting this step out, `<= k` otherwise) tokens starting at
+    /// `tokens[s * k]` are fed at consecutive positions
+    /// `start_pos[s] ..`. Semantics per position are EXACTLY those of
+    /// `k` serial [`ExecBackend::decode`] calls: the cache row for each
+    /// fed token is written in place, and output row `j` of the returned
+    /// `[batch, k, vocab]` tensor holds the logits predicting the token
+    /// after position `start_pos[s] + j` (rows `counts[s]..` stay zero).
+    /// The engine accepts a prefix of the candidates and calls
+    /// [`CacheStore::truncate`] to retract the cache writes of rejected
+    /// ones, so a verify overshoot is never observable.
+    fn verify(
+        &mut self,
+        tokens: &[i32],
+        start_pos: &[i32],
+        counts: &[usize],
+        k: usize,
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
+        let _ = (tokens, start_pos, counts, k, cache);
+        bail!(
+            "backend `{}` does not support batched verify (supports_verify \
+             is false); the engine must stay on the serial decode path",
+            self.spec().name
+        )
+    }
 }

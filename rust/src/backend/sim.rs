@@ -371,6 +371,76 @@ impl ExecBackend for SimBackend {
         }
         Ok(logits)
     }
+
+    /// The sim scores candidate chains with exact cache semantics: each
+    /// fed token runs the same per-slot step as [`ExecBackend::decode`]
+    /// (read state, mix, write row), so a verify call is bit-identical
+    /// to the equivalent serial decode calls by construction.
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn verify(
+        &mut self,
+        tokens: &[i32],
+        start_pos: &[i32],
+        counts: &[usize],
+        k: usize,
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
+        let (b, v) = (self.spec.batch, self.spec.vocab);
+        if k == 0 {
+            bail!("sim verify: k must be >= 1");
+        }
+        if tokens.len() != b * k || start_pos.len() != b || counts.len() != b {
+            bail!(
+                "sim verify wants a [{b}, {k}] token matrix plus {b} start \
+                 positions and counts"
+            );
+        }
+        let mut logits = Tensor::zeros(&[b, k, v]);
+        for slot in 0..b {
+            let n = counts[slot];
+            if n == 0 {
+                continue;
+            }
+            if n > k {
+                bail!("sim verify: slot {slot} count {n} exceeds k {k}");
+            }
+            let p0 = start_pos[slot] as usize;
+            if p0 + n > self.spec.capacity {
+                bail!(
+                    "sim verify: slot {slot} positions {p0}..{} exceed capacity {}",
+                    p0 + n,
+                    self.spec.capacity
+                );
+            }
+            for j in 0..n {
+                let p = p0 + j;
+                let tok = tokens[slot * k + j];
+                let state = match cache {
+                    CacheStore::Fixed(kv) => {
+                        Some(self.decode_slot_fixed(kv, slot, tok, p))
+                    }
+                    CacheStore::Paged(pc) => self.decode_slot_paged(pc, slot, tok, p)?,
+                };
+                match state {
+                    Some(state) => {
+                        let off = (slot * k + j) * v;
+                        self.logits_row(state, &mut logits.data[off..off + v]);
+                    }
+                    // Unlike decode's position masking, an uncovered
+                    // verify position is an engine bug: the caller grows
+                    // the slot over the whole candidate chain first.
+                    None => bail!(
+                        "sim verify: slot {slot} block table does not cover \
+                         position {p}"
+                    ),
+                }
+            }
+        }
+        Ok(logits)
+    }
 }
 
 fn inner_dims(layout: CacheLayout) -> (usize, usize) {
@@ -612,6 +682,70 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn verify_is_bit_identical_to_serial_decodes_on_both_stores() {
+        // A k-token verify call must reproduce k serial decode calls
+        // exactly: same logits rows, same cache rows — the contract the
+        // speculative engine's temp-0 bit-identity rests on.
+        for mut be in [SimBackend::gqa(4), SimBackend::mla(4, 4)] {
+            let s = be.spec().clone();
+            let toks = prompt();
+            let plen = toks.len();
+            let k = 3;
+            let chain = [17i32, 99, 204];
+            let build = |be: &mut SimBackend, paged: bool| -> CacheStore {
+                let out = be.prefill(&padded(&toks, 1, s.prefill_seq, 0), 1).unwrap();
+                if paged {
+                    let mut p = crate::kvcache::PagedKvCache::new(
+                        s.layout, s.n_layers, s.batch, 8, 64,
+                    )
+                    .unwrap();
+                    p.admit_slot(1, plen + k + 1, plen).unwrap();
+                    p.grow(1, plen + k).unwrap();
+                    p.splice_from(&out.caches, 0, 1, plen).unwrap();
+                    CacheStore::Paged(p)
+                } else {
+                    let mut kv = s.new_cache();
+                    kv.splice_from(&out.caches, 0, 1).unwrap();
+                    CacheStore::Fixed(kv)
+                }
+            };
+            for paged in [false, true] {
+                let mut serial = build(&mut be, paged);
+                let mut serial_rows = Vec::new();
+                for (j, &tok) in chain.iter().enumerate() {
+                    let mut dt = vec![0i32; s.batch];
+                    let mut dp = vec![0i32; s.batch];
+                    let mut act = vec![false; s.batch];
+                    dt[1] = tok;
+                    dp[1] = (plen - 1 + j) as i32;
+                    act[1] = true;
+                    let l = be.decode(&dt, &dp, &act, &mut serial).unwrap();
+                    serial_rows.push(l.data[s.vocab..2 * s.vocab].to_vec());
+                }
+                let mut batched = build(&mut be, paged);
+                let mut vt = vec![0i32; s.batch * k];
+                let mut vp = vec![0i32; s.batch];
+                let mut counts = vec![0usize; s.batch];
+                vt[k..2 * k].copy_from_slice(&chain);
+                vp[1] = (plen - 1) as i32;
+                counts[1] = k;
+                let vl = be.verify(&vt, &vp, &counts, k, &mut batched).unwrap();
+                assert_eq!(vl.shape, vec![s.batch, k, s.vocab]);
+                for (j, want) in serial_rows.iter().enumerate() {
+                    let off = (k + j) * s.vocab;
+                    assert_eq!(
+                        &vl.data[off..off + s.vocab],
+                        &want[..],
+                        "row {j} diverged (paged={paged})"
+                    );
+                }
+                // Idle slots produced no logits energy.
+                assert!(vl.data[..k * s.vocab].iter().all(|&x| x == 0.0));
             }
         }
     }

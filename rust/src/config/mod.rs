@@ -94,19 +94,31 @@ pub enum PolicyKind {
     /// into the cache at most `chunk_tokens` per iteration, decoding in
     /// the same iteration (see `coordinator::scheduler::Chunked`).
     Chunked { chunk_tokens: usize },
+    /// Speculative decoding: admit like `admit-first`, but decode steps
+    /// run the draft-propose / target-verify loop at most `k` tokens per
+    /// slot per iteration (see `coordinator::scheduler::Speculative` and
+    /// `Engine::speculative_decode_step`). Requires a draft backend
+    /// (`draft=SPEC` in the `--model` grammar) and a target backend with
+    /// `ExecBackend::supports_verify`.
+    Speculative { k: usize },
 }
 
 /// Default prefill-chunk token budget per iteration for `chunked`.
 pub const DEFAULT_PREFILL_CHUNK: usize = 32;
 
+/// Default candidate tokens per slot per iteration for `speculative`.
+pub const DEFAULT_SPEC_K: usize = 4;
+
 impl PolicyKind {
-    /// Parse `admit-first` / `decode-first` / `hybrid[:N]` / `chunked[:N]`.
+    /// Parse `admit-first` / `decode-first` / `hybrid[:N]` / `chunked[:N]`
+    /// / `speculative[:K]`.
     pub fn parse(s: &str) -> Result<PolicyKind> {
         match s {
             "admit-first" => Ok(PolicyKind::AdmitFirst),
             "decode-first" => Ok(PolicyKind::DecodeFirst),
             "hybrid" => Ok(PolicyKind::Hybrid { min_free: 2 }),
             "chunked" => Ok(PolicyKind::Chunked { chunk_tokens: DEFAULT_PREFILL_CHUNK }),
+            "speculative" => Ok(PolicyKind::Speculative { k: DEFAULT_SPEC_K }),
             other => {
                 if let Some(n) = other.strip_prefix("hybrid:") {
                     Ok(PolicyKind::Hybrid {
@@ -123,10 +135,18 @@ impl PolicyKind {
                             .filter(|&c| c > 0)
                             .with_context(|| format!("bad chunk size `{n}`"))?,
                     })
+                } else if let Some(n) = other.strip_prefix("speculative:") {
+                    Ok(PolicyKind::Speculative {
+                        k: n
+                            .parse::<usize>()
+                            .ok()
+                            .filter(|&k| k > 0)
+                            .with_context(|| format!("bad speculation depth `{n}`"))?,
+                    })
                 } else {
                     anyhow::bail!(
                         "unknown policy `{other}` \
-                         (admit-first|decode-first|hybrid[:N]|chunked[:N])"
+                         (admit-first|decode-first|hybrid[:N]|chunked[:N]|speculative[:K])"
                     )
                 }
             }
@@ -200,6 +220,7 @@ pub const MODEL_SPEC_KEYS: &[&str] = &[
     "ckpt",
     "weight",
     "overlap",
+    "draft",
 ];
 
 /// One `--model name=SPEC` CLI entry: a named engine whose SPEC is a
@@ -384,10 +405,20 @@ mod tests {
             PolicyKind::parse("chunked").unwrap(),
             PolicyKind::Chunked { chunk_tokens: DEFAULT_PREFILL_CHUNK }
         );
+        assert_eq!(
+            PolicyKind::parse("speculative:2").unwrap(),
+            PolicyKind::Speculative { k: 2 }
+        );
+        assert_eq!(
+            PolicyKind::parse("speculative").unwrap(),
+            PolicyKind::Speculative { k: DEFAULT_SPEC_K }
+        );
         assert!(PolicyKind::parse("nope").is_err());
         assert!(PolicyKind::parse("hybrid:x").is_err());
         assert!(PolicyKind::parse("chunked:0").is_err());
         assert!(PolicyKind::parse("chunked:x").is_err());
+        assert!(PolicyKind::parse("speculative:0").is_err());
+        assert!(PolicyKind::parse("speculative:x").is_err());
         assert_eq!(EngineConfig::default().policy, PolicyKind::AdmitFirst);
     }
 
@@ -442,6 +473,15 @@ mod tests {
             vec![
                 ("weight".to_string(), "2".to_string()),
                 ("overlap".to_string(), "on".to_string()),
+            ]
+        );
+        // PR 7 key: a draft model spec for speculative decoding.
+        let s = ModelSpec::parse("big=policy=speculative:4,draft=mla:2").unwrap();
+        assert_eq!(
+            s.overrides,
+            vec![
+                ("policy".to_string(), "speculative:4".to_string()),
+                ("draft".to_string(), "mla:2".to_string()),
             ]
         );
     }

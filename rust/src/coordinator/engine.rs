@@ -24,7 +24,7 @@
 //! drains them (the server does this every loop iteration).
 
 use crate::backend::{BackendSpec, CacheStore, ExecBackend, ModelBundle, XlaBackend};
-use crate::config::EngineConfig;
+use crate::config::{CacheKind, EngineConfig};
 use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::sampling;
 use crate::coordinator::scheduler::{self, PrefillWork, SchedView, SchedulePolicy, StepPlan};
@@ -59,6 +59,9 @@ pub struct Engine {
     rng: Rng,
     cfg: EngineConfig,
     policy: Box<dyn SchedulePolicy>,
+    /// Cheap proposer model for speculative decoding, attached via
+    /// [`Engine::set_draft`]; `None` keeps every decode step serial.
+    draft: Option<DraftState>,
     /// (active-before, admitted request ids) per admission — the
     /// observable ordering trace the policy tests assert on. A ring
     /// buffer bounded to the most recent [`ADMISSION_LOG_CAP`] entries
@@ -69,6 +72,44 @@ pub struct Engine {
 
 /// Most recent admissions kept for inspection (`Engine::admission_log`).
 const ADMISSION_LOG_CAP: usize = 64;
+
+/// The draft half of the speculative decode pipeline: a cheap model the
+/// engine runs serially to *propose* candidate tokens the target then
+/// scores in one batched [`ExecBackend::verify`] call.
+struct DraftState {
+    backend: Box<dyn ExecBackend>,
+    /// Always a private fixed pool sized by the draft's own spec. Draft
+    /// state is scratch, rebuilt lazily from the confirmed stream, so it
+    /// needs no paging, no sharing, and no truncation: rejected-token
+    /// writes sit beyond the `done` watermark and are overwritten by the
+    /// next catch-up or proposal round before anything reads them.
+    cache: CacheStore,
+    /// Per-slot watermark: how many positions of the slot's *confirmed*
+    /// token stream the draft cache currently holds. Lags lazily (a slot
+    /// that never proposes is never caught up) and resets to 0 when the
+    /// slot's sequence completes, because slots are reused.
+    done: Vec<usize>,
+}
+
+/// Lifetime speculative-decoding counters (see [`Engine::spec_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecStats {
+    /// Draft tokens proposed to the target (k-1 per speculating slot per
+    /// verify step).
+    pub proposed: u64,
+    /// Proposed tokens the target agreed with (emitted unmodified).
+    pub accepted: u64,
+    /// Verify iterations run.
+    pub steps: u64,
+    /// Tokens emitted by verify iterations (accepted + one target token
+    /// per slot per step).
+    pub tokens: u64,
+    /// `accepted / proposed` (0 before any proposal).
+    pub acceptance_rate: f64,
+    /// `tokens / steps` — the speedup signal: serial decode is pinned at
+    /// 1.0, a well-matched draft pushes this toward k.
+    pub tokens_per_step: f64,
+}
 
 /// The dual-stream aliasing seam: a raw pointer that may cross a scoped
 /// thread boundary. Used ONLY by [`Engine::overlapped_chunk_decode_step`]
@@ -143,6 +184,7 @@ impl Engine {
             rng: Rng::new(cfg.seed),
             policy: scheduler::build(cfg.policy),
             cfg,
+            draft: None,
             admission_log: VecDeque::new(),
         })
     }
@@ -170,6 +212,62 @@ impl Engine {
     /// new name in its `model` field.
     pub fn set_name(&mut self, name: &str) {
         self.name = name.to_string();
+    }
+
+    /// Attach a cheap draft model for speculative decoding (`draft=SPEC`
+    /// in the `--model` grammar). The draft must line up with the target
+    /// geometry: same slot count and vocab, and at least the target's
+    /// cache capacity (its serial proposals walk the same positions).
+    pub fn set_draft(&mut self, backend: Box<dyn ExecBackend>) -> Result<()> {
+        let target = self.backend.spec();
+        let spec = backend.spec();
+        if spec.batch != target.batch {
+            bail!("draft batch {} != engine batch {}", spec.batch, target.batch);
+        }
+        if spec.vocab != target.vocab {
+            bail!("draft vocab {} != engine vocab {}", spec.vocab, target.vocab);
+        }
+        if spec.capacity < target.capacity {
+            bail!(
+                "draft capacity {} < engine capacity {}",
+                spec.capacity,
+                target.capacity
+            );
+        }
+        let cache = spec.new_cache_store(CacheKind::Fixed, false)?;
+        let done = vec![0; spec.batch];
+        self.draft = Some(DraftState { backend, cache, done });
+        Ok(())
+    }
+
+    /// Name of the attached draft model, if any.
+    pub fn draft_name(&self) -> Option<&str> {
+        self.draft.as_ref().map(|d| d.backend.spec().name.as_str())
+    }
+
+    /// Lifetime speculative-decoding counters, derived from the metrics
+    /// the verify steps maintain. All-zero when speculation never ran.
+    pub fn spec_stats(&self) -> SpecStats {
+        let proposed = self.metrics.counter("spec_proposed");
+        let accepted = self.metrics.counter("spec_accepted");
+        let steps = self.metrics.counter("spec_steps");
+        let tokens = self.metrics.counter("spec_tokens");
+        SpecStats {
+            proposed,
+            accepted,
+            steps,
+            tokens,
+            acceptance_rate: if proposed > 0 {
+                accepted as f64 / proposed as f64
+            } else {
+                0.0
+            },
+            tokens_per_step: if steps > 0 {
+                tokens as f64 / steps as f64
+            } else {
+                0.0
+            },
+        }
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -389,7 +487,17 @@ impl Engine {
             }
         }
         if plan.decode && !decoded {
-            self.decode_step()?;
+            // A speculate plan needs both halves of the pipeline: a
+            // target that can batch-verify and an attached draft. When
+            // either is missing (the XLA artifacts, or no `draft=SPEC`
+            // was wired), fall back to the serial step — same graceful
+            // degradation as the overlap gate above.
+            match plan.speculate {
+                Some(k) if self.backend.supports_verify() && self.draft.is_some() => {
+                    self.speculative_decode_step(k)?;
+                }
+                _ => self.decode_step()?,
+            }
         }
         Ok(plan)
     }
@@ -897,12 +1005,196 @@ impl Engine {
         Ok(())
     }
 
+    /// One speculative decode iteration — the propose/verify/rollback
+    /// pipeline behind `--policy speculative[:K]`:
+    ///
+    ///   1. **Propose** (draft stream): catch the draft cache up to the
+    ///      slot's confirmed token stream, then run the cheap model's own
+    ///      serial decode loop to draft up to `k-1` candidate tokens per
+    ///      slot (always greedy — drafts are guesses, not samples).
+    ///   2. **Verify** (one target call): feed each slot's chain
+    ///      `[newest confirmed token, draft_1..]` at consecutive
+    ///      positions through [`ExecBackend::verify`]; output row `j` is
+    ///      the target's own next-token logits after consuming candidate
+    ///      `j` — exactly what `j+1` serial decode steps would produce.
+    ///   3. **Accept + rollback**: keep the longest draft prefix the
+    ///      target's greedy choices agree with, plus the target's own
+    ///      next token (so every iteration emits >= 1 token), then
+    ///      [`CacheStore::truncate`] the rejected candidates' cache
+    ///      writes. At temperature 0 the emitted stream is bit-identical
+    ///      to plain serial decode by construction; sampled slots fall
+    ///      back to a verify-checked serial step (`k_slot = 1`).
+    fn speculative_decode_step(&mut self, k: usize) -> Result<()> {
+        let k = k.max(1);
+        let spec = self.backend.spec().clone();
+        let b = spec.batch;
+        let vocab = spec.vocab;
+        let decoding = self.seqs.decoding_slots();
+
+        // Per-slot depth: clamp to the sequence's remaining budget (the
+        // final token needs no cache write, but everything before does),
+        // and pin sampled slots to 1 — speculation only promises
+        // bit-identity for greedy decoding.
+        let mut k_of = vec![0usize; b];
+        for &slot in &decoding {
+            let seq = self.seqs.seq(slot).context("decoding slot has state")?;
+            let temp = self.effective_temp(&seq.req);
+            k_of[slot] = if temp > 0.0 {
+                1
+            } else {
+                k.min(self.seqs.tokens_left(slot)).max(1)
+            };
+        }
+
+        // 1. Propose.
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        {
+            let draft = self.draft.as_mut().context("speculative step without a draft")?;
+            let timer = Timer::start();
+            // Lazy catch-up: replay the confirmed stream (prompt plus
+            // accepted tokens, minus the newest — that token is this
+            // step's decode input) into the draft cache. Runs the cheap
+            // model, never the target; a slot admitted over a long
+            // prompt costs one draft prefill here, then stays warm.
+            for &slot in &decoding {
+                if k_of[slot] < 2 {
+                    continue; // not proposing: no draft state needed
+                }
+                let seq = self.seqs.seq(slot).context("decoding slot has state")?;
+                let p = seq.next_pos;
+                if draft.done[slot] < p {
+                    let mut confirmed = seq.req.prompt[..seq.prompt_len].to_vec();
+                    confirmed.extend_from_slice(&seq.generated[..seq.generated.len() - 1]);
+                    debug_assert_eq!(confirmed.len(), p, "confirmed stream is the cache");
+                    draft.backend.prefill_chunk(
+                        &confirmed,
+                        slot,
+                        draft.done[slot],
+                        &mut draft.cache,
+                    )?;
+                    draft.done[slot] = p;
+                }
+            }
+            // Proposal rounds, batched across slots: round 0 feeds the
+            // slot's newest confirmed token at its next position (the
+            // exact serial decode input); round j feeds the round-(j-1)
+            // draft one position later.
+            let rounds = decoding
+                .iter()
+                .map(|&s| k_of[s].saturating_sub(1))
+                .max()
+                .unwrap_or(0);
+            let mut token = vec![0i32; b];
+            let mut pos = vec![0i32; b];
+            for j in 0..rounds {
+                let mut active = vec![false; b];
+                for &slot in &decoding {
+                    if j + 1 >= k_of[slot] {
+                        continue;
+                    }
+                    let seq = self.seqs.seq(slot).context("decoding slot has state")?;
+                    active[slot] = true;
+                    pos[slot] = (seq.next_pos + j) as i32;
+                    token[slot] = if j == 0 { seq.last_token } else { drafts[slot][j - 1] };
+                }
+                let logits = draft.backend.decode(&token, &pos, &active, &mut draft.cache)?;
+                for &slot in &decoding {
+                    if active[slot] {
+                        let row = &logits.data[slot * vocab..(slot + 1) * vocab];
+                        drafts[slot].push(sampling::greedy(row));
+                    }
+                }
+            }
+            self.metrics.observe("draft_s", timer.elapsed_s());
+        }
+
+        // 2. Verify: materialise every position the chains write (the
+        // depth clamp keeps them inside the admission-time reservation),
+        // then score all chains in ONE batched target call.
+        for &slot in &decoding {
+            let seq = self.seqs.seq(slot).context("decoding slot has state")?;
+            self.cache.grow(slot, seq.next_pos + k_of[slot])?;
+        }
+        if let CacheStore::Paged(p) = &self.cache {
+            self.metrics.observe("blocks_in_use", p.blocks_in_use() as f64);
+        }
+        let mut tokens = vec![0i32; b * k];
+        let mut start_pos = vec![0i32; b];
+        let mut counts = vec![0usize; b];
+        for &slot in &decoding {
+            let seq = self.seqs.seq(slot).context("decoding slot has state")?;
+            counts[slot] = k_of[slot];
+            start_pos[slot] = seq.next_pos as i32;
+            tokens[slot * k] = seq.last_token;
+            for (j, &d) in drafts[slot].iter().enumerate() {
+                tokens[slot * k + 1 + j] = d;
+            }
+        }
+        let timer = Timer::start();
+        let logits = self.backend.verify(&tokens, &start_pos, &counts, k, &mut self.cache)?;
+        self.metrics.observe("decode_s", timer.elapsed_s());
+
+        // 3. Accept + rollback, slots ascending (serial sampling order).
+        let mut emitted_total = 0u64;
+        let mut proposed = 0u64;
+        let mut accepted = 0u64;
+        for &slot in &decoding {
+            let n = k_of[slot];
+            let p = start_pos[slot] as usize;
+            let temp = {
+                let seq = self.seqs.seq(slot).expect("decoding slot has state");
+                self.effective_temp(&seq.req)
+            };
+            let mut emitted: Vec<i32> = Vec::with_capacity(n);
+            for j in 0..n {
+                let row = &logits.data[(slot * k + j) * vocab..(slot * k + j + 1) * vocab];
+                let tok = sampling::sample(row, temp, &mut self.rng);
+                emitted.push(tok);
+                if j + 1 < n && tok != drafts[slot][j] {
+                    break; // rows past j scored a now-rejected candidate
+                }
+            }
+            let e = emitted.len();
+            proposed += (n - 1) as u64;
+            accepted += (e - 1) as u64;
+            emitted_total += e as u64;
+            self.seqs.push_tokens(slot, &emitted)?;
+            // Retract the rejected candidates' cache writes: the store
+            // is valid exactly through the new next position (the newest
+            // emitted token enters the cache on the next iteration, same
+            // as serial decode).
+            let next = self.seqs.seq(slot).context("slot has state")?.next_pos;
+            self.cache.truncate(slot, next)?;
+            if let Some(d) = &mut self.draft {
+                if n >= 2 {
+                    // The draft cache now holds the confirmed token at
+                    // `p` plus the fed drafts: valid through the
+                    // accepted prefix, clamped to what was written.
+                    d.done[slot] = p + e.min(n - 1);
+                }
+            }
+            self.maybe_complete(slot)?;
+        }
+        self.metrics.inc("decode_tokens", emitted_total);
+        self.metrics.inc("decode_steps", 1);
+        self.metrics.inc("spec_steps", 1);
+        self.metrics.inc("spec_tokens", emitted_total);
+        self.metrics.inc("spec_proposed", proposed);
+        self.metrics.inc("spec_accepted", accepted);
+        Ok(())
+    }
+
     fn maybe_complete(&mut self, slot: usize) -> Result<()> {
         if !self.seqs.is_done(slot) {
             return Ok(());
         }
         let mut c = self.seqs.finish(slot, &mut self.cache)?;
         c.model = self.name.clone();
+        // The slot will be reused: whatever the draft cache holds for it
+        // belongs to the finished sequence.
+        if let Some(d) = &mut self.draft {
+            d.done[slot] = 0;
+        }
         self.metrics.inc("completed", 1);
         self.metrics.observe("latency_s", c.latency_s);
         self.metrics.observe("queue_s", c.queue_s);
@@ -1000,7 +1292,7 @@ pub struct CacheStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::SimBackend;
+    use crate::backend::{SimBackend, SimConfig};
     use crate::config::{CacheKind, PolicyKind};
 
     fn engine(seed: u64) -> Engine {
@@ -1260,6 +1552,109 @@ mod tests {
             0,
             "one sequence cannot overlap with itself"
         );
+    }
+
+    #[test]
+    fn speculative_decode_matches_serial_and_takes_fewer_steps() {
+        let reqs = || {
+            vec![
+                Request::from_text(0, "hello speculative decoding", 12),
+                Request::from_text(1, "w", 9),
+                Request::new(2, vec![], 5), // empty prompt speculates too
+            ]
+        };
+        let mut plain = engine(0);
+        let a = plain.generate(reqs()).unwrap();
+        let mut spec = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                policy: PolicyKind::Speculative { k: 4 },
+                ..Default::default()
+            },
+        );
+        // The sim's state chain depends only on tokens + seed, never on
+        // layout or rank, so a same-seed MLA draft agrees with the GQA
+        // target on every greedy token: acceptance is perfect.
+        spec.set_draft(Box::new(SimBackend::mla(4, 2))).unwrap();
+        assert_eq!(spec.draft_name().unwrap(), "sim");
+        let b = spec.generate(reqs()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "speculative output must be bit-identical");
+        }
+        let s = spec.spec_stats();
+        assert!(s.steps > 0 && s.proposed > 0);
+        assert_eq!(s.accepted, s.proposed, "same-seed draft never misses");
+        assert_eq!(s.acceptance_rate, 1.0);
+        assert!(s.tokens_per_step > 1.0, "got {}", s.tokens_per_step);
+        assert!(
+            spec.metrics.counter("decode_steps") < plain.metrics.counter("decode_steps"),
+            "speculation must take fewer target iterations ({} vs {})",
+            spec.metrics.counter("decode_steps"),
+            plain.metrics.counter("decode_steps")
+        );
+        spec.slots_check().unwrap();
+    }
+
+    #[test]
+    fn mismatched_draft_disagrees_but_stays_correct() {
+        // A draft from a different seed proposes junk: the verify walk
+        // must reject it and still emit the target's exact stream.
+        let mut plain = engine(0);
+        let a = plain.generate(vec![Request::from_text(0, "abc", 8)]).unwrap();
+        let mut spec = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                policy: PolicyKind::Speculative { k: 4 },
+                ..Default::default()
+            },
+        );
+        let draft = SimBackend::new(SimConfig { seed: 999, ..SimConfig::gqa(4) }).unwrap();
+        spec.set_draft(Box::new(draft)).unwrap();
+        let b = spec.generate(vec![Request::from_text(0, "abc", 8)]).unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens);
+        let s = spec.spec_stats();
+        assert!(
+            s.acceptance_rate < 0.5,
+            "a foreign-seed draft should rarely agree, got {}",
+            s.acceptance_rate
+        );
+        spec.slots_check().unwrap();
+    }
+
+    #[test]
+    fn speculative_policy_without_draft_falls_back_to_serial() {
+        // The XLA shape of the world: a speculate plan with no draft (or
+        // no verify support) degrades to the plain decode step.
+        let mut e = Engine::new(
+            SimBackend::gqa(2),
+            EngineConfig {
+                policy: PolicyKind::Speculative { k: 4 },
+                ..Default::default()
+            },
+        );
+        let comps = e.generate(vec![Request::from_text(0, "solo", 5)]).unwrap();
+        assert_eq!(comps[0].tokens.len(), 5);
+        assert_eq!(e.spec_stats().steps, 0, "no draft, no verify iterations");
+        let mut plain = engine(9);
+        let a = plain.generate(vec![Request::from_text(0, "solo", 5)]).unwrap();
+        assert_eq!(a[0].tokens, comps[0].tokens);
+    }
+
+    #[test]
+    fn set_draft_rejects_mismatched_geometry() {
+        let mut e = engine(0);
+        assert!(
+            e.set_draft(Box::new(SimBackend::gqa(3))).is_err(),
+            "batch mismatch"
+        );
+        let short = SimConfig { capacity: 16, prefill_seq: 16, ..SimConfig::gqa(4) };
+        assert!(
+            e.set_draft(Box::new(SimBackend::new(short).unwrap())).is_err(),
+            "capacity mismatch"
+        );
+        assert!(e.set_draft(Box::new(SimBackend::mla(4, 2))).is_ok());
     }
 
     #[test]

@@ -30,6 +30,10 @@
 //!     free: a sequence admitted over shared blocks starts its prefill
 //!     watermark at the shared coverage, so chunks fully covered by the
 //!     cached prefix are never scheduled at all.
+//!   * [`Speculative`] — admit like `admit-first`, but decode plans carry
+//!     `speculate: Some(k)`: the engine's decode step becomes the
+//!     draft-propose / target-verify loop emitting up to `k` tokens per
+//!     slot per iteration (see `Engine::speculative_decode_step`).
 //!
 //! The first three are degenerate plans (admit+monolithic-prefill XOR
 //! decode), so their observable admission orderings are unchanged from
@@ -62,22 +66,42 @@ pub struct StepPlan {
     pub prefill: PrefillWork,
     /// Advance the decoding queue one step.
     pub decode: bool,
+    /// When set (and `decode` is true), run the decode step as a
+    /// speculative propose/verify iteration emitting up to `k` tokens
+    /// per slot. The engine falls back to the serial one-token step when
+    /// the target backend cannot batch-verify or no draft is attached,
+    /// so a speculate plan is always safe to emit.
+    pub speculate: Option<usize>,
 }
 
 impl StepPlan {
     /// The empty plan (legal only when no work is pending).
-    pub const IDLE: StepPlan =
-        StepPlan { admit: 0, prefill: PrefillWork::None, decode: false };
+    pub const IDLE: StepPlan = StepPlan {
+        admit: 0,
+        prefill: PrefillWork::None,
+        decode: false,
+        speculate: None,
+    };
 
     /// Admit `n` requests and prefill their prompts to completion in one
     /// batched call — the degenerate plan the monolithic policies emit.
     pub fn admit_monolithic(n: usize) -> StepPlan {
-        StepPlan { admit: n, prefill: PrefillWork::Monolithic, decode: false }
+        StepPlan {
+            admit: n,
+            prefill: PrefillWork::Monolithic,
+            decode: false,
+            speculate: None,
+        }
     }
 
     /// Decode only.
     pub fn decode_only() -> StepPlan {
-        StepPlan { admit: 0, prefill: PrefillWork::None, decode: true }
+        StepPlan {
+            admit: 0,
+            prefill: PrefillWork::None,
+            decode: true,
+            speculate: None,
+        }
     }
 
     /// Does this plan do nothing at all?
@@ -141,6 +165,7 @@ fn drain_prefilling() -> StepPlan {
         admit: 0,
         prefill: PrefillWork::Chunk { max_tokens: usize::MAX },
         decode: false,
+        speculate: None,
     }
 }
 
@@ -235,7 +260,33 @@ impl SchedulePolicy for Chunked {
         } else {
             PrefillWork::None
         };
-        StepPlan { admit, prefill, decode: v.decoding > 0 }
+        StepPlan { admit, prefill, decode: v.decoding > 0, speculate: None }
+    }
+}
+
+/// Admission shaped like [`AdmitFirst`], but every decode plan carries a
+/// `speculate: Some(k)` marker: the engine's decode step becomes the
+/// draft-propose / target-verify loop emitting up to `k` tokens per slot
+/// per iteration. `k = 1` degenerates to a verify-checked serial step.
+pub struct Speculative {
+    pub k: usize,
+}
+
+impl SchedulePolicy for Speculative {
+    fn name(&self) -> &'static str {
+        "speculative"
+    }
+
+    fn plan(&mut self, v: &SchedView) -> StepPlan {
+        if v.admissible() > 0 {
+            StepPlan::admit_monolithic(v.admissible())
+        } else if v.prefilling > 0 {
+            drain_prefilling()
+        } else if v.decoding > 0 {
+            StepPlan { speculate: Some(self.k.max(1)), ..StepPlan::decode_only() }
+        } else {
+            StepPlan::IDLE
+        }
     }
 }
 
@@ -246,6 +297,7 @@ pub fn build(kind: PolicyKind) -> Box<dyn SchedulePolicy> {
         PolicyKind::DecodeFirst => Box::new(DecodeFirst),
         PolicyKind::Hybrid { min_free } => Box::new(Hybrid { min_free }),
         PolicyKind::Chunked { chunk_tokens } => Box::new(Chunked { chunk_tokens }),
+        PolicyKind::Speculative { k } => Box::new(Speculative { k }),
     }
 }
 
@@ -304,6 +356,7 @@ mod tests {
                 admit: 1,
                 prefill: PrefillWork::Chunk { max_tokens: 8 },
                 decode: true,
+                speculate: None,
             }
         );
         // Nothing waiting or prefilling: pure decode.
@@ -315,6 +368,7 @@ mod tests {
                 admit: 0,
                 prefill: PrefillWork::Chunk { max_tokens: 8 },
                 decode: false,
+                speculate: None,
             }
         );
         assert!(p.plan(&v(0, 0, 0, 8)).is_idle());
@@ -324,6 +378,28 @@ mod tests {
             z.plan(&v(0, 1, 0, 0)).prefill,
             PrefillWork::Chunk { max_tokens: 1 }
         );
+    }
+
+    #[test]
+    fn speculative_marks_decode_plans_with_k() {
+        let mut p = Speculative { k: 4 };
+        // Admission and prefill drain are admit-first shaped.
+        assert_eq!(p.plan(&v(3, 0, 0, 8)), StepPlan::admit_monolithic(3));
+        assert!(matches!(
+            p.plan(&v(0, 2, 0, 0)).prefill,
+            PrefillWork::Chunk { .. }
+        ));
+        // Decode plans carry the speculation depth.
+        assert_eq!(
+            p.plan(&v(0, 0, 5, 3)),
+            StepPlan { speculate: Some(4), ..StepPlan::decode_only() }
+        );
+        assert!(p.plan(&v(0, 0, 0, 8)).is_idle());
+        // A zero depth degrades to 1 (a verify-checked serial step),
+        // never a meaningless plan.
+        let mut z = Speculative { k: 0 };
+        assert_eq!(p.plan(&v(0, 0, 1, 0)).speculate, Some(4));
+        assert_eq!(z.plan(&v(0, 0, 1, 0)).speculate, Some(1));
     }
 
     #[test]
@@ -377,6 +453,8 @@ mod tests {
                     Box::new(Hybrid { min_free: 0 }),
                     Box::new(Chunked { chunk_tokens: 4 }),
                     Box::new(Chunked { chunk_tokens: 0 }),
+                    Box::new(Speculative { k: 4 }),
+                    Box::new(Speculative { k: 0 }),
                 ];
                 let pending = view.queued + view.prefilling + view.decoding > 0;
                 let possible =
@@ -398,6 +476,17 @@ mod tests {
                     if let PrefillWork::Chunk { max_tokens } = plan.prefill {
                         if max_tokens == 0 {
                             return Err(format!("{} emits a zero-token chunk", p.name()));
+                        }
+                    }
+                    if let Some(k) = plan.speculate {
+                        if !plan.decode {
+                            return Err(format!(
+                                "{} speculates without decoding",
+                                p.name()
+                            ));
+                        }
+                        if k == 0 {
+                            return Err(format!("{} emits k = 0", p.name()));
                         }
                     }
                 }

@@ -298,6 +298,67 @@ impl SequenceManager {
         Ok(())
     }
 
+    /// Append a run of decoded tokens to a decoding slot in one call —
+    /// the speculative accept path. Equivalent to `push_token` per
+    /// token: `next_pos` advances by the run length, `last_token`
+    /// becomes the final token of the run.
+    pub fn push_tokens(&mut self, slot: usize, toks: &[i32]) -> Result<()> {
+        let seq = self.seqs[slot].as_mut().context("push on idle slot")?;
+        if seq.phase != SeqPhase::Decoding {
+            bail!("push_tokens on prefilling slot {slot}");
+        }
+        if toks.is_empty() {
+            bail!("push_tokens with no tokens on slot {slot}");
+        }
+        seq.next_pos += toks.len();
+        seq.last_token = *toks.last().expect("non-empty run");
+        seq.generated.extend_from_slice(toks);
+        Ok(())
+    }
+
+    /// Retract the last `n` decoded tokens — the speculative reject
+    /// path. The first token never rolls back (it came from prefill,
+    /// not a decode step, and TTFT has already been stamped on it), so
+    /// `n` must leave at least one generated token. The caller is
+    /// responsible for the matching [`CacheStore::truncate`] to the new
+    /// `next_pos`, so the retracted cache rows can never be read.
+    pub fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        let seq = self.seqs[slot].as_mut().context("rollback on idle slot")?;
+        if seq.phase != SeqPhase::Decoding {
+            bail!("rollback on prefilling slot {slot}");
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        if n >= seq.generated.len() {
+            bail!(
+                "rollback of {n} tokens would retract slot {slot}'s first \
+                 token ({} generated)",
+                seq.generated.len()
+            );
+        }
+        seq.next_pos -= n;
+        seq.generated.truncate(seq.generated.len() - n);
+        seq.last_token = *seq.generated.last().expect("non-empty after rollback");
+        Ok(())
+    }
+
+    /// Tokens the completion rule still allows `slot` to emit — the
+    /// bound a speculative step must clamp its per-slot candidate count
+    /// to, so a multi-token accept can never overshoot `is_done`'s
+    /// budget or the cache reservation backing it. Zero for idle,
+    /// prefilling, or finished slots.
+    pub fn tokens_left(&self, slot: usize) -> usize {
+        match self.seqs.get(slot).and_then(Option::as_ref) {
+            Some(seq) if seq.phase == SeqPhase::Decoding => {
+                let room = self.capacity.saturating_sub(seq.prompt_len) + 1;
+                let budget = seq.req.max_new_tokens.min(room).max(1);
+                budget.saturating_sub(seq.generated.len())
+            }
+            _ => 0,
+        }
+    }
+
     /// Has this sequence hit its token budget or the cache capacity?
     ///
     /// The capacity bound is `next_pos >= capacity`, not
@@ -380,6 +441,21 @@ impl SequenceManager {
                 match seq.phase {
                     SeqPhase::Decoding if seq.generated.is_empty() => {
                         bail!("decoding slot {i} has no first token")
+                    }
+                    // Position/token accounting must agree under any mix
+                    // of single-token, multi-token, and rollback steps:
+                    // the first token writes no cache position, every
+                    // later one writes exactly one.
+                    SeqPhase::Decoding
+                        if seq.next_pos + 1 != seq.prompt_len + seq.generated.len() =>
+                    {
+                        bail!(
+                            "decoding slot {i} next_pos {} disagrees with prompt \
+                             {} + {} generated",
+                            seq.next_pos,
+                            seq.prompt_len,
+                            seq.generated.len()
+                        )
                     }
                     SeqPhase::Prefilling { .. } if !seq.generated.is_empty() => {
                         bail!("prefilling slot {i} already emitted tokens")
@@ -471,6 +547,39 @@ mod tests {
         let done = m.finish(slot, &mut c).unwrap();
         assert_eq!(done.tokens, vec![5]);
         assert_eq!(done.prompt_len, 0);
+    }
+
+    #[test]
+    fn multi_token_append_and_rollback() {
+        let mut m = SequenceManager::new(1, 32);
+        let mut c = store(1, 32);
+        let t0 = Instant::now();
+        let slot = m.admit(req(1, 4, 10), 4, 40, t0, t0, t0, &mut c).unwrap();
+        assert_eq!(m.tokens_left(slot), 9);
+        m.push_tokens(slot, &[41, 42, 43]).unwrap();
+        {
+            let s = m.seq(slot).unwrap();
+            assert_eq!((s.next_pos, s.last_token), (7, 43));
+            assert_eq!(s.generated, vec![40, 41, 42, 43]);
+        }
+        m.check_invariants().unwrap();
+        m.rollback(slot, 2).unwrap();
+        {
+            let s = m.seq(slot).unwrap();
+            assert_eq!((s.next_pos, s.last_token), (5, 41));
+            assert_eq!(s.generated, vec![40, 41]);
+        }
+        m.check_invariants().unwrap();
+        assert!(m.rollback(slot, 2).is_err(), "first token never rolls back");
+        m.rollback(slot, 0).unwrap();
+        assert_eq!(m.tokens_left(slot), 8);
+        assert!(m.push_tokens(slot, &[]).is_err(), "empty run is a bug");
+        m.push_tokens(slot, &[50, 51, 52, 53, 54, 55, 56, 57]).unwrap();
+        assert!(m.is_done(slot));
+        assert_eq!(m.tokens_left(slot), 0);
+        let done = m.finish(slot, &mut c).unwrap();
+        assert_eq!(done.tokens.len(), 10);
+        m.check_invariants().unwrap();
     }
 
     #[test]

@@ -521,6 +521,37 @@ impl PagedKvCache {
         Ok(freed)
     }
 
+    /// Shrink `slot`'s materialised coverage to at most `len` token
+    /// positions — the speculative-decode rollback primitive. Tail
+    /// blocks past the new end are `release`d back to the allocator,
+    /// never zeroed, so a block another table or the prefix index still
+    /// references survives with its bytes (and its other holders'
+    /// refcounts) intact. Each block that actually frees re-credits the
+    /// slot's reservation — it was drawn from that reservation by
+    /// [`PagedKvCache::grow`], and the retracted positions will be
+    /// re-grown on a later decode step. A still-shared block re-credits
+    /// nothing: re-growing would need a genuinely free block, which its
+    /// release did not produce (never hit on the serving path, where
+    /// truncation stays above the prompt and decode blocks are private).
+    ///
+    /// Positions below the shared-prefix watermark are never truncated:
+    /// the mapped blocks hold prompt content the slot logically still
+    /// covers.
+    pub fn truncate(&mut self, slot: usize, len: usize) -> Result<()> {
+        if slot >= self.tables.len() {
+            bail!("slot out of range: {slot} >= {}", self.tables.len());
+        }
+        let floor = self.shared[slot];
+        let want = self.blocks_for(len.max(floor));
+        while self.tables[slot].len() > want {
+            let b = self.tables[slot].pop().expect("non-empty table");
+            if self.alloc.release(b)? {
+                self.reserved[slot] += 1;
+            }
+        }
+        Ok(())
+    }
+
     /// Does the slot's table cover token position `pos`? (False for idle
     /// slots — backends use this as the position mask.)
     pub fn covers(&self, slot: usize, pos: usize) -> bool {
@@ -869,6 +900,29 @@ mod tests {
     }
 
     #[test]
+    fn truncate_releases_tail_blocks_and_recredits_the_reservation() {
+        let mut c = mla_cache(2, 4, 6);
+        // Reserve 16 tokens (4 blocks), materialise the 5-token prompt.
+        c.admit_slot(0, 16, 5).unwrap();
+        c.grow(0, 13).unwrap();
+        assert_eq!((c.blocks_in_use(), c.reserved_of(0)), (4, 0));
+        // Roll back to 6 positions: two tail blocks free and their
+        // reservation comes back, so the re-grow below cannot fail.
+        c.truncate(0, 6).unwrap();
+        assert_eq!((c.blocks_in_use(), c.reserved_of(0)), (2, 2));
+        assert!(c.covers(0, 5) && !c.covers(0, 8));
+        c.check_invariants().unwrap();
+        c.grow(0, 13).unwrap();
+        assert_eq!((c.blocks_in_use(), c.reserved_of(0)), (4, 0));
+        c.truncate(0, 0).unwrap();
+        assert_eq!(c.blocks_in_use(), 0);
+        assert!(c.truncate(9, 0).is_err(), "slot out of range");
+        c.check_invariants().unwrap();
+        c.release_slot(0).unwrap();
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
     fn double_admit_and_bad_slots_error() {
         let mut c = mla_cache(2, 4, 4);
         c.admit_slot(0, 4, 2).unwrap();
@@ -1059,6 +1113,113 @@ mod tests {
         // Now only the index holds the prefix blocks.
         assert_eq!(c.blocks_in_use(), 2);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_keeps_shared_prefix_blocks_mapped() {
+        let prompt: Vec<i32> = (0..10).collect();
+        let mut c = shared_setup(2, 4, 12, &prompt);
+        // Slot 1 maps the 2 cached prefix blocks (8 tokens) and grows a
+        // private tail block.
+        c.admit_slot_shared(1, 14, 0, &prompt).unwrap();
+        c.grow(1, 12).unwrap();
+        let reader_row: Vec<f32> = c.row(0, 1, 0, 5).unwrap().to_vec();
+        // Truncating below the shared watermark clamps at it: the
+        // private tail frees, the mapped prefix blocks survive with
+        // their bytes and their other holders' refcounts intact.
+        c.truncate(1, 4).unwrap();
+        assert!(c.covers(1, 7), "shared watermark is the truncation floor");
+        assert!(!c.covers(1, 8), "private tail released");
+        assert_eq!(c.row(0, 1, 0, 5).unwrap(), &reader_row[..]);
+        assert_eq!(c.reserved_of(1), 2, "freed tail re-credits the reservation");
+        c.check_invariants().unwrap();
+        c.release_slot(1).unwrap();
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn props_truncate_rollback_under_random_accept_reject() {
+        // The speculative-decode lifecycle against the block ledger:
+        // propose (grow k positions), accept a random prefix (truncate
+        // the rejected tail). Throughout, the slot's table plus its
+        // outstanding reservation must equal its admission-time bounded
+        // demand exactly — no leak, no double-free — and a reader
+        // sharing the prompt prefix must keep its bytes.
+        check(
+            "truncate_rollback",
+            PropConfig { cases: 80, seed: 4242 },
+            |r: &mut Rng| {
+                let bs = 2 + r.below(3); // 2..=4
+                let plen = bs + 1 + r.below(2 * bs);
+                let ops: Vec<u64> = (0..24).map(|_| r.next_u64()).collect();
+                (bs, plen, ops)
+            },
+            |(bs, plen, ops)| {
+                let prompt: Vec<i32> = (0..*plen as i32).collect();
+                let cap = *plen + 16;
+                let mut c =
+                    PagedKvCache::new(CacheLayout::Mla { r: 2, dr: 2 }, 1, 2, *bs, 48)
+                        .map_err(|e| e.to_string())?;
+                c.enable_prefix_cache();
+                c.admit_slot_shared(0, cap, *plen, &prompt)
+                    .map_err(|e| e.to_string())?;
+                for pos in 0..*plen {
+                    c.row_mut(0, 0, 0, pos)
+                        .map_err(|e| e.to_string())?
+                        .fill(pos as f32);
+                }
+                c.register_prefix(0, &prompt).map_err(|e| e.to_string())?;
+                let shared_blocks = c
+                    .admit_slot_shared(1, cap, *plen, &prompt)
+                    .map_err(|e| e.to_string())?
+                    / *bs;
+                let demand = c.blocks_for(cap) - shared_blocks;
+                let table_len = |c: &PagedKvCache, len: usize| {
+                    // covers() probes reconstruct the table length.
+                    let mut blocks = 0;
+                    while c.covers(1, blocks * *bs) {
+                        blocks += 1;
+                    }
+                    if blocks != c.blocks_for(len) {
+                        return Err(format!(
+                            "table covers {blocks} blocks, expected {} for len {len}",
+                            c.blocks_for(len)
+                        ));
+                    }
+                    Ok(blocks)
+                };
+                let mut len = *plen;
+                for &op in ops {
+                    let k = 1 + (op as usize) % 4;
+                    let grown = (len + k).min(cap);
+                    c.grow(1, grown).map_err(|e| e.to_string())?;
+                    let accepted = (op as usize / 8) % (grown - len + 1);
+                    len += accepted;
+                    c.truncate(1, len).map_err(|e| e.to_string())?;
+                    let blocks = table_len(&c, len)?;
+                    // Ledger: materialised + outstanding == bounded
+                    // demand, always (the no-leak/no-double-free claim).
+                    if blocks - shared_blocks + c.reserved_of(1) != demand {
+                        return Err(format!(
+                            "ledger broke: {blocks} mapped ({shared_blocks} shared), \
+                             {} reserved, demand {demand}",
+                            c.reserved_of(1)
+                        ));
+                    }
+                    c.check_invariants().map_err(|e| e.to_string())?;
+                }
+                // The sharing reader's bytes survived every rollback.
+                for pos in 0..*plen {
+                    let got = c.row(0, 0, 0, pos).map_err(|e| e.to_string())?;
+                    if got != [pos as f32, pos as f32] {
+                        return Err(format!("reader corrupted at pos {pos}: {got:?}"));
+                    }
+                }
+                c.release_slot(0).map_err(|e| e.to_string())?;
+                c.release_slot(1).map_err(|e| e.to_string())?;
+                c.check_invariants().map_err(|e| e.to_string())
+            },
+        );
     }
 
     #[test]

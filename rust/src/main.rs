@@ -42,8 +42,11 @@ COMMON FLAGS
   --backend xla|sim backend for generate/serve (default: xla; `sim` is the
                     hermetic deterministic backend — no artifacts needed)
   --policy P        scheduling policy: admit-first|decode-first|hybrid[:N]
-                    |chunked[:N] (chunked = decode-overlapped prefill, at
-                    most N prompt tokens per engine iteration)
+                    |chunked[:N]|speculative[:K] (chunked = decode-
+                    overlapped prefill, at most N prompt tokens per
+                    engine iteration; speculative = draft-propose /
+                    target-verify decode emitting up to K tokens per
+                    slot per step — needs --backend sim and a draft)
   --prefill-chunk N shorthand for --policy chunked:N
   --batch N         decode slots (sim backend; default 8)
   --capacity N      sim cache capacity (default 256)
@@ -60,6 +63,11 @@ COMMON FLAGS
                     on two concurrent streams (needs --policy chunked and
                     a backend that supports overlap, i.e. sim); completions
                     stay bit-identical to the serial schedule
+  --draft A         draft model for --policy speculative: gqa|mla[:R]
+                    (sim backend only). Built with the target's batch,
+                    capacity, and seed over a private fixed cache; at
+                    temperature 0 completions stay bit-identical to
+                    serial decode. Also a SPEC key: draft=mla:2
 
 MULTI-MODEL SERVING (serve only)
   --model N[=SPEC]  register a named engine; SPEC is a comma-separated
@@ -67,7 +75,7 @@ MULTI-MODEL SERVING (serve only)
                     engine (keys: arch/layout, rank, backend, policy,
                     prefill-chunk, cache, block-size, cache-blocks,
                     prefix-cache, batch, capacity, seed, ckpt, weight,
-                    overlap), e.g.
+                    overlap, draft), e.g.
                     --model gqa-base=layout=gqa \\
                     --model mla=layout=mla,cache=paged,policy=chunked:8
                     Repeatable; unspecified keys inherit the bare flags.
@@ -323,6 +331,7 @@ fn build_engine(art_dir: &Path, cfg_name: &str, args: &FlagView) -> Result<Engin
         "sim" => {
             let batch = args.usize_flag("batch", 8);
             let capacity = args.usize_flag("capacity", 256);
+            let (seed, policy) = (cfg.seed, cfg.policy);
             let base = match parse_arch(args)? {
                 Arch::Gqa => SimConfig::gqa(batch),
                 Arch::Mla { rank } => SimConfig::mla(batch, rank),
@@ -330,10 +339,31 @@ fn build_engine(art_dir: &Path, cfg_name: &str, args: &FlagView) -> Result<Engin
             let sim = SimBackend::new(SimConfig {
                 capacity,
                 prefill_seq: capacity,
-                seed: cfg.seed,
+                seed,
                 ..base
             })?;
-            Engine::try_new(sim, cfg)
+            let mut engine = Engine::try_new(sim, cfg)?;
+            if let Some(d) = args.get("draft") {
+                // Same batch/capacity/seed as the target: the draft
+                // walks the same positions over a private fixed cache.
+                let draft_base = match parse_draft_arch(d)? {
+                    Arch::Gqa => SimConfig::gqa(batch),
+                    Arch::Mla { rank } => SimConfig::mla(batch, rank),
+                };
+                let draft = SimBackend::new(SimConfig {
+                    capacity,
+                    prefill_seq: capacity,
+                    seed,
+                    ..draft_base
+                })?;
+                engine.set_draft(Box::new(draft))?;
+            } else if matches!(policy, PolicyKind::Speculative { .. }) {
+                bail!(
+                    "--policy speculative requires a draft model \
+                     (--draft gqa|mla[:R], or draft=... in the --model SPEC)"
+                );
+            }
+            Ok(engine)
         }
         "xla" => {
             if cfg.cache != CacheKind::Fixed {
@@ -341,6 +371,16 @@ fn build_engine(art_dir: &Path, cfg_name: &str, args: &FlagView) -> Result<Engin
                     "--cache paged requires --backend sim: the AOT decode \
                      artifacts operate on the fixed padded cache"
                 );
+            }
+            if matches!(cfg.policy, PolicyKind::Speculative { .. }) {
+                bail!(
+                    "--policy speculative requires --backend sim: the AOT \
+                     decode artifacts score one position per slot per call \
+                     and cannot batch-verify candidate chains"
+                );
+            }
+            if args.get("draft").is_some() {
+                bail!("--draft requires --backend sim");
             }
             let rt = Runtime::new(art_dir)?;
             let params = load_ckpt_or_init(&rt, cfg_name, args)?;
@@ -457,6 +497,26 @@ fn cmd_convert(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {
     train_p.save(&train_out, meta)?;
     println!("saved {} and {}", out.display(), train_out.display());
     Ok(())
+}
+
+/// Parse a `--draft` / `draft=` value: `gqa`, `mla` (default rank 32),
+/// or `mla:R`. Colon-separated so the value stays comma-free inside a
+/// `--model` SPEC (which splits on commas).
+fn parse_draft_arch(s: &str) -> Result<Arch> {
+    match s {
+        "gqa" => Ok(Arch::Gqa),
+        "mla" => Ok(Arch::Mla { rank: 32 }),
+        other => match other.strip_prefix("mla:") {
+            Some(r) => Ok(Arch::Mla {
+                rank: r
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .with_context(|| format!("bad draft rank `{r}`"))?,
+            }),
+            None => bail!("bad draft `{other}` (gqa|mla[:R])"),
+        },
+    }
 }
 
 fn parse_arch(args: &FlagView) -> Result<Arch> {

@@ -124,6 +124,7 @@ pub fn decode_step_cost(
 
 /// Tokens/s for decode at a given hardware profile, or None if the
 /// weights + caches exceed device memory (the paper's OOM entries).
+/// The serial path: exactly one token per sequence per step.
 pub fn decode_throughput(
     dims: &ModelDims,
     arch: ArchModel,
@@ -131,6 +132,28 @@ pub fn decode_throughput(
     batch: f64,
     ctx: f64,
 ) -> Option<f64> {
+    decode_throughput_spec(dims, arch, hw, batch, ctx, 1.0)
+}
+
+/// [`decode_throughput`] generalized to `tokens_per_step` accepted
+/// tokens per sequence per step — the speculative-decoding regime, where
+/// one batched verify call scores a whole candidate chain.
+///
+/// The roofline explains why speculation pays in the memory-bound decode
+/// regime: the weights stream once per *step* no matter how many
+/// positions the step scores, so their bytes are amortized over every
+/// accepted token, while compute (and per-position cache traffic) scale
+/// with the chain length. Throughput therefore improves sublinearly in
+/// `tokens_per_step` and saturates once the step turns compute-bound.
+pub fn decode_throughput_spec(
+    dims: &ModelDims,
+    arch: ArchModel,
+    hw: &crate::config::HardwareProfile,
+    batch: f64,
+    ctx: f64,
+    tokens_per_step: f64,
+) -> Option<f64> {
+    let tps = tokens_per_step.max(1.0);
     let weight_gb = dims.n_params() * dims.bytes_per_el / 1e9;
     let cache_gb = match arch {
         ArchModel::Gqa => dims.kv_bytes_per_token() * ctx * batch / 1e9,
@@ -141,12 +164,18 @@ pub fn decode_throughput(
         return None;
     }
     let (flops, bytes) = decode_step_cost(dims, arch, batch, ctx);
+    // Split the step's bytes: weights stream once per step (amortized
+    // across the chain), cache reads repeat per scored position.
+    let weight_bytes = dims.n_params() * dims.bytes_per_el;
+    let cache_bytes = bytes - weight_bytes;
+    let step_flops = flops * tps;
+    let step_bytes = weight_bytes + cache_bytes * tps;
     // MFU/bandwidth efficiency: serving stacks reach ~60% of peak BW and
     // ~40% of peak compute in the batched-decode regime.
-    let t_compute = flops / (hw.tflops * 1e12 * 0.4);
-    let t_memory = bytes / (hw.bw_gbs * 1e9 * 0.6);
+    let t_compute = step_flops / (hw.tflops * 1e12 * 0.4);
+    let t_memory = step_bytes / (hw.bw_gbs * 1e9 * 0.6);
     let step = t_compute.max(t_memory);
-    Some(batch / step)
+    Some(batch * tps / step)
 }
 
 /// The paper's protocol: input len = output len = ctx/2; batch sized to
@@ -271,6 +300,31 @@ mod tests {
         let (s1, s8) = (s(1024.0), s(8192.0));
         assert!(s1 > 1.0, "MLA should win at 1k: {s1}");
         assert!(s8 > s1, "speedup should grow with context: {s1} vs {s8}");
+    }
+
+    #[test]
+    fn speculative_throughput_improves_sublinearly() {
+        let d = ModelDims::llama2_7b();
+        let hw = &HardwareProfile::paper_profiles()[1];
+        let arch = ArchModel::Mla { r: 448, low_rank_q: false };
+        let serial = decode_throughput(&d, arch, hw, 4.0, 4096.0).unwrap();
+        // tokens_per_step = 1 is exactly the serial model.
+        let one = decode_throughput_spec(&d, arch, hw, 4.0, 4096.0, 1.0).unwrap();
+        assert_eq!(serial, one);
+        // Accepting ~3 tokens/step must beat serial (weights amortized)
+        // but cannot reach a full 3x (compute and cache traffic scale
+        // with the chain).
+        let spec = decode_throughput_spec(&d, arch, hw, 4.0, 4096.0, 3.0).unwrap();
+        assert!(spec > serial, "speculation must pay: {spec} vs {serial}");
+        assert!(spec < 3.0 * serial, "speedup is sublinear: {spec} vs {serial}");
+        // Sub-1 inputs clamp to the serial model instead of rewarding a
+        // nonsense acceptance rate.
+        let clamped = decode_throughput_spec(&d, arch, hw, 4.0, 4096.0, 0.25).unwrap();
+        assert_eq!(clamped, serial);
+        // The OOM cliff is unchanged by speculation.
+        let hw24 = &HardwareProfile::paper_profiles()[0];
+        assert!(decode_throughput_spec(&d, ArchModel::Gqa, hw24, 8.0, 16384.0, 3.0)
+            .is_none());
     }
 
     #[test]

@@ -317,6 +317,22 @@ fn engine_stats_json(engine: &Engine) -> Json {
         cache.set("prefix", pj);
     }
     j.set("cache", cache);
+    // Speculative decoding counters (all-zero when no draft is attached
+    // or the policy never speculated): the acceptance rate is the draft
+    // quality signal, tokens_per_step the realized speedup over serial
+    // decode (which is pinned at 1.0).
+    let ss = engine.spec_stats();
+    let mut spec = Json::obj();
+    spec.set("proposed", Json::Num(ss.proposed as f64));
+    spec.set("accepted", Json::Num(ss.accepted as f64));
+    spec.set("steps", Json::Num(ss.steps as f64));
+    spec.set("tokens", Json::Num(ss.tokens as f64));
+    spec.set("acceptance_rate", Json::Num(ss.acceptance_rate));
+    spec.set("tokens_per_step", Json::Num(ss.tokens_per_step));
+    if let Some(d) = engine.draft_name() {
+        spec.set("draft", Json::Str(d.to_string()));
+    }
+    j.set("spec", spec);
     for name in m.sample_names() {
         if let Some(s) = m.summary(&name) {
             let mut sj = Json::obj();

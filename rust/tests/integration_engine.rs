@@ -619,6 +619,102 @@ fn all_policies_complete_a_bursty_workload() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Speculative decoding: the propose/verify/rollback pipeline emits
+// bit-identical greedy output with measurably fewer target iterations.
+// ---------------------------------------------------------------------------
+
+/// Engine over `cache`, either plain admit-first (`k = None`) or
+/// speculative at depth `k` with a same-seed draft of the *other*
+/// layout attached. The sim's state chain depends only on tokens +
+/// seed — never on layout or rank — so the cross-layout draft agrees
+/// with the target on every greedy token: a perfect proposer.
+fn spec_engine(mla: bool, cache: CacheKind, prefix: bool, k: Option<usize>) -> Engine {
+    let base = if mla { SimConfig::mla(8, 4) } else { SimConfig::gqa(8) };
+    let policy = match k {
+        Some(k) => PolicyKind::Speculative { k },
+        None => PolicyKind::AdmitFirst,
+    };
+    let mut e = Engine::new(
+        SimBackend::new(SimConfig { capacity: 64, prefill_seq: 64, ..base }).unwrap(),
+        EngineConfig { policy, cache, prefix_cache: prefix, ..Default::default() },
+    );
+    if k.is_some() {
+        let draft_base = if mla { SimConfig::gqa(8) } else { SimConfig::mla(8, 2) };
+        e.set_draft(Box::new(
+            SimBackend::new(SimConfig { capacity: 64, prefill_seq: 64, ..draft_base })
+                .unwrap(),
+        ))
+        .unwrap();
+    }
+    e
+}
+
+/// Mixed workload: plain prompts, a one-char prompt, an empty prompt,
+/// and a shared-prefix pair (exercises rollback over shared blocks when
+/// the paged + prefix-cache combination runs it).
+fn spec_reqs() -> Vec<Request> {
+    let shared: Vec<i32> = (0..20).map(|i| (i * 7 + 3) % 251).collect();
+    vec![
+        Request::from_text(0, "speculate on this prompt", 12),
+        Request::from_text(1, "b", 7),
+        Request::new(2, vec![], 5),
+        Request::new(3, shared.clone(), 9),
+        Request::new(4, shared, 6),
+    ]
+}
+
+/// The acceptance criteria, end to end: at temperature 0, `speculative:K`
+/// completions are bit-identical to plain decode across {fixed,
+/// paged+prefix-cache} x {GQA, MLA}; the high-agreement draft yields
+/// strictly fewer target decode iterations; and the reported acceptance
+/// rate is consistent with the counted proposals and accepts.
+#[test]
+fn speculative_decode_is_bit_identical_with_fewer_target_iterations() {
+    for mla in [false, true] {
+        for (cache, prefix) in [
+            (CacheKind::Fixed, false),
+            (CacheKind::Paged { block_size: 8, n_blocks: None }, true),
+        ] {
+            let mut plain = spec_engine(mla, cache, prefix, None);
+            let a = plain.generate(spec_reqs()).unwrap();
+            let serial_steps = plain.metrics.counter("decode_steps");
+            for k in [2usize, 4] {
+                let mut spec = spec_engine(mla, cache, prefix, Some(k));
+                let b = spec.generate(spec_reqs()).unwrap();
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id);
+                    assert_eq!(
+                        x.tokens, y.tokens,
+                        "mla={mla} {cache:?} k={k}: speculative output diverged"
+                    );
+                }
+                let spec_steps = spec.metrics.counter("decode_steps");
+                assert!(
+                    spec_steps < serial_steps,
+                    "mla={mla} {cache:?} k={k}: speculation must take fewer \
+                     target iterations ({spec_steps} vs {serial_steps})"
+                );
+                let s = spec.spec_stats();
+                assert_eq!(s.steps, spec_steps, "every decode step verified");
+                assert_eq!(
+                    s.accepted, s.proposed,
+                    "the same-seed draft never misses"
+                );
+                assert_eq!(s.acceptance_rate, 1.0);
+                assert_eq!(
+                    s.tokens,
+                    plain.metrics.counter("decode_tokens"),
+                    "verify steps emit exactly the serial decode stream"
+                );
+                assert!(s.tokens_per_step > 1.0, "k={k}: {}", s.tokens_per_step);
+                spec.slots_check().unwrap();
+            }
+        }
+    }
+}
+
 /// Registry-level fairness: two co-hosted engines both make progress
 /// every sweep — a long chunked prefill on one model cannot starve the
 /// other model's short decodes — and each engine's completions are

@@ -364,6 +364,18 @@ fn stats_schema_matches_protocol_md() {
     ] {
         assert!(eng.get(key).is_some(), "stats missing `{key}`: {eng:?}");
     }
+    // docs/PROTOCOL.md "spec object" field list: present on every stats
+    // snapshot (all-zero when speculation is off, as here); the optional
+    // `draft` name only appears once a draft model is attached.
+    let spec = eng.get("spec").expect("spec object");
+    for key in [
+        "proposed", "accepted", "steps", "tokens", "acceptance_rate",
+        "tokens_per_step",
+    ] {
+        assert!(spec.get(key).is_some(), "spec missing `{key}`: {spec:?}");
+    }
+    assert_eq!(spec.get("steps").and_then(Json::as_usize), Some(0));
+    assert!(spec.get("draft").is_none(), "no draft attached: {spec:?}");
     let cache = eng.get("cache").unwrap();
     // docs/PROTOCOL.md "cache object" field list.
     for key in [
@@ -389,6 +401,59 @@ fn stats_schema_matches_protocol_md() {
     assert!(
         prefix.get("blocks_cached").and_then(Json::as_usize).unwrap() > 0,
         "the prompt's full blocks stay cached"
+    );
+
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// A speculative engine behind the server: greedy completions match a
+/// plain solo engine bit-for-bit, and the `spec` stats object reports a
+/// consistent acceptance rate plus the attached draft's name.
+#[test]
+fn speculative_server_serves_identically_and_reports_spec_stats() {
+    let addr = "127.0.0.1:18445";
+    let handle = std::thread::spawn(move || {
+        let mut e = Engine::new(
+            SimBackend::gqa(4),
+            EngineConfig {
+                policy: PolicyKind::Speculative { k: 4 },
+                ..Default::default()
+            },
+        );
+        // Same-seed sim draft: layout-independent state chain, so it
+        // agrees with the target on every greedy token.
+        e.set_draft(Box::new(SimBackend::mla(4, 2))).unwrap();
+        let mut reg = EngineRegistry::single(e);
+        server::serve(&mut reg, addr).unwrap();
+    });
+    wait_for_ping(addr);
+
+    let prompt = "speculative serving path";
+    let resp = server::client_request(addr, prompt, 8).unwrap();
+    let text = resp.get("text").and_then(Json::as_str).unwrap().to_string();
+
+    // Bit-identical to a plain (non-speculative) solo engine at temp 0.
+    let mut solo = Engine::new(SimBackend::gqa(4), EngineConfig::default());
+    let comps = solo.generate(vec![Request::from_text(0, prompt, 8)]).unwrap();
+    assert_eq!(text, comps[0].text(), "speculative serving diverged");
+
+    let stats = server::client_stats(addr).unwrap();
+    let spec = engine_stats(&stats, "default").get("spec").expect("spec object");
+    let proposed = spec.get("proposed").and_then(Json::as_usize).unwrap();
+    let accepted = spec.get("accepted").and_then(Json::as_usize).unwrap();
+    let steps = spec.get("steps").and_then(Json::as_usize).unwrap();
+    let tokens = spec.get("tokens").and_then(Json::as_usize).unwrap();
+    assert!(steps > 0 && proposed > 0, "{spec:?}");
+    assert_eq!(accepted, proposed, "same-seed draft never misses: {spec:?}");
+    let rate = spec.get("acceptance_rate").and_then(Json::as_f64).unwrap();
+    assert_eq!(rate, 1.0, "{spec:?}");
+    let tps = spec.get("tokens_per_step").and_then(Json::as_f64).unwrap();
+    assert!((tps - tokens as f64 / steps as f64).abs() < 1e-9, "{spec:?}");
+    assert!(tps > 1.0, "{spec:?}");
+    assert!(
+        spec.get("draft").and_then(Json::as_str).is_some(),
+        "draft name rides along once attached: {spec:?}"
     );
 
     server::client_shutdown(addr).unwrap();
