@@ -25,6 +25,7 @@ use transmla::convert::{convert_model, Calib, ConvertOptions};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
 use transmla::corpus::Corpus;
+use transmla::kvcache::QuantKind;
 use transmla::model::init_gqa;
 use transmla::runtime::Runtime;
 use transmla::server::{self, EngineRegistry, RoutePolicy, ServeOpts};
@@ -175,6 +176,44 @@ fn overlap_workload(b: &Bench, overlap: bool, label: &str) {
     b.report(&format!("sim_engine_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
 }
 
+/// Quantized KV blocks vs fp32 at an EQUAL `--cache-blocks` byte budget
+/// (16 fp32 worst-case blocks): the lossy pools convert the same bytes
+/// into more blocks, so the same burst admits in fewer, wider waves.
+/// Reports wall-clock throughput plus the first admission wave — the
+/// concurrency the byte budget buys under each codec.
+fn quant_workload(b: &Bench, quant: QuantKind, label: &str) {
+    let n_req = if b.quick { 16 } else { 48 };
+    let max_new = 12usize;
+    let mut wave = 0usize;
+    let mean = b.run(&format!("sim_engine_{label}_{n_req}req"), || {
+        let mut engine = Engine::new(
+            SimBackend::new(SimConfig { capacity: 128, prefill_seq: 128, ..SimConfig::gqa(16) })
+                .unwrap(),
+            EngineConfig {
+                cache: CacheKind::Paged { block_size: 16, n_blocks: Some(16) },
+                kv_quant: quant,
+                ..Default::default()
+            },
+        );
+        for i in 0..n_req {
+            engine.submit(Request::from_text(
+                i as u64,
+                "quantized blocks stretch the byte budget",
+                max_new,
+            ));
+        }
+        engine.run_to_completion().unwrap();
+        wave = engine.admission_log()[0].1.len();
+    });
+    let toks = (n_req as usize * max_new) as f64;
+    b.report(&format!("sim_engine_{label}_tok_per_s"), toks / mean.max(1e-12), "tok/s");
+    b.report(
+        &format!("sim_engine_{label}_admit_wave"),
+        wave as f64,
+        "seq (first admission wave at equal byte budget)",
+    );
+}
+
 fn main() {
     let b = Bench::new();
 
@@ -217,6 +256,12 @@ fn main() {
     speculative_workload(&b, None, "spec_off");
     speculative_workload(&b, Some(2), "spec_k2");
     speculative_workload(&b, Some(4), "spec_k4");
+
+    // Quantized KV blocks vs fp32 at an equal byte budget (the *_admit_
+    // wave series is the headline: blocks bought per byte).
+    quant_workload(&b, QuantKind::Off, "quant_off");
+    quant_workload(&b, QuantKind::Int8, "quant_int8");
+    quant_workload(&b, QuantKind::Fp8, "quant_fp8");
 
     // Persist the hermetic tier as the serving perf trajectory (the
     // artifact tier below is environment-dependent, so it stays out).

@@ -31,7 +31,7 @@ pub mod sim;
 pub mod xla;
 
 use crate::config::CacheKind;
-use crate::kvcache::{CacheLayout, KvCache, PagedKvCache};
+use crate::kvcache::{CacheLayout, KvCache, PagedKvCache, QuantKind};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -92,12 +92,29 @@ impl BackendSpec {
     /// engine. `n_blocks` overrides the default; it must still fit one
     /// full sequence. `prefix_cache` turns on the cross-sequence prefix
     /// index (paged only: the fixed pool has no blocks to share).
-    pub fn new_cache_store(&self, kind: CacheKind, prefix_cache: bool) -> Result<CacheStore> {
+    ///
+    /// `quant` selects the paged pool's block codec. `n_blocks` (and the
+    /// default) are denominated in fp32 worst-case blocks — a *byte
+    /// budget* — so a lossy codec converts the same budget into more
+    /// blocks (`budget_bytes / encoded_block_bytes`): the admission win
+    /// the codec exists for. The fixed pool stores raw f32 rows only.
+    pub fn new_cache_store(
+        &self,
+        kind: CacheKind,
+        prefix_cache: bool,
+        quant: QuantKind,
+    ) -> Result<CacheStore> {
         match kind {
             CacheKind::Fixed => {
                 if prefix_cache {
                     bail!(
                         "prefix cache requires the paged cache store \
+                         (--cache paged)"
+                    );
+                }
+                if !quant.is_off() {
+                    bail!(
+                        "kv quantization requires the paged cache store \
                          (--cache paged)"
                     );
                 }
@@ -108,20 +125,30 @@ impl BackendSpec {
                     bail!("paged cache block size must be >= 1");
                 }
                 let per_seq = self.blocks_per_seq(block_size);
-                let n = n_blocks
+                let budget_blocks = n_blocks
                     .unwrap_or(per_seq.max(self.batch * self.capacity / block_size));
+                // The budget is bytes, counted in fp32 worst-case blocks;
+                // an encoded block is smaller, so the same bytes buy more
+                // blocks. Per-block bytes share the `block_size` factor,
+                // so the ratio reduces to bytes-per-token.
+                let (i0, i1) = self.layout.inner_dims();
+                let fp32_bpt = self.layout.per_token_per_layer() * self.n_layers * 4;
+                let enc_bpt =
+                    (quant.bytes_per_row(i0) + quant.bytes_per_row(i1)) * self.n_layers;
+                let n = budget_blocks * fp32_bpt / enc_bpt.max(1);
                 if n < per_seq {
                     bail!(
                         "paged pool of {n} blocks cannot hold one \
                          full-capacity sequence ({per_seq} blocks)"
                     );
                 }
-                let mut p = PagedKvCache::new(
+                let mut p = PagedKvCache::new_quant(
                     self.layout,
                     self.n_layers,
                     self.batch,
                     block_size,
                     n,
+                    quant,
                 )?;
                 if prefix_cache {
                     p.enable_prefix_cache();

@@ -5,7 +5,7 @@
 //!
 //! The "model" is a rolling 64-bit hash over the token prefix. The state
 //! after consuming `tokens[0..=p]` is written into the cache row at
-//! position `p` (as four exact 16-bit chunks in the leading inner dims;
+//! position `p` (as ten exact base-100 digits in the leading inner dims;
 //! the remaining dims carry derived filler so cache traffic is
 //! layout-faithful). Decode reads the state at `pos-1` from the cache,
 //! mixes in the new token, writes position `pos`, and emits logits that
@@ -66,8 +66,14 @@ impl SimConfig {
     }
 }
 
-/// Number of leading inner dims that carry the exact prefix state.
-const STATE_CHUNKS: usize = 4;
+/// Number of leading inner dims that carry the exact prefix state, one
+/// base-100 digit (0..=99) per dim: `2^64 < 100^10`, so ten digits hold
+/// any u64 exactly. Base 100 (not 2^16) is deliberate: a per-row int8
+/// codec over the paged pool has scale `max|row| / 127 <= 99/127 < 1`,
+/// so its worst-case error `scale/2 < 0.5` and the round-to-nearest
+/// read in [`state_of_rows`] recovers every digit exactly — quantized
+/// greedy completions stay bit-identical to fp32 by construction.
+const STATE_CHUNKS: usize = 10;
 
 pub struct SimBackend {
     spec: BackendSpec,
@@ -128,7 +134,8 @@ impl SimBackend {
         let mut v1 = vec![0.0f32; i1];
         for j in 0..i0 + i1 {
             let val = if j < STATE_CHUNKS {
-                ((state >> (16 * j)) & 0xFFFF) as f32
+                // 100^9 < 2^64: the divisor never overflows u64.
+                ((state / 100u64.pow(j as u32)) % 100) as f32
             } else {
                 unit(mix(state, 0xF1_11ED ^ j as u64)) * 2.0 - 1.0
             };
@@ -448,13 +455,19 @@ fn inner_dims(layout: CacheLayout) -> (usize, usize) {
 }
 
 /// Reconstruct the prefix state from one cache row's two inner slices.
+/// Digits are read with round-to-nearest so any lossy row codec whose
+/// per-value error stays under 0.5 (e.g. per-row int8) is transparent;
+/// `rem_euclid` keeps a badly drifted value (e.g. fp8) a valid digit,
+/// so reads stay deterministic rather than UB. The sum is accumulated
+/// in u128 (`100^10 > 2^64`) and truncated.
 fn state_of_rows(r0: &[f32], r1: &[f32]) -> u64 {
-    let mut state = 0u64;
+    let mut state = 0u128;
     for j in 0..STATE_CHUNKS {
         let val = if j < r0.len() { r0[j] } else { r1[j - r0.len()] };
-        state |= ((val as u64) & 0xFFFF) << (16 * j);
+        let digit = (val.round() as i64).rem_euclid(100) as u128;
+        state += digit * 100u128.pow(j as u32);
     }
-    state
+    state as u64
 }
 
 /// SplitMix64-style avalanche of `a` perturbed by `b`.

@@ -221,6 +221,7 @@ pub const MODEL_SPEC_KEYS: &[&str] = &[
     "weight",
     "overlap",
     "draft",
+    "quant",
 ];
 
 /// One `--model name=SPEC` CLI entry: a named engine whose SPEC is a
@@ -297,6 +298,12 @@ pub struct EngineConfig {
     /// (`ExecBackend::supports_overlap`). Off by default; completions
     /// are bit-identical either way.
     pub overlap: bool,
+    /// Lossy block codec for the paged KV pool (`--kv-quant` /
+    /// `quant=` in a `--model` SPEC): encoded blocks shrink
+    /// bytes-per-token, so the same `--cache-blocks` byte budget admits
+    /// more sequences. Requires `CacheKind::Paged`; rejected at engine
+    /// construction otherwise. `Off` by default.
+    pub kv_quant: crate::kvcache::QuantKind,
 }
 
 impl Default for EngineConfig {
@@ -311,6 +318,7 @@ impl Default for EngineConfig {
             prefix_cache: false,
             weight: 1,
             overlap: false,
+            kv_quant: crate::kvcache::QuantKind::Off,
         }
     }
 }
@@ -482,6 +490,15 @@ mod tests {
             vec![
                 ("policy".to_string(), "speculative:4".to_string()),
                 ("draft".to_string(), "mla:2".to_string()),
+            ]
+        );
+        // PR 8 key: the KV block codec.
+        let q = ModelSpec::parse("q=cache=paged,quant=int8").unwrap();
+        assert_eq!(
+            q.overrides,
+            vec![
+                ("cache".to_string(), "paged".to_string()),
+                ("quant".to_string(), "int8".to_string()),
             ]
         );
     }

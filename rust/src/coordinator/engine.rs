@@ -29,7 +29,7 @@ use crate::coordinator::request::{Completion, Request};
 use crate::coordinator::sampling;
 use crate::coordinator::scheduler::{self, PrefillWork, SchedView, SchedulePolicy, StepPlan};
 use crate::coordinator::seqmgr::{bounded_cache_tokens, SeqPhase, SequenceManager};
-use crate::kvcache::PrefixStats;
+use crate::kvcache::{PrefixStats, QuantKind};
 use crate::metrics::Metrics;
 use crate::tensor::Tensor;
 use crate::util::{Rng, Timer};
@@ -171,7 +171,7 @@ impl Engine {
 
     pub fn from_boxed(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Result<Engine> {
         let spec = backend.spec().clone();
-        let cache = spec.new_cache_store(cfg.cache, cfg.prefix_cache)?;
+        let cache = spec.new_cache_store(cfg.cache, cfg.prefix_cache, cfg.kv_quant)?;
         Ok(Engine {
             name: "default".to_string(),
             backend,
@@ -234,7 +234,7 @@ impl Engine {
                 target.capacity
             );
         }
-        let cache = spec.new_cache_store(CacheKind::Fixed, false)?;
+        let cache = spec.new_cache_store(CacheKind::Fixed, false, QuantKind::Off)?;
         let done = vec![0; spec.batch];
         self.draft = Some(DraftState { backend, cache, done });
         Ok(())
@@ -754,15 +754,20 @@ impl Engine {
             self.metrics.observe("chunk_tokens", processed as f64);
             left = left.saturating_sub(processed);
             self.seqs.record_prefill(slot, end)?;
+            if plen > 0 {
+                // Index the prompt blocks this chunk filled for future
+                // same-prefix admissions (paged + prefix cache only; the
+                // pad step of an empty prompt caches nothing). Mid-prefill
+                // registration — not just at prompt completion — lets a
+                // same-wave burst of shared-prefix prompts dedupe against
+                // a long prompt still streaming in; `register_prefix`
+                // indexes fully-filled blocks only, and re-registering a
+                // longer prefix later just extends the cached chain.
+                self.cache.register_prefix(slot, &prefix)?;
+            }
             if end >= target {
                 // Prompt fully in cache: first token, decode queue.
                 self.prefillq.pop_front();
-                if plen > 0 {
-                    // Cache the filled prompt blocks for future
-                    // same-prefix admissions (paged + prefix cache only;
-                    // the pad step of an empty prompt caches nothing).
-                    self.cache.register_prefix(slot, &prefix)?;
-                }
                 let temp = {
                     let seq = self.seqs.seq(slot).context("prefilled slot has state")?;
                     self.effective_temp(&seq.req)
@@ -898,12 +903,15 @@ impl Engine {
             self.metrics.inc("prefill_tokens", processed as u64);
             self.metrics.observe("chunk_tokens", processed as f64);
             self.seqs.record_prefill(j.slot, j.end)?;
+            if j.plen > 0 {
+                // Mid-prefill indexing, same as the serial path — safe
+                // here because 3a runs after the join (index/refcount
+                // mutation is barred while the streams run).
+                self.cache.register_prefix(j.slot, &j.prefix)?;
+            }
             if j.end >= j.target {
                 let front = self.prefillq.pop_front();
                 debug_assert_eq!(front, Some(j.slot), "schedule tracks the queue");
-                if j.plen > 0 {
-                    self.cache.register_prefix(j.slot, &j.prefix)?;
-                }
                 let temp = {
                     let seq = self.seqs.seq(j.slot).context("prefilled slot has state")?;
                     self.effective_temp(&seq.req)
@@ -1230,11 +1238,11 @@ impl Engine {
     /// worst-case fixed reservation would hold (`batch * capacity`).
     pub fn cache_stats(&self) -> CacheStats {
         let spec = self.backend.spec();
-        let bytes_worst_case = spec.batch
-            * spec.capacity
-            * spec.layout.per_token_per_layer()
-            * spec.n_layers
-            * 4;
+        let fp32_per_token = spec.layout.per_token_per_layer() * spec.n_layers * 4;
+        // Worst case stays fp32-denominated on purpose: it is the "what
+        // would the unquantized fixed reservation cost" baseline, so the
+        // dedup/compression ratios read as savings against it.
+        let bytes_worst_case = spec.batch * spec.capacity * fp32_per_token;
         match &self.cache {
             CacheStore::Fixed(kv) => CacheStats {
                 kind: "fixed",
@@ -1246,20 +1254,36 @@ impl Engine {
                 blocks_in_use: 0,
                 blocks_reserved: 0,
                 bytes_deduped: 0,
+                quant: QuantStats {
+                    kind: QuantKind::Off.name(),
+                    bytes_per_token: fp32_per_token,
+                    bytes_per_token_fp32: fp32_per_token,
+                    compression: 1.0,
+                },
                 prefix: None,
             },
-            CacheStore::Paged(p) => CacheStats {
-                kind: "paged",
-                bytes_total: p.bytes_total(),
-                bytes_in_use: p.bytes_in_use(),
-                bytes_worst_case,
-                block_size: p.block_size,
-                blocks_total: p.n_blocks(),
-                blocks_in_use: p.blocks_in_use(),
-                blocks_reserved: p.blocks_reserved(),
-                bytes_deduped: p.bytes_deduped(),
-                prefix: p.prefix_stats(),
-            },
+            CacheStore::Paged(p) => {
+                let bpt = p.bytes_per_token();
+                let bpt_fp32 = p.bytes_per_token_fp32();
+                CacheStats {
+                    kind: "paged",
+                    bytes_total: p.bytes_total(),
+                    bytes_in_use: p.bytes_in_use(),
+                    bytes_worst_case,
+                    block_size: p.block_size,
+                    blocks_total: p.n_blocks(),
+                    blocks_in_use: p.blocks_in_use(),
+                    blocks_reserved: p.blocks_reserved(),
+                    bytes_deduped: p.bytes_deduped(),
+                    quant: QuantStats {
+                        kind: p.quant_kind().name(),
+                        bytes_per_token: bpt,
+                        bytes_per_token_fp32: bpt_fp32,
+                        compression: bpt_fp32 as f64 / bpt.max(1) as f64,
+                    },
+                    prefix: p.prefix_stats(),
+                }
+            }
         }
     }
 }
@@ -1284,9 +1308,26 @@ pub struct CacheStats {
     /// table reference beyond a block's first would otherwise be a
     /// private copy. Zero for the fixed pool or with sharing off.
     pub bytes_deduped: usize,
+    /// Block-codec accounting — always present; the fixed pool and an
+    /// unquantized paged pool report kind `"off"` at compression 1.0.
+    pub quant: QuantStats,
     /// Prefix-cache counters (hit rate, blocks shared/cached, evictions);
     /// `None` for the fixed pool or when `--prefix-cache off`.
     pub prefix: Option<PrefixStats>,
+}
+
+/// Block-codec slice of [`CacheStats`] (`stats.cache.quant` on the wire).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantStats {
+    /// Codec name: `"off"`, `"int8"`, or `"fp8"`.
+    pub kind: &'static str,
+    /// Encoded bytes one cached token actually occupies (all layers,
+    /// both buffers — includes the per-row scale prefix).
+    pub bytes_per_token: usize,
+    /// What the same token costs unencoded (f32).
+    pub bytes_per_token_fp32: usize,
+    /// `bytes_per_token_fp32 / bytes_per_token` — 1.0 when off.
+    pub compression: f64,
 }
 
 #[cfg(test)]

@@ -26,7 +26,7 @@ pub mod scheduler;
 pub mod seqmgr;
 
 pub use crate::backend::{Arch, CacheStore, ModelBundle};
-pub use engine::{CacheStats, Engine};
+pub use engine::{CacheStats, Engine, QuantStats};
 pub use request::{Completion, Request};
 pub use scheduler::{PrefillWork, SchedView, SchedulePolicy, StepPlan};
 pub use seqmgr::{AdmitError, SeqPhase, SequenceManager};

@@ -14,16 +14,20 @@
 //! cross-sequence layer on top: a block-granular prefix index so
 //! same-prefix sequences share cached blocks (copy-on-write protected),
 //! with prompt blocks outliving their sequence until memory pressure
-//! evicts them.
+//! evicts them. [`quant`] adds lossy per-row block codecs (int8, fp8)
+//! so the paged pool can hold 2.4-3.2x more blocks at the same byte
+//! budget — the paper's "FP8 is the next multiplier" direction.
 
 pub mod paged;
 pub mod prefix;
+pub mod quant;
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
 pub use paged::{BlockAllocator, PagedKvCache};
 pub use prefix::{PrefixIndex, PrefixStats};
+pub use quant::QuantKind;
 
 /// Cache layout per architecture.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

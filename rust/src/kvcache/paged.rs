@@ -30,10 +30,41 @@
 //! write to a block other holders still reference triggers copy-on-write
 //! in [`PagedKvCache::row_mut`] — a reader's bytes can never change
 //! underneath it.
+//!
+//! # Quantized blocks
+//!
+//! With a lossy [`QuantKind`] codec ([`PagedKvCache::new_quant`]), the
+//! pool stores **encoded** blocks (byte pools, one per layout buffer)
+//! and `row`/`row_mut` go through a per-slot write-back **staging
+//! buffer**: the decoded f32 image of exactly one cache row at a time.
+//! Reads decode on demand; writes mark the staged row dirty and it is
+//! encoded back when the slot's staging moves to another row (or at an
+//! explicit flush point). Backends are oblivious — they see the same
+//! `&[f32]` / `&mut [f32]` rows either way.
+//!
+//! The **staging-buffer invariant**: a *dirty* staged row always lives
+//! in a block with refcount 1. Sequences only write their private tail
+//! (`row_mut` copy-on-writes shared blocks first), and
+//! [`PagedKvCache::register_prefix`] flushes the slot's staging *before*
+//! the index takes its reference — so a block can never become shared
+//! while a newer truth for one of its rows sits unencoded in staging.
+//! CoW copies and prefix sharing therefore move encoded blocks as
+//! opaque bytes, and `truncate` simply *drops* a staged row whose block
+//! is retracted (rollback discards the bytes exactly like the fp32
+//! pool leaves stale rows behind).
+//!
+//! Because [`PagedKvCache::row`] must stay `&self` (backends read two
+//! buffers of one row in a single expression), the staging state lives
+//! in an [`UnsafeCell`]. Callers sign the same discipline the
+//! dual-stream overlap already relies on (see `ExecBackend`): a row
+//! reference is not held across an access to a *different* row of the
+//! same slot, and concurrent streams touch disjoint slots.
 
+use super::quant::QuantKind;
 use super::{CacheLayout, PrefixIndex, PrefixStats};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
+use std::cell::UnsafeCell;
 
 /// Ref-counted fixed-size block allocator with a free list.
 #[derive(Debug)]
@@ -129,6 +160,85 @@ impl BlockAllocator {
     }
 }
 
+/// Per-slot write-back staging over the encoded pool: the decoded f32
+/// image of exactly one cache row key `(block, layer, offset)`, both
+/// layout buffers (the same key addresses both byte pools).
+struct StageSlot {
+    key: Option<(usize, usize, usize)>,
+    dirty: [bool; 2],
+    data: [Vec<f32>; 2],
+}
+
+/// Everything the lossy-codec path owns: the encoded byte pools and the
+/// per-slot staging buffers. Self-contained geometry copies keep its
+/// methods free of borrow entanglement with the outer cache.
+struct QuantState {
+    kind: QuantKind,
+    n_layers: usize,
+    block_size: usize,
+    /// Encoded bytes per row, per layout buffer.
+    bpr: [usize; 2],
+    /// Encoded pools, one per layout buffer:
+    /// `n_blocks * n_layers * block_size` rows of `bpr[buf]` bytes.
+    pools: [Vec<u8>; 2],
+    stage: Vec<StageSlot>,
+}
+
+impl QuantState {
+    /// Byte range of row `(block, layer, off)` in `pools[buf]`.
+    fn row_range(&self, buf: usize, block: usize, layer: usize, off: usize) -> std::ops::Range<usize> {
+        let row = (block * self.n_layers + layer) * self.block_size + off;
+        row * self.bpr[buf]..(row + 1) * self.bpr[buf]
+    }
+
+    /// Bytes of one whole encoded block in `pools[buf]`.
+    fn block_stride(&self, buf: usize) -> usize {
+        self.n_layers * self.block_size * self.bpr[buf]
+    }
+
+    /// Encode `slot`'s staged row back into the pool (dirty buffers
+    /// only) and mark it clean. The staged image stays valid for reads.
+    fn flush_slot(&mut self, slot: usize) {
+        let Some((block, layer, off)) = self.stage[slot].key else {
+            return;
+        };
+        for buf in 0..2 {
+            if !self.stage[slot].dirty[buf] {
+                continue;
+            }
+            let r = self.row_range(buf, block, layer, off);
+            self.kind
+                .encode_row(&self.stage[slot].data[buf], &mut self.pools[buf][r]);
+            self.stage[slot].dirty[buf] = false;
+        }
+    }
+
+    /// Forget `slot`'s staged row without encoding it — the rollback /
+    /// release primitive (any dirty data is discarded).
+    fn drop_stage(&mut self, slot: usize) {
+        self.stage[slot].key = None;
+        self.stage[slot].dirty = [false, false];
+    }
+
+    /// Make `slot`'s staging hold the decoded row at `key`: flush the
+    /// previously staged row (write-back), then decode both buffers.
+    /// No-op when `key` is already staged.
+    fn stage_row(&mut self, slot: usize, key: (usize, usize, usize)) {
+        if self.stage[slot].key == Some(key) {
+            return;
+        }
+        self.flush_slot(slot);
+        let (block, layer, off) = key;
+        for buf in 0..2 {
+            let r = self.row_range(buf, block, layer, off);
+            self.kind
+                .decode_row(&self.pools[buf][r], &mut self.stage[slot].data[buf]);
+        }
+        self.stage[slot].key = Some(key);
+        self.stage[slot].dirty = [false, false];
+    }
+}
+
 /// The paged cache pool: per-sequence block tables over shared blocks.
 ///
 /// The admit → grow → release lifecycle:
@@ -170,6 +280,13 @@ pub struct PagedKvCache {
     /// Cross-sequence prefix index; `None` when prefix caching is off.
     /// The cache holds one `retain` per indexed block.
     prefix: Option<PrefixIndex>,
+    /// Which codec the pool stores blocks in ([`QuantKind::Off`] for the
+    /// raw f32 pool).
+    quant_kind: QuantKind,
+    /// Encoded pools + staging, present iff `quant_kind` is lossy. In an
+    /// `UnsafeCell` because [`PagedKvCache::row`] must stage (decode)
+    /// from `&self` — see the module docs for the access discipline.
+    quant: Option<UnsafeCell<QuantState>>,
 }
 
 impl PagedKvCache {
@@ -180,6 +297,21 @@ impl PagedKvCache {
         block_size: usize,
         n_blocks: usize,
     ) -> Result<Self> {
+        Self::new_quant(layout, n_layers, n_slots, block_size, n_blocks, QuantKind::Off)
+    }
+
+    /// Like [`PagedKvCache::new`], but storing blocks in the given
+    /// codec. `n_blocks` counts *encoded* blocks: at a fixed byte
+    /// budget, a lossy pool holds proportionally more of them (the
+    /// caller sizes the pool; see `BackendSpec::new_cache_store`).
+    pub fn new_quant(
+        layout: CacheLayout,
+        n_layers: usize,
+        n_slots: usize,
+        block_size: usize,
+        n_blocks: usize,
+        quant: QuantKind,
+    ) -> Result<Self> {
         if n_layers == 0 || n_slots == 0 || block_size == 0 || n_blocks == 0 {
             bail!(
                 "degenerate paged cache geometry: layers {n_layers}, slots \
@@ -187,10 +319,36 @@ impl PagedKvCache {
             );
         }
         let (i0, i1) = layout.inner_dims();
+        // With a lossy codec the f32 pool is unused: keep zero-block
+        // tensors so shape queries (`inner_dim`) stay uniform while the
+        // bytes live in the encoded pools.
+        let pool_blocks = if quant.is_off() { n_blocks } else { 0 };
         let pool = vec![
-            Tensor::zeros(&[n_blocks, n_layers, block_size, i0]),
-            Tensor::zeros(&[n_blocks, n_layers, block_size, i1]),
+            Tensor::zeros(&[pool_blocks, n_layers, block_size, i0]),
+            Tensor::zeros(&[pool_blocks, n_layers, block_size, i1]),
         ];
+        let qstate = if quant.is_off() {
+            None
+        } else {
+            let rows = n_blocks * n_layers * block_size;
+            let bpr = [quant.bytes_per_row(i0), quant.bytes_per_row(i1)];
+            Some(UnsafeCell::new(QuantState {
+                kind: quant,
+                n_layers,
+                block_size,
+                bpr,
+                // Zero bytes decode to zero rows (see `kvcache::quant`),
+                // so a fresh encoded pool matches the zeroed f32 pool.
+                pools: [vec![0u8; rows * bpr[0]], vec![0u8; rows * bpr[1]]],
+                stage: (0..n_slots)
+                    .map(|_| StageSlot {
+                        key: None,
+                        dirty: [false, false],
+                        data: [vec![0.0; i0], vec![0.0; i1]],
+                    })
+                    .collect(),
+            }))
+        };
         Ok(PagedKvCache {
             layout,
             n_layers,
@@ -201,7 +359,14 @@ impl PagedKvCache {
             reserved: vec![0; n_slots],
             shared: vec![0; n_slots],
             prefix: None,
+            quant_kind: quant,
+            quant: qstate,
         })
+    }
+
+    /// The codec the pool stores blocks in.
+    pub fn quant_kind(&self) -> QuantKind {
+        self.quant_kind
     }
 
     /// Turn on cross-sequence prefix sharing (see the module docs).
@@ -263,12 +428,23 @@ impl PagedKvCache {
         self.pool[buf].shape[3]
     }
 
+    /// Bytes one token position actually occupies in the pool — codec-
+    /// aware: the raw f32 cost when quant is off, the encoded cost (one
+    /// byte per value plus the per-row scale) otherwise.
     pub fn bytes_per_token(&self) -> usize {
+        let (i0, i1) = self.layout.inner_dims();
+        (self.quant_kind.bytes_per_row(i0) + self.quant_kind.bytes_per_row(i1))
+            * self.n_layers
+    }
+
+    /// The fp32 worst-case cost of one token position — the codec-free
+    /// reference that compression/dedup ratios are quoted against.
+    pub fn bytes_per_token_fp32(&self) -> usize {
         self.layout.per_token_per_layer() * self.n_layers * 4
     }
 
     pub fn bytes_total(&self) -> usize {
-        self.pool.iter().map(|b| b.len() * 4).sum()
+        self.alloc.n_blocks() * self.block_size * self.bytes_per_token()
     }
 
     /// Bytes actually held by allocated blocks.
@@ -353,6 +529,11 @@ impl PagedKvCache {
         let shared_tokens = matched.len() * self.block_size;
         if let Some(ix) = self.prefix.as_mut() {
             ix.record_shared(matched.len(), shared_tokens);
+        }
+        if let Some(cell) = self.quant.as_mut() {
+            // Defensive: a fresh sequence must never read the previous
+            // occupant's staged row (release_slot already dropped it).
+            cell.get_mut().drop_stage(slot);
         }
         self.tables[slot] = matched;
         self.shared[slot] = shared_tokens;
@@ -451,6 +632,12 @@ impl PagedKvCache {
                 self.tables[slot].len()
             );
         }
+        if let Some(cell) = self.quant.as_mut() {
+            // Flush *before* the index takes its reference: a block must
+            // never become shareable while a newer truth for one of its
+            // rows sits unencoded in staging (the staging invariant).
+            cell.get_mut().flush_slot(slot);
+        }
         let newly = self
             .prefix
             .as_mut()
@@ -508,6 +695,10 @@ impl PagedKvCache {
             bail!("slot out of range: {slot} >= {}", self.tables.len());
         }
         let blocks = std::mem::take(&mut self.tables[slot]);
+        if let Some(cell) = self.quant.as_mut() {
+            // The sequence is done: its staged row dies with it.
+            cell.get_mut().drop_stage(slot);
+        }
         let mut freed = 0;
         for b in blocks {
             // Shared or index-cached blocks survive (refcount stays > 0);
@@ -545,6 +736,15 @@ impl PagedKvCache {
         let want = self.blocks_for(len.max(floor));
         while self.tables[slot].len() > want {
             let b = self.tables[slot].pop().expect("non-empty table");
+            if let Some(cell) = self.quant.as_mut() {
+                let q = cell.get_mut();
+                // Rollback drops (never flushes) a staged row of a
+                // retracted block — mirroring the fp32 pool, whose
+                // popped blocks simply keep their stale bytes.
+                if matches!(q.stage[slot].key, Some((sb, _, _)) if sb == b) {
+                    q.drop_stage(slot);
+                }
+            }
             if self.alloc.release(b)? {
                 self.reserved[slot] += 1;
             }
@@ -561,7 +761,9 @@ impl PagedKvCache {
         }
     }
 
-    fn offset(&self, buf: usize, slot: usize, layer: usize, pos: usize) -> Result<usize> {
+    /// Resolve (slot, layer, pos) to the pool row key
+    /// `(block, layer, offset-within-block)`, with bounds checks.
+    fn row_key(&self, slot: usize, layer: usize, pos: usize) -> Result<(usize, usize, usize)> {
         let table = match self.tables.get(slot) {
             Some(t) => t,
             None => bail!("slot out of range: {slot} >= {}", self.tables.len()),
@@ -576,22 +778,52 @@ impl PagedKvCache {
         if layer >= self.n_layers {
             bail!("layer {layer} out of range");
         }
+        Ok((block, layer, pos % self.block_size))
+    }
+
+    fn offset(&self, buf: usize, slot: usize, layer: usize, pos: usize) -> Result<usize> {
+        let (block, layer, off) = self.row_key(slot, layer, pos)?;
         let inner = self.pool[buf].shape[3];
-        let off = pos % self.block_size;
         Ok(((block * self.n_layers + layer) * self.block_size + off) * inner)
     }
 
     /// The inner-dim row of pool buffer `buf` at (slot, layer, pos).
+    ///
+    /// With a lossy codec this is a decode-on-read through the slot's
+    /// staging buffer, which may displace (write back) the previously
+    /// staged row of the *same slot* — so a returned reference must not
+    /// be held across an access to a different row of that slot. Reads
+    /// of the two buffers of one row never restage (one key covers
+    /// both), which is exactly the pattern backends use.
     pub fn row(&self, buf: usize, slot: usize, layer: usize, pos: usize) -> Result<&[f32]> {
-        let inner = self.pool[buf].shape[3];
-        let o = self.offset(buf, slot, layer, pos)?;
-        Ok(&self.pool[buf].data[o..o + inner])
+        let Some(cell) = &self.quant else {
+            let inner = self.pool[buf].shape[3];
+            let o = self.offset(buf, slot, layer, pos)?;
+            return Ok(&self.pool[buf].data[o..o + inner]);
+        };
+        let key = self.row_key(slot, layer, pos)?;
+        // SAFETY: interior staging from `&self` under the documented
+        // row discipline (module docs): no reference into this slot's
+        // staging outlives a staging change, and concurrent streams
+        // touch disjoint slots. The `&mut` below is confined to this
+        // call and only taken when the key actually changes.
+        unsafe {
+            if (*cell.get()).stage[slot].key != Some(key) {
+                (*cell.get()).stage_row(slot, key);
+            }
+            Ok(&(*cell.get()).stage[slot].data[buf][..])
+        }
     }
 
     /// Mutable row access, with **copy-on-write**: when the block holding
     /// `pos` is also referenced by another table or the prefix index, the
     /// slot first gets a private copy (all layers, both buffers), so the
     /// write can never corrupt another reader's bytes.
+    ///
+    /// With a lossy codec the returned row is the slot's staged f32
+    /// image, marked dirty; it is encoded back into the (now private)
+    /// block when the staging moves on — the CoW above is what keeps
+    /// dirty staged rows confined to refcount-1 blocks.
     pub fn row_mut(
         &mut self,
         buf: usize,
@@ -600,6 +832,13 @@ impl PagedKvCache {
         pos: usize,
     ) -> Result<&mut [f32]> {
         self.ensure_private(slot, pos)?;
+        if self.quant.is_some() {
+            let key = self.row_key(slot, layer, pos)?;
+            let q = self.quant.as_mut().expect("quant state").get_mut();
+            q.stage_row(slot, key);
+            q.stage[slot].dirty[buf] = true;
+            return Ok(&mut q.stage[slot].data[buf][..]);
+        }
         let inner = self.pool[buf].shape[3];
         let o = self.offset(buf, slot, layer, pos)?;
         Ok(&mut self.pool[buf].data[o..o + inner])
@@ -633,9 +872,27 @@ impl PagedKvCache {
             Some(nb) => nb,
             None => bail!("block pool exhausted during copy-on-write of block {b}"),
         };
-        for buf in &mut self.pool {
-            let stride = self.n_layers * self.block_size * buf.shape[3];
-            buf.data.copy_within(b * stride..(b + 1) * stride, nb * stride);
+        if let Some(cell) = self.quant.as_mut() {
+            // Encoded blocks copy as opaque bytes — no decode round-trip,
+            // so the copy is bit-exact for every holder.
+            let q = cell.get_mut();
+            for buf in 0..2 {
+                let stride = q.block_stride(buf);
+                q.pools[buf].copy_within(b * stride..(b + 1) * stride, nb * stride);
+            }
+            // The slot's staged image of the shared block (necessarily
+            // clean: dirty rows live in refcount-1 blocks) moves with
+            // its table entry.
+            if let Some((sb, l, o)) = q.stage[slot].key {
+                if sb == b {
+                    q.stage[slot].key = Some((nb, l, o));
+                }
+            }
+        } else {
+            for buf in &mut self.pool {
+                let stride = self.n_layers * self.block_size * buf.shape[3];
+                buf.data.copy_within(b * stride..(b + 1) * stride, nb * stride);
+            }
         }
         // Drop this slot's reference to the shared block; it cannot free
         // (other holders remain), and any index entry stays with it.
@@ -673,6 +930,14 @@ impl PagedKvCache {
             self.ensure_private(slot, p)?;
             p = (p / self.block_size + 1) * self.block_size;
         }
+        if let Some(cell) = self.quant.as_mut() {
+            // The splice writes the pool directly below: persist any
+            // staged write elsewhere in the slot, then invalidate the
+            // staging so later reads decode the freshly spliced bytes.
+            let q = cell.get_mut();
+            q.flush_slot(slot);
+            q.drop_stage(slot);
+        }
         for (i, theirs) in prefill_bufs.iter().enumerate() {
             if theirs.shape.len() < 3 || theirs.shape[0] != self.n_layers {
                 bail!(
@@ -699,10 +964,19 @@ impl PagedKvCache {
             for l in 0..self.n_layers {
                 for pos in start..len {
                     let src_off = ((l * bp + src) * t + pos) * inner;
-                    let dst_off = self.offset(i, slot, l, pos)?;
                     let src_row = &theirs.data[src_off..src_off + inner];
-                    self.pool[i].data[dst_off..dst_off + inner]
-                        .copy_from_slice(src_row);
+                    if self.quant.is_some() {
+                        // Encode straight into the pool — the splice is
+                        // the one bulk path that bypasses staging.
+                        let (block, _, off) = self.row_key(slot, l, pos)?;
+                        let q = self.quant.as_mut().expect("quant state").get_mut();
+                        let r = q.row_range(i, block, l, off);
+                        q.kind.encode_row(src_row, &mut q.pools[i][r]);
+                    } else {
+                        let dst_off = self.offset(i, slot, l, pos)?;
+                        self.pool[i].data[dst_off..dst_off + inner]
+                            .copy_from_slice(src_row);
+                    }
                 }
             }
         }
@@ -754,6 +1028,26 @@ impl PagedKvCache {
             }
             if s > self.tables[slot].len() * self.block_size {
                 bail!("slot {slot} shared watermark {s} exceeds its table");
+            }
+        }
+        if let Some(cell) = &self.quant {
+            // SAFETY: shared read; invariant checks never run concurrently
+            // with a staging mutation (same discipline as `row`).
+            let q = unsafe { &*cell.get() };
+            for (slot, st) in q.stage.iter().enumerate() {
+                let Some((b, _, _)) = st.key else { continue };
+                if !self.tables[slot].contains(&b) {
+                    bail!(
+                        "slot {slot} stages block {b} absent from its table"
+                    );
+                }
+                if st.dirty.iter().any(|&d| d) && self.alloc.refcount_of(b) != 1 {
+                    bail!(
+                        "staging invariant broken: slot {slot} has a dirty \
+                         staged row in shared block {b} (refcount {})",
+                        self.alloc.refcount_of(b)
+                    );
+                }
             }
         }
         Ok(())
@@ -1280,6 +1574,260 @@ mod tests {
                 c.release_slot(0).map_err(|e| e.to_string())?;
                 c.release_slot(1).map_err(|e| e.to_string())?;
                 c.check_invariants().map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    // -- quantized blocks ----------------------------------------------------
+
+    fn quant_cache(
+        kind: QuantKind,
+        slots: usize,
+        block_size: usize,
+        blocks: usize,
+    ) -> PagedKvCache {
+        PagedKvCache::new_quant(
+            CacheLayout::Mla { r: 2, dr: 2 },
+            2,
+            slots,
+            block_size,
+            blocks,
+            kind,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn quant_rows_roundtrip_through_staging_within_tolerance() {
+        // The staged write-back path: values survive encode/decode within
+        // the int8 tolerance (max|row|/254), and re-reads are stable.
+        let mut c = quant_cache(QuantKind::Int8, 2, 4, 8);
+        c.admit_slot(1, 7, 7).unwrap();
+        for pos in 0..7 {
+            for l in 0..2 {
+                let v = (pos * 10 + l) as f32;
+                c.row_mut(0, 1, l, pos).unwrap().fill(v);
+                c.row_mut(1, 1, l, pos).unwrap().fill(-v);
+            }
+        }
+        for pos in 0..7 {
+            for l in 0..2 {
+                let v = (pos * 10 + l) as f32;
+                let r0 = c.row(0, 1, l, pos).unwrap().to_vec();
+                let r1 = c.row(1, 1, l, pos).unwrap().to_vec();
+                for (got, want) in
+                    r0.iter().chain(r1.iter()).zip([v, v, -v, -v])
+                {
+                    assert!(
+                        (got - want).abs() <= want.abs() / 250.0 + 1e-6,
+                        "pos {pos} l {l}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+        c.check_invariants().unwrap();
+        // Zero-init: unwritten rows of a covered block decode to zeros,
+        // exactly like the fp32 pool.
+        c.admit_slot(0, 3, 3).unwrap();
+        assert!(c.row(0, 0, 0, 1).unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quant_both_buffers_of_one_row_read_in_one_expression() {
+        // The backend pattern `f(c.row(0, ..)?, c.row(1, ..)?)`: one key
+        // covers both buffers, so the second read never restages and the
+        // first reference stays valid.
+        let mut c = quant_cache(QuantKind::Int8, 1, 4, 4);
+        c.admit_slot(0, 4, 4).unwrap();
+        c.row_mut(0, 0, 0, 2).unwrap().fill(42.0);
+        c.row_mut(1, 0, 0, 2).unwrap().fill(-7.0);
+        let sum: f32 = c
+            .row(0, 0, 0, 2)
+            .unwrap()
+            .iter()
+            .chain(c.row(1, 0, 0, 2).unwrap().iter())
+            .sum();
+        assert!((sum - (42.0 * 2.0 - 7.0 * 2.0)).abs() < 0.5, "sum {sum}");
+    }
+
+    #[test]
+    fn quant_cow_write_preserves_the_readers_decoded_bytes() {
+        // CoW over encoded blocks: the reader's *decoded* rows must be
+        // bit-stable across another slot's write (encoded bytes move as
+        // opaque bytes; decode is deterministic).
+        let prompt: Vec<i32> = (0..10).collect();
+        let mut c = quant_cache(QuantKind::Int8, 2, 4, 12);
+        c.enable_prefix_cache();
+        c.admit_slot_shared(0, prompt.len() + 2, prompt.len(), &prompt)
+            .unwrap();
+        for pos in 0..prompt.len() {
+            for l in 0..2 {
+                let v = (prompt[pos] * 100 + l as i32) as f32;
+                c.row_mut(0, 0, l, pos).unwrap().fill(v);
+                c.row_mut(1, 0, l, pos).unwrap().fill(-v);
+            }
+        }
+        c.register_prefix(0, &prompt).unwrap();
+        c.admit_slot_shared(1, prompt.len() + 2, 0, &prompt).unwrap();
+        let reader: Vec<f32> = c.row(0, 0, 0, 5).unwrap().to_vec();
+        c.row_mut(0, 1, 0, 5).unwrap().fill(777.0);
+        assert_eq!(
+            c.row(0, 0, 0, 5).unwrap(),
+            &reader[..],
+            "CoW must not change the reader's decoded bytes"
+        );
+        let writer: Vec<f32> = c.row(0, 1, 0, 5).unwrap().to_vec();
+        assert!(writer.iter().all(|&x| (x - 777.0).abs() < 777.0 / 250.0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quant_register_prefix_flushes_staging_before_sharing() {
+        // The staging invariant's load-bearing edge: the *last written
+        // row* of a prompt is still staged (dirty) when the prompt is
+        // registered. Without the flush, a later sharer would decode the
+        // stale (zero) pool bytes instead.
+        let prompt: Vec<i32> = (0..8).collect(); // exactly 2 full blocks
+        let mut c = quant_cache(QuantKind::Int8, 2, 4, 12);
+        c.enable_prefix_cache();
+        c.admit_slot_shared(0, prompt.len() + 2, prompt.len(), &prompt)
+            .unwrap();
+        for pos in 0..prompt.len() {
+            for l in 0..2 {
+                c.row_mut(0, 0, l, pos).unwrap().fill((pos * 10 + l) as f32);
+                c.row_mut(1, 0, l, pos).unwrap().fill(1.0);
+            }
+        }
+        c.register_prefix(0, &prompt).unwrap();
+        c.check_invariants().unwrap();
+        let shared = c
+            .admit_slot_shared(1, prompt.len() + 2, 0, &prompt)
+            .unwrap();
+        assert_eq!(shared, 4, "one full block shared (cap below the prompt)");
+        for pos in 0..shared {
+            assert_eq!(
+                c.row(0, 1, 0, pos).unwrap(),
+                c.row(0, 0, 0, pos).unwrap(),
+                "sharer decodes the writer's flushed bytes at pos {pos}"
+            );
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quant_byte_accounting_reports_encoded_bytes() {
+        // Mla{2,2} x 2 layers: fp32 costs (2+2)*2*4 = 32 B/token; int8
+        // costs ((4+2)+(4+2))*2 = 24 B/token (scale amortizes poorly at
+        // these tiny test dims; real geometries compress 2.4-3.2x).
+        let c = quant_cache(QuantKind::Int8, 4, 16, 16);
+        assert_eq!(c.bytes_per_token(), 24);
+        assert_eq!(c.bytes_per_token_fp32(), 32);
+        assert_eq!(c.bytes_total(), 16 * 16 * 24);
+        let mut c = quant_cache(QuantKind::Fp8, 4, 16, 16);
+        assert_eq!(c.bytes_per_token(), 24);
+        c.admit_slot(0, 20, 20).unwrap();
+        assert_eq!(c.bytes_in_use(), 2 * 16 * 24);
+        assert_eq!(c.quant_kind(), QuantKind::Fp8);
+    }
+
+    #[test]
+    fn props_quant_truncate_rollback_matches_fp32_shadow() {
+        // Satellite: the speculative rollback walk over quantized blocks,
+        // with an fp32 shadow cache running the identical op sequence.
+        // Refcounts, reservation credits, and coverage must agree at
+        // every step — the codec must be invisible to the block ledger —
+        // and the sharing reader's digit rows must survive in both.
+        check(
+            "quant_truncate_rollback_matches_fp32_shadow",
+            PropConfig { cases: 60, seed: 0x5EED },
+            |r: &mut Rng| {
+                let bs = 2 + r.below(3); // 2..=4
+                let plen = bs + 1 + r.below(2 * bs);
+                let ops: Vec<u64> = (0..24).map(|_| r.next_u64()).collect();
+                (bs, plen, ops)
+            },
+            |(bs, plen, ops)| {
+                let prompt: Vec<i32> = (0..*plen as i32).collect();
+                let cap = *plen + 16;
+                let mut caches = [
+                    quant_cache(QuantKind::Off, 2, *bs, 48),
+                    quant_cache(QuantKind::Int8, 2, *bs, 48),
+                ];
+                for c in &mut caches {
+                    c.enable_prefix_cache();
+                    c.admit_slot_shared(0, cap, *plen, &prompt)
+                        .map_err(|e| e.to_string())?;
+                    for pos in 0..*plen {
+                        // Digit-valued rows (0..=99): int8 decodes them
+                        // exactly after rounding.
+                        c.row_mut(0, 0, 0, pos)
+                            .map_err(|e| e.to_string())?
+                            .fill((pos % 100) as f32);
+                    }
+                    c.register_prefix(0, &prompt).map_err(|e| e.to_string())?;
+                    c.admit_slot_shared(1, cap, *plen, &prompt)
+                        .map_err(|e| e.to_string())?;
+                }
+                let mut len = *plen;
+                for &op in ops {
+                    let k = 1 + (op as usize) % 4;
+                    let grown = (len + k).min(cap);
+                    let accepted = (op as usize / 8) % (grown - len + 1);
+                    for c in &mut caches {
+                        c.grow(1, grown).map_err(|e| e.to_string())?;
+                        // Write the proposed rows (the verify path's
+                        // write shape) before rolling back the tail.
+                        for pos in len..grown {
+                            c.row_mut(0, 1, 0, pos)
+                                .map_err(|e| e.to_string())?
+                                .fill((pos % 100) as f32);
+                        }
+                        c.truncate(1, len + accepted).map_err(|e| e.to_string())?;
+                        c.check_invariants().map_err(|e| e.to_string())?;
+                    }
+                    len += accepted;
+                    let (a, b) = (&caches[0], &caches[1]);
+                    if a.blocks_in_use() != b.blocks_in_use()
+                        || a.blocks_reserved() != b.blocks_reserved()
+                        || a.reserved_of(1) != b.reserved_of(1)
+                        || a.shared_tokens(1) != b.shared_tokens(1)
+                    {
+                        return Err(format!(
+                            "ledgers diverged at len {len}: fp32 \
+                             ({}, {}, {}) vs int8 ({}, {}, {})",
+                            a.blocks_in_use(),
+                            a.blocks_reserved(),
+                            a.reserved_of(1),
+                            b.blocks_in_use(),
+                            b.blocks_reserved(),
+                            b.reserved_of(1)
+                        ));
+                    }
+                    for probe in [len.saturating_sub(1), len, len + 3] {
+                        if a.covers(1, probe) != b.covers(1, probe) {
+                            return Err(format!("coverage diverged at {probe}"));
+                        }
+                    }
+                }
+                // The sharing reader's digit rows survived every rollback
+                // in both caches (int8 after round-to-nearest).
+                for c in &caches {
+                    for pos in 0..*plen {
+                        let got = c.row(0, 0, 0, pos).map_err(|e| e.to_string())?;
+                        if got[0].round() != (pos % 100) as f32 {
+                            return Err(format!(
+                                "{:?} reader corrupted at {pos}: {got:?}",
+                                c.quant_kind()
+                            ));
+                        }
+                    }
+                }
+                for c in &mut caches {
+                    c.release_slot(0).map_err(|e| e.to_string())?;
+                    c.release_slot(1).map_err(|e| e.to_string())?;
+                    c.check_invariants().map_err(|e| e.to_string())?;
+                }
+                Ok(())
             },
         );
     }

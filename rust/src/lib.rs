@@ -65,7 +65,7 @@
 //! |---------------|---------------------------------------------------------|
 //! | [`backend`]   | execution backends: `ExecBackend` (prefill / prefill_chunk / decode), `SimBackend`, `XlaBackend`, `ModelBundle` |
 //! | [`coordinator`] | engine (StepPlan executor), scheduler (StepPlan builder: admit-first / decode-first / hybrid / chunked), sequence manager (phase + watermark), sampling, request types |
-//! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with cross-sequence prefix sharing (`PrefixIndex`: block-granular prefix hashes, copy-on-write, LRU eviction) and layout-aware byte accounting (GQA vs MLA) |
+//! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with cross-sequence prefix sharing (`PrefixIndex`: block-granular prefix hashes, copy-on-write, LRU eviction), lossy block codecs (`quant::QuantKind`: int8 / simulated fp8-e4m3 per-row encoding with decode-on-read staging — same byte budget, ~3× the blocks), and layout-aware byte accounting (GQA vs MLA) |
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
 //! | [`server`]    | TCP JSONL front-end (protocol v2): `EngineRegistry` hosting N named engines with routed requests (`default:<name>` / round-robin / least-loaded), a fair multi-engine stepper, per-engine stats, and in-band protocol errors |
 //! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |
@@ -75,7 +75,7 @@
 //! | [`train`]     | AOT train-step driver                                    |
 //! | [`eval`]      | perplexity/accuracy + paper experiment drivers           |
 //! | [`corpus`]    | deterministic synthetic byte corpus                      |
-//! | [`perfmodel`] | analytical GPU serving model (paper Fig. 4 / Table 4)    |
+//! | [`perfmodel`] | analytical GPU serving model (paper Fig. 4 / Table 4), codec-aware cache traffic (`CacheModel`), and roofline-driven knob picking (`autotune`) |
 //! | [`tensor`], [`linalg`] | dense f32 substrate for the converter          |
 //! | [`io`], [`json`], [`util`] | checkpoint archive, JSON, PRNG/timing/prop-testing |
 //!

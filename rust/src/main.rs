@@ -6,14 +6,16 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{CacheKind, EngineConfig, ModelSpec, PolicyKind};
+use transmla::config::{CacheKind, EngineConfig, HardwareProfile, ModelSpec, PolicyKind};
 use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
 use transmla::eval::experiments::{self, ExpContext};
 use transmla::eval::{capture_calib, evaluate};
 use transmla::json::Json;
+use transmla::kvcache::QuantKind;
 use transmla::model::{init_gqa, Params};
+use transmla::perfmodel;
 use transmla::runtime::Runtime;
 use transmla::train::Trainer;
 use transmla::{corpus::Corpus, server};
@@ -58,6 +60,16 @@ COMMON FLAGS
   --prefix-cache M  on|off (default off): cross-sequence prefix sharing over
                     the paged store — same-prefix prompts share cached
                     blocks copy-on-write; requires --cache paged
+  --kv-quant Q      off|int8|fp8 (default off): lossy block codec for the
+                    paged KV store — encoded blocks shrink bytes/token, so
+                    the same --cache-blocks byte budget admits more
+                    sequences; requires --cache paged. SPEC key: quant=int8
+  --autotune        pick codec, block size, and prefill chunk from the
+                    perfmodel roofline (llama2-7b scale on the first paper
+                    hardware profile, at --batch/--capacity): memory-bound
+                    -> paged int8 blocks + short chunks, compute-bound ->
+                    fp32 blocks, coarser blocks, long chunks. Explicit
+                    flags always win over the autotuned choice
   --overlap M       on|off (default off): inside one chunked-policy engine
                     iteration, run the prefill chunk and the decode batch
                     on two concurrent streams (needs --policy chunked and
@@ -75,7 +87,7 @@ MULTI-MODEL SERVING (serve only)
                     engine (keys: arch/layout, rank, backend, policy,
                     prefill-chunk, cache, block-size, cache-blocks,
                     prefix-cache, batch, capacity, seed, ckpt, weight,
-                    overlap, draft), e.g.
+                    overlap, draft, quant), e.g.
                     --model gqa-base=layout=gqa \\
                     --model mla=layout=mla,cache=paged,policy=chunked:8
                     Repeatable; unspecified keys inherit the bare flags.
@@ -246,7 +258,46 @@ fn run() -> Result<()> {
 
 /// Engine settings from the common flags (or a `--model` SPEC view).
 fn engine_cfg(args: &FlagView) -> Result<EngineConfig> {
-    let mut cache = CacheKind::parse(args.str_flag("cache", "fixed"))?;
+    // --autotune: let the perfmodel roofline pick the knobs the operator
+    // left unset. Runs the split at llama2-7b scale on the first paper
+    // profile, with --batch/--capacity as the workload point; every
+    // explicitly-passed flag below still wins over the plan.
+    let plan = match args.get("autotune") {
+        None | Some("off") | Some("false") => None,
+        Some("true") | Some("on") | Some("1") => {
+            let arch = match parse_arch(args)? {
+                Arch::Gqa => perfmodel::ArchModel::Gqa,
+                Arch::Mla { rank } => {
+                    perfmodel::ArchModel::Mla { r: rank, low_rank_q: false }
+                }
+            };
+            let dims = perfmodel::ModelDims::llama2_7b();
+            let hw = &HardwareProfile::paper_profiles()[0];
+            let batch = args.usize_flag("batch", 8);
+            let ctx = args.usize_flag("capacity", 256);
+            let plan = perfmodel::autotune::autotune(&dims, arch, hw, batch, ctx);
+            eprintln!(
+                "[autotune] {} bound on {} (t_compute {:.3e}s, t_memory {:.3e}s): \
+                 quant={} block-size={} prefill-chunk={}",
+                if plan.memory_bound { "memory" } else { "compute" },
+                hw.name,
+                plan.t_compute,
+                plan.t_memory,
+                plan.quant.name(),
+                plan.block_size,
+                plan.chunk_tokens,
+            );
+            Some(plan)
+        }
+        Some(other) => bail!("bad --autotune `{other}` (on|off)"),
+    };
+    let mut cache = match (args.get("cache"), &plan) {
+        (Some(c), _) => CacheKind::parse(c)?,
+        (None, Some(p)) => {
+            CacheKind::Paged { block_size: p.block_size, n_blocks: None }
+        }
+        (None, None) => CacheKind::Fixed,
+    };
     if let CacheKind::Paged { ref mut block_size, ref mut n_blocks } = cache {
         if let Some(b) = args.get("block-size") {
             *block_size = b
@@ -275,7 +326,27 @@ fn engine_cfg(args: &FlagView) -> Result<EngineConfig> {
              no blocks to share)"
         );
     }
-    let mut policy = PolicyKind::parse(args.str_flag("policy", "admit-first"))?;
+    // --kv-quant flag / `quant=` SPEC key; an autotuned plan fills it
+    // only when it also produced (or found) a paged store to encode.
+    let kv_quant = match args.get_either("kv-quant", "quant") {
+        Some(q) => QuantKind::parse(q)?,
+        None => match (&plan, &cache) {
+            (Some(p), CacheKind::Paged { .. }) => p.quant,
+            _ => QuantKind::Off,
+        },
+    };
+    if !kv_quant.is_off() && cache == CacheKind::Fixed {
+        bail!(
+            "--kv-quant {} requires --cache paged (the fixed pool stores \
+             raw f32 rows)",
+            kv_quant.name()
+        );
+    }
+    let mut policy = match (args.get("policy"), &plan) {
+        (Some(p), _) => PolicyKind::parse(p)?,
+        (None, Some(pl)) => PolicyKind::Chunked { chunk_tokens: pl.chunk_tokens },
+        (None, None) => PolicyKind::AdmitFirst,
+    };
     if let Some(raw) = args.get("prefill-chunk") {
         let chunk = raw
             .parse::<usize>()
@@ -320,6 +391,7 @@ fn engine_cfg(args: &FlagView) -> Result<EngineConfig> {
         prefix_cache,
         weight,
         overlap,
+        kv_quant,
         ..EngineConfig::default()
     })
 }

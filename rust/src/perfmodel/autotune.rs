@@ -1,0 +1,179 @@
+//! Closing the perfmodel's predict→tune loop: pick the serving knobs —
+//! block codec, paged block size, prefill chunk budget — from the
+//! roofline's compute-vs-memory-bound split on a concrete
+//! [`HardwareProfile`], instead of asking the operator to guess.
+//!
+//! The decision procedure is deliberately transparent (two regimes, one
+//! threshold) so the unit tests can pin every choice:
+//!
+//!   * **memory-bound** (`t_memory > t_compute` for one decode step at
+//!     the target batch/context): bytes are the bottleneck, so spend
+//!     accuracy headroom on the int8 codec (per-row scales keep the sim
+//!     backend's greedy outputs exact — see `kvcache::quant`), keep
+//!     blocks small (fragmented bytes are streamed bytes), and keep
+//!     prefill chunks short so the memory-bound decode cadence is never
+//!     stalled behind a long prompt.
+//!   * **compute-bound**: bytes are cheap, FLOPs are not. Store fp32
+//!     blocks (no staging work on the read path), coarsen blocks (fewer
+//!     table entries, no bandwidth penalty worth trading), and run big
+//!     prefill chunks to amortize per-call overhead on the saturated
+//!     compute units.
+//!
+//! The fp8 codec is never auto-picked: it buys the same byte ratio as
+//! int8 in this repo's simulated layout (one code byte per element) at
+//! strictly worse accuracy, so it stays an explicit operator opt-in.
+
+use super::{decode_step_cost, ArchModel, CacheModel, ModelDims};
+use crate::config::HardwareProfile;
+use crate::kvcache::QuantKind;
+
+/// Serving knobs chosen by [`autotune`], plus the roofline evidence
+/// (`t_compute` / `t_memory`, seconds per decode step) behind the call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunePlan {
+    pub quant: QuantKind,
+    pub block_size: usize,
+    /// Prefill token budget per iteration for the `chunked` policy.
+    pub chunk_tokens: usize,
+    /// Which side of the roofline the workload sits on.
+    pub memory_bound: bool,
+    pub t_compute: f64,
+    pub t_memory: f64,
+}
+
+/// Fine-grained allocation for memory-bound serving; matches the paged
+/// store's default so an autotuned config only *coarsens* when compute
+/// is the bottleneck.
+const BLOCK_MEMORY_BOUND: usize = 16;
+const BLOCK_COMPUTE_BOUND: usize = 32;
+/// Short chunks keep decode cadence; long chunks amortize compute.
+const CHUNK_MEMORY_BOUND: usize = 16;
+const CHUNK_COMPUTE_BOUND: usize = 64;
+
+/// Pick codec, block size, and chunk budget for serving `dims`/`arch` at
+/// `batch` concurrent sequences around context length `ctx` on `hw`.
+///
+/// The split is evaluated on the *unquantized* step cost: the tuner asks
+/// "is this workload memory-bound as configured today?", then spends the
+/// codec to attack exactly that bottleneck. (Evaluating under int8 would
+/// make the decision self-referential without changing the answer —
+/// quantization only ever moves a step toward compute-bound, never past
+/// the point where the codec stops helping.)
+pub fn autotune(
+    dims: &ModelDims,
+    arch: ArchModel,
+    hw: &HardwareProfile,
+    batch: usize,
+    ctx: usize,
+) -> TunePlan {
+    let probe = CacheModel { quant: QuantKind::Off, block_size: BLOCK_MEMORY_BOUND };
+    let (flops, bytes) = decode_step_cost(dims, arch, &probe, batch as f64, ctx as f64);
+    // Same efficiency factors as `decode_throughput`: ~40% of peak
+    // compute, ~60% of peak bandwidth in the batched-decode regime.
+    let t_compute = flops / (hw.tflops * 1e12 * 0.4);
+    let t_memory = bytes / (hw.bw_gbs * 1e9 * 0.6);
+    let memory_bound = t_memory > t_compute;
+    if memory_bound {
+        TunePlan {
+            quant: QuantKind::Int8,
+            block_size: BLOCK_MEMORY_BOUND,
+            chunk_tokens: CHUNK_MEMORY_BOUND,
+            memory_bound,
+            t_compute,
+            t_memory,
+        }
+    } else {
+        TunePlan {
+            quant: QuantKind::Off,
+            block_size: BLOCK_COMPUTE_BOUND,
+            chunk_tokens: CHUNK_COMPUTE_BOUND,
+            memory_bound,
+            t_compute,
+            t_memory,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Two workloads that sit on opposite sides of the roofline on every
+    // paper profile:
+    //  * GQA at batch 4 / 8K context streams ~30 GB of weights+cache per
+    //    step against ~0.05 TFLOP of work — memory-bound everywhere;
+    //  * MLA r=64 at batch 256 / 512 context multiplies the FLOPs by the
+    //    huge batch while the weights still stream once and the latent
+    //    cache is tiny — compute-bound everywhere.
+    fn memory_bound_workload() -> (ModelDims, ArchModel, usize, usize) {
+        (ModelDims::llama2_7b(), ArchModel::Gqa, 4, 8192)
+    }
+
+    fn compute_bound_workload() -> (ModelDims, ArchModel, usize, usize) {
+        (
+            ModelDims::llama2_7b(),
+            ArchModel::Mla { r: 64, low_rank_q: false },
+            256,
+            512,
+        )
+    }
+
+    #[test]
+    fn memory_bound_picks_int8_fine_blocks_short_chunks() {
+        let (dims, arch, batch, ctx) = memory_bound_workload();
+        for hw in &HardwareProfile::paper_profiles()[..2] {
+            let plan = autotune(&dims, arch, hw, batch, ctx);
+            assert!(plan.memory_bound, "{}: {plan:?}", hw.name);
+            assert!(plan.t_memory > plan.t_compute, "{}: {plan:?}", hw.name);
+            assert_eq!(plan.quant, QuantKind::Int8, "{}", hw.name);
+            assert_eq!(plan.block_size, 16, "{}", hw.name);
+            assert_eq!(plan.chunk_tokens, 16, "{}", hw.name);
+        }
+    }
+
+    #[test]
+    fn compute_bound_picks_fp32_coarse_blocks_long_chunks() {
+        let (dims, arch, batch, ctx) = compute_bound_workload();
+        for hw in &HardwareProfile::paper_profiles()[..2] {
+            let plan = autotune(&dims, arch, hw, batch, ctx);
+            assert!(!plan.memory_bound, "{}: {plan:?}", hw.name);
+            assert!(plan.t_compute >= plan.t_memory, "{}: {plan:?}", hw.name);
+            assert_eq!(plan.quant, QuantKind::Off, "{}", hw.name);
+            assert_eq!(plan.block_size, 32, "{}", hw.name);
+            assert_eq!(plan.chunk_tokens, 64, "{}", hw.name);
+        }
+    }
+
+    #[test]
+    fn fp8_is_never_auto_picked() {
+        let dims = ModelDims::llama2_7b();
+        for hw in &HardwareProfile::paper_profiles() {
+            for arch in [ArchModel::Gqa, ArchModel::Mla { r: 448, low_rank_q: false }] {
+                for batch in [1usize, 8, 64, 256] {
+                    for ctx in [128usize, 2048, 16384] {
+                        let plan = autotune(&dims, arch, hw, batch, ctx);
+                        assert_ne!(plan.quant, QuantKind::Fp8);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_moves_the_split() {
+        // Same workload, one profile with 100x the bandwidth: the step
+        // flips from memory- to compute-bound and the plan follows.
+        let (dims, arch, batch, ctx) = memory_bound_workload();
+        let slow = HardwareProfile {
+            name: "slow-hbm".into(),
+            tflops: 312.0,
+            mem_gb: 40.0,
+            bw_gbs: 1555.0,
+        };
+        let fast = HardwareProfile { bw_gbs: 155_500.0, ..slow.clone() };
+        assert!(autotune(&dims, arch, &slow, batch, ctx).memory_bound);
+        let plan = autotune(&dims, arch, &fast, batch, ctx);
+        assert!(!plan.memory_bound, "{plan:?}");
+        assert_eq!(plan.quant, QuantKind::Off);
+    }
+}

@@ -8,7 +8,11 @@
 //! (bytes / bandwidth) per step therefore reproduces who wins, by what
 //! factor, and where the OOM cliff falls — without the authors' testbed.
 
+pub mod autotune;
+
+use crate::config::DEFAULT_BLOCK_SIZE;
 use crate::json::Json;
+use crate::kvcache::QuantKind;
 
 /// Transformer dimensioning for the performance model.
 #[derive(Clone, Debug)]
@@ -50,15 +54,74 @@ impl ModelDims {
         2.0 * v * d + l * (d * hd + 2.0 * d * gd + hd * d + 3.0 * d * f)
     }
 
-    /// GQA KV-cache bytes per token (all layers).
-    pub fn kv_bytes_per_token(&self) -> f64 {
-        (2 * self.n_kv_groups * self.head_dim * self.n_layers) as f64
-            * self.bytes_per_el
+    /// Bytes one cache row of `inner` elements occupies under `quant`:
+    /// the model's native element width unencoded, one byte per element
+    /// plus the 4-byte per-row scale for the lossy codecs (both int8 and
+    /// the simulated fp8 store one code byte per element).
+    fn enc_row_bytes(&self, inner: usize, quant: QuantKind) -> f64 {
+        if quant.is_off() {
+            inner as f64 * self.bytes_per_el
+        } else {
+            inner as f64 + 4.0
+        }
     }
 
-    /// MLA KV-cache bytes per token at latent rank r (+ shared RoPE head).
+    /// GQA KV-cache bytes per token (all layers), unencoded.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.kv_bytes_per_token_enc(QuantKind::Off)
+    }
+
+    /// GQA KV-cache bytes per token under a block codec: two rows (k, v)
+    /// of `g*d` elements per layer.
+    pub fn kv_bytes_per_token_enc(&self, quant: QuantKind) -> f64 {
+        2.0 * self.enc_row_bytes(self.n_kv_groups * self.head_dim, quant)
+            * self.n_layers as f64
+    }
+
+    /// MLA KV-cache bytes per token at latent rank r (+ shared RoPE
+    /// head), unencoded.
     pub fn mla_kv_bytes_per_token(&self, r: usize) -> f64 {
-        ((r + self.head_dim) * self.n_layers) as f64 * self.bytes_per_el
+        self.mla_kv_bytes_per_token_enc(r, QuantKind::Off)
+    }
+
+    /// MLA KV-cache bytes per token under a block codec: one latent row
+    /// (r) and one rope-key row (head_dim) per layer.
+    pub fn mla_kv_bytes_per_token_enc(&self, r: usize, quant: QuantKind) -> f64 {
+        (self.enc_row_bytes(r, quant) + self.enc_row_bytes(self.head_dim, quant))
+            * self.n_layers as f64
+    }
+}
+
+/// The serving-side cache configuration the roofline now prices: the
+/// block codec scales every cache byte the decode step streams (and the
+/// capacity check), the block size rounds context up to allocation
+/// granularity (internal fragmentation is read as real traffic).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheModel {
+    pub quant: QuantKind,
+    pub block_size: usize,
+}
+
+impl Default for CacheModel {
+    fn default() -> Self {
+        CacheModel { quant: QuantKind::Off, block_size: DEFAULT_BLOCK_SIZE }
+    }
+}
+
+impl CacheModel {
+    /// Context rounded up to whole blocks — the positions the pool has
+    /// actually materialised (and the step actually streams).
+    fn ctx_blocks(&self, ctx: f64) -> f64 {
+        let bs = self.block_size.max(1) as f64;
+        (ctx / bs).ceil() * bs
+    }
+
+    /// Cache bytes per token for `arch` under this config.
+    pub fn bytes_per_token(&self, dims: &ModelDims, arch: ArchModel) -> f64 {
+        match arch {
+            ArchModel::Gqa => dims.kv_bytes_per_token_enc(self.quant),
+            ArchModel::Mla { r, .. } => dims.mla_kv_bytes_per_token_enc(r, self.quant),
+        }
     }
 }
 
@@ -72,10 +135,14 @@ pub enum ArchModel {
 }
 
 /// Per-decode-step cost (one token for each of `batch` sequences at
-/// context length `ctx`).
+/// context length `ctx`), priced under the actual cache config: the
+/// codec scales the cache bytes streamed per step, the block size rounds
+/// `ctx` up to allocation granularity. FLOPs are unchanged by the codec
+/// — decode stays fp after the staging dequant.
 pub fn decode_step_cost(
     dims: &ModelDims,
     arch: ArchModel,
+    cache_cfg: &CacheModel,
     batch: f64,
     ctx: f64,
 ) -> (f64, f64) {
@@ -93,7 +160,9 @@ pub fn decode_step_cost(
     let (attn_flops, cache_bytes, proj_flops) = match arch {
         ArchModel::Gqa => {
             let per_layer = 2.0 * hd * ctx * 2.0; // scores + values, all heads
-            let cache = dims.kv_bytes_per_token() * ctx * batch;
+            let cache = dims.kv_bytes_per_token_enc(cache_cfg.quant)
+                * cache_cfg.ctx_blocks(ctx)
+                * batch;
             let proj = 2.0 * d * (hd + 2.0 * gd + hd); // q,k,v,o
             (per_layer * l * batch, cache, proj * l * batch)
         }
@@ -103,7 +172,9 @@ pub fn decode_step_cost(
             // Absorbed attention: every head scores against the shared
             // latent (r) + rope key (dr), then latent-weighted sum (r).
             let per_layer = 2.0 * h * ctx * (rr + dr) + 2.0 * h * ctx * rr;
-            let cache = dims.mla_kv_bytes_per_token(r) * ctx * batch;
+            let cache = dims.mla_kv_bytes_per_token_enc(r, cache_cfg.quant)
+                * cache_cfg.ctx_blocks(ctx)
+                * batch;
             // Projections: q (full or low-rank), latent down, rope key,
             // absorbed output.
             let q_proj = if low_rank_q {
@@ -128,11 +199,12 @@ pub fn decode_step_cost(
 pub fn decode_throughput(
     dims: &ModelDims,
     arch: ArchModel,
+    cache_cfg: &CacheModel,
     hw: &crate::config::HardwareProfile,
     batch: f64,
     ctx: f64,
 ) -> Option<f64> {
-    decode_throughput_spec(dims, arch, hw, batch, ctx, 1.0)
+    decode_throughput_spec(dims, arch, cache_cfg, hw, batch, ctx, 1.0)
 }
 
 /// [`decode_throughput`] generalized to `tokens_per_step` accepted
@@ -148,6 +220,7 @@ pub fn decode_throughput(
 pub fn decode_throughput_spec(
     dims: &ModelDims,
     arch: ArchModel,
+    cache_cfg: &CacheModel,
     hw: &crate::config::HardwareProfile,
     batch: f64,
     ctx: f64,
@@ -155,15 +228,15 @@ pub fn decode_throughput_spec(
 ) -> Option<f64> {
     let tps = tokens_per_step.max(1.0);
     let weight_gb = dims.n_params() * dims.bytes_per_el / 1e9;
-    let cache_gb = match arch {
-        ArchModel::Gqa => dims.kv_bytes_per_token() * ctx * batch / 1e9,
-        ArchModel::Mla { r, .. } => dims.mla_kv_bytes_per_token(r) * ctx * batch / 1e9,
-    };
+    // Capacity is charged at encoded size — a lossy codec moves the OOM
+    // cliff, which is exactly the admission win it exists for.
+    let cache_gb =
+        cache_cfg.bytes_per_token(dims, arch) * cache_cfg.ctx_blocks(ctx) * batch / 1e9;
     // Activations + framework overhead headroom (~10%).
     if weight_gb + cache_gb > hw.mem_gb * 0.9 {
         return None;
     }
-    let (flops, bytes) = decode_step_cost(dims, arch, batch, ctx);
+    let (flops, bytes) = decode_step_cost(dims, arch, cache_cfg, batch, ctx);
     // Split the step's bytes: weights stream once per step (amortized
     // across the chain), cache reads repeat per scored position.
     let weight_bytes = dims.n_params() * dims.bytes_per_el;
@@ -193,9 +266,10 @@ pub fn table4_model(profiles: &[crate::config::HardwareProfile]) -> Json {
         for hw in profiles {
             // vLLM grows the batch until KV memory is exhausted; cap 64.
             let pick_batch = |arch: ArchModel| -> Option<(f64, f64)> {
+                let cc = CacheModel::default();
                 let mut best = None;
                 for b in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
-                    if let Some(tps) = decode_throughput(&dims, arch, hw, b, ctx as f64) {
+                    if let Some(tps) = decode_throughput(&dims, arch, &cc, hw, b, ctx as f64) {
                         best = Some((b, tps));
                     }
                 }
@@ -289,10 +363,11 @@ mod tests {
     fn mla_wins_and_gap_grows_with_context() {
         let d = ModelDims::llama2_7b();
         let hw = &HardwareProfile::paper_profiles()[1];
+        let cc = CacheModel::default();
         let s = |ctx: f64| {
-            let g = decode_throughput(&d, ArchModel::Gqa, hw, 2.0, ctx).unwrap();
+            let g = decode_throughput(&d, ArchModel::Gqa, &cc, hw, 2.0, ctx).unwrap();
             let m = decode_throughput(
-                &d, ArchModel::Mla { r: 448, low_rank_q: false }, hw, 2.0, ctx,
+                &d, ArchModel::Mla { r: 448, low_rank_q: false }, &cc, hw, 2.0, ctx,
             )
             .unwrap();
             m / g
@@ -307,24 +382,28 @@ mod tests {
         let d = ModelDims::llama2_7b();
         let hw = &HardwareProfile::paper_profiles()[1];
         let arch = ArchModel::Mla { r: 448, low_rank_q: false };
-        let serial = decode_throughput(&d, arch, hw, 4.0, 4096.0).unwrap();
+        let cc = CacheModel::default();
+        let serial = decode_throughput(&d, arch, &cc, hw, 4.0, 4096.0).unwrap();
         // tokens_per_step = 1 is exactly the serial model.
-        let one = decode_throughput_spec(&d, arch, hw, 4.0, 4096.0, 1.0).unwrap();
+        let one = decode_throughput_spec(&d, arch, &cc, hw, 4.0, 4096.0, 1.0).unwrap();
         assert_eq!(serial, one);
         // Accepting ~3 tokens/step must beat serial (weights amortized)
         // but cannot reach a full 3x (compute and cache traffic scale
         // with the chain).
-        let spec = decode_throughput_spec(&d, arch, hw, 4.0, 4096.0, 3.0).unwrap();
+        let spec = decode_throughput_spec(&d, arch, &cc, hw, 4.0, 4096.0, 3.0).unwrap();
         assert!(spec > serial, "speculation must pay: {spec} vs {serial}");
         assert!(spec < 3.0 * serial, "speedup is sublinear: {spec} vs {serial}");
         // Sub-1 inputs clamp to the serial model instead of rewarding a
         // nonsense acceptance rate.
-        let clamped = decode_throughput_spec(&d, arch, hw, 4.0, 4096.0, 0.25).unwrap();
+        let clamped =
+            decode_throughput_spec(&d, arch, &cc, hw, 4.0, 4096.0, 0.25).unwrap();
         assert_eq!(clamped, serial);
         // The OOM cliff is unchanged by speculation.
         let hw24 = &HardwareProfile::paper_profiles()[0];
-        assert!(decode_throughput_spec(&d, ArchModel::Gqa, hw24, 8.0, 16384.0, 3.0)
-            .is_none());
+        assert!(
+            decode_throughput_spec(&d, ArchModel::Gqa, &cc, hw24, 8.0, 16384.0, 3.0)
+                .is_none()
+        );
     }
 
     #[test]
@@ -333,12 +412,23 @@ mod tests {
         let hw = &HardwareProfile::paper_profiles()[0]; // 24 GB
         // Paper Table 4: LLaMA-2-7B OOMs at 16K on the 24GB card (their
         // batch); with batch 32 the model reproduces the cliff.
-        let gqa = decode_throughput(&d, ArchModel::Gqa, hw, 8.0, 16384.0);
+        let cc = CacheModel::default();
+        let gqa = decode_throughput(&d, ArchModel::Gqa, &cc, hw, 8.0, 16384.0);
         let mla = decode_throughput(
-            &d, ArchModel::Mla { r: 448, low_rank_q: false }, hw, 8.0, 16384.0,
+            &d, ArchModel::Mla { r: 448, low_rank_q: false }, &cc, hw, 8.0, 16384.0,
         );
         assert!(gqa.is_none(), "GQA should OOM");
         assert!(mla.is_some(), "MLA should fit");
+        // The capacity check is codec-aware: at batch 2 / 8K context the
+        // fp16 GQA cache (8.6 GB) plus weights (13.5 GB) just tips over
+        // the 24 GB card's 90% headroom, and int8 halving pulls it back
+        // under the cliff.
+        let int8 = CacheModel { quant: QuantKind::Int8, ..CacheModel::default() };
+        assert!(decode_throughput(&d, ArchModel::Gqa, &cc, hw, 2.0, 8192.0).is_none());
+        assert!(
+            decode_throughput(&d, ArchModel::Gqa, &int8, hw, 2.0, 8192.0).is_some(),
+            "int8 GQA should fit where fp16 OOMs"
+        );
     }
 
     #[test]

@@ -298,6 +298,18 @@ fn engine_stats_json(engine: &Engine) -> Json {
     cache.set("blocks_in_use", Json::Num(cs.blocks_in_use as f64));
     cache.set("blocks_reserved", Json::Num(cs.blocks_reserved as f64));
     cache.set("bytes_deduped", Json::Num(cs.bytes_deduped as f64));
+    // Block-codec accounting, always present: `kind` is "off" at
+    // compression 1.0 when no lossy codec is active, so clients never
+    // branch on field presence — see docs/PROTOCOL.md.
+    let mut qj = Json::obj();
+    qj.set("kind", Json::Str(cs.quant.kind.to_string()));
+    qj.set("bytes_per_token", Json::Num(cs.quant.bytes_per_token as f64));
+    qj.set(
+        "bytes_per_token_fp32",
+        Json::Num(cs.quant.bytes_per_token_fp32 as f64),
+    );
+    qj.set("compression", Json::Num(cs.quant.compression));
+    cache.set("quant", qj);
     // Prefix-sharing counters ride along only when the prefix cache is
     // on (paged store + --prefix-cache on) — see docs/PROTOCOL.md.
     if let Some(ps) = cs.prefix {

@@ -381,10 +381,22 @@ fn stats_schema_matches_protocol_md() {
     for key in [
         "kind", "bytes_total", "bytes_in_use", "bytes_worst_case",
         "block_size", "blocks_total", "blocks_in_use", "blocks_reserved",
-        "bytes_deduped",
+        "bytes_deduped", "quant",
     ] {
         assert!(cache.get(key).is_some(), "cache missing `{key}`: {cache:?}");
     }
+    // docs/PROTOCOL.md "quant object" field list: always present; with
+    // no codec configured (as here) it reports kind "off" at 1.0x.
+    let quant = cache.get("quant").expect("quant object");
+    for key in ["kind", "bytes_per_token", "bytes_per_token_fp32", "compression"] {
+        assert!(quant.get(key).is_some(), "quant missing `{key}`: {quant:?}");
+    }
+    assert_eq!(quant.get("kind").and_then(Json::as_str), Some("off"));
+    assert_eq!(quant.get("compression").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(
+        quant.get("bytes_per_token").and_then(Json::as_usize),
+        quant.get("bytes_per_token_fp32").and_then(Json::as_usize),
+    );
     // docs/PROTOCOL.md "prefix object" field list (present only when the
     // prefix cache is enabled — which it is here).
     let prefix = cache.get("prefix").expect("prefix object when enabled");
