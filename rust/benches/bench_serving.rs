@@ -3,8 +3,10 @@
 //! Two tiers:
 //!   * **hermetic** (always runs): the full engine loop over `SimBackend`
 //!     for each scheduling policy and both cache layouts, the threaded
-//!     worker mode vs the single-threaded sweep over TCP, and the
-//!     dual-stream prefill/decode overlap on vs off — measures the L3
+//!     worker mode vs the single-threaded sweep over TCP, the
+//!     dual-stream prefill/decode overlap on vs off, and the open-loop
+//!     traffic harness (seeded bursty trace → goodput under a TTFT SLO
+//!     across a policy × cache × backpressure grid) — measures the L3
 //!     overhead (scheduling, slot lifecycle, splicing, sampling,
 //!     threading) with no artifacts required;
 //!   * **artifact-backed** (when `make artifacts` + a real `xla` runtime
@@ -20,7 +22,7 @@ mod harness;
 use harness::Bench;
 use std::path::Path;
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{CacheKind, EngineConfig, PolicyKind};
+use transmla::config::{CacheKind, EngineConfig, PolicyKind, SloSpec};
 use transmla::convert::{convert_model, Calib, ConvertOptions};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
@@ -31,6 +33,7 @@ use transmla::runtime::Runtime;
 use transmla::server::{self, EngineRegistry, RoutePolicy, ServeOpts};
 use transmla::tensor::Tensor;
 use transmla::util::Rng;
+use transmla::workload::{self, ArrivalKind, ReportRow, Trace, TraceSpec};
 
 fn sim_workload(b: &Bench, policy: PolicyKind, label: &str) {
     let n_req = if b.quick { 16 } else { 64 };
@@ -74,7 +77,8 @@ fn serving_workload(b: &Bench, addr: &'static str, workers: usize, label: &str) 
                 )
                 .unwrap();
             }
-            server::serve_with(&mut reg, addr, ServeOpts { workers }).unwrap();
+            server::serve_with(&mut reg, addr, ServeOpts { workers, ..ServeOpts::default() })
+                .unwrap();
         });
         // Wait for the listener, then hammer it.
         loop {
@@ -214,6 +218,78 @@ fn quant_workload(b: &Bench, quant: QuantKind, label: &str) {
     );
 }
 
+/// The open-loop traffic harness end-to-end as a bench: one seeded
+/// bursty trace replayed over loopback TCP against a policy × cache ×
+/// backpressure server grid, reporting goodput under a TTFT SLO and
+/// p95 TTFT — the same [`ReportRow`] rows `transmla workload` emits as
+/// JSONL, here denominated into `BENCH_serving.json`.
+fn traffic_workload(
+    b: &Bench,
+    addr: &'static str,
+    label: &str,
+    policy: PolicyKind,
+    cache: CacheKind,
+    max_pending: usize,
+) {
+    let spec = TraceSpec {
+        seed: 42,
+        arrivals: ArrivalKind::Bursty { burst: 6 },
+        rate: if b.quick { 120.0 } else { 240.0 },
+        duration_s: 0.5,
+        max_new: 12,
+        // Prompts sized for the sim engine's 128-token capacity.
+        agent_prefix: "agent q: ".to_string(),
+        agent_suffix: (4, 16),
+        chat_len: (8, 64),
+        ..TraceSpec::default()
+    };
+    let trace = Trace::generate(&spec).unwrap();
+    let slo = SloSpec { ttft_ms: Some(100.0), tpot_ms: None };
+    let n = trace.events.len();
+    let mut row: Option<ReportRow> = None;
+    b.run(&format!("workload_{label}_{n}req"), || {
+        let handle = std::thread::spawn(move || {
+            let e = Engine::new(
+                SimBackend::new(SimConfig {
+                    capacity: 128,
+                    prefill_seq: 128,
+                    ..SimConfig::gqa(8)
+                })
+                .unwrap(),
+                EngineConfig { policy, cache, ..Default::default() },
+            );
+            let mut reg = EngineRegistry::single(e);
+            server::serve_with(
+                &mut reg,
+                addr,
+                ServeOpts { max_pending, ..ServeOpts::default() },
+            )
+            .unwrap();
+        });
+        loop {
+            if server::client_line(addr, "{\"cmd\":\"ping\"}").is_ok() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let result = workload::replay(&trace, addr).unwrap();
+        server::client_shutdown(addr).unwrap();
+        handle.join().unwrap();
+        let tags = [
+            ("cache", format!("{cache:?}")),
+            ("max_pending", max_pending.to_string()),
+            ("policy", format!("{policy:?}")),
+        ];
+        row = Some(ReportRow::build(label, &tags, slo, &result));
+    });
+    let row = row.expect("at least one bench iteration");
+    b.report(&format!("workload_{label}_goodput"), row.goodput_rps, "SLO-met req/s");
+    if let Some(ttft) = &row.ttft {
+        b.report(&format!("workload_{label}_ttft_p95_ms"), ttft.p95 * 1e3, "ms");
+    }
+    b.report(&format!("workload_{label}_shed"), row.shed as f64, "req shed");
+}
+
 fn main() {
     let b = Bench::new();
 
@@ -262,6 +338,27 @@ fn main() {
     quant_workload(&b, QuantKind::Off, "quant_off");
     quant_workload(&b, QuantKind::Int8, "quant_int8");
     quant_workload(&b, QuantKind::Fp8, "quant_fp8");
+
+    // The open-loop traffic harness: one seeded bursty trace against a
+    // policy × cache × backpressure grid — goodput under a 100ms TTFT
+    // SLO is the denomination the workload report uses.
+    traffic_workload(
+        &b, "127.0.0.1:18472", "admit_fixed", PolicyKind::AdmitFirst,
+        CacheKind::Fixed, 0,
+    );
+    traffic_workload(
+        &b, "127.0.0.1:18473", "chunked8_paged", PolicyKind::Chunked { chunk_tokens: 8 },
+        CacheKind::Paged { block_size: 16, n_blocks: None }, 0,
+    );
+    traffic_workload(
+        &b, "127.0.0.1:18474", "admit_fixed_mp16", PolicyKind::AdmitFirst,
+        CacheKind::Fixed, 16,
+    );
+    traffic_workload(
+        &b, "127.0.0.1:18475", "chunked8_paged_mp16",
+        PolicyKind::Chunked { chunk_tokens: 8 },
+        CacheKind::Paged { block_size: 16, n_blocks: None }, 16,
+    );
 
     // Persist the hermetic tier as the serving perf trajectory (the
     // artifact tier below is environment-dependent, so it stays out).

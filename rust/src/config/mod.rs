@@ -323,6 +323,45 @@ impl Default for EngineConfig {
     }
 }
 
+/// Serving SLO for goodput accounting (the workload harness and its
+/// report): a completion counts toward goodput iff every bound that is
+/// set holds. `None` bounds are unbounded, so the zero-value spec
+/// accepts everything — goodput then equals plain throughput.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloSpec {
+    /// Max time-to-first-token, milliseconds (`--slo-ttft-ms`; 0 on the
+    /// CLI disables the bound).
+    pub ttft_ms: Option<f64>,
+    /// Max mean per-token decode time, milliseconds (`--slo-tpot-ms`).
+    pub tpot_ms: Option<f64>,
+}
+
+impl SloSpec {
+    /// Did a completion with these (seconds-denominated) timings meet
+    /// the SLO?
+    pub fn met(&self, ttft_s: f64, tpot_s: f64) -> bool {
+        self.ttft_ms.map_or(true, |b| ttft_s * 1e3 <= b)
+            && self.tpot_ms.map_or(true, |b| tpot_s * 1e3 <= b)
+    }
+
+    /// Report spelling, e.g. `ttft<=250ms,tpot<=20ms` (`none` when
+    /// every bound is unbounded).
+    pub fn name(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(b) = self.ttft_ms {
+            parts.push(format!("ttft<={b}ms"));
+        }
+        if let Some(b) = self.tpot_ms {
+            parts.push(format!("tpot<={b}ms"));
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
 /// Analytical accelerator profile (paper Sec. 5.4: three consumer GPUs).
 #[derive(Clone, Debug)]
 pub struct HardwareProfile {
@@ -363,6 +402,19 @@ impl HardwareProfile {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn slo_spec_bounds_and_name() {
+        let none = SloSpec::default();
+        assert!(none.met(10.0, 10.0), "unbounded SLO accepts everything");
+        assert_eq!(none.name(), "none");
+        let slo = SloSpec { ttft_ms: Some(250.0), tpot_ms: Some(20.0) };
+        assert!(slo.met(0.250, 0.020), "bounds are inclusive");
+        assert!(!slo.met(0.251, 0.010), "ttft bound enforced");
+        assert!(!slo.met(0.100, 0.021), "tpot bound enforced");
+        assert_eq!(slo.name(), "ttft<=250ms,tpot<=20ms");
+        assert_eq!(SloSpec { ttft_ms: Some(100.0), tpot_ms: None }.name(), "ttft<=100ms");
+    }
 
     #[test]
     fn parse_config_json() {

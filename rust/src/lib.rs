@@ -68,6 +68,7 @@
 //! | [`kvcache`]   | fixed slot pool + paged block pool (`PagedKvCache`: ref-counted 16-token blocks, per-sequence block tables, admission-time reservation) with cross-sequence prefix sharing (`PrefixIndex`: block-granular prefix hashes, copy-on-write, LRU eviction), lossy block codecs (`quant::QuantKind`: int8 / simulated fp8-e4m3 per-row encoding with decode-on-read staging — same byte budget, ~3× the blocks), and layout-aware byte accounting (GQA vs MLA) |
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
 //! | [`server`]    | TCP JSONL front-end (protocol v2): `EngineRegistry` hosting N named engines with routed requests (`default:<name>` / round-robin / least-loaded), a fair multi-engine stepper, per-engine stats, and in-band protocol errors |
+//! | [`workload`]  | open-loop traffic harness: seeded trace generator (Poisson / bursty / diurnal-ramp × agent/chat tenants), loopback replay driver, SLO/goodput report (JSONL + HTML) |
 //! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |
 //! | [`config`]    | model/engine/policy/hardware configuration               |
 //! | [`convert`]   | TransMLA conversion toolchain (RoRoPE, FreqFold, BKV, PCA, Absorb) |
@@ -101,5 +102,6 @@ pub mod server;
 pub mod tensor;
 pub mod train;
 pub mod util;
+pub mod workload;
 
 pub use anyhow::{anyhow, bail, Context, Result};

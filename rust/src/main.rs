@@ -6,7 +6,9 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use transmla::backend::{SimBackend, SimConfig};
-use transmla::config::{CacheKind, EngineConfig, HardwareProfile, ModelSpec, PolicyKind};
+use transmla::config::{
+    CacheKind, EngineConfig, HardwareProfile, ModelSpec, PolicyKind, SloSpec,
+};
 use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
 use transmla::coordinator::engine::Arch;
 use transmla::coordinator::{Engine, ModelBundle, Request};
@@ -18,7 +20,7 @@ use transmla::model::{init_gqa, Params};
 use transmla::perfmodel;
 use transmla::runtime::Runtime;
 use transmla::train::Trainer;
-use transmla::{corpus::Corpus, server};
+use transmla::{corpus::Corpus, server, workload};
 
 const USAGE: &str = "\
 transmla — GQA->MLA conversion + absorbed-MLA serving (TransMLA reproduction)
@@ -34,7 +36,15 @@ COMMANDS
   generate   --arch gqa|mla --ckpt p.tnz [--rank R] --prompt TEXT [--max-new N]
   serve      --arch gqa|mla --ckpt p.tnz [--rank R] [--addr host:port]
              [--model name[=SPEC]]... [--route R] [--workers N]
+             [--max-pending N]
              (multi-model serving; see MULTI-MODEL SERVING below)
+  workload   [--arrivals poisson|bursty[:B]|ramp] [--rate R] [--duration S]
+             [--seed N] [--agent-frac F] [--max-new N]
+             [--slo-ttft-ms MS] [--slo-tpot-ms MS] [--label L]
+             [--trace-out t.jsonl] [--report r.jsonl] [--html r.html]
+             [--attach host:port]
+             (open-loop traffic replay + SLO/goodput report; see
+             WORKLOAD HARNESS below)
   exp        fig2a|fig2b|fig3a|fig3b|table1|table4|table5|all
              [--out runs] [--config C] [--pretrain N] [--ft N] [--eval-batches N]
 
@@ -104,6 +114,31 @@ MULTI-MODEL SERVING (serve only)
   weight=K          (SPEC key, default 1) fair-share weight: a weight-K
                     engine gets K step opportunities per sweep, in both
                     the single-threaded and worker modes
+  --max-pending N   admission backpressure bound (default 0 = unbounded):
+                    a generation request arriving while N requests are
+                    already in flight is shed with an in-band
+                    {\"error\":\"overloaded\",\"retry_after_ms\":...} reply
+                    instead of queueing without bound (docs/PROTOCOL.md)
+
+WORKLOAD HARNESS (workload only)
+  Generates a seeded open-loop arrival trace (Poisson / bursty / diurnal
+  ramp over a shared-prefix agent + long-tail chat tenant mix), replays
+  it against a server over loopback TCP, and reports p50/p95/p99
+  TTFT/TPOT plus goodput (SLO-met completions per wall second).
+  By default it self-hosts: the serve flags above (--model/--route/
+  --workers/--max-pending/--policy/--cache/...) configure an in-process
+  server on --addr (default 127.0.0.1:7434) with --backend defaulting
+  to `sim`, so a bare checkout reproduces every number hermetically.
+  --attach H:P      replay against an already-running server instead
+  --rate R          mean arrival rate, requests/s (default 32)
+  --duration S      trace span, seconds (default 2)
+  --agent-frac F    fraction of shared-prefix agent traffic (default 0.5)
+  --slo-ttft-ms MS  TTFT bound for goodput (default 250; 0 disables)
+  --slo-tpot-ms MS  TPOT bound for goodput (default 0 = disabled)
+  --trace-out F     also write the generated trace as JSONL (byte-stable
+                    per seed)
+  --report F        append-free JSONL report row (comparison tables)
+  --html F          static HTML comparison page over the same rows
 ";
 
 fn main() {
@@ -174,6 +209,17 @@ impl Args {
         self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    fn f64_flag(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite())
+                .with_context(|| format!("bad --{k} `{v}` (finite number)")),
+        }
+    }
+
     fn str_flag<'a>(&'a self, k: &str, default: &'a str) -> &'a str {
         self.get(k).unwrap_or(default)
     }
@@ -228,10 +274,15 @@ impl<'a> FlagView<'a> {
 }
 
 fn run() -> Result<()> {
-    let args = parse_args()?;
+    let mut args = parse_args()?;
     if args.cmd == "help" || args.cmd == "--help" {
         print!("{USAGE}");
         return Ok(());
+    }
+    // `workload` is the hermetic reproduction path: unless the operator
+    // asks for the artifact backend, self-hosted replays run on `sim`.
+    if args.cmd == "workload" && !args.has("backend") {
+        args.flags.insert("backend".to_string(), "sim".to_string());
     }
     let art_dir = PathBuf::from(args.str_flag("artifacts", "artifacts"));
     let cfg_name = args.str_flag("config", "llama2tiny").to_string();
@@ -242,6 +293,7 @@ fn run() -> Result<()> {
     match args.cmd.as_str() {
         "generate" => cmd_generate(&art_dir, &cfg_name, &args),
         "serve" => cmd_serve(&art_dir, &cfg_name, &args),
+        "workload" => cmd_workload(&art_dir, &cfg_name, &args),
         _ => {
             let rt = Runtime::new(&art_dir)?;
             match args.cmd.as_str() {
@@ -646,6 +698,18 @@ fn cmd_generate(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
 /// `model` field follow `--route` (default: the first registered model).
 fn cmd_serve(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
     let addr = args.str_flag("addr", "127.0.0.1:7433").to_string();
+    let mut registry = build_registry(art_dir, cfg_name, args)?;
+    server::serve_with(&mut registry, &addr, serve_opts(args)?)
+}
+
+/// The registry both `serve` and the self-hosting `workload` command
+/// build: repeatable `--model name=SPEC` engines (first registered is
+/// the default route), or the bare flags as the implicit single model.
+fn build_registry(
+    art_dir: &Path,
+    cfg_name: &str,
+    args: &Args,
+) -> Result<server::EngineRegistry> {
     let model_flags = args.get_all("model");
     let mut registry = if model_flags.is_empty() {
         server::EngineRegistry::single(build_engine(
@@ -670,14 +734,112 @@ fn cmd_serve(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
     if let Some(r) = args.get("route") {
         registry.set_route(server::RoutePolicy::parse(r)?);
     }
-    let workers = match args.get("workers") {
-        None => 0,
-        Some(w) => w
-            .parse::<usize>()
-            .ok()
-            .with_context(|| format!("bad --workers `{w}` (integer >= 0)"))?,
+    Ok(registry)
+}
+
+/// `--workers` / `--max-pending` → [`server::ServeOpts`].
+fn serve_opts(args: &Args) -> Result<server::ServeOpts> {
+    let uint = |k: &str| -> Result<usize> {
+        match args.get(k) {
+            None => Ok(0),
+            Some(v) => v
+                .parse::<usize>()
+                .ok()
+                .with_context(|| format!("bad --{k} `{v}` (integer >= 0)")),
+        }
     };
-    server::serve_with(&mut registry, &addr, server::ServeOpts { workers })
+    Ok(server::ServeOpts { workers: uint("workers")?, max_pending: uint("max-pending")? })
+}
+
+/// `workload`: generate a seeded open-loop trace, replay it against a
+/// live server — self-hosted over loopback by default (hermetic on the
+/// sim backend), or an external one via `--attach` — and report
+/// p50/p95/p99 TTFT/TPOT plus goodput under the `--slo-*` bounds.
+fn cmd_workload(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
+    let spec = workload::TraceSpec {
+        seed: args.usize_flag("seed", 0) as u64,
+        arrivals: workload::ArrivalKind::parse(args.str_flag("arrivals", "poisson"))?,
+        rate: args.f64_flag("rate", 32.0)?,
+        duration_s: args.f64_flag("duration", 2.0)?,
+        agent_frac: args.f64_flag("agent-frac", 0.5)?,
+        max_new: args.usize_flag("max-new", 16),
+        ..workload::TraceSpec::default()
+    };
+    let trace = workload::Trace::generate(&spec)?;
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, trace.to_jsonl())
+            .with_context(|| format!("writing trace {path}"))?;
+        eprintln!("[workload] wrote {} events to {path}", trace.events.len());
+    }
+    let slo = SloSpec {
+        ttft_ms: Some(args.f64_flag("slo-ttft-ms", 250.0)?).filter(|&b| b > 0.0),
+        tpot_ms: Some(args.f64_flag("slo-tpot-ms", 0.0)?).filter(|&b| b > 0.0),
+    };
+
+    let opts = serve_opts(args)?;
+    let result = if let Some(attach) = args.get("attach") {
+        eprintln!(
+            "[workload] replaying {} events ({}) against {attach}",
+            trace.events.len(),
+            spec.arrivals.name()
+        );
+        workload::replay(&trace, attach)?
+    } else {
+        let addr = args.str_flag("addr", "127.0.0.1:7434").to_string();
+        let mut registry = build_registry(art_dir, cfg_name, args)?;
+        let server_addr = addr.clone();
+        let handle = std::thread::spawn(move || {
+            server::serve_with(&mut registry, &server_addr, opts)
+        });
+        wait_for_server(&addr)?;
+        eprintln!(
+            "[workload] replaying {} events ({}) against {addr} (self-hosted)",
+            trace.events.len(),
+            spec.arrivals.name()
+        );
+        let result = workload::replay(&trace, &addr);
+        server::client_shutdown(&addr)?;
+        handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        result?
+    };
+
+    let tags = [
+        ("arrivals", spec.arrivals.name()),
+        ("cache", args.str_flag("cache", "fixed").to_string()),
+        ("max_pending", opts.max_pending.to_string()),
+        ("policy", args.str_flag("policy", "admit-first").to_string()),
+        ("rate", format!("{}", spec.rate)),
+    ];
+    let row =
+        workload::ReportRow::build(args.str_flag("label", "workload"), &tags, slo, &result);
+    println!("{}", row.human());
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, workload::to_jsonl(std::slice::from_ref(&row)))
+            .with_context(|| format!("writing report {path}"))?;
+        eprintln!("[workload] wrote report row to {path}");
+    }
+    if let Some(path) = args.get("html") {
+        std::fs::write(
+            path,
+            workload::render_html("transmla workload report", std::slice::from_ref(&row)),
+        )
+        .with_context(|| format!("writing html {path}"))?;
+        eprintln!("[workload] wrote html report to {path}");
+    }
+    Ok(())
+}
+
+/// Poll a freshly-spawned server until its stats endpoint answers.
+fn wait_for_server(addr: &str) -> Result<()> {
+    for _ in 0..200 {
+        if server::client_stats(addr).is_ok() {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    bail!("server at {addr} did not come up within 2s")
 }
 
 fn cmd_exp(rt: &Runtime, cfg_name: &str, args: &Args) -> Result<()> {

@@ -15,6 +15,25 @@ pub struct Summary {
     pub max: f64,
 }
 
+/// One-shot percentile summary of a caller-held sample slice (`None`
+/// if empty) — the standalone counterpart of [`Metrics::summary`] for
+/// code that aggregates its own series, e.g. the workload report's
+/// client-side TTFT/TPOT tables.
+pub fn summarize(samples: &[f64]) -> Option<Summary> {
+    if samples.is_empty() {
+        return None;
+    }
+    let st = BenchStats::new(samples.to_vec());
+    Some(Summary {
+        n: samples.len(),
+        mean: st.mean(),
+        p50: st.percentile(50.0),
+        p95: st.percentile(95.0),
+        p99: st.percentile(99.0),
+        max: st.max(),
+    })
+}
+
 /// Most recent samples retained per series: percentiles are computed
 /// over a sliding window so a long-running server holds bounded memory.
 /// Lifetime aggregates (count + sum) are tracked separately and stay
@@ -152,6 +171,22 @@ mod tests {
         let st = m.stats("step").unwrap();
         assert!((st.mean() - 0.015).abs() < 1e-12);
         assert!(m.report().contains("tokens: 8"));
+    }
+
+    #[test]
+    fn standalone_summarize_matches_registry_summary() {
+        assert!(summarize(&[]).is_none());
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        let mut m = Metrics::new();
+        for &s in &samples {
+            m.observe("lat", s);
+        }
+        let a = summarize(&samples).unwrap();
+        let b = m.summary("lat").unwrap();
+        assert_eq!(a.n, b.n);
+        assert!((a.p50 - b.p50).abs() < 1e-12);
+        assert!((a.p99 - b.p99).abs() < 1e-12);
+        assert!((a.max - b.max).abs() < 1e-12);
     }
 
     #[test]

@@ -31,6 +31,20 @@
 //!   missing prompt   <- {"error": "missing prompt"}
 //!   bad temperature  <- {"error": "bad temperature"}   // negative/NaN/inf
 //!   bad model        <- {"error": "bad model"} / {"error": "unknown model `...`"}
+//!   overloaded       <- {"error": "overloaded", "retry_after_ms": N}
+//!
+//! # Admission backpressure (`--max-pending N`)
+//!
+//! With [`ServeOpts::max_pending`] `> 0` the pending-reply map is a
+//! *bounded* queue: a generation request arriving while `pending` is at
+//! the bound is **shed** — answered in-band with the 429-style
+//! `overloaded` reply above (`retry_after_ms` is an advisory hint sized
+//! off the `least-loaded` depth signal) *before* it is registered, so a
+//! refused id never occupies a `pending` slot and never reaches an
+//! engine. Sustained overload therefore degrades goodput gracefully
+//! (accepted requests keep their latency; excess load is refused fast)
+//! instead of growing queue waits without bound. Shed totals surface in
+//! `stats.server.shed`; `0` (the default) keeps the queue unbounded.
 //!
 //! # Threading model (see `docs/ARCHITECTURE.md` for the full picture)
 //!
@@ -89,6 +103,56 @@ pub struct ServeOpts {
     /// share of the engines behind an mpsc mailbox. Completions are
     /// bit-identical across modes.
     pub workers: usize,
+    /// Admission backpressure bound (`--max-pending N`): a generation
+    /// request arriving while `pending` holds this many in-flight
+    /// requests is shed with an in-band
+    /// `{"error":"overloaded","retry_after_ms":...}` reply instead of
+    /// being queued. `0` (default) = unbounded, the pre-backpressure
+    /// behaviour.
+    pub max_pending: usize,
+}
+
+/// Serving-loop shed accounting (one per loop; surfaced as
+/// `stats.server.shed` — see `docs/PROTOCOL.md`).
+struct Shed {
+    max_pending: usize,
+    count: u64,
+    last_retry_ms: u64,
+}
+
+impl Shed {
+    fn new(max_pending: usize) -> Shed {
+        Shed { max_pending, count: 0, last_retry_ms: 0 }
+    }
+
+    /// Admission check, run BEFORE a request is registered in `pending`
+    /// (a shed request must never leak a reply-map entry). Returns the
+    /// in-band overload reply when the bound is hit. `min_depth` is the
+    /// `least-loaded` routing signal — the smallest engine pipeline
+    /// depth — which sizes the advisory `retry_after_ms` hint: roughly
+    /// how long until the shallowest engine drains what is ahead.
+    fn admit(&mut self, pending_len: usize, min_depth: usize) -> Option<Json> {
+        if self.max_pending == 0 || pending_len < self.max_pending {
+            return None;
+        }
+        // ~2ms per queued-ahead request on the least-loaded engine;
+        // floor 1ms so clients always see a positive hint.
+        let retry_ms = ((min_depth as u64) * 2).max(1);
+        self.count += 1;
+        self.last_retry_ms = retry_ms;
+        let mut j = Json::obj();
+        j.set("error", Json::Str("overloaded".to_string()));
+        j.set("retry_after_ms", Json::Num(retry_ms as f64));
+        Some(j)
+    }
+
+    /// The `stats.server.shed` object.
+    fn json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", Json::Num(self.count as f64));
+        j.set("last_retry_after_ms", Json::Num(self.last_retry_ms as f64));
+        j
+    }
 }
 
 enum Incoming {
@@ -362,7 +426,12 @@ fn engine_stats_json(engine: &Engine) -> Json {
 
 /// v2 stats: one v1-shaped object per engine under `engines`, plus a
 /// `server` object for registry-level facts.
-fn stats_json(registry: &EngineRegistry, pending: usize, started: Instant) -> Json {
+fn stats_json(
+    registry: &EngineRegistry,
+    pending: usize,
+    started: Instant,
+    shed: &Shed,
+) -> Json {
     let mut j = Json::obj();
     let mut engines = Json::obj();
     for e in registry.engines() {
@@ -371,17 +440,25 @@ fn stats_json(registry: &EngineRegistry, pending: usize, started: Instant) -> Js
     j.set("engines", engines);
     j.set(
         "server",
-        server_json(registry.len(), &registry.route_policy().name(), pending, started),
+        server_json(registry.len(), &registry.route_policy().name(), pending, started, shed),
     );
     j
 }
 
 /// The `server` object of a stats reply.
-fn server_json(models: usize, routing: &str, pending: usize, started: Instant) -> Json {
+fn server_json(
+    models: usize,
+    routing: &str,
+    pending: usize,
+    started: Instant,
+    shed: &Shed,
+) -> Json {
     let mut srv = Json::obj();
     srv.set("models", Json::Num(models as f64));
     srv.set("routing", Json::Str(routing.to_string()));
     srv.set("pending", Json::Num(pending as f64));
+    srv.set("max_pending", Json::Num(shed.max_pending as f64));
+    srv.set("shed", shed.json());
     srv.set("uptime_s", Json::Num(started.elapsed().as_secs_f64()));
     srv
 }
@@ -453,11 +530,13 @@ pub fn serve_with(registry: &mut EngineRegistry, addr: &str, opts: ServeOpts) ->
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
     eprintln!(
-        "[server] listening on {addr} ({} model(s): {}; routing `{}`; workers {})",
+        "[server] listening on {addr} ({} model(s): {}; routing `{}`; workers {}; \
+         max-pending {})",
         registry.len(),
         registry.names().join(", "),
         registry.route_policy().name(),
-        opts.workers
+        opts.workers,
+        if opts.max_pending == 0 { "unbounded".to_string() } else { opts.max_pending.to_string() }
     );
     let started = Instant::now();
     let (events_tx, events_rx) = channel();
@@ -487,9 +566,9 @@ pub fn serve_with(registry: &mut EngineRegistry, addr: &str, opts: ServeOpts) ->
     };
 
     let result = if opts.workers == 0 {
-        serve_sweep(registry, &state, &events_rx, started)
+        serve_sweep(registry, &state, &events_rx, started, opts.max_pending)
     } else {
-        serve_workers(registry, &state, &events_rx, started, opts.workers)
+        serve_workers(registry, &state, &events_rx, started, opts.workers, opts.max_pending)
     };
 
     // Retire the acceptor on every exit path: set the flag, then
@@ -511,9 +590,11 @@ fn serve_sweep(
     state: &ServerState,
     events: &Receiver<Event>,
     started: Instant,
+    max_pending: usize,
 ) -> Result<()> {
     // Reply channels by request id — O(1) completion delivery.
     let mut pending: HashMap<u64, Sender<Json>> = HashMap::new();
+    let mut shed = Shed::new(max_pending);
     loop {
         if registry.is_idle() {
             if state.is_shutdown() && pending.is_empty() {
@@ -522,14 +603,14 @@ fn serve_sweep(
             // Nothing to step: block until the next event. Shutdown
             // sends a Wake, so this cannot wedge.
             match events.recv() {
-                Ok(ev) => sweep_event(ev, registry, &mut pending, started),
+                Ok(ev) => sweep_event(ev, registry, &mut pending, started, &mut shed),
                 Err(_) => return Ok(()),
             }
         }
         // Busy (or just woken): drain whatever queued without blocking,
         // advance every non-idle engine, deliver completions.
         while let Ok(ev) = events.try_recv() {
-            sweep_event(ev, registry, &mut pending, started);
+            sweep_event(ev, registry, &mut pending, started, &mut shed);
         }
         if !registry.is_idle() {
             registry.step_non_idle()?;
@@ -547,9 +628,17 @@ fn sweep_event(
     registry: &mut EngineRegistry,
     pending: &mut HashMap<u64, Sender<Json>>,
     started: Instant,
+    shed: &mut Shed,
 ) {
     match ev {
         Event::Conn(Incoming::Req { mut req, model, reply }) => {
+            // Backpressure runs first, BEFORE the id is registered: a
+            // shed request never occupies a `pending` slot (the leak
+            // regression test in integration_server.rs pins this).
+            if let Some(overloaded) = shed.admit(pending.len(), registry.min_load()) {
+                let _ = reply.send(overloaded);
+                return;
+            }
             match registry.route(model.as_deref()) {
                 Ok(idx) => {
                     let engine = registry.engine_at_mut(idx);
@@ -567,7 +656,7 @@ fn sweep_event(
             }
         }
         Event::Conn(Incoming::Stats { reply }) => {
-            let _ = reply.send(stats_json(registry, pending.len(), started));
+            let _ = reply.send(stats_json(registry, pending.len(), started, shed));
         }
         Event::Conn(Incoming::Models { reply }) => {
             let _ = reply.send(models_json(registry));
@@ -725,6 +814,7 @@ fn worker_stats_json(
     routing: &str,
     pending: usize,
     started: Instant,
+    shed: &Shed,
 ) -> Json {
     let mut collected: HashMap<String, Json> = HashMap::new();
     for h in handles {
@@ -745,7 +835,7 @@ fn worker_stats_json(
         }
     }
     j.set("engines", engines);
-    j.set("server", server_json(names.len(), routing, pending, started));
+    j.set("server", server_json(names.len(), routing, pending, started, shed));
     j
 }
 
@@ -758,6 +848,7 @@ fn serve_workers(
     events: &Receiver<Event>,
     started: Instant,
     workers: usize,
+    max_pending: usize,
 ) -> Result<()> {
     let n = registry.len();
     let w = workers.min(n).max(1);
@@ -802,6 +893,7 @@ fn serve_workers(
     }
 
     let mut pending: HashMap<u64, Sender<Json>> = HashMap::new();
+    let mut shed = Shed::new(max_pending);
     let mut rr_next = 0usize;
     let mut shutdown_sent = false;
     let mut stopped = 0usize;
@@ -826,6 +918,19 @@ fn serve_workers(
                         // submit behind a worker's drain-and-exit check;
                         // answer in-band instead.
                         let _ = reply.send(error_json("server is shutting down"));
+                        continue;
+                    }
+                    // Backpressure before registration, mirroring the
+                    // sweep loop; the depth signal is the workers'
+                    // published load minimum (approximate by one
+                    // in-flight iteration, like `least-loaded` routing).
+                    let min_depth = loads
+                        .iter()
+                        .map(|l| l.load(Ordering::Relaxed))
+                        .min()
+                        .unwrap_or(0);
+                    if let Some(overloaded) = shed.admit(pending.len(), min_depth) {
+                        let _ = reply.send(overloaded);
                         continue;
                     }
                     match route_static(&names, &route, &mut rr_next, &loads, model.as_deref()) {
@@ -862,6 +967,7 @@ fn serve_workers(
                         &routing_name,
                         pending.len(),
                         started,
+                        &shed,
                     ));
                 }
                 Event::Conn(Incoming::Models { reply }) => {

@@ -192,6 +192,14 @@ impl EngineRegistry {
         }
     }
 
+    /// Smallest pipeline depth (queued + prefilling + decoding) across
+    /// the engines — the `least-loaded` routing signal. The serving
+    /// loop's admission backpressure reuses it to size the advisory
+    /// `retry_after_ms` hint on shed replies.
+    pub fn min_load(&self) -> usize {
+        self.engines.iter().map(Engine::load).min().unwrap_or(0)
+    }
+
     pub fn engine_at_mut(&mut self, idx: usize) -> &mut Engine {
         &mut self.engines[idx]
     }

@@ -1,0 +1,172 @@
+//! Open-loop trace replay against a live server over loopback TCP.
+//!
+//! One thread per scheduled event: each sleeps until its `at_s`, sends
+//! its request on a fresh connection, and blocks for exactly one reply
+//! line — so send times never depend on completions (closed-loop-free
+//! by construction) and every event yields **exactly one**
+//! [`Outcome`]: completed, shed (the server's in-band
+//! `{"error":"overloaded","retry_after_ms":...}` reply), or a client
+//! error. Overload tests reconcile these against the server's
+//! `stats.server.shed` counters.
+
+use super::trace::{Tenant, Trace};
+use crate::json::Json;
+use crate::server;
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+/// What one replayed request came back with.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// A completion reply (server-side timing fields, seconds).
+    Done {
+        ttft_s: f64,
+        tpot_s: f64,
+        latency_s: f64,
+        queue_s: f64,
+        model: String,
+        /// Client-observed send → reply wall time (includes the wire).
+        client_s: f64,
+    },
+    /// Admission backpressure: the server refused the request in-band.
+    Shed { retry_after_ms: f64 },
+    /// Transport failure or a non-overload error reply.
+    Error { msg: String },
+}
+
+/// One trace event's replay record.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// Index of the event in the trace (outcomes are returned in trace
+    /// order regardless of completion order).
+    pub index: usize,
+    pub tenant: Tenant,
+    /// Scheduled send time, seconds from replay start.
+    pub at_s: f64,
+    pub outcome: Outcome,
+}
+
+/// A full replay: per-event outcomes plus the run's wall time.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub outcomes: Vec<RunOutcome>,
+    /// Replay start → last reply, seconds (the goodput denominator).
+    pub wall_s: f64,
+}
+
+impl RunResult {
+    pub fn completed(&self) -> usize {
+        self.count(|o| matches!(o, Outcome::Done { .. }))
+    }
+
+    pub fn shed(&self) -> usize {
+        self.count(|o| matches!(o, Outcome::Shed { .. }))
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(|o| matches!(o, Outcome::Error { .. }))
+    }
+
+    fn count(&self, f: impl Fn(&Outcome) -> bool) -> usize {
+        self.outcomes.iter().filter(|o| f(&o.outcome)).count()
+    }
+}
+
+/// Send one request line and classify the single reply line. A refused
+/// connection is retried briefly (a near-simultaneous burst can
+/// overflow the listener backlog); every other failure is an `Error`
+/// outcome — never a panic, so one bad socket cannot sink a replay.
+fn send_one(addr: &str, prompt: &str, max_new: usize) -> Outcome {
+    let sent = Instant::now();
+    let mut reply = server::client_request(addr, prompt, max_new);
+    for attempt in 0..2 {
+        if reply.is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5 << attempt));
+        reply = server::client_request(addr, prompt, max_new);
+    }
+    let j = match reply {
+        Ok(j) => j,
+        Err(e) => return Outcome::Error { msg: format!("{e:#}") },
+    };
+    let client_s = sent.elapsed().as_secs_f64();
+    if let Some(err) = j.get("error").and_then(Json::as_str) {
+        if err == "overloaded" {
+            return Outcome::Shed {
+                retry_after_ms: j
+                    .get("retry_after_ms")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+            };
+        }
+        return Outcome::Error { msg: err.to_string() };
+    }
+    let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    Outcome::Done {
+        ttft_s: f("ttft_s"),
+        tpot_s: f("tpot_s"),
+        latency_s: f("latency_s"),
+        queue_s: f("queue_s"),
+        model: j
+            .get("model")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+        client_s,
+    }
+}
+
+/// Replay `trace` against the server at `addr`. Blocks until every
+/// event has its one outcome; outcomes come back in trace order.
+pub fn replay(trace: &Trace, addr: &str) -> Result<RunResult> {
+    if trace.events.is_empty() {
+        bail!("trace has no events to replay");
+    }
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(trace.events.len());
+    for (index, e) in trace.events.iter().enumerate() {
+        let addr = addr.to_string();
+        let prompt = e.prompt.clone();
+        let (at_s, max_new, tenant) = (e.at_s, e.max_new, e.tenant);
+        handles.push(std::thread::spawn(move || {
+            let wait = at_s - start.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait));
+            }
+            RunOutcome { index, tenant, at_s, outcome: send_one(&addr, &prompt, max_new) }
+        }));
+    }
+    let mut outcomes = Vec::with_capacity(handles.len());
+    for h in handles {
+        match h.join() {
+            Ok(o) => outcomes.push(o),
+            Err(_) => bail!("replay sender thread panicked"),
+        }
+    }
+    outcomes.sort_by_key(|o| o.index);
+    Ok(RunResult { outcomes, wall_s: start.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::TraceSpec;
+
+    #[test]
+    fn empty_trace_is_an_error() {
+        let trace = Trace { spec: TraceSpec::default(), events: Vec::new() };
+        assert!(replay(&trace, "127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn unreachable_server_yields_error_outcomes_not_panics() {
+        let spec = TraceSpec { rate: 100.0, duration_s: 0.05, ..Default::default() };
+        let trace = Trace::generate(&spec).unwrap();
+        // Port 9 (discard) on loopback: nothing listens in the test env.
+        let result = replay(&trace, "127.0.0.1:9").unwrap();
+        assert_eq!(result.outcomes.len(), trace.events.len());
+        assert_eq!(result.errors(), trace.events.len());
+        assert_eq!(result.completed() + result.shed(), 0);
+    }
+}

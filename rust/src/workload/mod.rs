@@ -1,0 +1,34 @@
+//! Open-loop traffic harness: seeded traces, replay, SLO/goodput report.
+//!
+//! Every serving number this repo publishes flows through three pieces:
+//!
+//!   * [`trace`] — a deterministic seeded trace generator: Poisson /
+//!     bursty / diurnal-ramp arrival processes over a two-tenant prompt
+//!     mix (shared-prefix agent traffic vs long-tail chat), fully
+//!     reproducible from one `util::prng` seed and serializable as
+//!     byte-stable JSONL;
+//!   * [`driver`] — an open-loop replayer: one thread per scheduled
+//!     event fires at its trace time against a live server over
+//!     loopback TCP, independent of completions, and classifies the
+//!     single reply (completed / shed / error);
+//!   * [`report`] — p50/p95/p99 TTFT/TPOT summaries and goodput under a
+//!     configurable [`crate::config::SloSpec`], emitted as JSONL
+//!     comparison rows (per policy × cache × route — what
+//!     `bench_serving` feeds into `BENCH_serving.json`) and a small
+//!     static HTML table.
+//!
+//! The server-side counterpart is admission backpressure
+//! (`serve --max-pending N`): a bounded pending queue that sheds excess
+//! requests in-band (`{"error":"overloaded","retry_after_ms":...}`, see
+//! `docs/PROTOCOL.md`) so sustained overload degrades goodput
+//! gracefully instead of growing queue waits without bound —
+//! `rust/tests/integration_workload.rs` drives a 3×-sustainable trace
+//! through both halves and pins the graceful-degradation claim.
+
+pub mod driver;
+pub mod report;
+pub mod trace;
+
+pub use driver::{replay, Outcome, RunOutcome, RunResult};
+pub use report::{render_html, to_jsonl, ReportRow};
+pub use trace::{ArrivalKind, Tenant, Trace, TraceEvent, TraceSpec};

@@ -1,0 +1,342 @@
+//! SLO/goodput reporting over replayed traces.
+//!
+//! One [`ReportRow`] per (trace × server-config) run: request counts
+//! by outcome, p50/p95/p99 summaries of the server-reported TTFT /
+//! TPOT / latency series, and **goodput** — completions that met the
+//! [`SloSpec`] per wall second, the paper-relevant denomination under
+//! which policy × cache × route choices actually rank. Rows carry a
+//! free-form `tags` map (policy, cache, route, …) so several runs in
+//! one JSONL file form a comparison table; `bench_serving` feeds such
+//! rows into `BENCH_serving.json`, and [`render_html`] turns the same
+//! rows into a small static page.
+//!
+//! Determinism contract: given identical outcomes, [`ReportRow::build`]
+//! + [`to_jsonl`] / [`render_html`] are pure — the `BTreeMap`-backed
+//! [`Json`] writer and fixed-precision HTML formatting make the bytes
+//! reproducible (pinned by `integration_workload.rs`).
+
+use super::driver::{Outcome, RunResult};
+use crate::config::SloSpec;
+use crate::json::Json;
+use crate::metrics::{summarize, Summary};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One run's aggregated report (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ReportRow {
+    /// Run label (`--label`; the comparison table's row key).
+    pub label: String,
+    /// Free-form comparison dimensions (policy / cache / route / …),
+    /// serialized sorted by key.
+    pub tags: BTreeMap<String, String>,
+    pub slo: SloSpec,
+    /// Scheduled requests in the trace.
+    pub n: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub errors: usize,
+    /// Completions that met the SLO.
+    pub slo_met: usize,
+    /// Replay wall time, seconds.
+    pub wall_s: f64,
+    /// Completions per wall second.
+    pub throughput_rps: f64,
+    /// SLO-met completions per wall second — the headline number.
+    pub goodput_rps: f64,
+    /// Server-reported series over completions (None when none completed).
+    pub ttft: Option<Summary>,
+    pub tpot: Option<Summary>,
+    pub latency: Option<Summary>,
+}
+
+impl ReportRow {
+    /// Aggregate one replay into a row. Pure in its inputs: identical
+    /// outcomes produce identical rows (and identical serialized bytes).
+    pub fn build(
+        label: &str,
+        tags: &[(&str, String)],
+        slo: SloSpec,
+        result: &RunResult,
+    ) -> ReportRow {
+        let (mut ttft, mut tpot, mut latency) = (Vec::new(), Vec::new(), Vec::new());
+        let mut slo_met = 0usize;
+        for o in &result.outcomes {
+            if let Outcome::Done { ttft_s, tpot_s, latency_s, .. } = o.outcome {
+                ttft.push(ttft_s);
+                tpot.push(tpot_s);
+                latency.push(latency_s);
+                if slo.met(ttft_s, tpot_s) {
+                    slo_met += 1;
+                }
+            }
+        }
+        let wall = result.wall_s.max(1e-9);
+        ReportRow {
+            label: label.to_string(),
+            tags: tags.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            slo,
+            n: result.outcomes.len(),
+            completed: result.completed(),
+            shed: result.shed(),
+            errors: result.errors(),
+            slo_met,
+            wall_s: result.wall_s,
+            throughput_rps: result.completed() as f64 / wall,
+            goodput_rps: slo_met as f64 / wall,
+            ttft: summarize(&ttft),
+            tpot: summarize(&tpot),
+            latency: summarize(&latency),
+        }
+    }
+
+    /// One JSONL object (deterministic key order via the `Json` writer).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("label", Json::Str(self.label.clone()));
+        let mut tags = Json::obj();
+        for (k, v) in &self.tags {
+            tags.set(k, Json::Str(v.clone()));
+        }
+        j.set("tags", tags);
+        j.set("slo", Json::Str(self.slo.name()));
+        j.set("n", Json::Num(self.n as f64));
+        j.set("completed", Json::Num(self.completed as f64));
+        j.set("shed", Json::Num(self.shed as f64));
+        j.set("errors", Json::Num(self.errors as f64));
+        j.set("slo_met", Json::Num(self.slo_met as f64));
+        j.set("wall_s", Json::Num(self.wall_s));
+        j.set("throughput_rps", Json::Num(self.throughput_rps));
+        j.set("goodput_rps", Json::Num(self.goodput_rps));
+        for (name, s) in
+            [("ttft_s", &self.ttft), ("tpot_s", &self.tpot), ("latency_s", &self.latency)]
+        {
+            if let Some(s) = s {
+                let mut sj = Json::obj();
+                sj.set("n", Json::Num(s.n as f64));
+                sj.set("mean", Json::Num(s.mean));
+                sj.set("p50", Json::Num(s.p50));
+                sj.set("p95", Json::Num(s.p95));
+                sj.set("p99", Json::Num(s.p99));
+                sj.set("max", Json::Num(s.max));
+                j.set(name, sj);
+            }
+        }
+        j
+    }
+
+    /// Parse one [`ReportRow::to_json`] line back (summaries are
+    /// re-read only as far as the comparison tooling needs).
+    pub fn parse(line: &str) -> Result<Json> {
+        let j = Json::parse(line)?;
+        for k in ["label", "n", "completed", "shed", "goodput_rps"] {
+            j.get(k).with_context(|| format!("report row missing `{k}`"))?;
+        }
+        Ok(j)
+    }
+
+    /// Human one-liner for CLI output.
+    pub fn human(&self) -> String {
+        let pct = |s: &Option<Summary>| match s {
+            Some(s) => format!(
+                "p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.p99 * 1e3
+            ),
+            None => "none".to_string(),
+        };
+        format!(
+            "{}: {} req in {:.2}s — completed {} ({:.1}/s), shed {}, errors {}\n\
+             goodput {:.1}/s (SLO {} met by {}/{})\n\
+             ttft {}; tpot {}",
+            self.label,
+            self.n,
+            self.wall_s,
+            self.completed,
+            self.throughput_rps,
+            self.shed,
+            self.errors,
+            self.goodput_rps,
+            self.slo.name(),
+            self.slo_met,
+            self.completed,
+            pct(&self.ttft),
+            pct(&self.tpot),
+        )
+    }
+}
+
+/// Serialize rows as JSONL, one comparison row per line.
+pub fn to_jsonl(rows: &[ReportRow]) -> String {
+    let mut out = String::new();
+    for r in rows {
+        out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn html_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// A small static HTML comparison page over the same rows the JSONL
+/// carries (fixed-precision formatting keeps the bytes deterministic).
+pub fn render_html(title: &str, rows: &[ReportRow]) -> String {
+    let mut tag_keys: Vec<String> = Vec::new();
+    for r in rows {
+        for k in r.tags.keys() {
+            if !tag_keys.contains(k) {
+                tag_keys.push(k.clone());
+            }
+        }
+    }
+    tag_keys.sort();
+    let ms = |s: &Option<Summary>, f: fn(&Summary) -> f64| match s {
+        Some(s) => format!("{:.2}", f(s) * 1e3),
+        None => "–".to_string(),
+    };
+    let mut h = String::new();
+    h.push_str("<!doctype html>\n<html><head><meta charset=\"utf-8\">\n");
+    h.push_str(&format!("<title>{}</title>\n", html_escape(title)));
+    h.push_str(
+        "<style>body{font:14px sans-serif;margin:2em}table{border-collapse:collapse}\n\
+         th,td{border:1px solid #999;padding:4px 8px;text-align:right}\n\
+         th{background:#eee}td.l,th.l{text-align:left}</style></head><body>\n",
+    );
+    h.push_str(&format!("<h1>{}</h1>\n<table>\n<tr>", html_escape(title)));
+    h.push_str("<th class=\"l\">label</th>");
+    for k in &tag_keys {
+        h.push_str(&format!("<th class=\"l\">{}</th>", html_escape(k)));
+    }
+    h.push_str(
+        "<th>n</th><th>completed</th><th>shed</th><th>errors</th>\
+         <th>goodput/s</th><th>throughput/s</th>\
+         <th>ttft p50 (ms)</th><th>ttft p95</th><th>ttft p99</th>\
+         <th>tpot p50 (ms)</th><th>tpot p95</th><th>tpot p99</th><th>SLO</th></tr>\n",
+    );
+    for r in rows {
+        h.push_str(&format!("<tr><td class=\"l\">{}</td>", html_escape(&r.label)));
+        for k in &tag_keys {
+            let v = r.tags.get(k).map(String::as_str).unwrap_or("–");
+            h.push_str(&format!("<td class=\"l\">{}</td>", html_escape(v)));
+        }
+        h.push_str(&format!(
+            "<td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+             <td>{:.2}</td><td>{:.2}</td>\
+             <td>{}</td><td>{}</td><td>{}</td>\
+             <td>{}</td><td>{}</td><td>{}</td><td class=\"l\">{}</td></tr>\n",
+            r.n,
+            r.completed,
+            r.shed,
+            r.errors,
+            r.goodput_rps,
+            r.throughput_rps,
+            ms(&r.ttft, |s| s.p50),
+            ms(&r.ttft, |s| s.p95),
+            ms(&r.ttft, |s| s.p99),
+            ms(&r.tpot, |s| s.p50),
+            ms(&r.tpot, |s| s.p95),
+            ms(&r.tpot, |s| s.p99),
+            html_escape(&r.slo.name()),
+        ));
+    }
+    h.push_str("</table></body></html>\n");
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::driver::RunOutcome;
+    use crate::workload::trace::Tenant;
+
+    /// A deterministic synthetic replay: index-derived timings, every
+    /// third request shed.
+    fn synthetic_result(n: usize) -> RunResult {
+        let outcomes = (0..n)
+            .map(|i| RunOutcome {
+                index: i,
+                tenant: if i % 2 == 0 { Tenant::Agent } else { Tenant::Chat },
+                at_s: i as f64 * 0.01,
+                outcome: if i % 3 == 2 {
+                    Outcome::Shed { retry_after_ms: 2.0 }
+                } else {
+                    Outcome::Done {
+                        ttft_s: 0.010 + i as f64 * 0.005,
+                        tpot_s: 0.002,
+                        latency_s: 0.050 + i as f64 * 0.005,
+                        queue_s: 0.001,
+                        model: "default".to_string(),
+                        client_s: 0.055,
+                    }
+                },
+            })
+            .collect();
+        RunResult { outcomes, wall_s: 1.5 }
+    }
+
+    #[test]
+    fn counts_and_goodput_add_up() {
+        let slo = SloSpec { ttft_ms: Some(30.0), tpot_ms: None };
+        let row = ReportRow::build("t", &[("policy", "admit-first".into())], slo, &synthetic_result(9));
+        assert_eq!(row.n, 9);
+        assert_eq!(row.shed, 3);
+        assert_eq!(row.completed, 6);
+        assert_eq!(row.errors, 0);
+        // ttft = 10ms + 5ms*i for i in {0,1,3,4,6,7}: <=30ms holds for
+        // i in {0,1,3,4} -> 4 of 6 completions meet the SLO.
+        assert_eq!(row.slo_met, 4);
+        assert!((row.goodput_rps - 4.0 / 1.5).abs() < 1e-9);
+        assert!((row.throughput_rps - 6.0 / 1.5).abs() < 1e-9);
+        assert!(row.goodput_rps <= row.throughput_rps);
+        let t = row.ttft.unwrap();
+        assert_eq!(t.n, 6);
+        assert!(t.p50 <= t.p95 && t.p95 <= t.p99 && t.p99 <= t.max);
+    }
+
+    #[test]
+    fn jsonl_and_html_are_deterministic_and_parse() {
+        let slo = SloSpec { ttft_ms: Some(100.0), tpot_ms: Some(50.0) };
+        let result = synthetic_result(12);
+        let tags: &[(&str, String)] =
+            &[("policy", "chunked:8".into()), ("cache", "paged".into()), ("route", "least-loaded".into())];
+        let a = ReportRow::build("cmp", tags, slo, &result);
+        let b = ReportRow::build("cmp", tags, slo, &result);
+        assert_eq!(to_jsonl(&[a.clone()]), to_jsonl(&[b.clone()]), "JSONL must be byte-stable");
+        assert_eq!(
+            render_html("t", &[a.clone()]),
+            render_html("t", &[b]),
+            "HTML must be byte-stable"
+        );
+        let text = to_jsonl(&[a]);
+        let parsed = ReportRow::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.get("label").and_then(Json::as_str), Some("cmp"));
+        assert_eq!(
+            parsed.get("tags").and_then(|t| t.get("cache")).and_then(Json::as_str),
+            Some("paged")
+        );
+        assert!(parsed.get("goodput_rps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(ReportRow::parse("{\"label\":\"x\"}").is_err(), "missing fields rejected");
+    }
+
+    #[test]
+    fn empty_run_reports_zero_goodput_without_summaries() {
+        let result = RunResult {
+            outcomes: vec![RunOutcome {
+                index: 0,
+                tenant: Tenant::Chat,
+                at_s: 0.0,
+                outcome: Outcome::Error { msg: "refused".into() },
+            }],
+            wall_s: 0.5,
+        };
+        let row = ReportRow::build("err", &[], SloSpec::default(), &result);
+        assert_eq!((row.completed, row.shed, row.errors), (0, 0, 1));
+        assert_eq!(row.goodput_rps, 0.0);
+        assert!(row.ttft.is_none());
+        let html = render_html("t", &[row]);
+        assert!(html.contains("–"), "missing summaries render as dashes");
+    }
+}

@@ -1,0 +1,452 @@
+//! Seeded open-loop trace generation.
+//!
+//! A trace is a fully materialized arrival schedule: every request's
+//! send time, tenant, prompt bytes, and decode budget, decided up front
+//! from one `util::prng` seed. The driver then replays the schedule
+//! *open-loop* — send times never depend on completions — which is the
+//! only arrival model under which goodput/SLO numbers mean anything
+//! (closed-loop clients self-throttle and hide overload).
+//!
+//! Three arrival processes cover the serving regimes the paper's
+//! throughput claims live in:
+//!
+//!   * `poisson` — memoryless steady-state arrivals at `rate`/s
+//!     (exponential inter-arrival gaps);
+//!   * `bursty:B` — Poisson-arriving *bursts* of ~B back-to-back
+//!     requests (mean total rate still `rate`/s) — the agent-fanout
+//!     pattern that stresses admission and the paged pool;
+//!   * `ramp` — a diurnal half-sine: the instantaneous rate ramps from
+//!     0.25× through 1.75× of `rate` and back across the trace
+//!     duration (thinning over the peak rate), so a fixed `--max-pending`
+//!     bound sees both slack and overload in one run.
+//!
+//! Two tenants model the prompt mix: **agent** traffic shares one fixed
+//! prompt prefix (exercising `--prefix-cache` sharing) with a short
+//! random suffix and a homogeneous decode budget; **chat** traffic is
+//! long-tail — lengths drawn from a cubed-uniform (mostly short, rare
+//! long) with per-request decode budgets.
+//!
+//! Determinism contract: `generate` draws every random value from one
+//! `Rng::new(seed)` stream in event order, and `to_jsonl` serializes
+//! through the `BTreeMap`-backed [`Json`] writer — same spec ⇒
+//! byte-identical JSONL (`integration_workload.rs` pins this).
+
+use crate::json::Json;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Arrival process of a trace (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at the spec rate.
+    Poisson,
+    /// Poisson-arriving bursts of ~`burst` back-to-back requests.
+    Bursty { burst: usize },
+    /// Diurnal half-sine ramp (0.25×..1.75× of the spec rate).
+    Ramp,
+}
+
+impl ArrivalKind {
+    /// Parse `poisson` / `bursty[:B]` / `ramp`.
+    pub fn parse(s: &str) -> Result<ArrivalKind> {
+        match s {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "ramp" => Ok(ArrivalKind::Ramp),
+            "bursty" => Ok(ArrivalKind::Bursty { burst: 8 }),
+            other => match other.strip_prefix("bursty:") {
+                Some(b) => Ok(ArrivalKind::Bursty {
+                    burst: b
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n >= 1)
+                        .with_context(|| format!("bad burst size `{b}`"))?,
+                }),
+                None => bail!("unknown arrival process `{other}` (poisson|bursty[:B]|ramp)"),
+            },
+        }
+    }
+
+    /// Wire/report spelling (round-trips through [`ArrivalKind::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            ArrivalKind::Poisson => "poisson".to_string(),
+            ArrivalKind::Bursty { burst } => format!("bursty:{burst}"),
+            ArrivalKind::Ramp => "ramp".to_string(),
+        }
+    }
+}
+
+/// Traffic tenant of one trace event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tenant {
+    /// Shared-prefix agent traffic (homogeneous decode budget).
+    Agent,
+    /// Long-tail chat traffic (varied lengths and budgets).
+    Chat,
+}
+
+impl Tenant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tenant::Agent => "agent",
+            Tenant::Chat => "chat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Tenant> {
+        match s {
+            "agent" => Ok(Tenant::Agent),
+            "chat" => Ok(Tenant::Chat),
+            other => bail!("unknown tenant `{other}` (agent|chat)"),
+        }
+    }
+}
+
+/// Everything [`Trace::generate`] needs; one seed reproduces the trace.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub arrivals: ArrivalKind,
+    /// Mean arrival rate, requests/s.
+    pub rate: f64,
+    /// Trace span, seconds (arrivals past it are dropped).
+    pub duration_s: f64,
+    /// Fraction of events carrying agent (shared-prefix) traffic.
+    pub agent_frac: f64,
+    /// Decode-budget ceiling: agent events use it verbatim, chat events
+    /// draw uniformly from `1..=max_new`.
+    pub max_new: usize,
+    /// The shared agent prompt prefix (keep it under the serving
+    /// engine's `max_prompt` together with the suffix).
+    pub agent_prefix: String,
+    /// Agent suffix length bounds, bytes (inclusive).
+    pub agent_suffix: (usize, usize),
+    /// Chat prompt length bounds, bytes (inclusive; cubed-uniform draw
+    /// skews toward the minimum — long prompts are the rare tail).
+    pub chat_len: (usize, usize),
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            seed: 0,
+            arrivals: ArrivalKind::Poisson,
+            rate: 32.0,
+            duration_s: 2.0,
+            agent_frac: 0.5,
+            max_new: 16,
+            agent_prefix: "agent: answer from the shared context. q: ".to_string(),
+            agent_suffix: (4, 24),
+            chat_len: (8, 96),
+        }
+    }
+}
+
+/// One scheduled request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Send time, seconds from trace start.
+    pub at_s: f64,
+    pub tenant: Tenant,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// A materialized arrival schedule (spec + events, in time order).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub spec: TraceSpec,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Word pool for synthetic prompt bytes (ASCII only, so byte-length
+/// truncation is char-safe).
+const WORDS: &[&str] = &[
+    "latent", "cache", "rotary", "absorb", "decode", "prefill", "block", "route",
+    "tenant", "batch", "paged", "rank", "head", "chunk", "query", "stream",
+];
+
+fn words_of_len(rng: &mut Rng, len: usize) -> String {
+    let mut s = String::with_capacity(len + 8);
+    while s.len() < len {
+        if !s.is_empty() {
+            s.push(' ');
+        }
+        s.push_str(WORDS[rng.below(WORDS.len())]);
+    }
+    s.truncate(len.max(1));
+    s
+}
+
+/// Exponential inter-arrival gap for a Poisson process at `rate`/s.
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    // uniform() is [0, 1): 1-u is (0, 1], so ln stays finite.
+    -(1.0 - rng.uniform()).ln() / rate
+}
+
+impl TraceSpec {
+    fn validate(&self) -> Result<()> {
+        if !(self.rate > 0.0 && self.rate.is_finite()) {
+            bail!("trace rate must be a positive finite number (got {})", self.rate);
+        }
+        if !(self.duration_s > 0.0 && self.duration_s.is_finite()) {
+            bail!("trace duration must be positive (got {})", self.duration_s);
+        }
+        if !(0.0..=1.0).contains(&self.agent_frac) {
+            bail!("agent_frac must be in [0, 1] (got {})", self.agent_frac);
+        }
+        if self.max_new == 0 {
+            bail!("max_new must be >= 1");
+        }
+        for (name, (lo, hi)) in
+            [("agent_suffix", self.agent_suffix), ("chat_len", self.chat_len)]
+        {
+            if lo == 0 || lo > hi {
+                bail!("{name} bounds must satisfy 1 <= min <= max (got {lo}..{hi})");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Trace {
+    /// Materialize the schedule: arrival times first, then per-event
+    /// tenant/prompt/budget — all from one seeded stream, in order.
+    pub fn generate(spec: &TraceSpec) -> Result<Trace> {
+        spec.validate()?;
+        let mut rng = Rng::new(spec.seed);
+        let mut times = Vec::new();
+        match spec.arrivals {
+            ArrivalKind::Poisson => {
+                let mut t = exp_gap(&mut rng, spec.rate);
+                while t < spec.duration_s {
+                    times.push(t);
+                    t += exp_gap(&mut rng, spec.rate);
+                }
+            }
+            ArrivalKind::Bursty { burst } => {
+                // Bursts arrive Poisson at rate/burst; each carries
+                // 1..=2*burst-1 requests (mean `burst`) 0.2ms apart, so
+                // the total mean rate stays `rate`.
+                let mut t = exp_gap(&mut rng, spec.rate / burst as f64);
+                while t < spec.duration_s {
+                    let n = rng.range(1, 2 * burst);
+                    for k in 0..n {
+                        let at = t + k as f64 * 2e-4;
+                        if at < spec.duration_s {
+                            times.push(at);
+                        }
+                    }
+                    t += exp_gap(&mut rng, spec.rate / burst as f64);
+                }
+            }
+            ArrivalKind::Ramp => {
+                // Thinning: candidates at the 1.75× peak, kept with
+                // probability rate(t)/peak where rate(t) follows a
+                // half-sine diurnal curve 0.25×..1.75×.
+                let peak = 1.75 * spec.rate;
+                let mut t = exp_gap(&mut rng, peak);
+                while t < spec.duration_s {
+                    let phase = std::f64::consts::PI * t / spec.duration_s;
+                    let rate_t = spec.rate * (0.25 + 1.5 * phase.sin());
+                    if rng.uniform() < rate_t / peak {
+                        times.push(t);
+                    }
+                    t += exp_gap(&mut rng, peak);
+                }
+            }
+        }
+        let mut events = Vec::with_capacity(times.len());
+        for at_s in times {
+            let tenant = if rng.uniform() < spec.agent_frac {
+                Tenant::Agent
+            } else {
+                Tenant::Chat
+            };
+            let (prompt, max_new) = match tenant {
+                Tenant::Agent => {
+                    let n = rng.range(spec.agent_suffix.0, spec.agent_suffix.1 + 1);
+                    let suffix = words_of_len(&mut rng, n);
+                    (format!("{}{suffix}", spec.agent_prefix), spec.max_new)
+                }
+                Tenant::Chat => {
+                    // Cubed-uniform length: mostly near the minimum,
+                    // rare long-tail prompts near the maximum.
+                    let span = (spec.chat_len.1 - spec.chat_len.0) as f64;
+                    let u = rng.uniform();
+                    let n = spec.chat_len.0 + (span * u * u * u) as usize;
+                    let prompt = words_of_len(&mut rng, n);
+                    (prompt, rng.range(1, spec.max_new + 1))
+                }
+            };
+            events.push(TraceEvent { at_s, tenant, prompt, max_new });
+        }
+        Ok(Trace { spec: spec.clone(), events })
+    }
+
+    /// Serialize: one meta line, then one line per event, all through
+    /// the deterministic [`Json`] writer — byte-stable per seed.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut meta = Json::obj();
+        meta.set("agent_frac", Json::Num(self.spec.agent_frac));
+        meta.set("arrivals", Json::Str(self.spec.arrivals.name()));
+        meta.set("duration_s", Json::Num(self.spec.duration_s));
+        meta.set("events", Json::Num(self.events.len() as f64));
+        meta.set("rate", Json::Num(self.spec.rate));
+        meta.set("seed", Json::Num(self.spec.seed as f64));
+        meta.set("trace", Json::Str("v1".to_string()));
+        out.push_str(&meta.to_string());
+        out.push('\n');
+        for e in &self.events {
+            let mut j = Json::obj();
+            j.set("at_s", Json::Num(e.at_s));
+            j.set("max_new", Json::Num(e.max_new as f64));
+            j.set("prompt", Json::Str(e.prompt.clone()));
+            j.set("tenant", Json::Str(e.tenant.name().to_string()));
+            out.push_str(&j.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a [`Trace::to_jsonl`] file back. Spec fields absent from
+    /// the meta line (prompt-mix bounds) take their defaults — they
+    /// only matter for generation, which already happened.
+    pub fn parse_jsonl(s: &str) -> Result<Trace> {
+        let mut lines = s.lines().filter(|l| !l.trim().is_empty());
+        let meta = Json::parse(lines.next().context("empty trace file")?)?;
+        if meta.get("trace").and_then(Json::as_str) != Some("v1") {
+            bail!("not a v1 trace file (missing `\"trace\":\"v1\"` meta line)");
+        }
+        let num = |k: &str| -> Result<f64> {
+            meta.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("trace meta missing `{k}`"))
+        };
+        let spec = TraceSpec {
+            seed: num("seed")? as u64,
+            arrivals: ArrivalKind::parse(
+                meta.get("arrivals").and_then(Json::as_str).context("meta `arrivals`")?,
+            )?,
+            rate: num("rate")?,
+            duration_s: num("duration_s")?,
+            agent_frac: num("agent_frac")?,
+            ..TraceSpec::default()
+        };
+        let mut events = Vec::new();
+        for line in lines {
+            let j = Json::parse(line)?;
+            events.push(TraceEvent {
+                at_s: j.get("at_s").and_then(Json::as_f64).context("event `at_s`")?,
+                tenant: Tenant::parse(
+                    j.get("tenant").and_then(Json::as_str).context("event `tenant`")?,
+                )?,
+                prompt: j
+                    .get("prompt")
+                    .and_then(Json::as_str)
+                    .context("event `prompt`")?
+                    .to_string(),
+                max_new: j
+                    .get("max_new")
+                    .and_then(Json::as_usize)
+                    .context("event `max_new`")?,
+            });
+        }
+        Ok(Trace { spec, events })
+    }
+
+    /// Longest prompt in the trace, bytes (admission sizing helper).
+    pub fn max_prompt_len(&self) -> usize {
+        self.events.iter().map(|e| e.prompt.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds() -> Vec<ArrivalKind> {
+        vec![
+            ArrivalKind::Poisson,
+            ArrivalKind::Bursty { burst: 4 },
+            ArrivalKind::Ramp,
+        ]
+    }
+
+    #[test]
+    fn arrival_kind_parses_and_round_trips() {
+        for s in ["poisson", "bursty:4", "ramp"] {
+            assert_eq!(ArrivalKind::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(ArrivalKind::parse("bursty").unwrap(), ArrivalKind::Bursty { burst: 8 });
+        assert!(ArrivalKind::parse("bursty:0").is_err());
+        assert!(ArrivalKind::parse("flat").is_err());
+    }
+
+    #[test]
+    fn generation_is_sorted_in_time_and_bounded() {
+        for arrivals in all_kinds() {
+            let spec = TraceSpec { arrivals, rate: 200.0, duration_s: 0.5, ..Default::default() };
+            let trace = Trace::generate(&spec).unwrap();
+            assert!(!trace.events.is_empty(), "{arrivals:?} produced no events");
+            for w in trace.events.windows(2) {
+                assert!(w[0].at_s <= w[1].at_s, "{arrivals:?} out of order");
+            }
+            for e in &trace.events {
+                assert!(e.at_s < spec.duration_s);
+                assert!((1..=spec.max_new).contains(&e.max_new));
+                assert!(!e.prompt.is_empty());
+                if e.tenant == Tenant::Agent {
+                    assert!(e.prompt.starts_with(&spec.agent_prefix));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_different_trace() {
+        for arrivals in all_kinds() {
+            let spec = TraceSpec { arrivals, rate: 150.0, duration_s: 0.4, ..Default::default() };
+            let a = Trace::generate(&spec).unwrap();
+            let b = Trace::generate(&spec).unwrap();
+            assert_eq!(a.to_jsonl(), b.to_jsonl(), "{arrivals:?} not reproducible");
+            let other = Trace::generate(&TraceSpec { seed: 99, ..spec }).unwrap();
+            assert_ne!(a.to_jsonl(), other.to_jsonl(), "{arrivals:?} ignores the seed");
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_byte_identically() {
+        let spec = TraceSpec { rate: 100.0, duration_s: 0.3, ..Default::default() };
+        let trace = Trace::generate(&spec).unwrap();
+        let text = trace.to_jsonl();
+        let parsed = Trace::parse_jsonl(&text).unwrap();
+        assert_eq!(parsed.events.len(), trace.events.len());
+        assert_eq!(parsed.to_jsonl(), text, "parse/serialize must be a fixed point");
+        assert!(Trace::parse_jsonl("{\"nope\":1}\n").is_err());
+    }
+
+    #[test]
+    fn spec_validation_rejects_nonsense() {
+        assert!(Trace::generate(&TraceSpec { rate: 0.0, ..Default::default() }).is_err());
+        assert!(Trace::generate(&TraceSpec { duration_s: -1.0, ..Default::default() }).is_err());
+        assert!(Trace::generate(&TraceSpec { agent_frac: 1.5, ..Default::default() }).is_err());
+        assert!(Trace::generate(&TraceSpec { max_new: 0, ..Default::default() }).is_err());
+        assert!(Trace::generate(&TraceSpec { chat_len: (9, 3), ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn tenant_mix_tracks_agent_frac() {
+        let spec = TraceSpec {
+            rate: 500.0,
+            duration_s: 1.0,
+            agent_frac: 0.8,
+            ..Default::default()
+        };
+        let trace = Trace::generate(&spec).unwrap();
+        let agents = trace.events.iter().filter(|e| e.tenant == Tenant::Agent).count();
+        let frac = agents as f64 / trace.events.len() as f64;
+        assert!((frac - 0.8).abs() < 0.1, "agent fraction {frac} far from 0.8");
+    }
+}

@@ -16,11 +16,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-use transmla::backend::SimBackend;
+use transmla::backend::{BackendSpec, CacheStore, ExecBackend, PrefillOut, SimBackend};
 use transmla::config::{CacheKind, EngineConfig, PolicyKind};
 use transmla::coordinator::{Engine, Request};
 use transmla::json::Json;
-use transmla::server::{self, EngineRegistry, RoutePolicy};
+use transmla::server::{self, EngineRegistry, RoutePolicy, ServeOpts};
+use transmla::tensor::Tensor;
+use transmla::Result;
 
 fn wait_for_ping(addr: &str) {
     let deadline = Instant::now() + Duration::from_secs(5);
@@ -352,9 +354,17 @@ fn stats_schema_matches_protocol_md() {
         assert!(stats.get(key).is_some(), "stats missing `{key}`: {stats:?}");
     }
     let srv = stats.get("server").unwrap();
-    for key in ["models", "routing", "pending", "uptime_s"] {
+    for key in ["max_pending", "models", "pending", "routing", "shed", "uptime_s"] {
         assert!(srv.get(key).is_some(), "server missing `{key}`: {srv:?}");
     }
+    // docs/PROTOCOL.md "shed object": exactly these keys, zeroed on a
+    // server that never shed; max_pending 0 = unbounded (the default).
+    assert_eq!(srv.get("max_pending").and_then(Json::as_usize), Some(0));
+    let shed = srv.get("shed").unwrap();
+    let shed_keys: Vec<&str> =
+        shed.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(shed_keys, ["count", "last_retry_after_ms"], "shed object schema");
+    assert_eq!(shed.get("count").and_then(Json::as_usize), Some(0));
     // docs/PROTOCOL.md per-engine field list (the v1 stats shape,
     // unchanged — dashboards re-point to `engines.<name>`).
     let eng = engine_stats(&stats, "default");
@@ -692,6 +702,113 @@ fn unrouted_requests_follow_the_routing_policy() {
         })
         .collect();
     assert_eq!(picks, vec!["gqa-base", "mla", "gqa-base", "mla"]);
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+}
+
+/// [`SimBackend`] with a fixed per-call service delay: a deterministic
+/// "slow model" that keeps requests in flight long enough for a bounded
+/// pending queue to fill under test.
+struct SlowBackend {
+    inner: SimBackend,
+    delay: Duration,
+}
+
+impl ExecBackend for SlowBackend {
+    fn spec(&self) -> &BackendSpec {
+        self.inner.spec()
+    }
+
+    fn prefill(&mut self, tokens: &[i32], rows: usize) -> Result<PrefillOut> {
+        std::thread::sleep(self.delay);
+        self.inner.prefill(tokens, rows)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        slot: usize,
+        start_pos: usize,
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        self.inner.prefill_chunk(tokens, slot, start_pos, cache)
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        cache: &mut CacheStore,
+    ) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(tokens, pos, active, cache)
+    }
+}
+
+/// Admission backpressure (docs/PROTOCOL.md `overloaded`): with
+/// `max_pending: 1` and a slow engine, a request arriving while one is
+/// in flight gets the in-band shed reply with exactly the documented
+/// keys, the `stats.server.shed` counter increments — and, the sibling
+/// of the disconnect test above, the shed path leaves no pending-map
+/// entry behind: `pending` returns to 0 and the server keeps serving.
+#[test]
+fn overloaded_requests_are_shed_in_band_without_leaking_pending() {
+    let addr = "127.0.0.1:18446";
+    let handle = std::thread::spawn(move || {
+        let slow =
+            SlowBackend { inner: SimBackend::gqa(4), delay: Duration::from_millis(5) };
+        let mut reg = EngineRegistry::single(Engine::new(slow, EngineConfig::default()));
+        server::serve_with(
+            &mut reg,
+            addr,
+            ServeOpts { max_pending: 1, ..ServeOpts::default() },
+        )
+        .unwrap();
+    });
+    wait_for_ping(addr);
+
+    // A long request holds the single admission slot for ~200ms (40
+    // decode steps x 5ms)...
+    let holder = std::thread::spawn(move || {
+        server::client_request(addr, "hold the slot", 40).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    // ...so the next arrival finds the pending queue full and is shed.
+    let resp = server::client_request(addr, "shed me", 2).unwrap();
+    assert_eq!(
+        resp.get("error").and_then(Json::as_str),
+        Some("overloaded"),
+        "{resp:?}"
+    );
+    let retry = resp.get("retry_after_ms").and_then(Json::as_f64).unwrap();
+    assert!(retry >= 1.0, "{resp:?}");
+    // The documented shed-reply schema is exactly these two keys.
+    let keys: Vec<&str> = resp.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(keys, ["error", "retry_after_ms"], "shed reply schema");
+
+    assert!(holder.join().unwrap().get("text").is_some(), "held request completes");
+
+    let stats = server::client_stats(addr).unwrap();
+    let srv = stats.get("server").unwrap();
+    assert_eq!(srv.get("max_pending").and_then(Json::as_usize), Some(1));
+    let shed = srv.get("shed").unwrap();
+    assert_eq!(shed.get("count").and_then(Json::as_usize), Some(1), "{shed:?}");
+    assert!(
+        shed.get("last_retry_after_ms").and_then(Json::as_f64).unwrap() >= 1.0,
+        "{shed:?}"
+    );
+    assert_eq!(
+        srv.get("pending").and_then(Json::as_usize),
+        Some(0),
+        "shed path leaked a pending entry"
+    );
+
+    // And the loop still serves after shedding.
+    let ok = server::client_request(addr, "after the storm", 2).unwrap();
+    assert!(ok.get("text").is_some(), "{ok:?}");
+
     server::client_shutdown(addr).unwrap();
     handle.join().unwrap();
 }

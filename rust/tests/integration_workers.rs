@@ -47,7 +47,7 @@ fn start_two_model_server(
             .unwrap();
         reg.register("mla", Engine::new(SimBackend::mla(4, 8), cfg))
             .unwrap();
-        server::serve_with(&mut reg, addr, ServeOpts { workers }).unwrap();
+        server::serve_with(&mut reg, addr, ServeOpts { workers, ..ServeOpts::default() }).unwrap();
     });
     wait_for_ping(addr);
     handle
@@ -267,7 +267,8 @@ fn randomized_three_model_stress_under_workers() {
         .unwrap();
         reg.register("mla", Engine::new(SimBackend::mla(4, 8), EngineConfig::default()))
             .unwrap();
-        server::serve_with(&mut reg, addr, ServeOpts { workers: 2 }).unwrap();
+        server::serve_with(&mut reg, addr, ServeOpts { workers: 2, ..ServeOpts::default() })
+            .unwrap();
     });
     wait_for_ping(addr);
 
