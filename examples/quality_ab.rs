@@ -1,0 +1,84 @@
+//! Quality A/B walkthrough (hermetic — no artifacts needed): one tiny
+//! in-repo dataset scored across a GQA engine and its rank-8 MLA twin
+//! through protocol-v2 routing — the TransMLA question "did conversion
+//! hurt, and what did it buy" as one printed matrix.
+//!
+//!   1. generate reference outputs from a solo GQA engine (they become
+//!      the dataset's `expected` values),
+//!   2. host a `gqa` + `mla` registry on a local port,
+//!   3. fan the dataset across both models with the qeval driver,
+//!   4. build the per-model × per-scorer report with `--baseline gqa`
+//!      semantics and print it (the MLA row carries the deltas).
+//!
+//! On the sim backend the MLA twin at the same seed reproduces the GQA
+//! outputs exactly (the sim's state chain is cache-layout-independent),
+//! so the printed exact-match delta is 0.0pp — the "quality recovered"
+//! half of the paper's claim, in miniature.
+//!
+//! Run: `cargo run --release --example quality_ab`
+//!
+//! The same topology from the CLI:
+//! `transmla eval --data d.jsonl --model gqa=arch=gqa \
+//!      --model mla=arch=mla,rank=8 --baseline gqa \
+//!      --exact --levenshtein 0.8`
+
+use anyhow::Result;
+use transmla::backend::SimBackend;
+use transmla::config::{EngineConfig, EvalOpts};
+use transmla::coordinator::{Engine, Request};
+use transmla::qeval::{self, scorers};
+use transmla::server::{self, EngineRegistry, RoutePolicy};
+
+fn main() -> Result<()> {
+    let addr = "127.0.0.1:7462";
+    let prompts =
+        ["the latent cache", "absorbed attention", "rank picks the", "kv bytes per token"];
+    let max_new = 12;
+
+    // 1. Reference outputs from a solo GQA engine.
+    let mut reference = Engine::new(SimBackend::gqa(4), EngineConfig::default());
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::from_text(i as u64, p, max_new))
+        .collect();
+    let expected: Vec<String> =
+        reference.generate(reqs)?.iter().map(|c| c.text()).collect();
+    let pairs: Vec<(&str, &str)> =
+        prompts.iter().zip(&expected).map(|(p, e)| (*p, e.as_str())).collect();
+    let ds = qeval::Dataset::from_pairs(&pairs);
+
+    // 2. The A/B pair behind one endpoint.
+    let server_thread = std::thread::spawn(move || {
+        let mut reg = EngineRegistry::new(RoutePolicy::Default("gqa".into()));
+        reg.register("gqa", Engine::new(SimBackend::gqa(4), EngineConfig::default()))
+            .unwrap();
+        reg.register("mla", Engine::new(SimBackend::mla(4, 8), EngineConfig::default()))
+            .unwrap();
+        server::serve(&mut reg, addr).unwrap();
+    });
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while server::client_line(addr, "{\"cmd\":\"ping\"}").is_err() {
+        if std::time::Instant::now() > deadline {
+            anyhow::bail!("server at {addr} never came up (port in use?)");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // 3. Fan every row to both models (bounded concurrency, protocol-v2
+    //    routing), then 4. fold into the A/B matrix.
+    let opts = EvalOpts { concurrency: 4, max_new, baseline: Some("gqa".into()) };
+    let models = vec!["gqa".to_string(), "mla".to_string()];
+    let run = qeval::run_eval(&ds, &models, addr, &opts)?;
+    let scorers = scorers::from_flags(&[
+        ("exact".to_string(), "true".to_string()),
+        ("levenshtein".to_string(), "0.8".to_string()),
+    ])?;
+    let report = qeval::EvalReport::build("quality-ab", &ds, &scorers, &run, Some("gqa"))?;
+    println!("{}", report.human());
+    print!("\n{}", report.to_jsonl());
+
+    server::client_shutdown(addr)?;
+    server_thread.join().expect("server thread");
+    Ok(())
+}

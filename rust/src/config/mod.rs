@@ -362,6 +362,26 @@ impl SloSpec {
     }
 }
 
+/// `transmla eval` driver options (the quality harness — see
+/// [`crate::qeval`]): how hard to drive the server and which model is
+/// the A/B reference.
+#[derive(Clone, Debug)]
+pub struct EvalOpts {
+    /// Bounded in-flight request concurrency across all (model × row)
+    /// jobs (`--concurrency`).
+    pub concurrency: usize,
+    /// New-token budget per row (`--max-new`).
+    pub max_new: usize,
+    /// Baseline model name for per-model deltas (`--baseline`).
+    pub baseline: Option<String>,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { concurrency: 8, max_new: 16, baseline: None }
+    }
+}
+
 /// Analytical accelerator profile (paper Sec. 5.4: three consumer GPUs).
 #[derive(Clone, Debug)]
 pub struct HardwareProfile {
@@ -414,6 +434,13 @@ mod tests {
         assert!(!slo.met(0.100, 0.021), "tpot bound enforced");
         assert_eq!(slo.name(), "ttft<=250ms,tpot<=20ms");
         assert_eq!(SloSpec { ttft_ms: Some(100.0), tpot_ms: None }.name(), "ttft<=100ms");
+    }
+
+    #[test]
+    fn eval_opts_defaults() {
+        let o = EvalOpts::default();
+        assert_eq!((o.concurrency, o.max_new), (8, 16));
+        assert!(o.baseline.is_none());
     }
 
     #[test]

@@ -69,6 +69,7 @@
 //! | [`runtime`]   | PJRT artifact loading/execution (real `xla` bindings or the vendored stub) |
 //! | [`server`]    | TCP JSONL front-end (protocol v2): `EngineRegistry` hosting N named engines with routed requests (`default:<name>` / round-robin / least-loaded), a fair multi-engine stepper, per-engine stats, and in-band protocol errors |
 //! | [`workload`]  | open-loop traffic harness: seeded trace generator (Poisson / bursty / diurnal-ramp × agent/chat tenants), loopback replay driver, SLO/goodput report (JSONL + HTML) |
+//! | [`qeval`]     | serving-level quality harness: JSONL datasets, pluggable scorers (exact / contains / levenshtein / regex / json), cross-model A/B driver over protocol v2, per-model × per-scorer report with baseline deltas |
 //! | [`metrics`]   | counters + latency series with p50/p95/p99 summaries     |
 //! | [`config`]    | model/engine/policy/hardware configuration               |
 //! | [`convert`]   | TransMLA conversion toolchain (RoRoPE, FreqFold, BKV, PCA, Absorb) |
@@ -97,6 +98,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;
+pub mod qeval;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

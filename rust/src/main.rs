@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use transmla::backend::{SimBackend, SimConfig};
 use transmla::config::{
-    CacheKind, EngineConfig, HardwareProfile, ModelSpec, PolicyKind, SloSpec,
+    CacheKind, EngineConfig, EvalOpts, HardwareProfile, ModelSpec, PolicyKind, SloSpec,
 };
 use transmla::convert::{self, Baseline, ConvertOptions, PcaMode};
 use transmla::coordinator::engine::Arch;
@@ -20,7 +20,7 @@ use transmla::model::{init_gqa, Params};
 use transmla::perfmodel;
 use transmla::runtime::Runtime;
 use transmla::train::Trainer;
-use transmla::{corpus::Corpus, server, workload};
+use transmla::{corpus::Corpus, qeval, server, workload};
 
 const USAGE: &str = "\
 transmla — GQA->MLA conversion + absorbed-MLA serving (TransMLA reproduction)
@@ -45,6 +45,13 @@ COMMANDS
              [--attach host:port]
              (open-loop traffic replay + SLO/goodput report; see
              WORKLOAD HARNESS below)
+  eval       --data d.jsonl [--model name[=SPEC]]... [--baseline NAME]
+             [--exact] [--contains] [--contains-i] [--levenshtein MIN]
+             [--regex PATTERN] [--json] [--max-new N] [--concurrency N]
+             [--label L] [--report r.jsonl] [--html r.html]
+             [--attach host:port]
+             (quality harness: score one dataset across hosted models;
+             see QUALITY HARNESS below)
   exp        fig2a|fig2b|fig3a|fig3b|table1|table4|table5|all
              [--out runs] [--config C] [--pretrain N] [--ft N] [--eval-batches N]
 
@@ -139,6 +146,26 @@ WORKLOAD HARNESS (workload only)
                     per seed)
   --report F        append-free JSONL report row (comparison tables)
   --html F          static HTML comparison page over the same rows
+
+QUALITY HARNESS (eval only)
+  Scores one JSONL dataset ({\"id\": ..., \"input\": ..., \"expected\": ...}
+  rows; id and expected optional) across every --model engine through
+  protocol-v2 routing and reports a per-model x per-scorer matrix
+  (pass-rate, mean score, n, errors) with latency percentiles. With
+  --baseline NAME every other model's row carries quality + latency
+  deltas against it — the GQA vs MLA A/B in one table. Self-hosts on
+  --addr (default 127.0.0.1:7435) with --backend defaulting to `sim`,
+  or scores a running server via --attach (model names from --model
+  flags, or the server's own listing). Malformed dataset lines and
+  missing/duplicate ids are reported in-band, never fatal.
+  --exact           output equals expected, byte for byte
+  --contains        output contains expected (--contains-i case-folds)
+  --levenshtein M   normalized edit similarity >= M (graded in [0,1])
+  --regex P         output matches P (anchors, classes, * + ?, |)
+  --json            output parses as JSON
+  --concurrency N   bounded in-flight requests (default 8)
+  --report F        deterministic JSONL (one meta line + one line per
+                    model); --html F renders the same matrix as HTML
 ";
 
 fn main() {
@@ -170,14 +197,21 @@ fn parse_args() -> Result<Args> {
         all_flags.push((k, v));
     };
     for a in it {
-        if let Some(k) = pending_key.take() {
-            record(&mut flags, k, a);
-        } else if let Some(stripped) = a.strip_prefix("--") {
+        // A new `--flag` closes any pending key as a boolean, so bare
+        // flags compose anywhere (`--exact --levenshtein 0.8`), not
+        // just in final position. The tradeoff: a *value* that itself
+        // starts with `--` must be passed as `--flag=value`.
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = pending_key.take() {
+                record(&mut flags, k, "true".into());
+            }
             if let Some((k, v)) = stripped.split_once('=') {
                 record(&mut flags, k.to_string(), v.to_string());
             } else {
                 pending_key = Some(stripped.to_string());
             }
+        } else if let Some(k) = pending_key.take() {
+            record(&mut flags, k, a);
         } else if sub.is_none() {
             sub = Some(a);
         } else {
@@ -279,9 +313,10 @@ fn run() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    // `workload` is the hermetic reproduction path: unless the operator
-    // asks for the artifact backend, self-hosted replays run on `sim`.
-    if args.cmd == "workload" && !args.has("backend") {
+    // `workload` and `eval` are the hermetic reproduction paths: unless
+    // the operator asks for the artifact backend, self-hosted runs use
+    // `sim`.
+    if (args.cmd == "workload" || args.cmd == "eval") && !args.has("backend") {
         args.flags.insert("backend".to_string(), "sim".to_string());
     }
     let art_dir = PathBuf::from(args.str_flag("artifacts", "artifacts"));
@@ -294,6 +329,7 @@ fn run() -> Result<()> {
         "generate" => cmd_generate(&art_dir, &cfg_name, &args),
         "serve" => cmd_serve(&art_dir, &cfg_name, &args),
         "workload" => cmd_workload(&art_dir, &cfg_name, &args),
+        "eval" => cmd_eval(&art_dir, &cfg_name, &args),
         _ => {
             let rt = Runtime::new(&art_dir)?;
             match args.cmd.as_str() {
@@ -827,6 +863,104 @@ fn cmd_workload(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
         )
         .with_context(|| format!("writing html {path}"))?;
         eprintln!("[workload] wrote html report to {path}");
+    }
+    Ok(())
+}
+
+/// `eval`: the quality harness — score one JSONL dataset across N
+/// hosted models through protocol-v2 routing and report the per-model
+/// × per-scorer matrix (see `qeval`). Self-hosts a registry over
+/// loopback by default (hermetic on the sim backend, the same
+/// `build_registry`/`serve_opts` path as `serve` and `workload`), or
+/// scores an already-running server via `--attach`.
+fn cmd_eval(art_dir: &Path, cfg_name: &str, args: &Args) -> Result<()> {
+    let data = args.get("data").context("--data <dataset.jsonl> is required")?;
+    let ds = qeval::Dataset::load(Path::new(data))?;
+    for (line, msg) in &ds.errors {
+        eprintln!("[eval] {data}:{line}: {msg}");
+    }
+    if ds.rows.is_empty() {
+        bail!("dataset {data} has no usable rows ({} malformed)", ds.errors.len());
+    }
+    let scorers = qeval::scorers::from_flags(&args.all_flags)?;
+    if scorers.is_empty() {
+        bail!(
+            "no scorers selected (pass --exact, --contains, --contains-i, \
+             --levenshtein MIN, --regex PATTERN, and/or --json)"
+        );
+    }
+    let opts = EvalOpts {
+        concurrency: args.usize_flag("concurrency", 8),
+        max_new: args.usize_flag("max-new", 16),
+        baseline: args.get("baseline").map(str::to_string),
+    };
+    // Model names come from the `--model` SPECs; in `--attach` mode
+    // with none given, from the server's own listing.
+    let mut model_names: Vec<String> = args
+        .get_all("model")
+        .iter()
+        .map(|m| ModelSpec::parse(m).map(|s| s.name))
+        .collect::<Result<Vec<_>>>()?;
+    let run = if let Some(attach) = args.get("attach") {
+        if model_names.is_empty() {
+            if let Some(arr) = server::client_models(attach)?.get("models").and_then(Json::as_arr)
+            {
+                model_names = arr
+                    .iter()
+                    .filter_map(|m| m.get("name").and_then(Json::as_str).map(str::to_string))
+                    .collect();
+            }
+        }
+        if model_names.is_empty() {
+            bail!("no models to evaluate at {attach}");
+        }
+        eprintln!(
+            "[eval] scoring {} rows x {} models against {attach}",
+            ds.rows.len(),
+            model_names.len()
+        );
+        qeval::run_eval(&ds, &model_names, attach, &opts)?
+    } else {
+        if model_names.is_empty() {
+            model_names.push("default".to_string());
+        }
+        let addr = args.str_flag("addr", "127.0.0.1:7435").to_string();
+        let mut registry = build_registry(art_dir, cfg_name, args)?;
+        let sopts = serve_opts(args)?;
+        let server_addr = addr.clone();
+        let handle = std::thread::spawn(move || {
+            server::serve_with(&mut registry, &server_addr, sopts)
+        });
+        wait_for_server(&addr)?;
+        eprintln!(
+            "[eval] scoring {} rows x {} models against {addr} (self-hosted)",
+            ds.rows.len(),
+            model_names.len()
+        );
+        let run = qeval::run_eval(&ds, &model_names, &addr, &opts);
+        server::client_shutdown(&addr)?;
+        handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        run?
+    };
+    let report = qeval::EvalReport::build(
+        args.str_flag("label", "eval"),
+        &ds,
+        &scorers,
+        &run,
+        opts.baseline.as_deref(),
+    )?;
+    println!("{}", report.human());
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_jsonl())
+            .with_context(|| format!("writing report {path}"))?;
+        eprintln!("[eval] wrote report to {path}");
+    }
+    if let Some(path) = args.get("html") {
+        std::fs::write(path, report.render_html("transmla eval report"))
+            .with_context(|| format!("writing html {path}"))?;
+        eprintln!("[eval] wrote html report to {path}");
     }
     Ok(())
 }

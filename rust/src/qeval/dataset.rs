@@ -1,0 +1,197 @@
+//! JSONL dataset loader for the quality harness.
+//!
+//! One row per line: `{"id": "...", "input": "...", "expected": "..."}`
+//! with `id` and `expected` optional. Loading **never fails on row
+//! content**: malformed lines (bad JSON, missing/non-string `input`)
+//! become in-band error entries with their 1-based line number, so a
+//! half-broken dataset still evaluates its good rows and the report can
+//! say exactly what was skipped.
+//!
+//! Row identity is what the A/B join keys on, so it is made safe here
+//! once rather than in every consumer: a row with a missing `id` — or
+//! one that duplicates an earlier id — gets a deterministic synthetic
+//! id (`row-<n>`, `n` = its 1-based position among the parsed rows),
+//! and the dataset counts both repairs ([`Dataset::synthetic_ids`],
+//! [`Dataset::dup_ids`]) for the report's warning column. After
+//! parsing, ids are unique by construction: a cross-model join can
+//! never silently drop or cross rows.
+
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::path::Path;
+
+/// One evaluable row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Row {
+    /// Unique within the dataset (possibly synthetic — see module docs).
+    pub id: String,
+    /// The prompt sent to every model.
+    pub input: String,
+    /// Reference answer for the scorers (`""` when the row omits it —
+    /// fine for reference-free scorers like `--regex` / `--json`).
+    pub expected: String,
+}
+
+/// A parsed dataset plus its parse diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub rows: Vec<Row>,
+    /// `(1-based line number, message)` per malformed line.
+    pub errors: Vec<(usize, String)>,
+    /// Rows that received a synthetic id (missing or duplicate).
+    pub synthetic_ids: usize,
+    /// The subset of those that *duplicated* an earlier id.
+    pub dup_ids: usize,
+}
+
+impl Dataset {
+    /// Parse JSONL text. Infallible by design: every problem lands in
+    /// [`Dataset::errors`] instead of aborting the load.
+    pub fn parse(text: &str) -> Dataset {
+        let mut ds = Dataset::default();
+        let mut seen: HashSet<String> = HashSet::new();
+        for (idx, line) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = match Json::parse(line) {
+                Ok(j) => j,
+                Err(e) => {
+                    ds.errors.push((lineno, format!("bad JSON: {e:#}")));
+                    continue;
+                }
+            };
+            let Some(input) = j.get("input").and_then(Json::as_str) else {
+                ds.errors.push((lineno, "missing string field `input`".into()));
+                continue;
+            };
+            let expected =
+                j.get("expected").and_then(Json::as_str).unwrap_or("").to_string();
+            let n = ds.rows.len() + 1;
+            let id = match j.get("id").and_then(Json::as_str) {
+                Some(id) if seen.insert(id.to_string()) => id.to_string(),
+                Some(_) => {
+                    ds.dup_ids += 1;
+                    synth_id(&mut seen, &mut ds.synthetic_ids, n)
+                }
+                None => synth_id(&mut seen, &mut ds.synthetic_ids, n),
+            };
+            ds.rows.push(Row { id, input: input.to_string(), expected });
+        }
+        ds
+    }
+
+    /// Load and parse a JSONL file (IO errors are still hard errors —
+    /// only row *content* is forgiven).
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Ok(Dataset::parse(&text))
+    }
+
+    /// Programmatic dataset from `(input, expected)` pairs — ids are
+    /// positional and not counted as repairs (examples and tests).
+    pub fn from_pairs(pairs: &[(&str, &str)]) -> Dataset {
+        Dataset {
+            rows: pairs
+                .iter()
+                .enumerate()
+                .map(|(i, (input, expected))| Row {
+                    id: format!("row-{}", i + 1),
+                    input: (*input).to_string(),
+                    expected: (*expected).to_string(),
+                })
+                .collect(),
+            ..Dataset::default()
+        }
+    }
+}
+
+/// Deterministic synthetic id for row `n` (1-based); `-dup` suffixes
+/// resolve collisions with user-provided `row-<n>` ids.
+fn synth_id(seen: &mut HashSet<String>, counter: &mut usize, n: usize) -> String {
+    *counter += 1;
+    let mut id = format!("row-{n}");
+    while !seen.insert(id.clone()) {
+        id.push_str("-dup");
+    }
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path_keeps_ids_and_fields() {
+        let ds = Dataset::parse(
+            "{\"id\": \"a\", \"input\": \"in-a\", \"expected\": \"out-a\"}\n\
+             \n\
+             {\"id\": \"b\", \"input\": \"in-b\"}\n",
+        );
+        assert_eq!(ds.errors, vec![]);
+        assert_eq!((ds.synthetic_ids, ds.dup_ids), (0, 0));
+        assert_eq!(ds.rows.len(), 2);
+        let want = Row { id: "a".into(), input: "in-a".into(), expected: "out-a".into() };
+        assert_eq!(ds.rows[0], want);
+        assert_eq!(ds.rows[1].expected, "", "missing expected defaults to empty");
+    }
+
+    #[test]
+    fn malformed_lines_are_in_band_errors_not_crashes() {
+        let ds = Dataset::parse(
+            "{\"input\": \"ok\"}\n\
+             {this is not json\n\
+             {\"expected\": \"no input here\"}\n\
+             {\"input\": 42}\n\
+             {\"input\": \"ok2\"}\n",
+        );
+        assert_eq!(ds.rows.len(), 2);
+        assert_eq!(ds.errors.len(), 3);
+        let lines: Vec<usize> = ds.errors.iter().map(|(l, _)| *l).collect();
+        assert_eq!(lines, vec![2, 3, 4], "1-based line numbers");
+        assert!(ds.errors[0].1.contains("bad JSON"));
+        assert!(ds.errors[1].1.contains("input"));
+    }
+
+    #[test]
+    fn missing_and_duplicate_ids_get_synthetics_and_counters() {
+        let ds = Dataset::parse(
+            "{\"id\": \"a\", \"input\": \"i1\"}\n\
+             {\"input\": \"i2\"}\n\
+             {\"id\": \"a\", \"input\": \"i3\"}\n",
+        );
+        assert_eq!(ds.rows.len(), 3);
+        assert_eq!(ds.rows[0].id, "a");
+        assert_eq!(ds.rows[1].id, "row-2", "missing id is positional");
+        assert_eq!(ds.rows[2].id, "row-3", "duplicate id is replaced");
+        assert_eq!(ds.synthetic_ids, 2);
+        assert_eq!(ds.dup_ids, 1);
+    }
+
+    #[test]
+    fn synthetic_ids_never_collide_with_user_ids() {
+        // A user row literally named `row-2` occupies the synthetic slot
+        // the second row would get; the repair must stay unique.
+        let ds = Dataset::parse(
+            "{\"id\": \"row-2\", \"input\": \"i1\"}\n\
+             {\"input\": \"i2\"}\n",
+        );
+        assert_eq!(ds.rows[0].id, "row-2");
+        assert_eq!(ds.rows[1].id, "row-2-dup");
+        let mut ids: Vec<&str> = ds.rows.iter().map(|r| r.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), ds.rows.len(), "ids unique after repair");
+    }
+
+    #[test]
+    fn from_pairs_is_positional_and_clean() {
+        let ds = Dataset::from_pairs(&[("p1", "e1"), ("p2", "e2")]);
+        assert_eq!(ds.rows[1].id, "row-2");
+        assert_eq!((ds.synthetic_ids, ds.dup_ids, ds.errors.len()), (0, 0, 0));
+    }
+}

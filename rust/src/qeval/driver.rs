@@ -1,0 +1,197 @@
+//! Cross-model eval driver: fan every dataset row to N hosted models.
+//!
+//! The driver speaks plain protocol v2 against any live server — the
+//! CLI self-hosts a registry over loopback (hermetic on the sim
+//! backend) or `--attach`es to a running one; the driver cannot tell
+//! the difference. Every `(model, row)` pair becomes one job on a
+//! shared queue drained by [`EvalOpts::concurrency`] worker threads
+//! (bounded in-flight requests, the same shape as the workload
+//! replayer but closed-loop: quality runs care about coverage, not
+//! arrival realism). Each job routes by the protocol-v2 `model` field,
+//! retries transport failures with backoff, and records per-row
+//! latency; in-band `{"error": ...}` replies are authoritative and
+//! never retried.
+//!
+//! Results land in per-`(model, row)` slots rather than a completion
+//! stream, so [`ModelRun::results`] is row-aligned with the dataset by
+//! construction — the report's A/B join needs no key matching.
+
+use super::dataset::Dataset;
+use crate::config::EvalOpts;
+use crate::json::Json;
+use crate::server;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One row's fate against one model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RowOutcome {
+    Done {
+        /// Completion text (what the scorers grade).
+        output: String,
+        /// Server-reported latency split, seconds.
+        ttft_s: f64,
+        tpot_s: f64,
+        latency_s: f64,
+        /// Client-observed round trip (includes transport + retries).
+        client_s: f64,
+    },
+    /// Transport gave up, or the server answered in-band with an error.
+    Error { msg: String },
+}
+
+/// All rows for one model, index-aligned with `Dataset::rows`.
+#[derive(Clone, Debug)]
+pub struct ModelRun {
+    pub model: String,
+    pub results: Vec<RowOutcome>,
+}
+
+/// One full eval: every model × every row, plus the run wall time.
+#[derive(Clone, Debug)]
+pub struct EvalRun {
+    pub models: Vec<ModelRun>,
+    pub wall_s: f64,
+}
+
+/// Score-fetch pass: send every dataset row to every named model at
+/// `addr` with bounded concurrency. Infallible per row (failures are
+/// [`RowOutcome::Error`] entries); `Err` is reserved for setup-level
+/// problems, of which there are currently none — the signature leaves
+/// room for them.
+pub fn run_eval(
+    ds: &Dataset,
+    models: &[String],
+    addr: &str,
+    opts: &EvalOpts,
+) -> Result<EvalRun> {
+    let start = Instant::now();
+    let jobs: Mutex<VecDeque<(usize, usize)>> = Mutex::new(
+        (0..models.len())
+            .flat_map(|m| (0..ds.rows.len()).map(move |r| (m, r)))
+            .collect(),
+    );
+    let slots: Vec<Vec<Mutex<Option<RowOutcome>>>> = models
+        .iter()
+        .map(|_| ds.rows.iter().map(|_| Mutex::new(None)).collect())
+        .collect();
+    let n_jobs = models.len() * ds.rows.len();
+    let workers = opts.concurrency.max(1).min(n_jobs);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = jobs.lock().unwrap().pop_front();
+                let Some((m, r)) = job else { break };
+                let out = send_row(addr, &models[m], &ds.rows[r].input, opts.max_new);
+                *slots[m][r].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    let models = models
+        .iter()
+        .zip(slots)
+        .map(|(name, row_slots)| ModelRun {
+            model: name.clone(),
+            results: row_slots
+                .into_iter()
+                .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+                .collect(),
+        })
+        .collect();
+    Ok(EvalRun { models, wall_s: start.elapsed().as_secs_f64() })
+}
+
+/// One row against one model. Transport failures retry (bounded,
+/// backing off); an in-band error reply is the server's answer and is
+/// reported as-is.
+fn send_row(addr: &str, model: &str, input: &str, max_new: usize) -> RowOutcome {
+    let t0 = Instant::now();
+    let mut last_err = String::new();
+    for attempt in 0..3u32 {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(5 << attempt));
+        }
+        match server::client_request_model(addr, input, max_new, Some(model)) {
+            Ok(reply) => return classify(&reply, t0.elapsed().as_secs_f64()),
+            Err(e) => last_err = format!("{e:#}"),
+        }
+    }
+    RowOutcome::Error { msg: format!("transport: {last_err}") }
+}
+
+fn classify(reply: &Json, client_s: f64) -> RowOutcome {
+    if let Some(err) = reply.get("error").and_then(Json::as_str) {
+        return RowOutcome::Error { msg: err.to_string() };
+    }
+    let Some(output) = reply.get("text").and_then(Json::as_str) else {
+        return RowOutcome::Error { msg: format!("malformed reply: {}", reply.to_string()) };
+    };
+    let f = |k: &str| reply.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    RowOutcome::Done {
+        output: output.to_string(),
+        ttft_s: f("ttft_s"),
+        tpot_s: f("tpot_s"),
+        latency_s: f("latency_s"),
+        client_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_splits_done_error_malformed() {
+        let done = Json::parse(
+            "{\"text\": \"hi\", \"ttft_s\": 0.01, \"tpot_s\": 0.002, \"latency_s\": 0.05}",
+        )
+        .unwrap();
+        match classify(&done, 0.06) {
+            RowOutcome::Done { output, ttft_s, latency_s, client_s, .. } => {
+                assert_eq!(output, "hi");
+                assert!((ttft_s - 0.01).abs() < 1e-12);
+                assert!((latency_s - 0.05).abs() < 1e-12);
+                assert!((client_s - 0.06).abs() < 1e-12);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        let err = Json::parse("{\"error\": \"unknown model `x`\"}").unwrap();
+        assert_eq!(
+            classify(&err, 0.0),
+            RowOutcome::Error { msg: "unknown model `x`".into() }
+        );
+        let odd = Json::parse("{\"ok\": true}").unwrap();
+        assert!(matches!(classify(&odd, 0.0), RowOutcome::Error { .. }));
+    }
+
+    #[test]
+    fn unreachable_server_yields_error_rows_not_failures() {
+        // Nothing listens here: every job must come back as a transport
+        // error row, aligned with the dataset, and run_eval still Oks.
+        let ds = Dataset::from_pairs(&[("p1", "e1"), ("p2", "e2")]);
+        let models = vec!["gqa".to_string()];
+        let opts = EvalOpts { concurrency: 4, max_new: 4, baseline: None };
+        let run = run_eval(&ds, &models, "127.0.0.1:18499", &opts).unwrap();
+        assert_eq!(run.models.len(), 1);
+        assert_eq!(run.models[0].results.len(), 2);
+        for r in &run.models[0].results {
+            match r {
+                RowOutcome::Error { msg } => assert!(msg.starts_with("transport:")),
+                other => panic!("expected transport error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dataset_or_models_is_a_clean_noop() {
+        let opts = EvalOpts::default();
+        let run = run_eval(&Dataset::default(), &["m".into()], "127.0.0.1:18499", &opts).unwrap();
+        assert_eq!(run.models.len(), 1);
+        assert!(run.models[0].results.is_empty());
+        let run = run_eval(&Dataset::from_pairs(&[("p", "e")]), &[], "127.0.0.1:18499", &opts)
+            .unwrap();
+        assert!(run.models.is_empty());
+    }
+}

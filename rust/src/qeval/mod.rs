@@ -1,0 +1,47 @@
+//! Serving-level quality harness (`transmla eval`).
+//!
+//! The paper's claim is two-sided: the serving speedup (measured by
+//! [`crate::workload`] and the benches) *and* output quality recovered
+//! after conversion. This subsystem measures the second side at the
+//! level users experience it — completion text over the wire — by
+//! fanning one dataset across N hosted models through protocol-v2
+//! routing and reporting a per-model × per-scorer matrix:
+//!
+//!   * [`dataset`] — JSONL loader (`{id?, input, expected}` rows);
+//!     malformed lines are in-band error entries, never a crash, and
+//!     missing/duplicate ids are repaired with deterministic synthetic
+//!     ids so the cross-model join can never drop or cross rows;
+//!   * [`scorers`] — the pluggable [`Scorer`] family (exact, contains,
+//!     case-folded contains, levenshtein-with-threshold, a bounded
+//!     zero-dep regex engine, JSON validity), selected by repeatable
+//!     CLI flags and composable per run;
+//!   * [`driver`] — fans every row to every model against a live
+//!     server (self-hosted registry or `--attach`) with bounded
+//!     in-flight concurrency, transport retries, and per-row latency
+//!     capture; results are row-aligned by construction;
+//!   * [`report`] — the matrix (pass-rate, mean score, n, errors) with
+//!     `metrics::summarize` latency percentiles and per-model deltas
+//!     against a named `--baseline` model, emitted as deterministic
+//!     JSONL + static HTML like the workload report.
+//!
+//! The relationship to [`crate::eval`]: that module is the *perplexity*
+//! layer (logit-level loss over the artifact executables, feeding the
+//! paper's tables); `qeval` is the *serving* layer the registry made
+//! possible — same question, asked end-to-end. With `--baseline gqa`,
+//! an MLA twin's row reads directly as quality-delta + latency-delta:
+//! "did conversion hurt, and what did it buy".
+
+pub mod dataset;
+pub mod driver;
+pub mod report;
+pub mod scorers;
+
+pub use dataset::{Dataset, Row};
+pub use driver::{run_eval, EvalRun, ModelRun, RowOutcome};
+pub use report::{EvalReport, ModelReport, ScorerCell};
+pub use scorers::{Score, Scorer};
+
+/// Minimal HTML escaping for report text cells.
+pub(crate) fn html_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}

@@ -1,0 +1,562 @@
+//! Per-model × per-scorer quality report with baseline deltas.
+//!
+//! [`EvalReport::build`] folds one [`EvalRun`] into a matrix: for each
+//! model, each scorer's pass count / pass rate / mean value over the
+//! completed rows, plus error counts and `metrics::summarize` latency
+//! percentiles. With a named baseline model, every other model's
+//! serialized row carries a `delta` object — per-scorer quality deltas
+//! and latency-percentile deltas against it, which is the GQA↔MLA A/B
+//! in one field ("did conversion hurt, and what did it buy").
+//!
+//! Determinism contract (mirrors the workload report): `build` is pure
+//! in its inputs, and [`EvalReport::to_jsonl`] / [`EvalReport::render_html`]
+//! serialize through the `BTreeMap`-backed [`Json`] writer and
+//! fixed-precision formatting — identical runs produce identical bytes,
+//! pinned by `integration_qeval.rs`.
+
+use super::dataset::Dataset;
+use super::driver::{EvalRun, RowOutcome};
+use super::scorers::Scorer;
+use crate::json::Json;
+use crate::metrics::{summarize, Summary};
+use anyhow::{bail, Context, Result};
+
+/// One (model, scorer) matrix cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScorerCell {
+    pub scorer: String,
+    /// Completed rows this scorer graded (error rows are not scored).
+    pub n: usize,
+    pub passed: usize,
+    /// Mean graded value over the `n` rows (0.0 when none completed).
+    pub mean: f64,
+}
+
+impl ScorerCell {
+    pub fn pass_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.passed as f64 / self.n as f64
+        }
+    }
+}
+
+/// One model's report row.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub model: String,
+    /// Rows attempted (= dataset rows).
+    pub n: usize,
+    pub completed: usize,
+    pub errors: usize,
+    /// One cell per scorer, in scorer-selection order.
+    pub cells: Vec<ScorerCell>,
+    /// Server-reported series over completed rows.
+    pub ttft: Option<Summary>,
+    pub latency: Option<Summary>,
+}
+
+/// The full eval report: dataset diagnostics + one row per model.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub label: String,
+    pub baseline: Option<String>,
+    pub n_rows: usize,
+    /// Dataset lines that failed to parse (in-band, never fatal).
+    pub malformed: usize,
+    /// Rows whose id was repaired (missing or duplicate).
+    pub synthetic_ids: usize,
+    pub dup_ids: usize,
+    pub wall_s: f64,
+    pub models: Vec<ModelReport>,
+}
+
+impl EvalReport {
+    /// Fold a run into the matrix. Pure in its inputs. Fails on
+    /// structural problems only: no scorers, duplicate scorer names, a
+    /// baseline that was not evaluated, or row-count drift between the
+    /// dataset and a model run (the join invariant).
+    pub fn build(
+        label: &str,
+        ds: &Dataset,
+        scorers: &[Box<dyn Scorer>],
+        run: &EvalRun,
+        baseline: Option<&str>,
+    ) -> Result<EvalReport> {
+        if scorers.is_empty() {
+            bail!("no scorers selected");
+        }
+        for (i, s) in scorers.iter().enumerate() {
+            if scorers[..i].iter().any(|o| o.name() == s.name()) {
+                bail!("duplicate scorer `{}`", s.name());
+            }
+        }
+        if let Some(b) = baseline {
+            if !run.models.iter().any(|m| m.model == b) {
+                bail!("baseline `{b}` is not among the evaluated models");
+            }
+        }
+        let mut models = Vec::new();
+        for mr in &run.models {
+            if mr.results.len() != ds.rows.len() {
+                bail!(
+                    "model `{}` returned {} results for {} dataset rows",
+                    mr.model,
+                    mr.results.len(),
+                    ds.rows.len()
+                );
+            }
+            let mut cells: Vec<ScorerCell> = scorers
+                .iter()
+                .map(|s| ScorerCell { scorer: s.name(), n: 0, passed: 0, mean: 0.0 })
+                .collect();
+            let (mut ttft, mut latency) = (Vec::new(), Vec::new());
+            let mut errors = 0usize;
+            for (row, res) in ds.rows.iter().zip(&mr.results) {
+                match res {
+                    RowOutcome::Done { output, ttft_s, latency_s, .. } => {
+                        ttft.push(*ttft_s);
+                        latency.push(*latency_s);
+                        for (cell, s) in cells.iter_mut().zip(scorers) {
+                            let sc = s.score(output, &row.expected);
+                            cell.n += 1;
+                            cell.passed += usize::from(sc.passed);
+                            cell.mean += sc.value;
+                        }
+                    }
+                    RowOutcome::Error { .. } => errors += 1,
+                }
+            }
+            for cell in &mut cells {
+                if cell.n > 0 {
+                    cell.mean /= cell.n as f64;
+                }
+            }
+            models.push(ModelReport {
+                model: mr.model.clone(),
+                n: mr.results.len(),
+                completed: mr.results.len() - errors,
+                errors,
+                cells,
+                ttft: summarize(&ttft),
+                latency: summarize(&latency),
+            });
+        }
+        Ok(EvalReport {
+            label: label.to_string(),
+            baseline: baseline.map(str::to_string),
+            n_rows: ds.rows.len(),
+            malformed: ds.errors.len(),
+            synthetic_ids: ds.synthetic_ids,
+            dup_ids: ds.dup_ids,
+            wall_s: run.wall_s,
+            models,
+        })
+    }
+
+    fn baseline_model(&self) -> Option<&ModelReport> {
+        self.baseline.as_deref().and_then(|b| self.models.iter().find(|m| m.model == b))
+    }
+
+    /// Serialize: one `eval-meta` line (label, dataset diagnostics,
+    /// scorer and model listings), then one `eval-model` line per
+    /// model; non-baseline rows carry the `delta` object. Deterministic
+    /// key order via the `Json` writer.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut meta = Json::obj();
+        meta.set("kind", Json::Str("eval-meta".into()));
+        meta.set("label", Json::Str(self.label.clone()));
+        meta.set(
+            "baseline",
+            match &self.baseline {
+                Some(b) => Json::Str(b.clone()),
+                None => Json::Null,
+            },
+        );
+        meta.set("n_rows", Json::Num(self.n_rows as f64));
+        meta.set("malformed", Json::Num(self.malformed as f64));
+        meta.set("synthetic_ids", Json::Num(self.synthetic_ids as f64));
+        meta.set("dup_ids", Json::Num(self.dup_ids as f64));
+        meta.set("wall_s", Json::Num(self.wall_s));
+        meta.set(
+            "scorers",
+            Json::Arr(
+                self.models
+                    .first()
+                    .map(|m| m.cells.iter().map(|c| Json::Str(c.scorer.clone())).collect())
+                    .unwrap_or_default(),
+            ),
+        );
+        meta.set(
+            "models",
+            Json::Arr(self.models.iter().map(|m| Json::Str(m.model.clone())).collect()),
+        );
+        out.push_str(&meta.to_string());
+        out.push('\n');
+        let base = self.baseline_model();
+        for m in &self.models {
+            let mut j = Json::obj();
+            j.set("kind", Json::Str("eval-model".into()));
+            j.set("model", Json::Str(m.model.clone()));
+            j.set("n", Json::Num(m.n as f64));
+            j.set("completed", Json::Num(m.completed as f64));
+            j.set("errors", Json::Num(m.errors as f64));
+            let mut scores = Json::obj();
+            for c in &m.cells {
+                let mut cj = Json::obj();
+                cj.set("n", Json::Num(c.n as f64));
+                cj.set("passed", Json::Num(c.passed as f64));
+                cj.set("pass_rate", Json::Num(c.pass_rate()));
+                cj.set("mean", Json::Num(c.mean));
+                scores.set(&c.scorer, cj);
+            }
+            j.set("scores", scores);
+            for (name, s) in [("ttft_s", &m.ttft), ("latency_s", &m.latency)] {
+                if let Some(s) = s {
+                    j.set(name, summary_json(s));
+                }
+            }
+            if let Some(base) = base {
+                if base.model != m.model {
+                    j.set("delta", delta_json(base, m));
+                }
+            }
+            out.push_str(&j.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a [`EvalReport::to_jsonl`] document back as
+    /// `(meta, model rows)`, validating the keys the comparison
+    /// tooling relies on.
+    pub fn parse(text: &str) -> Result<(Json, Vec<Json>)> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let meta = Json::parse(lines.next().context("empty eval report")?)?;
+        if meta.get("kind").and_then(Json::as_str) != Some("eval-meta") {
+            bail!("not an eval report (missing `\"kind\":\"eval-meta\"` meta line)");
+        }
+        for k in ["label", "n_rows", "malformed", "synthetic_ids", "dup_ids", "scorers", "models"]
+        {
+            meta.get(k).with_context(|| format!("eval meta missing `{k}`"))?;
+        }
+        let mut rows = Vec::new();
+        for line in lines {
+            let j = Json::parse(line)?;
+            if j.get("kind").and_then(Json::as_str) != Some("eval-model") {
+                bail!("unexpected line kind in eval report (want `eval-model`)");
+            }
+            for k in ["model", "n", "completed", "errors", "scores"] {
+                j.get(k).with_context(|| format!("eval model row missing `{k}`"))?;
+            }
+            rows.push(j);
+        }
+        Ok((meta, rows))
+    }
+
+    /// Console summary: one line per model, deltas inline.
+    pub fn human(&self) -> String {
+        let mut out = format!(
+            "{}: {} rows ({} malformed, {} synthetic ids, {} duplicate ids), \
+             {} models in {:.2}s",
+            self.label,
+            self.n_rows,
+            self.malformed,
+            self.synthetic_ids,
+            self.dup_ids,
+            self.models.len(),
+            self.wall_s
+        );
+        let base = self.baseline_model();
+        for m in &self.models {
+            out.push_str(&format!(
+                "\n  {}: {}/{} completed, {} errors",
+                m.model, m.completed, m.n, m.errors
+            ));
+            for c in &m.cells {
+                out.push_str(&format!(
+                    " | {} {:.1}% (mean {:.3})",
+                    c.scorer,
+                    c.pass_rate() * 100.0,
+                    c.mean
+                ));
+            }
+            if let Some(s) = &m.latency {
+                out.push_str(&format!(" | lat p50 {:.1}ms", s.p50 * 1e3));
+            }
+            if let Some(b) = base {
+                if b.model != m.model {
+                    for (c, bc) in m.cells.iter().zip(&b.cells) {
+                        out.push_str(&format!(
+                            " | Δ{} {:+.1}pp",
+                            c.scorer,
+                            (c.pass_rate() - bc.pass_rate()) * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Static HTML: the same matrix, one row per model, per-scorer
+    /// pass-rate cells annotated with the baseline delta. Fixed
+    /// precision throughout — deterministic bytes.
+    pub fn render_html(&self, title: &str) -> String {
+        let esc = super::html_escape;
+        let base = self.baseline_model();
+        let mut h = String::new();
+        h.push_str("<!doctype html>\n<html><head><meta charset=\"utf-8\">\n");
+        h.push_str(&format!("<title>{}</title>\n", esc(title)));
+        h.push_str(
+            "<style>body{font:14px sans-serif;margin:2em}table{border-collapse:collapse}\n\
+             th,td{border:1px solid #999;padding:4px 8px;text-align:right}\n\
+             th{background:#eee}td.l,th.l{text-align:left}</style></head><body>\n",
+        );
+        h.push_str(&format!("<h1>{}</h1>\n", esc(title)));
+        h.push_str(&format!(
+            "<p>label <b>{}</b> — {} rows, {} malformed lines, {} synthetic ids \
+             ({} duplicates), wall {:.2}s</p>\n<table>\n<tr><th class=\"l\">model</th>\
+             <th>n</th><th>completed</th><th>errors</th>",
+            esc(&self.label),
+            self.n_rows,
+            self.malformed,
+            self.synthetic_ids,
+            self.dup_ids,
+            self.wall_s
+        ));
+        let scorer_names: Vec<&str> = self
+            .models
+            .first()
+            .map(|m| m.cells.iter().map(|c| c.scorer.as_str()).collect())
+            .unwrap_or_default();
+        for name in &scorer_names {
+            h.push_str(&format!("<th>{} pass</th><th>{} mean</th>", esc(name), esc(name)));
+        }
+        h.push_str("<th>ttft p50 (ms)</th><th>lat p50 (ms)</th><th>lat p95 (ms)</th></tr>\n");
+        let ms = |s: &Option<Summary>, f: fn(&Summary) -> f64| match s {
+            Some(s) => format!("{:.2}", f(s) * 1e3),
+            None => "–".to_string(),
+        };
+        for m in &self.models {
+            let is_base = base.map(|b| b.model == m.model).unwrap_or(false);
+            h.push_str(&format!(
+                "<tr><td class=\"l\">{}{}</td><td>{}</td><td>{}</td><td>{}</td>",
+                esc(&m.model),
+                if is_base { " (baseline)" } else { "" },
+                m.n,
+                m.completed,
+                m.errors
+            ));
+            for c in &m.cells {
+                let delta = match base {
+                    Some(b) if !is_base => b
+                        .cells
+                        .iter()
+                        .find(|bc| bc.scorer == c.scorer)
+                        .map(|bc| {
+                            format!(
+                                " ({:+.1}pp)",
+                                (c.pass_rate() - bc.pass_rate()) * 100.0
+                            )
+                        })
+                        .unwrap_or_default(),
+                    _ => String::new(),
+                };
+                h.push_str(&format!(
+                    "<td>{:.1}%{}</td><td>{:.3}</td>",
+                    c.pass_rate() * 100.0,
+                    delta,
+                    c.mean
+                ));
+            }
+            h.push_str(&format!(
+                "<td>{}</td><td>{}</td><td>{}</td></tr>\n",
+                ms(&m.ttft, |s| s.p50),
+                ms(&m.latency, |s| s.p50),
+                ms(&m.latency, |s| s.p95)
+            ));
+        }
+        h.push_str("</table></body></html>\n");
+        h
+    }
+}
+
+fn summary_json(s: &Summary) -> Json {
+    let mut j = Json::obj();
+    j.set("n", Json::Num(s.n as f64));
+    j.set("mean", Json::Num(s.mean));
+    j.set("p50", Json::Num(s.p50));
+    j.set("p95", Json::Num(s.p95));
+    j.set("p99", Json::Num(s.p99));
+    j.set("max", Json::Num(s.max));
+    j
+}
+
+/// Per-scorer quality deltas and latency-percentile deltas vs the
+/// baseline (positive = this model higher than baseline).
+fn delta_json(base: &ModelReport, m: &ModelReport) -> Json {
+    let mut d = Json::obj();
+    let mut scores = Json::obj();
+    for c in &m.cells {
+        if let Some(bc) = base.cells.iter().find(|b| b.scorer == c.scorer) {
+            let mut cj = Json::obj();
+            cj.set("pass_rate", Json::Num(c.pass_rate() - bc.pass_rate()));
+            cj.set("mean", Json::Num(c.mean - bc.mean));
+            scores.set(&c.scorer, cj);
+        }
+    }
+    d.set("scores", scores);
+    let p50 = |s: &Option<Summary>| s.as_ref().map(|s| s.p50);
+    if let (Some(a), Some(b)) = (p50(&m.latency), p50(&base.latency)) {
+        d.set("latency_p50_s", Json::Num(a - b));
+    }
+    if let (Some(a), Some(b)) = (p50(&m.ttft), p50(&base.ttft)) {
+        d.set("ttft_p50_s", Json::Num(a - b));
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qeval::driver::ModelRun;
+    use crate::qeval::scorers;
+
+    /// Deterministic synthetic run: model 0 echoes every expected
+    /// value, model 1 misses odd rows, timings are index-derived —
+    /// no server, no clock, byte-stable.
+    fn synthetic(rows: usize) -> (Dataset, EvalRun, Vec<Box<dyn Scorer>>) {
+        let pairs: Vec<(String, String)> = (0..rows)
+            .map(|i| (format!("in-{i}"), format!("out-{i}")))
+            .collect();
+        let refs: Vec<(&str, &str)> =
+            pairs.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+        let ds = Dataset::from_pairs(&refs);
+        let outcome = |model: usize, i: usize| {
+            if model == 1 && i == rows - 1 {
+                return RowOutcome::Error { msg: "overloaded".into() };
+            }
+            let output = if model == 0 || i % 2 == 0 {
+                format!("out-{i}")
+            } else {
+                format!("out-{i}X")
+            };
+            RowOutcome::Done {
+                output,
+                ttft_s: 0.010 + i as f64 * 0.001 + model as f64 * 0.002,
+                tpot_s: 0.002,
+                latency_s: 0.050 + i as f64 * 0.001,
+                client_s: 0.055,
+            }
+        };
+        let run = EvalRun {
+            models: vec![
+                ModelRun {
+                    model: "gqa".into(),
+                    results: (0..rows).map(|i| outcome(0, i)).collect(),
+                },
+                ModelRun {
+                    model: "mla".into(),
+                    results: (0..rows).map(|i| outcome(1, i)).collect(),
+                },
+            ],
+            wall_s: 1.25,
+        };
+        let scorers = scorers::from_flags(&[
+            ("exact".to_string(), "true".to_string()),
+            ("levenshtein".to_string(), "0.8".to_string()),
+        ])
+        .unwrap();
+        (ds, run, scorers)
+    }
+
+    #[test]
+    fn matrix_counts_and_deltas() {
+        let (ds, run, sc) = synthetic(6);
+        let rep = EvalReport::build("t", &ds, &sc, &run, Some("gqa")).unwrap();
+        assert_eq!(rep.models.len(), 2);
+        let gqa = &rep.models[0];
+        assert_eq!((gqa.n, gqa.completed, gqa.errors), (6, 6, 0));
+        assert_eq!(gqa.cells[0].pass_rate(), 1.0, "baseline echoes expected");
+        let mla = &rep.models[1];
+        assert_eq!((mla.n, mla.completed, mla.errors), (6, 5, 1));
+        // 5 completed rows 0..=4; odd rows 1,3 mismatch -> 3/5 exact.
+        assert_eq!(mla.cells[0].passed, 3);
+        assert!((mla.cells[0].pass_rate() - 0.6).abs() < 1e-12);
+        // levenshtein similarity of "out-1X" vs "out-1": 1 - 1/6.
+        assert!(mla.cells[1].mean > 0.9 && mla.cells[1].mean < 1.0);
+        assert_eq!(gqa.latency.as_ref().unwrap().n, 6);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_deltas_and_validation() {
+        let (ds, run, sc) = synthetic(6);
+        let rep = EvalReport::build("t", &ds, &sc, &run, Some("gqa")).unwrap();
+        let text = rep.to_jsonl();
+        let (meta, rows) = EvalReport::parse(&text).unwrap();
+        assert_eq!(meta.get("baseline").and_then(Json::as_str), Some("gqa"));
+        assert_eq!(meta.get("scorers").and_then(Json::as_arr).unwrap().len(), 2);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].get("delta").is_none(), "baseline row carries no delta");
+        let delta = rows[1].get("delta").expect("non-baseline row carries delta");
+        let d_exact = delta
+            .get("scores")
+            .and_then(|s| s.get("exact"))
+            .and_then(|e| e.get("pass_rate"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((d_exact - (0.6 - 1.0)).abs() < 1e-12);
+        assert!(delta.get("latency_p50_s").is_some());
+        // Validation: truncated or mislabeled documents are rejected.
+        assert!(EvalReport::parse("").is_err());
+        assert!(EvalReport::parse("{\"kind\":\"workload\"}").is_err());
+    }
+
+    #[test]
+    fn bytes_reproducible_and_input_sensitive() {
+        let (ds, run, sc) = synthetic(5);
+        let a = EvalReport::build("t", &ds, &sc, &run, Some("gqa")).unwrap();
+        let b = EvalReport::build("t", &ds, &sc, &run, Some("gqa")).unwrap();
+        assert_eq!(a.to_jsonl(), b.to_jsonl(), "JSONL byte-stable");
+        assert_eq!(a.render_html("x"), b.render_html("x"), "HTML byte-stable");
+        let (ds2, run2, sc2) = synthetic(4);
+        let c = EvalReport::build("t", &ds2, &sc2, &run2, Some("gqa")).unwrap();
+        assert_ne!(a.to_jsonl(), c.to_jsonl(), "different inputs, different bytes");
+        let html = a.render_html("transmla eval report");
+        assert!(html.contains("(baseline)"));
+        assert!(html.contains("pp)"), "delta annotation present");
+    }
+
+    #[test]
+    fn structural_errors_bail() {
+        let (ds, run, sc) = synthetic(3);
+        assert!(EvalReport::build("t", &ds, &sc, &run, Some("nope")).is_err());
+        assert!(EvalReport::build("t", &ds, &[], &run, None).is_err());
+        let mut short = run.clone();
+        short.models[0].results.pop();
+        assert!(EvalReport::build("t", &ds, &sc, &short, None).is_err());
+    }
+
+    #[test]
+    fn error_only_model_reports_empty_cells() {
+        let ds = Dataset::from_pairs(&[("p", "e")]);
+        let run = EvalRun {
+            models: vec![ModelRun {
+                model: "m".into(),
+                results: vec![RowOutcome::Error { msg: "nope".into() }],
+            }],
+            wall_s: 0.1,
+        };
+        let sc = scorers::from_flags(&[("exact".to_string(), "true".to_string())]).unwrap();
+        let rep = EvalReport::build("t", &ds, &sc, &run, None).unwrap();
+        let m = &rep.models[0];
+        assert_eq!((m.completed, m.errors), (0, 1));
+        assert_eq!(m.cells[0].n, 0);
+        assert_eq!(m.cells[0].pass_rate(), 0.0);
+        assert!(m.latency.is_none());
+        assert!(rep.render_html("t").contains("–"), "missing summaries render as dashes");
+    }
+}

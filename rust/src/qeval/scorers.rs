@@ -1,0 +1,721 @@
+//! Pluggable output scorers for the quality harness.
+//!
+//! A [`Scorer`] grades one `(output, expected)` string pair into a
+//! [`Score`] — a binary pass plus a graded value in `[0, 1]` — and the
+//! harness runs every selected scorer over every completed row, so one
+//! eval produces a per-model × per-scorer matrix. Scorers are selected
+//! by repeatable CLI flags ([`from_flags`]) and composable per run:
+//!
+//! | flag               | scorer                                        |
+//! |--------------------|-----------------------------------------------|
+//! | `--exact`          | output equals expected, byte for byte         |
+//! | `--contains`       | output contains expected as a substring       |
+//! | `--contains-i`     | same, case-folded                             |
+//! | `--levenshtein M`  | normalized edit similarity ≥ M (graded value) |
+//! | `--regex PATTERN`  | output matches PATTERN                        |
+//! | `--json`           | output parses as JSON                         |
+//!
+//! The regex scorer runs a deliberately small engine written here
+//! (zero-dep repo): literals, `.`, postfix `* + ?`, classes with
+//! ranges and negation, `\d \w \s` (and negations), anchors `^`/`$`,
+//! and top-level alternation — no groups. Compilation never panics
+//! (errors are `Err`), and matching carries a hard step budget so a
+//! pathological pattern reports "no match" instead of hanging; both
+//! are pinned by the property tests below.
+
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One scorer's verdict on one `(output, expected)` pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Score {
+    /// Pass/fail under the scorer's own criterion.
+    pub passed: bool,
+    /// Graded value in `[0, 1]` (binary scorers report 1.0 or 0.0).
+    pub value: f64,
+}
+
+impl Score {
+    fn binary(passed: bool) -> Score {
+        Score { passed, value: if passed { 1.0 } else { 0.0 } }
+    }
+}
+
+/// A pluggable output scorer (`Send + Sync` so one set can be shared
+/// across driver threads).
+pub trait Scorer: Send + Sync {
+    /// Stable name — the report's column key, unique per run.
+    fn name(&self) -> String;
+    fn score(&self, output: &str, expected: &str) -> Score;
+}
+
+/// `--exact`: output equals expected, byte for byte.
+pub struct Exact;
+
+impl Scorer for Exact {
+    fn name(&self) -> String {
+        "exact".into()
+    }
+
+    fn score(&self, output: &str, expected: &str) -> Score {
+        Score::binary(output == expected)
+    }
+}
+
+/// `--contains` / `--contains-i`: output contains expected as a
+/// substring (optionally case-folded).
+pub struct Contains {
+    pub case_insensitive: bool,
+}
+
+impl Scorer for Contains {
+    fn name(&self) -> String {
+        if self.case_insensitive { "contains-i".into() } else { "contains".into() }
+    }
+
+    fn score(&self, output: &str, expected: &str) -> Score {
+        let hit = if self.case_insensitive {
+            output.to_lowercase().contains(&expected.to_lowercase())
+        } else {
+            output.contains(expected)
+        };
+        Score::binary(hit)
+    }
+}
+
+/// `--json`: output parses as JSON (expected is ignored — validity is
+/// the criterion, useful for tool-call style outputs).
+pub struct JsonValidity;
+
+impl Scorer for JsonValidity {
+    fn name(&self) -> String {
+        "json".into()
+    }
+
+    fn score(&self, output: &str, _expected: &str) -> Score {
+        Score::binary(Json::parse(output.trim()).is_ok())
+    }
+}
+
+/// `--levenshtein M`: normalized edit similarity, the one graded
+/// scorer — `value` is the similarity itself, `passed` is `value >= M`.
+pub struct Levenshtein {
+    pub min_sim: f64,
+}
+
+impl Levenshtein {
+    pub fn new(min_sim: f64) -> Result<Levenshtein> {
+        if !min_sim.is_finite() || !(0.0..=1.0).contains(&min_sim) {
+            bail!("levenshtein threshold `{min_sim}` out of range (want [0, 1])");
+        }
+        Ok(Levenshtein { min_sim })
+    }
+}
+
+impl Scorer for Levenshtein {
+    fn name(&self) -> String {
+        "levenshtein".into()
+    }
+
+    fn score(&self, output: &str, expected: &str) -> Score {
+        let sim = similarity(output, expected);
+        Score { passed: sim >= self.min_sim, value: sim }
+    }
+}
+
+/// Levenshtein edit distance over chars (two-row DP: O(|a|·|b|) time,
+/// O(min) memory would need the shorter row — |b|+1 is small enough).
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Normalized similarity: `1 - dist / max(len)`, in `[0, 1]`; two empty
+/// strings are identical (1.0).
+pub fn similarity(a: &str, b: &str) -> f64 {
+    let m = a.chars().count().max(b.chars().count());
+    if m == 0 {
+        return 1.0;
+    }
+    1.0 - levenshtein(a, b) as f64 / m as f64
+}
+
+/// `--regex PATTERN`: output matches the pattern (expected ignored).
+pub struct RegexScorer {
+    re: Regex,
+}
+
+impl RegexScorer {
+    pub fn new(pattern: &str) -> Result<RegexScorer> {
+        Ok(RegexScorer { re: Regex::compile(pattern)? })
+    }
+}
+
+impl Scorer for RegexScorer {
+    fn name(&self) -> String {
+        "regex".into()
+    }
+
+    fn score(&self, output: &str, _expected: &str) -> Score {
+        Score::binary(self.re.is_match(output))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The bounded regex engine.
+
+const MAX_PIECES: usize = 256;
+const MAX_ALTS: usize = 64;
+/// Hard cap on matcher recursion steps per `is_match` call; exhaustion
+/// reports "no match" rather than hanging on pathological backtracking.
+const STEP_BUDGET: usize = 1 << 20;
+
+/// Compiled pattern: top-level alternatives, each a piece sequence with
+/// optional `^`/`$` anchors. Recursion depth is bounded by the piece
+/// count (≤ [`MAX_PIECES`]), total work by [`STEP_BUDGET`].
+pub struct Regex {
+    alts: Vec<Alt>,
+}
+
+#[derive(Clone, Debug)]
+struct Alt {
+    anchor_start: bool,
+    anchor_end: bool,
+    pieces: Vec<Piece>,
+}
+
+#[derive(Clone, Debug)]
+struct Piece {
+    atom: Atom,
+    rep: Rep,
+}
+
+#[derive(Clone, Debug)]
+enum Atom {
+    Lit(char),
+    Any,
+    /// Inclusive char ranges (a single char is a degenerate range).
+    Class { neg: bool, items: Vec<(char, char)> },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Rep {
+    One,
+    Star,
+    Plus,
+    Opt,
+}
+
+impl Regex {
+    /// Compile, never panic: syntax problems (dangling repetition,
+    /// unclosed class, trailing escape, unsupported escape, inverted
+    /// range, oversize pattern) are all `Err`.
+    pub fn compile(pattern: &str) -> Result<Regex> {
+        let chars: Vec<char> = pattern.chars().collect();
+        let mut alts = Vec::new();
+        let (mut start, mut i) = (0usize, 0usize);
+        let mut in_class = false;
+        // Split on top-level `|` (escapes and classes shield the bar).
+        while i < chars.len() {
+            match chars[i] {
+                '\\' => i += 1,
+                '[' if !in_class => in_class = true,
+                ']' if in_class => in_class = false,
+                '|' if !in_class => {
+                    alts.push(parse_alt(&chars[start..i])?);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        alts.push(parse_alt(&chars[start..])?);
+        if alts.len() > MAX_ALTS {
+            bail!("regex: more than {MAX_ALTS} alternatives");
+        }
+        Ok(Regex { alts })
+    }
+
+    /// Unanchored match (unless the pattern anchors itself). Budget
+    /// exhaustion returns `false` — deterministic for a given
+    /// (pattern, text) pair, never a hang.
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        let mut budget = STEP_BUDGET;
+        for alt in &self.alts {
+            let last_start = if alt.anchor_start { 0 } else { chars.len() };
+            for s in 0..=last_start {
+                if match_at(&alt.pieces, &chars, s, alt.anchor_end, &mut budget) {
+                    return true;
+                }
+                if budget == 0 {
+                    return false;
+                }
+            }
+        }
+        false
+    }
+}
+
+fn parse_alt(chars: &[char]) -> Result<Alt> {
+    let mut i = 0usize;
+    let anchor_start = chars.first() == Some(&'^');
+    if anchor_start {
+        i = 1;
+    }
+    let mut anchor_end = false;
+    let mut pieces: Vec<Piece> = Vec::new();
+    while i < chars.len() {
+        let c = chars[i];
+        // `$` in final position is the end anchor; elsewhere a literal.
+        if c == '$' && i + 1 == chars.len() {
+            anchor_end = true;
+            break;
+        }
+        let atom = match c {
+            '.' => {
+                i += 1;
+                Atom::Any
+            }
+            '\\' => {
+                let e = *chars.get(i + 1).context("regex: trailing `\\`")?;
+                i += 2;
+                escape_atom(e)?
+            }
+            '[' => {
+                let (cls, next) = parse_class(chars, i)?;
+                i = next;
+                cls
+            }
+            '*' | '+' | '?' => bail!("regex: repetition `{c}` with nothing to repeat"),
+            other => {
+                i += 1;
+                Atom::Lit(other)
+            }
+        };
+        let rep = match chars.get(i) {
+            Some('*') => {
+                i += 1;
+                Rep::Star
+            }
+            Some('+') => {
+                i += 1;
+                Rep::Plus
+            }
+            Some('?') => {
+                i += 1;
+                Rep::Opt
+            }
+            _ => Rep::One,
+        };
+        pieces.push(Piece { atom, rep });
+        if pieces.len() > MAX_PIECES {
+            bail!("regex: more than {MAX_PIECES} pieces in one alternative");
+        }
+    }
+    Ok(Alt { anchor_start, anchor_end, pieces })
+}
+
+fn word_items() -> Vec<(char, char)> {
+    vec![('0', '9'), ('A', 'Z'), ('_', '_'), ('a', 'z')]
+}
+
+fn space_items() -> Vec<(char, char)> {
+    vec![('\t', '\t'), ('\n', '\n'), ('\r', '\r'), (' ', ' ')]
+}
+
+fn escape_atom(e: char) -> Result<Atom> {
+    Ok(match e {
+        'd' => Atom::Class { neg: false, items: vec![('0', '9')] },
+        'D' => Atom::Class { neg: true, items: vec![('0', '9')] },
+        'w' => Atom::Class { neg: false, items: word_items() },
+        'W' => Atom::Class { neg: true, items: word_items() },
+        's' => Atom::Class { neg: false, items: space_items() },
+        'S' => Atom::Class { neg: true, items: space_items() },
+        'n' => Atom::Lit('\n'),
+        't' => Atom::Lit('\t'),
+        'r' => Atom::Lit('\r'),
+        c if c.is_ascii_alphanumeric() => bail!("regex: unsupported escape `\\{c}`"),
+        c => Atom::Lit(c), // punctuation escapes: \. \* \[ \| \\ \$ ...
+    })
+}
+
+/// Parse a `[...]` class starting at `chars[start] == '['`; returns the
+/// atom and the index one past the closing `]`. A leading `]` and a
+/// trailing `-` are literals, `[^...]` negates, `\d \w \s` expand.
+fn parse_class(chars: &[char], start: usize) -> Result<(Atom, usize)> {
+    let mut i = start + 1;
+    let neg = chars.get(i) == Some(&'^');
+    if neg {
+        i += 1;
+    }
+    let mut items: Vec<(char, char)> = Vec::new();
+    let mut first = true;
+    loop {
+        let &c = chars.get(i).context("regex: unclosed `[` class")?;
+        if c == ']' && !first {
+            return Ok((Atom::Class { neg, items }, i + 1));
+        }
+        first = false;
+        let lo = if c == '\\' {
+            let &e = chars.get(i + 1).context("regex: trailing `\\` in class")?;
+            i += 1;
+            match e {
+                'd' => {
+                    items.push(('0', '9'));
+                    i += 1;
+                    continue;
+                }
+                'w' => {
+                    items.extend(word_items());
+                    i += 1;
+                    continue;
+                }
+                's' => {
+                    items.extend(space_items());
+                    i += 1;
+                    continue;
+                }
+                other => class_escape(other)?,
+            }
+        } else {
+            c
+        };
+        i += 1;
+        // `lo-hi` range; a `-` followed by `]` is a literal dash.
+        let ranged = chars.get(i) == Some(&'-') && chars.get(i + 1).is_some_and(|&c| c != ']');
+        if ranged {
+            i += 1;
+            let mut hi = *chars.get(i).context("regex: unclosed `[` class")?;
+            if hi == '\\' {
+                let &e = chars.get(i + 1).context("regex: trailing `\\` in class")?;
+                hi = class_escape(e)?;
+                i += 1;
+            }
+            i += 1;
+            if hi < lo {
+                bail!("regex: inverted class range `{lo}-{hi}`");
+            }
+            items.push((lo, hi));
+        } else {
+            items.push((lo, lo));
+        }
+        if items.len() > MAX_PIECES {
+            bail!("regex: class with more than {MAX_PIECES} items");
+        }
+    }
+}
+
+/// Single-char class escapes (`\d \w \s` are handled by the caller,
+/// which splices their ranges in).
+fn class_escape(e: char) -> Result<char> {
+    Ok(match e {
+        'n' => '\n',
+        't' => '\t',
+        'r' => '\r',
+        c if c.is_ascii_alphanumeric() => bail!("regex: unsupported class escape `\\{c}`"),
+        c => c,
+    })
+}
+
+fn atom_matches(atom: &Atom, c: char) -> bool {
+    match atom {
+        Atom::Lit(l) => *l == c,
+        Atom::Any => true,
+        Atom::Class { neg, items } => {
+            items.iter().any(|&(lo, hi)| (lo..=hi).contains(&c)) != *neg
+        }
+    }
+}
+
+/// Backtracking matcher for `pieces` at text position `pos`. Greedy
+/// repetitions try their longest run first; every call burns one unit
+/// of `budget`, and an exhausted budget fails the match. Recursion
+/// depth is bounded by `pieces.len()` (each call drops one piece).
+fn match_at(
+    pieces: &[Piece],
+    text: &[char],
+    pos: usize,
+    anchor_end: bool,
+    budget: &mut usize,
+) -> bool {
+    if *budget == 0 {
+        return false;
+    }
+    *budget -= 1;
+    let Some(piece) = pieces.first() else {
+        return !anchor_end || pos == text.len();
+    };
+    let rest = &pieces[1..];
+    match piece.rep {
+        Rep::One => {
+            pos < text.len()
+                && atom_matches(&piece.atom, text[pos])
+                && match_at(rest, text, pos + 1, anchor_end, budget)
+        }
+        Rep::Opt => {
+            (pos < text.len()
+                && atom_matches(&piece.atom, text[pos])
+                && match_at(rest, text, pos + 1, anchor_end, budget))
+                || match_at(rest, text, pos, anchor_end, budget)
+        }
+        Rep::Star | Rep::Plus => {
+            let mut end = pos;
+            while end < text.len() && atom_matches(&piece.atom, text[end]) {
+                end += 1;
+            }
+            let min = pos + usize::from(piece.rep == Rep::Plus);
+            if end < min {
+                return false;
+            }
+            let mut k = end;
+            loop {
+                if match_at(rest, text, k, anchor_end, budget) {
+                    return true;
+                }
+                if k == min || *budget == 0 {
+                    return false;
+                }
+                k -= 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI flag surface.
+
+/// Build the scorer set from `(flag, value)` pairs in command-line
+/// order (the CLI's `all_flags`). Non-scorer flags are ignored, so the
+/// whole flag list can be passed through. Boolean scorer flags accept
+/// `true|on|1` (a bare `--exact` records `true`) and are skipped on
+/// `false|off|0`; selecting the same scorer twice is an error (one
+/// configuration per column per run).
+pub fn from_flags(pairs: &[(String, String)]) -> Result<Vec<Box<dyn Scorer>>> {
+    let mut out: Vec<Box<dyn Scorer>> = Vec::new();
+    for (k, v) in pairs {
+        let scorer: Option<Box<dyn Scorer>> = match k.as_str() {
+            "exact" => bool_flag(k, v)?.then(|| Box::new(Exact) as Box<dyn Scorer>),
+            "contains" => bool_flag(k, v)?
+                .then(|| Box::new(Contains { case_insensitive: false }) as Box<dyn Scorer>),
+            "contains-i" => bool_flag(k, v)?
+                .then(|| Box::new(Contains { case_insensitive: true }) as Box<dyn Scorer>),
+            "json" => bool_flag(k, v)?.then(|| Box::new(JsonValidity) as Box<dyn Scorer>),
+            "levenshtein" => {
+                let min = v.parse::<f64>().ok().with_context(|| {
+                    format!("bad --levenshtein `{v}` (min similarity in [0, 1])")
+                })?;
+                Some(Box::new(Levenshtein::new(min)?))
+            }
+            "regex" => Some(Box::new(RegexScorer::new(v)?)),
+            _ => None,
+        };
+        if let Some(s) = scorer {
+            if out.iter().any(|o| o.name() == s.name()) {
+                bail!("scorer `{}` selected twice (each scorer may appear once per run)", s.name());
+            }
+            out.push(s);
+        }
+    }
+    Ok(out)
+}
+
+fn bool_flag(k: &str, v: &str) -> Result<bool> {
+    match v {
+        "true" | "on" | "1" => Ok(true),
+        "false" | "off" | "0" => Ok(false),
+        other => bail!("bad --{k} `{other}` (boolean flag)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn exact_contains_json_basics() {
+        assert!(Exact.score("abc", "abc").passed);
+        assert!(!Exact.score("abc", "abc ").passed);
+        assert!(Contains { case_insensitive: false }.score("xx abc yy", "abc").passed);
+        assert!(!Contains { case_insensitive: false }.score("xx ABC yy", "abc").passed);
+        assert!(Contains { case_insensitive: true }.score("xx ABC yy", "abc").passed);
+        assert!(JsonValidity.score(" {\"a\": [1, 2]} ", "").passed);
+        assert!(!JsonValidity.score("{nope", "").passed);
+    }
+
+    #[test]
+    fn levenshtein_known_distances() {
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert!((similarity("", "") - 1.0).abs() < 1e-12);
+        let s = Levenshtein::new(0.5).unwrap().score("abcd", "abxd");
+        assert!(s.passed);
+        assert!((s.value - 0.75).abs() < 1e-12);
+        assert!(Levenshtein::new(1.5).is_err());
+        assert!(Levenshtein::new(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn regex_feature_matrix() {
+        let m = |p: &str, t: &str| Regex::compile(p).unwrap().is_match(t);
+        assert!(m("abc", "xxabcyy"), "unanchored substring");
+        assert!(m("^ab?c$", "ac"));
+        assert!(m("^ab?c$", "abc"));
+        assert!(!m("^ab?c$", "abbc"));
+        assert!(m("[a-c]+", "zzba"));
+        assert!(!m("^[a-c]+$", "zzba"));
+        assert!(m("[^0-9]", "a1"));
+        assert!(!m("^[^0-9]+$", "a1"));
+        assert!(m("\\d+\\.\\d+", "pi is 3.14 ok"));
+        assert!(m("cat|dog", "hotdog"));
+        assert!(!m("^cat|^dog$", "hotdog"));
+        assert!(m("a.*z", "a---z"));
+        assert!(m("^$", ""));
+        assert!(!m("^$", "x"));
+        assert!(m("^\\w+\\s\\w+$", "two words"));
+        assert!(m("[]a]", "]"), "leading ] is a literal");
+        assert!(m("[a-]", "-"), "trailing - is a literal");
+        assert!(m("x\\$", "x$"), "escaped dollar is a literal");
+        assert!(m("a$", "ba"), "end anchor");
+        assert!(!m("a$", "ab"));
+    }
+
+    #[test]
+    fn regex_compile_errors_not_panics() {
+        for bad in ["*a", "+", "?x", "[abc", "a\\", "[z-a]", "[\\", "\\q", "[\\q]"] {
+            assert!(Regex::compile(bad).is_err(), "`{bad}` must fail to compile");
+        }
+    }
+
+    #[test]
+    fn regex_pathological_pattern_terminates() {
+        // Classic catastrophic-backtracking shape: the step budget turns
+        // the exponential search into a deterministic "no match".
+        let re = Regex::compile("a*a*a*a*a*a*a*a*a*a*b$").unwrap();
+        let text = "a".repeat(120) + "c";
+        assert!(!re.is_match(&text));
+    }
+
+    fn rand_string(r: &mut Rng, alphabet: &[char], max_len: usize) -> String {
+        let len = r.below(max_len + 1);
+        (0..len).map(|_| alphabet[r.below(alphabet.len())]).collect()
+    }
+
+    #[test]
+    fn prop_levenshtein_bounds_and_symmetry() {
+        let alpha: Vec<char> = "abcx".chars().collect();
+        check(
+            "levenshtein_bounds",
+            PropConfig { cases: 128, seed: 11 },
+            |r| (rand_string(r, &alpha, 12), rand_string(r, &alpha, 12)),
+            |(a, b)| {
+                let d = levenshtein(a, b);
+                let (la, lb) = (a.chars().count(), b.chars().count());
+                if d != levenshtein(b, a) {
+                    return Err("not symmetric".into());
+                }
+                if d < la.abs_diff(lb) || d > la.max(lb) {
+                    let (lo, hi) = (la.abs_diff(lb), la.max(lb));
+                    return Err(format!("distance {d} outside [{lo}, {hi}]"));
+                }
+                if levenshtein(a, a) != 0 {
+                    return Err("identity has nonzero distance".into());
+                }
+                let s = similarity(a, b);
+                if !(0.0..=1.0).contains(&s) {
+                    return Err(format!("similarity {s} outside [0, 1]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_threshold_monotonicity() {
+        // A stricter threshold can only revoke passes, never grant them.
+        let alpha: Vec<char> = "abz".chars().collect();
+        check(
+            "threshold_monotone",
+            PropConfig { cases: 128, seed: 12 },
+            |r| {
+                let t1 = r.below(101) as f64 / 100.0;
+                let t2 = r.below(101) as f64 / 100.0;
+                (rand_string(r, &alpha, 10), rand_string(r, &alpha, 10), t1.min(t2), t1.max(t2))
+            },
+            |(a, b, lo, hi)| {
+                let pass_hi = Levenshtein::new(*hi).unwrap().score(a, b).passed;
+                let pass_lo = Levenshtein::new(*lo).unwrap().score(a, b).passed;
+                if pass_hi && !pass_lo {
+                    return Err(format!("passed at {hi} but not at {lo}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_regex_never_panics_on_adversarial_input() {
+        // Random patterns over a metachar-heavy alphabet: compile either
+        // errs or yields a matcher that terminates on random text. The
+        // property is "no panic, no hang" — the assertion is reaching
+        // Ok at all.
+        let pat_alpha: Vec<char> = "ab*+?.[]^$|\\d-()".chars().collect();
+        let txt_alpha: Vec<char> = "ab01 .$".chars().collect();
+        check(
+            "regex_no_panic",
+            PropConfig { cases: 256, seed: 13 },
+            |r| (rand_string(r, &pat_alpha, 16), rand_string(r, &txt_alpha, 24)),
+            |(pat, text)| {
+                if let Ok(re) = Regex::compile(pat) {
+                    let _ = re.is_match(text);
+                    let _ = re.is_match("");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_flags_builds_in_order_and_rejects_dups() {
+        let pairs = |kv: &[(&str, &str)]| {
+            kv.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect::<Vec<_>>()
+        };
+        let s = from_flags(&pairs(&[
+            ("exact", "true"),
+            ("data", "d.jsonl"), // non-scorer flags pass through
+            ("levenshtein", "0.8"),
+            ("regex", "^a+$"),
+            ("json", "true"),
+        ]))
+        .unwrap();
+        let names: Vec<String> = s.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["exact", "levenshtein", "regex", "json"]);
+        assert!(from_flags(&pairs(&[("exact", "true"), ("exact", "on")])).is_err());
+        assert!(from_flags(&pairs(&[("levenshtein", "puppies")])).is_err());
+        assert!(from_flags(&pairs(&[("levenshtein", "2.0")])).is_err());
+        assert!(from_flags(&pairs(&[("regex", "*bad")])).is_err());
+        assert!(from_flags(&pairs(&[("exact", "maybe")])).is_err());
+        // `--exact false` deselects rather than erroring.
+        assert!(from_flags(&pairs(&[("exact", "false")])).unwrap().is_empty());
+    }
+}

@@ -30,5 +30,5 @@ pub mod report;
 pub mod trace;
 
 pub use driver::{replay, Outcome, RunOutcome, RunResult};
-pub use report::{render_html, to_jsonl, ReportRow};
+pub use report::{render_bench_trend_html, render_html, to_jsonl, ReportRow};
 pub use trace::{ArrivalKind, Tenant, Trace, TraceEvent, TraceSpec};

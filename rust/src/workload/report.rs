@@ -246,6 +246,71 @@ pub fn render_html(title: &str, rows: &[ReportRow]) -> String {
     h
 }
 
+/// Aggregate several `BENCH_serving.json`-shaped documents — `(label,
+/// parsed JSON)` pairs, e.g. one per commit or per run — into one
+/// trend table: rows are result names in first-seen order, one column
+/// per run. Timing results (`mean_s`) render as mean milliseconds,
+/// metric results as `value unit`, absent cells as dashes. Fixed
+/// precision keeps the bytes deterministic, like [`render_html`].
+pub fn render_bench_trend_html(title: &str, runs: &[(String, Json)]) -> String {
+    fn results(j: &Json) -> &[Json] {
+        j.get("results").and_then(Json::as_arr).unwrap_or(&[])
+    }
+    let mut names: Vec<&str> = Vec::new();
+    for (_, j) in runs {
+        for r in results(j) {
+            if let Some(n) = r.get("name").and_then(Json::as_str) {
+                if !names.contains(&n) {
+                    names.push(n);
+                }
+            }
+        }
+    }
+    let cell = |j: &Json, name: &str| -> String {
+        let Some(r) = results(j)
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some(name))
+        else {
+            return "–".to_string();
+        };
+        if let Some(mean) = r.get("mean_s").and_then(Json::as_f64) {
+            return format!("{:.3} ms", mean * 1e3);
+        }
+        if let Some(v) = r.get("value").and_then(Json::as_f64) {
+            let unit = r.get("unit").and_then(Json::as_str).unwrap_or("");
+            return if unit.is_empty() {
+                format!("{v:.2}")
+            } else {
+                format!("{v:.2} {}", html_escape(unit))
+            };
+        }
+        "?".to_string()
+    };
+    let mut h = String::new();
+    h.push_str("<!doctype html>\n<html><head><meta charset=\"utf-8\">\n");
+    h.push_str(&format!("<title>{}</title>\n", html_escape(title)));
+    h.push_str(
+        "<style>body{font:14px sans-serif;margin:2em}table{border-collapse:collapse}\n\
+         th,td{border:1px solid #999;padding:4px 8px;text-align:right}\n\
+         th{background:#eee}td.l,th.l{text-align:left}</style></head><body>\n",
+    );
+    h.push_str(&format!("<h1>{}</h1>\n<table>\n<tr>", html_escape(title)));
+    h.push_str("<th class=\"l\">result</th>");
+    for (label, _) in runs {
+        h.push_str(&format!("<th>{}</th>", html_escape(label)));
+    }
+    h.push_str("</tr>\n");
+    for name in &names {
+        h.push_str(&format!("<tr><td class=\"l\">{}</td>", html_escape(name)));
+        for (_, j) in runs {
+            h.push_str(&format!("<td>{}</td>", cell(j, name)));
+        }
+        h.push_str("</tr>\n");
+    }
+    h.push_str("</table></body></html>\n");
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +384,40 @@ mod tests {
         );
         assert!(parsed.get("goodput_rps").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(ReportRow::parse("{\"label\":\"x\"}").is_err(), "missing fields rejected");
+    }
+
+    #[test]
+    fn bench_trend_aggregates_multiple_runs() {
+        let run = |tp: f64, with_extra: bool| {
+            let mut extra = String::new();
+            if with_extra {
+                extra = ",{\"name\":\"decode/p50\",\"mean_s\":0.004,\"p50_s\":0.004,\
+                         \"min_s\":0.003,\"n\":5}"
+                    .to_string();
+            }
+            Json::parse(&format!(
+                "{{\"bench\":\"serving\",\"quick\":true,\"results\":[\
+                 {{\"name\":\"goodput\",\"value\":{tp},\"unit\":\"req/s\"}}{extra}]}}"
+            ))
+            .unwrap()
+        };
+        let runs = vec![
+            ("commit-a".to_string(), run(10.0, false)),
+            ("commit-b".to_string(), run(12.5, true)),
+        ];
+        let a = render_bench_trend_html("trend", &runs);
+        let b = render_bench_trend_html("trend", &runs);
+        assert_eq!(a, b, "trend HTML must be byte-stable");
+        assert!(a.contains("<th>commit-a</th>"));
+        assert!(a.contains("<th>commit-b</th>"));
+        assert!(a.contains("10.00 req/s"));
+        assert!(a.contains("12.50 req/s"));
+        assert!(a.contains("4.000 ms"), "timing rows render as mean ms");
+        assert!(a.contains("<td>–</td>"), "absent cells render as dashes");
+        // Row order is first-seen across runs.
+        let goodput_at = a.find("goodput").unwrap();
+        let decode_at = a.find("decode/p50").unwrap();
+        assert!(goodput_at < decode_at);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Integration: the quality harness end to end — the GQA↔MLA A/B the
+//! subsystem exists for, the report's byte-reproducibility contract,
+//! and the `transmla eval` CLI surface (the ISSUE's acceptance command
+//! verbatim, dataset diagnostics included).
+//!
+//! Hermetic throughout: SimBackend engines over loopback TCP, fixed
+//! ports in the 1849x range (18490 A/B, 18491/18492 CLI smoke; the
+//! driver's own unit test owns 18499).
+
+use std::time::{Duration, Instant};
+
+use transmla::backend::{SimBackend, SimConfig};
+use transmla::config::{EngineConfig, EvalOpts};
+use transmla::coordinator::{Engine, Request};
+use transmla::json::Json;
+use transmla::qeval::{scorers, Dataset, EvalReport, EvalRun, ModelRun, RowOutcome};
+use transmla::server::{self, EngineRegistry, RoutePolicy};
+
+fn wait_ready(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server::client_line(addr, "{\"cmd\":\"ping\"}").is_err() {
+        assert!(Instant::now() < deadline, "server at {addr} never came up");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn ab_scorers() -> Vec<Box<dyn scorers::Scorer>> {
+    scorers::from_flags(&[
+        ("exact".to_string(), "true".to_string()),
+        ("levenshtein".to_string(), "0.8".to_string()),
+    ])
+    .unwrap()
+}
+
+/// The tentpole claim, pinned: a same-seed MLA twin scores *identically*
+/// to its GQA baseline (the sim's token chain is cache-layout
+/// independent), and the harness still detects a genuinely different
+/// model (a seed-1 "degraded" engine) — so a 0.0pp delta is evidence of
+/// parity, not of a scorer that passes everything.
+#[test]
+fn gqa_mla_ab_parity_and_degradation_detection() {
+    let addr = "127.0.0.1:18490";
+    let prompts =
+        ["the latent cache", "absorbed attention", "rank picks the", "kv bytes per token"];
+    let max_new = 8;
+
+    // Reference outputs from a solo GQA engine (completions come back
+    // id-sorted, so they align with the prompt order).
+    let mut reference = Engine::new(SimBackend::gqa(4), EngineConfig::default());
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::from_text(i as u64, p, max_new))
+        .collect();
+    let expected: Vec<String> =
+        reference.generate(reqs).unwrap().iter().map(|c| c.text()).collect();
+    let pairs: Vec<(&str, &str)> =
+        prompts.iter().zip(&expected).map(|(p, e)| (*p, e.as_str())).collect();
+    let ds = Dataset::from_pairs(&pairs);
+
+    let handle = std::thread::spawn(move || {
+        let mut reg = EngineRegistry::new(RoutePolicy::Default("gqa".into()));
+        reg.register("gqa", Engine::new(SimBackend::gqa(4), EngineConfig::default()))
+            .unwrap();
+        reg.register("mla", Engine::new(SimBackend::mla(4, 8), EngineConfig::default()))
+            .unwrap();
+        // Same arch as the baseline, different seed: a model whose
+        // outputs genuinely differ, to prove the harness can see loss.
+        let degraded =
+            SimBackend::new(SimConfig { seed: 1, ..SimConfig::gqa(4) }).unwrap();
+        reg.register("degraded", Engine::new(degraded, EngineConfig::default()))
+            .unwrap();
+        server::serve(&mut reg, addr).unwrap();
+    });
+    wait_ready(addr);
+
+    let opts = EvalOpts { concurrency: 4, max_new, baseline: Some("gqa".into()) };
+    let models: Vec<String> =
+        ["gqa", "mla", "degraded"].iter().map(|s| s.to_string()).collect();
+    let run = transmla::qeval::run_eval(&ds, &models, addr, &opts).unwrap();
+    let run2 = transmla::qeval::run_eval(&ds, &models, addr, &opts).unwrap();
+    server::client_shutdown(addr).unwrap();
+    handle.join().unwrap();
+
+    let sc = ab_scorers();
+    let rep = EvalReport::build("ab", &ds, &sc, &run, Some("gqa")).unwrap();
+    assert_eq!(rep.models.len(), 3);
+    let by_name = |name: &str| rep.models.iter().find(|m| m.model == name).unwrap();
+    let (gqa, mla, deg) = (by_name("gqa"), by_name("mla"), by_name("degraded"));
+
+    // Every row completed — transport and routing are clean.
+    for m in [gqa, mla, deg] {
+        assert_eq!((m.n, m.completed, m.errors), (4, 4, 0), "{}", m.model);
+    }
+    // Parity: the served GQA engine reproduces the reference outputs,
+    // and the same-seed MLA twin matches them bit for bit.
+    assert_eq!(gqa.cells[0].pass_rate(), 1.0, "gqa exact");
+    assert_eq!(mla.cells[0].pass_rate(), 1.0, "mla exact");
+    assert_eq!(mla.cells[1].pass_rate(), 1.0, "mla levenshtein");
+    // Detection: the seed-1 engine does not.
+    assert!(deg.cells[0].pass_rate() < 1.0, "degraded model must show loss");
+
+    // The serialized delta says the same thing.
+    let jsonl = rep.to_jsonl();
+    let (meta, rows) = EvalReport::parse(&jsonl).unwrap();
+    assert_eq!(meta.get("baseline").and_then(Json::as_str), Some("gqa"));
+    let mla_row = rows
+        .iter()
+        .find(|r| r.get("model").and_then(Json::as_str) == Some("mla"))
+        .unwrap();
+    let d_exact = mla_row
+        .get("delta")
+        .and_then(|d| d.get("scores"))
+        .and_then(|s| s.get("exact"))
+        .and_then(|e| e.get("pass_rate"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert_eq!(d_exact, 0.0, "MLA conversion cost zero exact-match quality");
+
+    // Determinism across runs: identical matrices (timings differ,
+    // scores cannot — ScorerCell is PartialEq).
+    let rep2 = EvalReport::build("ab", &ds, &sc, &run2, Some("gqa")).unwrap();
+    for (a, b) in rep.models.iter().zip(&rep2.models) {
+        assert_eq!(a.cells, b.cells, "run-to-run score drift in {}", a.model);
+    }
+}
+
+/// Regression: the report serializers are byte-functions of their
+/// inputs. A fully synthetic run (index-derived timings, no server, no
+/// clock) must serialize to identical JSONL and HTML bytes every time.
+#[test]
+fn report_bytes_are_reproducible_over_a_synthetic_run() {
+    let build = || {
+        let ds = Dataset::from_pairs(&[("p0", "e0"), ("p1", "e1"), ("p2", "e2")]);
+        let outcome = |i: usize| RowOutcome::Done {
+            output: if i == 1 { "wrong".into() } else { format!("e{i}") },
+            ttft_s: 0.010 + i as f64 * 0.001,
+            tpot_s: 0.002,
+            latency_s: 0.050 + i as f64 * 0.001,
+            client_s: 0.055,
+        };
+        let run = EvalRun {
+            models: vec![
+                ModelRun { model: "gqa".into(), results: (0..3).map(|i| RowOutcome::Done {
+                    output: format!("e{i}"),
+                    ttft_s: 0.010,
+                    tpot_s: 0.002,
+                    latency_s: 0.050,
+                    client_s: 0.055,
+                }).collect() },
+                ModelRun { model: "mla".into(), results: (0..3).map(outcome).collect() },
+            ],
+            wall_s: 0.5,
+        };
+        let rep = EvalReport::build("repro", &ds, &ab_scorers(), &run, Some("gqa")).unwrap();
+        (rep.to_jsonl(), rep.render_html("transmla eval report"))
+    };
+    let (jsonl_a, html_a) = build();
+    let (jsonl_b, html_b) = build();
+    assert_eq!(jsonl_a, jsonl_b, "JSONL bytes drift");
+    assert_eq!(html_a, html_b, "HTML bytes drift");
+    // And the pinned shape: meta line + one line per model, delta on
+    // the non-baseline row only.
+    let (_, rows) = EvalReport::parse(&jsonl_a).unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(rows[0].get("delta").is_none());
+    assert!(rows[1].get("delta").is_some());
+    assert!(html_a.contains("(baseline)"));
+    assert!(html_a.contains("pp)"), "delta annotation renders");
+}
+
+/// The ISSUE's acceptance command, verbatim flags included (the bare
+/// `--exact` directly before `--levenshtein 0.8` exercises the
+/// boolean-flag parse), against a dataset with every diagnostic case:
+/// a clean row, a missing id, a duplicate id, a non-JSON line, and a
+/// row with no `input`.
+#[test]
+fn cli_eval_smoke_with_diagnostics_and_reproducible_scores() {
+    let dir = std::env::temp_dir().join("transmla_qeval_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("ds.jsonl");
+    std::fs::write(
+        &data,
+        "{\"id\": \"a\", \"input\": \"the latent\", \"expected\": \"x\"}\n\
+         {\"input\": \"absorbed\", \"expected\": \"y\"}\n\
+         {\"id\": \"a\", \"input\": \"rank picks\", \"expected\": \"z\"}\n\
+         {not json\n\
+         {\"id\": \"b\", \"expected\": \"no input\"}\n",
+    )
+    .unwrap();
+
+    let run = |addr: &str, report: &std::path::Path, html: &std::path::Path| {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_transmla"))
+            .args([
+                "eval",
+                "--data",
+                data.to_str().unwrap(),
+                "--model",
+                "gqa=arch=gqa",
+                "--model",
+                "mla=arch=mla,rank=8",
+                "--baseline",
+                "gqa",
+                "--exact",
+                "--levenshtein",
+                "0.8",
+                "--batch",
+                "4",
+                "--max-new",
+                "6",
+                "--concurrency",
+                "4",
+                "--addr",
+                addr,
+                "--report",
+                report.to_str().unwrap(),
+                "--html",
+                html.to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawn transmla eval");
+        assert!(
+            out.status.success(),
+            "eval exited nonzero:\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+        assert!(stderr.contains("bad JSON"), "malformed line surfaced on stderr");
+        assert!(stderr.contains("missing string field `input`"));
+    };
+
+    let (r1, h1) = (dir.join("r1.jsonl"), dir.join("r1.html"));
+    let (r2, h2) = (dir.join("r2.jsonl"), dir.join("r2.html"));
+    run("127.0.0.1:18491", &r1, &h1);
+    run("127.0.0.1:18492", &r2, &h2);
+
+    let text1 = std::fs::read_to_string(&r1).unwrap();
+    let (meta, rows) = EvalReport::parse(&text1).unwrap();
+    let num = |k: &str| meta.get(k).and_then(Json::as_f64).unwrap() as usize;
+    assert_eq!(num("n_rows"), 3, "3 usable rows");
+    assert_eq!(num("malformed"), 2, "non-JSON line + missing-input line");
+    assert_eq!(num("synthetic_ids"), 2, "missing id + repaired duplicate");
+    assert_eq!(num("dup_ids"), 1);
+    let model_names: Vec<&str> = meta
+        .get("models")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(model_names, ["gqa", "mla"]);
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        assert_eq!(row.get("completed").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(row.get("errors").and_then(Json::as_f64), Some(0.0), "zero transport errors");
+        for sc in ["exact", "levenshtein"] {
+            assert!(
+                row.get("scores").and_then(|s| s.get(sc)).is_some(),
+                "scorer `{sc}` missing from row"
+            );
+        }
+    }
+    assert!(rows[1].get("delta").is_some(), "non-baseline row carries delta");
+
+    // The HTML is written and carries the baseline annotation.
+    let html = std::fs::read_to_string(&h1).unwrap();
+    assert!(html.contains("(baseline)"));
+
+    // Scores are byte-identical across the two runs (wall time and
+    // latency fields legitimately differ; graded quality cannot).
+    let (_, rows2) = EvalReport::parse(&std::fs::read_to_string(&r2).unwrap()).unwrap();
+    for (a, b) in rows.iter().zip(&rows2) {
+        assert_eq!(
+            a.get("scores").map(Json::to_string),
+            b.get("scores").map(Json::to_string),
+            "scores drift between identical CLI runs"
+        );
+    }
+}
